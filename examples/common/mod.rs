@@ -1,0 +1,31 @@
+//! Shared helpers for the examples: locate artifacts, build a dispatcher.
+#![allow(dead_code)] // each example uses a subset of these helpers
+
+use jitune::coordinator::{Dispatcher, KernelRegistry};
+use jitune::manifest::Manifest;
+use jitune::runtime::PjrtEngine;
+use jitune::Result;
+
+/// Artifacts directory (env `JITUNE_ARTIFACTS` or `./artifacts`).
+pub fn artifacts_dir() -> String {
+    std::env::var("JITUNE_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
+/// Build a PJRT-backed dispatcher with the paper's defaults, or exit
+/// with a helpful message when artifacts are missing.
+pub fn dispatcher_or_exit() -> Dispatcher {
+    match try_dispatcher() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}\nhint: run `make artifacts` first");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn try_dispatcher() -> Result<Dispatcher> {
+    let manifest = Manifest::load(artifacts_dir())?;
+    let registry = KernelRegistry::new(manifest);
+    let engine = PjrtEngine::cpu()?;
+    Ok(Dispatcher::new(registry, Box::new(engine)))
+}

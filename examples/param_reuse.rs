@@ -1,0 +1,85 @@
+//! Parameter reuse across kernels — the paper's §3.2 workflow.
+//!
+//! "If the programmer decides that this block size can be used by other
+//! computation routines, they can define these routines as JIT-compiled
+//! templates and pass it as a non-type template parameter."
+//!
+//! We tune the tiled matmul's block size, read the winner back through
+//! the public API, and use it to *select* (not re-tune) the stencil
+//! kernel's block variant — skipping that kernel's tuning iterations
+//! entirely. The example then verifies the reused choice against what a
+//! from-scratch tuning of the stencil would have picked.
+//!
+//! Run: `cargo run --release --example param_reuse`
+
+mod common;
+
+use jitune::coordinator::CallRoute;
+use jitune::manifest::Manifest;
+use jitune::runtime::{CompileCache, PjrtEngine};
+use jitune::tensor::HostTensor;
+use jitune::workload::inputs_for;
+
+fn main() {
+    jitune::util::logging::init();
+    let mut dispatcher = common::dispatcher_or_exit();
+
+    // -- 1. tune the matmul block size -------------------------------------
+    let n = 256usize;
+    let inputs = {
+        let p = dispatcher.registry().problem("matmul_tiled", n as i64).expect("problem").clone();
+        inputs_for(&p, 99)
+    };
+    println!("== tuning matmul_tiled at n={n} ==");
+    loop {
+        let out = dispatcher.call("matmul_tiled", &inputs).expect("call");
+        if out.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    let block = dispatcher.tuned_value("matmul_tiled", n as i64).expect("tuned");
+    println!("matmul's tuned block size: {block}\n");
+
+    // -- 2. reuse it for the stencil kernel --------------------------------
+    // The stencil's candidates are {256, 1024, 4096}; reuse picks the
+    // candidate closest to the matmul's winner (the paper hands the raw
+    // value to the next template — our variant set is discrete).
+    let manifest = Manifest::load(common::artifacts_dir()).expect("manifest");
+    let sn = 16384i64;
+    let stencil = manifest.problem("stencil", sn).expect("stencil").clone();
+    let reused = stencil
+        .variants
+        .iter()
+        .min_by_key(|v| (v.value - block).abs())
+        .expect("variants");
+    println!(
+        "== reusing block={} for the stencil (picked candidate {}) — no tuning iterations ==",
+        block, reused.label
+    );
+    let mut cache = CompileCache::new(Box::new(PjrtEngine::cpu().expect("pjrt")));
+    let sten_inputs = vec![HostTensor::random(&[sn as usize], 5)];
+    let (exe, _) = cache.get_or_compile(&manifest, reused).expect("compile");
+    let t0 = std::time::Instant::now();
+    for _ in 0..10 {
+        exe.execute(&sten_inputs).expect("execute");
+    }
+    let reuse_mean = t0.elapsed().as_secs_f64() / 10.0;
+    println!("stencil with reused block: mean {:.3}ms/call over 10 calls\n", reuse_mean * 1e3);
+
+    // -- 3. compare with tuning the stencil from scratch -------------------
+    println!("== counterfactual: tuning the stencil from scratch ==");
+    loop {
+        let out = dispatcher.call("stencil", &sten_inputs).expect("call");
+        if out.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    let tuned_block = dispatcher.tuned_value("stencil", sn).expect("tuned");
+    println!("stencil's own tuned block: {tuned_block} (reused pick was {})", reused.value);
+    let explored = dispatcher.stats().kernel("stencil").map(|k| k.explored).unwrap_or(0);
+    println!(
+        "\nreuse skipped {explored} tuning iterations (each paying a JIT compile); \
+         the paper's point: the tuned parameter is a first-class value the \
+         programmer can route to other kernels."
+    );
+}

@@ -1,0 +1,66 @@
+//! Quickstart: JIT-autotune the tiled matmul's block size.
+//!
+//! This is the paper's Listing 6 scenario: a blocked matrix
+//! multiplication whose tile size is an `__autotune__` parameter. The
+//! first k calls JIT-compile and measure each candidate block size; the
+//! winner is then compiled into the instantiation cache and every later
+//! call uses it.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`)
+
+mod common;
+
+use jitune::coordinator::CallRoute;
+use jitune::tensor::{ref_matmul, HostTensor};
+
+fn main() {
+    jitune::util::logging::init();
+    let mut dispatcher = common::dispatcher_or_exit();
+
+    let n = 128usize;
+    let a = HostTensor::random(&[n, n], 1);
+    let b = HostTensor::random(&[n, n], 2);
+
+    println!("== jitune quickstart: autotuning matmul block size at n={n} ==\n");
+    let mut calls = 0;
+    loop {
+        calls += 1;
+        let out = dispatcher.call("matmul_tiled", &[a.clone(), b.clone()]).expect("call");
+        println!(
+            "call {calls:2}: {:<9} block={:<4} compile={:<5} {:7.2}ms",
+            format!("{:?}", out.route).to_lowercase(),
+            out.value,
+            out.compiled,
+            out.total.as_secs_f64() * 1e3
+        );
+        if out.route == CallRoute::Finalized {
+            break;
+        }
+    }
+
+    let tuned = dispatcher.tuned_value("matmul_tiled", n as i64).expect("tuned");
+    println!("\ntuned block size: {tuned}");
+
+    // steady state: a few more calls through the cached winner
+    let mut steady = Vec::new();
+    let mut last = None;
+    for _ in 0..5 {
+        let out = dispatcher.call("matmul_tiled", &[a.clone(), b.clone()]).expect("call");
+        assert_eq!(out.route, CallRoute::Tuned);
+        steady.push(out.total.as_secs_f64() * 1e3);
+        last = Some(out.output);
+    }
+    println!(
+        "steady-state calls: {:?} ms",
+        steady.iter().map(|t| format!("{t:.2}")).collect::<Vec<_>>()
+    );
+
+    // verify against the pure-Rust reference
+    let want = ref_matmul(&a, &b).expect("ref");
+    let got = last.unwrap();
+    assert!(got.allclose(&want, 1e-4, 1e-4), "kernel output diverges from reference!");
+    println!("result verified against pure-Rust reference ✓");
+
+    print!("\n{}", dispatcher.stats().render());
+    println!("cache: {:?}", dispatcher.cache_stats());
+}

@@ -1,0 +1,233 @@
+"""AOT lowering: sweep the variant grid, emit HLO text + manifest.
+
+This is the only Python that ever runs, and it runs once (``make
+artifacts``). For every (kernel, tuning-parameter value, problem size) it
+lowers the jitted Layer-2 entry point to **HLO text** and records the
+variant in ``artifacts/manifest.json``. The Rust coordinator JIT-compiles
+these artifacts at run time via PJRT — the paper's run-time specialization
+step, with the template AST replaced by HLO text.
+
+HLO *text*, not ``.serialize()``: jax ≥ 0.5 emits HloModuleProto with
+64-bit instruction ids which xla_extension 0.5.1 (the version the `xla`
+crate binds) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import matmul_orders, matmul_tiled, saxpy, stencil
+
+SCHEMA_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sig(shape, dtype="f32") -> str:
+    """Signature string, e.g. ``f32[128,128]`` — shared with the Rust side."""
+    return f"{dtype}[{','.join(str(d) for d in shape)}]"
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def variant_grid():
+    """Yield every variant to lower.
+
+    Each item: dict with kernel, param, value (int), label, size, the
+    callable+example args to lower, input/output signatures and a FLOP
+    count for throughput reporting.
+    """
+    # --- matmul_tiled: Fig 1 / Listing 6 (block-size axis) ---------------
+    for n in matmul_tiled.SIZES:
+        a = spec((n, n))
+        for block in matmul_tiled.BLOCK_CANDIDATES:
+            yield dict(
+                kernel="matmul_tiled",
+                param="block",
+                value=block,
+                label=f"b{block}",
+                size=n,
+                fn=lambda x, y, b=block: model.matmul_tiled_entry(x, y, block=b),
+                args=(a, a),
+                inputs=[sig((n, n)), sig((n, n))],
+                output=sig((n, n)),
+                flops=2 * n**3,
+            )
+
+    # --- matmul_orders: Fig 2-5 / Listing 5 (implementation axis) --------
+    for n in matmul_orders.SIZES:
+        a = spec((n, n))
+        for idx, order in enumerate(matmul_orders.ORDERS):
+            yield dict(
+                kernel="matmul_order",
+                param="order",
+                value=idx,
+                label=order,
+                size=n,
+                fn=lambda x, y, o=order: model.matmul_order_entry(x, y, order=o),
+                args=(a, a),
+                inputs=[sig((n, n)), sig((n, n))],
+                output=sig((n, n)),
+                flops=2 * n**3,
+            )
+
+    # --- saxpy: Listing 1 (chunk/unroll axis) -----------------------------
+    for n in saxpy.SIZES:
+        for chunk in saxpy.CHUNK_CANDIDATES:
+            if chunk > n:
+                continue
+            yield dict(
+                kernel="saxpy",
+                param="chunk",
+                value=chunk,
+                label=f"c{chunk}",
+                size=n,
+                fn=lambda a_, x, y, c=chunk: model.saxpy_entry(a_, x, y, chunk=c),
+                args=(spec((1,)), spec((n,)), spec((n,))),
+                inputs=[sig((1,)), sig((n,)), sig((n,))],
+                output=sig((n,)),
+                flops=2 * n,
+            )
+
+    # --- stencil: parameter-reuse kernel ----------------------------------
+    for n in stencil.SIZES:
+        for block in stencil.BLOCK_CANDIDATES:
+            if block > n:
+                continue
+            yield dict(
+                kernel="stencil",
+                param="block",
+                value=block,
+                label=f"b{block}",
+                size=n,
+                fn=lambda x, b=block: model.stencil_entry(x, block=b),
+                args=(spec((n,)),),
+                inputs=[sig((n,))],
+                output=sig((n,)),
+                flops=3 * n,
+            )
+
+    # --- mlp_block: end-to-end serving model ------------------------------
+    g = model.MLP_SHAPE
+    b_, d, h, o = g["batch"], g["d_in"], g["hidden"], g["d_out"]
+    for block in model.MLP_BLOCKS:
+        yield dict(
+            kernel="mlp_block",
+            param="block",
+            value=block,
+            label=f"b{block}",
+            size=b_,
+            fn=lambda x, w1, w2, bl=block: model.mlp_block_entry(
+                x, w1, w2, block=bl
+            ),
+            args=(spec((b_, d)), spec((d, h)), spec((h, o))),
+            inputs=[sig((b_, d)), sig((d, h)), sig((h, o))],
+            output=sig((b_, o)),
+            flops=2 * b_ * d * h + 2 * b_ * h * o,
+        )
+
+
+def source_stamp() -> str:
+    """Content hash of every Python source that feeds the artifacts."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    digest = hashlib.sha256()
+    for root, _dirs, files in sorted(os.walk(here)):
+        for name in sorted(files):
+            if name.endswith(".py"):
+                with open(os.path.join(root, name), "rb") as f:
+                    digest.update(name.encode())
+                    digest.update(f.read())
+    return digest.hexdigest()
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--out", default=None, help="(compat) any path inside the artifacts dir")
+    ap.add_argument("--only", default=None, help="limit to one kernel family")
+    ap.add_argument("--force", action="store_true", help="regenerate even if stamp matches")
+    opts = ap.parse_args()
+
+    out_dir = opts.out_dir
+    if out_dir is None and opts.out is not None:
+        out_dir = os.path.dirname(os.path.abspath(opts.out)) or "."
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    out_dir = os.path.abspath(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    stamp_path = os.path.join(out_dir, ".stamp")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    stamp = source_stamp()
+    if (
+        not opts.force
+        and not opts.only
+        and os.path.exists(stamp_path)
+        and os.path.exists(manifest_path)
+        and open(stamp_path).read().strip() == stamp
+    ):
+        print(f"artifacts up to date ({out_dir})")
+        return 0
+
+    entries = []
+    count = 0
+    for v in variant_grid():
+        if opts.only and v["kernel"] != opts.only:
+            continue
+        vid = f'{v["kernel"]}.{v["label"]}.n{v["size"]}'
+        path = f"{vid}.hlo.txt"
+        lowered = jax.jit(v["fn"]).lower(*v["args"])
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            dict(
+                id=vid,
+                kernel=v["kernel"],
+                param=v["param"],
+                value=v["value"],
+                label=v["label"],
+                size=v["size"],
+                inputs=v["inputs"],
+                output=v["output"],
+                path=path,
+                flops=v["flops"],
+            )
+        )
+        count += 1
+        print(f"[{count:3}] {vid:40} {len(text):8} chars", file=sys.stderr)
+
+    manifest = dict(
+        schema=SCHEMA_VERSION,
+        generated_by="python/compile/aot.py",
+        jax_version=jax.__version__,
+        entries=entries,
+    )
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    if not opts.only:
+        with open(stamp_path, "w") as f:
+            f.write(stamp)
+    print(f"wrote {count} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels.
+
+Each module exposes one kernel family parameterized by the paper's tuning
+axis (block size, loop order, chunk/unroll factor). All kernels are built
+with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering produces plain HLO that runs on
+any backend (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import matmul_orders, matmul_tiled, ref, saxpy, stencil
+
+__all__ = ["matmul_tiled", "matmul_orders", "saxpy", "stencil", "ref"]

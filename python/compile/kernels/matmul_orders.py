@@ -1,0 +1,94 @@
+"""Matmul with permuted loop orders — the paper's Listing 5 benchmark.
+
+The paper's Fig 2–5 choose between three *implementations* of a
+straightforward matmul that differ only in loop order (ijk, ikj, jik).
+The Pallas analog permutes the **grid iteration order**: the grid is
+iterated row-major, so placing a different axis innermost reproduces the
+locality differences of the C loop permutations (output-tile reuse for
+k-innermost, streaming rank-1-style updates for j-innermost, and a
+column-major outer walk for jik). See DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul_tiled import clamp_block
+
+#: Fixed tile edge for the loop-order family (the paper fixes the
+#: implementation body and varies only the order).
+ORDER_BLOCK = 32
+
+#: The implementation-choice axis (paper's function-pointer array).
+ORDERS = ["ijk", "ikj", "jik"]
+
+
+def _accum_kernel(k_axis):
+    def kernel(x_ref, y_ref, o_ref):
+        @pl.when(pl.program_id(k_axis) == 0)
+        def _():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+        )
+
+    return kernel
+
+
+# Per-order grid layout: grid axes are iterated row-major (last innermost).
+#   ijk: (i, j, k)  — contraction innermost: output tile stays hot.
+#   ikj: (i, k, j)  — j innermost: x tile reused, output revisited per k.
+#   jik: (j, i, k)  — column-major outer walk over the output.
+# Each entry maps grid coords -> (x block, y block, o block) index maps and
+# tells which grid axis carries the contraction.
+_LAYOUTS = {
+    "ijk": dict(
+        k_axis=2,
+        x=lambda i, j, k: (i, k),
+        y=lambda i, j, k: (k, j),
+        o=lambda i, j, k: (i, j),
+    ),
+    "ikj": dict(
+        k_axis=1,
+        x=lambda i, k, j: (i, k),
+        y=lambda i, k, j: (k, j),
+        o=lambda i, k, j: (i, j),
+    ),
+    "jik": dict(
+        k_axis=2,
+        x=lambda j, i, k: (i, k),
+        y=lambda j, i, k: (k, j),
+        o=lambda j, i, k: (i, j),
+    ),
+}
+
+
+@functools.partial(jax.jit, static_argnames=("order",))
+def matmul_order(x, y, *, order: str):
+    """C = A @ B using the loop order named by ``order`` (ijk|ikj|jik)."""
+    layout = _LAYOUTS[order]
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    b = clamp_block(ORDER_BLOCK, m, k, n)
+    assert m % b == 0 and k % b == 0 and n % b == 0
+    tiles = {"i": m // b, "j": n // b, "k": k // b}
+    grid = tuple(tiles[ax] for ax in order)
+    return pl.pallas_call(
+        _accum_kernel(layout["k_axis"]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, b), layout["x"]),
+            pl.BlockSpec((b, b), layout["y"]),
+        ],
+        out_specs=pl.BlockSpec((b, b), layout["o"]),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+#: Problem sizes for Fig 2–5 (paper: 128/512/2048, scaled).
+SIZES = [64, 128, 256, 512]

@@ -1,0 +1,72 @@
+"""Blocked matrix multiplication — the paper's Listing 6 kernel.
+
+The tuning axis is the tile edge ``block`` (the paper's loop-tiling block
+size). The Pallas grid iterates over (M/b, N/b, K/b) tiles; each program
+instance multiplies one (b, b) tile pair and accumulates into the output
+tile. ``BlockSpec`` expresses the HBM↔VMEM schedule that the paper's C
+loop nest expressed with blocking.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    # Zero the output tile on its first visit (k == 0), then accumulate
+    # one (b, b) @ (b, b) product per contraction step.
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def clamp_block(block: int, *dims: int) -> int:
+    """Tile edge actually used: ``block`` clamped to the smallest dim.
+
+    The paper sweeps block sizes past the matrix size for small matrices
+    (Fig 1, N=32 with blocks up to 512); a block larger than the matrix
+    degenerates to "no tiling", which we express by clamping.
+    """
+    return min(block, *dims)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def matmul_tiled(x, y, *, block: int):
+    """C[M,N] = A[M,K] @ B[K,N] with square tile edge ``block``.
+
+    M, K, N must be divisible by the (clamped) block — all shipped
+    problem sizes are powers of two, as in the paper's benchmark.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    b = clamp_block(block, m, k, n)
+    assert m % b == 0 and k % b == 0 and n % b == 0, (
+        f"dims ({m},{k},{n}) not divisible by block {b}"
+    )
+    grid = (m // b, n // b, k // b)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, b), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((b, b), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((b, b), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+#: Tuning-parameter values shipped in the manifest (the paper's Fig 1 axis).
+BLOCK_CANDIDATES = [8, 16, 32, 64, 128, 256]
+
+#: Problem sizes exercised by the benchmarks (paper: 32..2048, scaled to
+#: CPU-PJRT interpret-mode cost — see DESIGN.md §Substitutions).
+SIZES = [32, 64, 128, 256, 512]

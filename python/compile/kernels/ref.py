@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Layer-1 kernel.
+
+These definitions are the single source of numerical truth on the Python
+side; ``python/tests`` asserts each Pallas kernel against them, and the
+Rust side re-implements them independently (``rust/src/tensor/reference.rs``)
+for the cross-language check.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul(x, y):
+    """C = A @ B with f32 accumulation."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32)
+
+
+def saxpy(a, x, y):
+    """y' = a * x + y. ``a`` is a shape-(1,) array (scalar broadcast)."""
+    return a[0] * x + y
+
+
+def stencil3(x):
+    """3-point Jacobi average with copied boundaries."""
+    interior = (x[:-2] + x[1:-1] + x[2:]) / 3.0
+    return jnp.concatenate([x[:1], interior, x[-1:]])
+
+
+def relu(x):
+    """max(x, 0)."""
+    return jnp.maximum(x, 0.0)
+
+
+def mlp_block(x, w1, w2):
+    """relu(x @ w1) @ w2 — the end-to-end serving example's model."""
+    return matmul(relu(matmul(x, w1)), w2)

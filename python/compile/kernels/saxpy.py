@@ -1,0 +1,48 @@
+"""saxpy (y' = a·x + y) — the paper's Listing 1 motivating kernel.
+
+The tuning axis is the chunk processed per Pallas program instance (the
+analog of the unrolling factor the paper tunes for this kernel): larger
+chunks mean fewer grid steps with more work each, smaller chunks the
+opposite — the classic vector-kernel granularity trade-off.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = a_ref[0] * x_ref[...] + y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def saxpy(a, x, y, *, chunk: int):
+    """y' = a[0] * x + y over rank-1 arrays, ``chunk`` elements per step.
+
+    ``a`` is a shape-(1,) f32 array (scalars travel as tiny arrays so the
+    artifact signature stays uniform: every input is an array).
+    """
+    (n,) = x.shape
+    c = min(chunk, n)
+    assert n % c == 0, f"n={n} not divisible by chunk={c}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // c,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+            pl.BlockSpec((c,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, x, y)
+
+
+#: Chunk candidates (the tuning-parameter array of Listing 1/4).
+CHUNK_CANDIDATES = [256, 1024, 4096, 16384]
+
+#: Vector lengths shipped in the manifest.
+SIZES = [16384, 131072]

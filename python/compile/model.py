@@ -1,0 +1,65 @@
+"""Layer-2 JAX entry points — one jitted function per (kernel, variant).
+
+Every entry point here is what ``aot.py`` lowers to an HLO artifact. The
+entry points call the Layer-1 Pallas kernels so the kernel lowers into the
+same HLO module; the Rust coordinator then JIT-compiles whole modules via
+PJRT at run time (the paper's ``__clang_jit`` analog).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_orders, matmul_tiled, ref, saxpy, stencil
+
+
+def matmul_tiled_entry(x, y, *, block: int):
+    """Tiled matmul entry (Fig 1 / Listing 6 kernel)."""
+    return matmul_tiled.matmul_tiled(x, y, block=block)
+
+
+def matmul_order_entry(x, y, *, order: str):
+    """Loop-order matmul entry (Fig 2–5 / Listing 5 kernel)."""
+    return matmul_orders.matmul_order(x, y, order=order)
+
+
+def saxpy_entry(a, x, y, *, chunk: int):
+    """saxpy entry (Listing 1 kernel)."""
+    return saxpy.saxpy(a, x, y, chunk=chunk)
+
+
+def stencil_entry(x, *, block: int):
+    """Jacobi stencil entry (parameter-reuse kernel)."""
+    return stencil.stencil3(x, block=block)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def mlp_block_entry(x, w1, w2, *, block: int):
+    """End-to-end model: relu(x @ w1) @ w2, both matmuls through the
+    tiled Pallas kernel with the same (tunable) block size.
+
+    This is the serving example's model: the autotuner tunes ``block``
+    across the whole two-matmul block at once — the paper's point that
+    tuning happens on the real composition, in the real execution
+    conditions, not on an isolated kernel.
+    """
+    h = matmul_tiled.matmul_tiled(x, w1, block=block)
+    h = jnp.maximum(h, 0.0)
+    return matmul_tiled.matmul_tiled(h, w2, block=block)
+
+
+#: MLP geometry for the serving example: batch x d_in -> hidden -> d_out.
+MLP_SHAPE = {"batch": 64, "d_in": 256, "hidden": 512, "d_out": 256}
+
+#: Block candidates for the MLP (must divide batch/d_in/hidden/d_out).
+MLP_BLOCKS = [16, 32, 64]
+
+# Re-exported oracles so tests can reach everything through `model`.
+REFS = {
+    "matmul_tiled": ref.matmul,
+    "matmul_order": ref.matmul,
+    "saxpy": ref.saxpy,
+    "stencil": ref.stencil3,
+    "mlp_block": ref.mlp_block,
+}

@@ -1,0 +1,93 @@
+"""AOT pipeline: HLO text generation, variant grid and manifest schema."""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_produces_parseable_module():
+    lowered = jax.jit(
+        lambda x, y: model.matmul_tiled_entry(x, y, block=16)
+    ).lower(aot.spec((32, 32)), aot.spec((32, 32)))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:80]
+    # lowered with return_tuple=True: root computation returns a tuple
+    assert "ROOT" in text
+
+
+def test_sig_format():
+    assert aot.sig((128, 64)) == "f32[128,64]"
+    assert aot.sig((5,)) == "f32[5]"
+
+
+def test_variant_grid_complete_and_unique():
+    variants = list(aot.variant_grid())
+    ids = [f'{v["kernel"]}.{v["label"]}.n{v["size"]}' for v in variants]
+    assert len(ids) == len(set(ids)), "duplicate variant ids"
+    kernels = {v["kernel"] for v in variants}
+    assert kernels == {
+        "matmul_tiled",
+        "matmul_order",
+        "saxpy",
+        "stencil",
+        "mlp_block",
+    }
+    # Fig 1 axis: every block candidate present for every matmul size
+    from compile.kernels import matmul_tiled
+
+    for n in matmul_tiled.SIZES:
+        blocks = [
+            v["value"]
+            for v in variants
+            if v["kernel"] == "matmul_tiled" and v["size"] == n
+        ]
+        assert blocks == matmul_tiled.BLOCK_CANDIDATES
+    # Fig 2-5 axis: all three orders for every size
+    from compile.kernels import matmul_orders
+
+    for n in matmul_orders.SIZES:
+        labels = [
+            v["label"]
+            for v in variants
+            if v["kernel"] == "matmul_order" and v["size"] == n
+        ]
+        assert labels == matmul_orders.ORDERS
+
+
+def test_variant_grid_entries_well_formed():
+    for v in aot.variant_grid():
+        assert v["flops"] > 0
+        assert len(v["inputs"]) == len(v["args"])
+        assert v["output"].startswith("f32[")
+        assert isinstance(v["value"], int)
+
+
+def test_source_stamp_stable():
+    assert aot.source_stamp() == aot.source_stamp()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(
+        os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    ),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_matches_grid():
+    path = os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json"
+    )
+    with open(path) as f:
+        manifest = json.load(f)
+    assert manifest["schema"] == aot.SCHEMA_VERSION
+    ids = {e["id"] for e in manifest["entries"]}
+    grid_ids = {
+        f'{v["kernel"]}.{v["label"]}.n{v["size"]}' for v in aot.variant_grid()
+    }
+    assert ids == grid_ids
+    art_dir = os.path.dirname(path)
+    for e in manifest["entries"]:
+        assert os.path.exists(os.path.join(art_dir, e["path"])), e["path"]

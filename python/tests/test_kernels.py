@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes, block sizes and seeds; every property asserts
+allclose against ``kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul_orders, matmul_tiled, ref, saxpy, stencil
+
+# interpret-mode pallas is slow; keep example counts modest but meaningful.
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- matmul_tiled
+@settings(**COMMON)
+@given(
+    logm=st.integers(3, 6),
+    logk=st.integers(3, 6),
+    logn=st.integers(3, 6),
+    block=st.sampled_from(matmul_tiled.BLOCK_CANDIDATES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tiled_matches_ref(logm, logk, logn, block, seed):
+    m, k, n = 2**logm, 2**logk, 2**logn
+    x, y = rand((m, k), seed), rand((k, n), seed + 1)
+    got = matmul_tiled.matmul_tiled(x, y, block=block)
+    want = ref.matmul(x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tiled_block_larger_than_matrix_clamps():
+    x, y = rand((16, 16), 0), rand((16, 16), 1)
+    got = matmul_tiled.matmul_tiled(x, y, block=256)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tiled_rectangular():
+    x, y = rand((32, 128), 2), rand((128, 64), 3)
+    got = matmul_tiled.matmul_tiled(x, y, block=32)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_tiled_rejects_indivisible():
+    x, y = rand((48, 48), 4), rand((48, 48), 5)
+    with pytest.raises(AssertionError):
+        matmul_tiled.matmul_tiled(x, y, block=32)
+
+
+def test_clamp_block():
+    assert matmul_tiled.clamp_block(512, 32, 32, 32) == 32
+    assert matmul_tiled.clamp_block(8, 32, 64, 128) == 8
+
+
+# --------------------------------------------------------------- matmul_orders
+@settings(**COMMON)
+@given(
+    logn=st.integers(5, 7),
+    order=st.sampled_from(matmul_orders.ORDERS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_orders_match_ref(logn, order, seed):
+    n = 2**logn
+    x, y = rand((n, n), seed), rand((n, n), seed + 1)
+    got = matmul_orders.matmul_order(x, y, order=order)
+    np.testing.assert_allclose(got, ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_all_orders_agree_with_each_other():
+    x, y = rand((64, 64), 10), rand((64, 64), 11)
+    outs = [
+        np.asarray(matmul_orders.matmul_order(x, y, order=o))
+        for o in matmul_orders.ORDERS
+    ]
+    for other in outs[1:]:
+        np.testing.assert_allclose(outs[0], other, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------- saxpy
+@settings(**COMMON)
+@given(
+    logn=st.integers(8, 14),
+    chunk=st.sampled_from(saxpy.CHUNK_CANDIDATES),
+    a=st.floats(-10, 10, allow_nan=False),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_saxpy_matches_ref(logn, chunk, a, seed):
+    n = 2**logn
+    if chunk > n:
+        chunk = n
+    av = jnp.array([a], jnp.float32)
+    x, y = rand((n,), seed), rand((n,), seed + 1)
+    got = saxpy.saxpy(av, x, y, chunk=chunk)
+    np.testing.assert_allclose(got, ref.saxpy(av, x, y), rtol=1e-5, atol=1e-5)
+
+
+def test_saxpy_zero_scale():
+    av = jnp.array([0.0], jnp.float32)
+    x, y = rand((1024,), 1), rand((1024,), 2)
+    np.testing.assert_allclose(saxpy.saxpy(av, x, y, chunk=256), y, rtol=0, atol=0)
+
+
+# --------------------------------------------------------------------- stencil
+@settings(**COMMON)
+@given(
+    logn=st.integers(9, 14),
+    block=st.sampled_from(stencil.BLOCK_CANDIDATES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_stencil_matches_ref(logn, block, seed):
+    n = 2**logn
+    if block > n:
+        block = n
+    x = rand((n,), seed)
+    got = stencil.stencil3(x, block=block)
+    np.testing.assert_allclose(got, ref.stencil3(x), rtol=1e-5, atol=1e-6)
+
+
+def test_stencil_boundaries_copied():
+    x = jnp.arange(512, dtype=jnp.float32)
+    out = stencil.stencil3(x, block=256)
+    assert out[0] == x[0]
+    assert out[-1] == x[-1]
+    # interior of a linear ramp is unchanged: (a-1 + a + a+1)/3 = a
+    np.testing.assert_allclose(out[1:-1], x[1:-1], rtol=1e-6)
+
+
+def test_stencil_single_block_whole_array():
+    x = rand((256,), 3)
+    got = stencil.stencil3(x, block=4096)  # clamps to n
+    np.testing.assert_allclose(got, ref.stencil3(x), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,66 @@
+"""Layer-2 model entry points: shapes, composition, variant equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(shape, seed):
+    return jax.random.normal(jax.random.key(seed), shape, jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def mlp_inputs():
+    g = model.MLP_SHAPE
+    return (
+        rand((g["batch"], g["d_in"]), 0),
+        rand((g["d_in"], g["hidden"]), 1),
+        rand((g["hidden"], g["d_out"]), 2),
+    )
+
+
+@pytest.mark.parametrize("block", model.MLP_BLOCKS)
+def test_mlp_block_matches_ref(mlp_inputs, block):
+    x, w1, w2 = mlp_inputs
+    got = model.mlp_block_entry(x, w1, w2, block=block)
+    want = ref.mlp_block(x, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_mlp_variants_agree(mlp_inputs):
+    x, w1, w2 = mlp_inputs
+    outs = [
+        np.asarray(model.mlp_block_entry(x, w1, w2, block=b))
+        for b in model.MLP_BLOCKS
+    ]
+    for other in outs[1:]:
+        # different block sizes change the f32 accumulation order; only an
+        # absolute tolerance is meaningful near zero
+        np.testing.assert_allclose(outs[0], other, rtol=1e-3, atol=2e-3)
+
+
+def test_mlp_output_shape(mlp_inputs):
+    x, w1, w2 = mlp_inputs
+    g = model.MLP_SHAPE
+    out = model.mlp_block_entry(x, w1, w2, block=32)
+    assert out.shape == (g["batch"], g["d_out"])
+
+
+def test_mlp_relu_nonlinearity(mlp_inputs):
+    """The hidden layer must actually clamp: a negated input should not
+    simply negate the output (it would for a purely linear block)."""
+    x, w1, w2 = mlp_inputs
+    out_pos = np.asarray(model.mlp_block_entry(x, w1, w2, block=32))
+    out_neg = np.asarray(model.mlp_block_entry(-x, w1, w2, block=32))
+    assert not np.allclose(out_neg, -out_pos, rtol=1e-3, atol=1e-3)
+
+
+def test_mlp_blocks_divide_geometry():
+    g = model.MLP_SHAPE
+    for b in model.MLP_BLOCKS:
+        for dim in g.values():
+            assert dim % b == 0, f"block {b} does not divide {dim}"

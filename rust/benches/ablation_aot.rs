@@ -1,0 +1,103 @@
+//! **Ablation: AOT-all-variants vs JIT autotuning** — the alternative
+//! the paper's introduction discusses ("generate all the variants at
+//! compile-time, and only run and select the best one at run-time") and
+//! rejects in favor of JIT.
+//!
+//! Compares, on the loop-order matmul:
+//! * `jit-autotune` — the paper's approach (compiles lazily during the
+//!   first calls; losers evicted).
+//! * `aot-all` — compile *every* variant up front, then select by
+//!   measurement (no compile on the request path, but full upfront cost
+//!   and k resident executables).
+//! * `oracle` — perfect pick, setup = one measurement pass.
+//!
+//! Reported: time-to-first-result, setup cost, cumulative time at the
+//! window end, resident executables.
+//!
+//! Output: stdout table + `target/figures/ablation_aot.csv`.
+
+use jitune::baseline::{AotAll, Oracle};
+use jitune::report::bench::{artifacts_or_skip, autotuned_run, cumulative, fresh_dispatcher};
+use jitune::runtime::{CompileCache, PjrtEngine};
+use jitune::util::chart;
+use jitune::workload::inputs_for;
+
+const SIZE: i64 = 256;
+const ITERS: usize = 40;
+
+fn main() {
+    jitune::util::logging::init();
+    let Some(manifest) = artifacts_or_skip("ablation_aot") else { return };
+    let problem = manifest.problem("matmul_order", SIZE).expect("problem").clone();
+    let inputs = inputs_for(&problem, 42);
+
+    println!("== Ablation: JIT autotune vs AOT-all-variants (matmul_order n={SIZE}, {ITERS} calls) ==\n");
+    let mut rows = Vec::new();
+
+    // jit-autotune
+    let mut d = fresh_dispatcher(&manifest).expect("dispatcher");
+    let outcomes = autotuned_run(&mut d, "matmul_order", SIZE, ITERS, 42).expect("run");
+    let cum = cumulative(&outcomes);
+    let first = outcomes[0].total.as_secs_f64();
+    println!(
+        "jit-autotune : first-result {:7.1}ms  setup {:>9} cumulative {:8.1}ms  resident exes: 1",
+        first * 1e3,
+        "(none)",
+        cum.last().unwrap() * 1e3
+    );
+    rows.push(vec![
+        "jit-autotune".into(),
+        format!("{first:.6}"),
+        "0".into(),
+        format!("{:.6}", cum.last().unwrap()),
+        "1".into(),
+    ]);
+
+    // aot-all
+    let mut cache = CompileCache::new(Box::new(PjrtEngine::cpu().expect("pjrt")));
+    let run = AotAll::run(&manifest, &mut cache, &problem, &inputs, ITERS).expect("aot");
+    let aot_first = run.setup.as_secs_f64() + run.per_call[0].as_secs_f64();
+    println!(
+        "aot-all      : first-result {:7.1}ms  setup {:7.1}ms cumulative {:8.1}ms  resident exes: {}",
+        aot_first * 1e3,
+        run.setup.as_secs_f64() * 1e3,
+        (run.setup.as_secs_f64() + run.total()) * 1e3,
+        cache.resident()
+    );
+    rows.push(vec![
+        "aot-all".into(),
+        format!("{aot_first:.6}"),
+        format!("{:.6}", run.setup.as_secs_f64()),
+        format!("{:.6}", run.setup.as_secs_f64() + run.total()),
+        cache.resident().to_string(),
+    ]);
+
+    // oracle
+    let mut cache2 = CompileCache::new(Box::new(PjrtEngine::cpu().expect("pjrt")));
+    let orun = Oracle::run(&manifest, &mut cache2, &problem, &inputs, ITERS).expect("oracle");
+    println!(
+        "oracle       : first-result {:7.1}ms  setup {:7.1}ms cumulative {:8.1}ms  resident exes: {}",
+        (orun.setup.as_secs_f64() + orun.per_call[0].as_secs_f64()) * 1e3,
+        orun.setup.as_secs_f64() * 1e3,
+        (orun.setup.as_secs_f64() + orun.total()) * 1e3,
+        cache2.resident()
+    );
+    rows.push(vec![
+        "oracle".into(),
+        format!("{:.6}", orun.setup.as_secs_f64() + orun.per_call[0].as_secs_f64()),
+        format!("{:.6}", orun.setup.as_secs_f64()),
+        format!("{:.6}", orun.setup.as_secs_f64() + orun.total()),
+        cache2.resident().to_string(),
+    ]);
+
+    println!(
+        "\njit-autotune produces its first (tuning) result while aot-all is still compiling \
+         the full variant set; aot-all keeps every executable resident. Same asymptotic \
+         slope; the trade is startup latency + memory vs total tuning overhead."
+    );
+
+    let header = ["policy", "first_result_s", "setup_s", "cumulative_s", "resident"];
+    jitune::report::write_figure_file("ablation_aot.csv", &chart::csv(&header, &rows))
+        .expect("csv");
+    println!("wrote target/figures/ablation_aot.csv");
+}

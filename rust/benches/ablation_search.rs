@@ -1,0 +1,134 @@
+//! **Ablation: search strategies** — the paper's §5 future work.
+//!
+//! Compares the paper's exhaustive sweep against random search, hill
+//! climbing and simulated annealing on (a) synthetic cost surfaces with
+//! known optima (many seeds, mock timing) and (b) one real tuning
+//! problem (matmul_tiled block size on PJRT).
+//!
+//! Metrics: tuning iterations used, probability of finding the global
+//! optimum, and *regret* (chosen cost − optimal cost) / optimal.
+//!
+//! Output: stdout table + `target/figures/ablation_search.csv`.
+
+use jitune::autotuner::search::{self, SearchStrategy};
+use jitune::autotuner::{Autotuner, History};
+use jitune::report::bench::{artifacts_or_skip, autotuned_run, fresh_dispatcher_with};
+use jitune::util::chart;
+use jitune::util::prng::Rng;
+
+const STRATEGIES: &[&str] = &["sweep", "random:8", "hillclimb", "anneal:10"];
+
+/// Synthetic surfaces over 12 candidates.
+fn surfaces() -> Vec<(&'static str, Box<dyn Fn(usize, &mut Rng) -> f64>)> {
+    vec![
+        ("unimodal", Box::new(|i, rng| ((i as f64) - 8.0).powi(2) + 1.0 + rng.f64() * 0.05)),
+        ("monotone", Box::new(|i, rng| 12.0 - i as f64 + rng.f64() * 0.05)),
+        (
+            "bimodal",
+            Box::new(|i, rng| {
+                let a = ((i as f64) - 2.0).powi(2) + 2.0;
+                let b = ((i as f64) - 9.0).powi(2) + 1.0;
+                a.min(b) + rng.f64() * 0.05
+            }),
+        ),
+        ("noisy-flat", Box::new(|i, rng| 5.0 + if i == 6 { -1.0 } else { 0.0 } + rng.f64() * 0.2)),
+    ]
+}
+
+fn run_strategy(spec: &str, surface: &dyn Fn(usize, &mut Rng) -> f64, seed: u64) -> (usize, f64) {
+    let n = 12usize;
+    let values: Vec<i64> = (0..n as i64).collect();
+    let mut strategy: Box<dyn SearchStrategy> = search::from_spec(spec, n, seed).unwrap();
+    let mut history = History::new(&values);
+    let mut rng = Rng::seed(seed ^ 0xABCD);
+    let mut iters = 0;
+    while let Some(idx) = strategy.next(&history) {
+        history.record(idx, surface(idx, &mut rng));
+        iters += 1;
+        if iters > 200 {
+            break;
+        }
+    }
+    // true optimum = argmin of the noise-free surface
+    let mut noiseless = Rng::seed(0);
+    let optimal = (0..n)
+        .map(|i| surface(i, &mut noiseless))
+        .fold(f64::INFINITY, f64::min);
+    let chosen_idx = history.best_index().unwrap();
+    let mut noiseless2 = Rng::seed(0);
+    let chosen_cost = surface(chosen_idx, &mut noiseless2);
+    let regret = (chosen_cost - optimal) / optimal;
+    (iters, regret.max(0.0))
+}
+
+fn main() {
+    jitune::util::logging::init();
+    println!("== Ablation: search strategies (12 candidates, 30 seeds per surface) ==\n");
+    let mut rows = Vec::new();
+
+    println!(
+        "{:<12} {:<12} {:>8} {:>12} {:>10}",
+        "surface", "strategy", "iters", "mean regret", "hit rate"
+    );
+    for (name, surface) in surfaces() {
+        for &spec in STRATEGIES {
+            let mut total_iters = 0usize;
+            let mut total_regret = 0.0;
+            let mut hits = 0usize;
+            let seeds = 30u64;
+            for seed in 0..seeds {
+                let (iters, regret) = run_strategy(spec, surface.as_ref(), seed);
+                total_iters += iters;
+                total_regret += regret;
+                if regret < 0.05 {
+                    hits += 1;
+                }
+            }
+            let mean_iters = total_iters as f64 / seeds as f64;
+            let mean_regret = total_regret / seeds as f64;
+            let hit_rate = hits as f64 / seeds as f64;
+            println!(
+                "{name:<12} {spec:<12} {mean_iters:>8.1} {mean_regret:>11.1}% {hit_rate:>9.0}%",
+                mean_regret = mean_regret * 100.0,
+                hit_rate = hit_rate * 100.0
+            );
+            rows.push(vec![
+                name.to_string(),
+                spec.to_string(),
+                format!("{mean_iters:.2}"),
+                format!("{mean_regret:.4}"),
+                format!("{hit_rate:.2}"),
+            ]);
+        }
+        println!();
+    }
+
+    // real tuning problem: matmul_tiled block size at n=256
+    if let Some(manifest) = artifacts_or_skip("ablation_search(real)") {
+        println!("real problem: matmul_tiled n=256 (6 candidates) — iterations to tuned + winner");
+        for &spec in STRATEGIES {
+            let spec_owned = spec.to_string();
+            let tuner = Autotuner::with_factory(Box::new(move |values| {
+                search::from_spec(&spec_owned, values.len(), 42).unwrap()
+            }));
+            let mut d = fresh_dispatcher_with(&manifest, tuner).expect("dispatcher");
+            let outcomes = autotuned_run(&mut d, "matmul_tiled", 256, 20, 42).expect("run");
+            let explores =
+                outcomes.iter().filter(|o| o.route == jitune::coordinator::CallRoute::Explored).count();
+            let winner = d.tuned_value("matmul_tiled", 256);
+            println!("  {spec:<12} tuning iterations={explores:<3} tuned block={winner:?}");
+            rows.push(vec![
+                "real:matmul_tiled".to_string(),
+                spec.to_string(),
+                explores.to_string(),
+                format!("{winner:?}"),
+                String::new(),
+            ]);
+        }
+    }
+
+    let header = ["surface", "strategy", "iters", "regret_or_winner", "hit_rate"];
+    jitune::report::write_figure_file("ablation_search.csv", &chart::csv(&header, &rows))
+        .expect("csv");
+    println!("\nwrote target/figures/ablation_search.csv");
+}

@@ -1,0 +1,91 @@
+//! **Figure 1** — Block-size choice for different matrix sizes.
+//!
+//! The paper runs the tiled matmul (Listing 6) repeatedly and histograms
+//! which block size the tuner picks per matrix size: 64 for medium
+//! matrices (128, 256), 512 for large (≥512), noisy for small ones where
+//! tiling barely matters. This bench repeats the whole tuning process R
+//! times per size with fresh tuner state and reports the choice counts.
+//!
+//! Output: stdout table + bars, `target/figures/fig1.csv`.
+
+use std::collections::BTreeMap;
+
+use jitune::report::bench::{artifacts_or_skip, autotuned_run, fresh_dispatcher, repeats};
+use jitune::util::chart;
+
+fn main() {
+    jitune::util::logging::init();
+    let Some(manifest) = artifacts_or_skip("fig1") else { return };
+    let repeats = repeats(5);
+    let sizes = manifest.sizes("matmul_tiled");
+    let blocks: Vec<i64> = manifest
+        .problem("matmul_tiled", sizes[0])
+        .unwrap()
+        .variants
+        .iter()
+        .map(|v| v.value)
+        .collect();
+
+    println!("== Fig 1: block-size choice per matrix size ({repeats} tuning runs each) ==\n");
+    let mut rows = Vec::new();
+    let mut counts_by_size: BTreeMap<i64, BTreeMap<i64, usize>> = BTreeMap::new();
+
+    for &size in &sizes {
+        for rep in 0..repeats {
+            let mut d = fresh_dispatcher(&manifest).expect("dispatcher");
+            // run until tuned: k explores + 1 finalize (+1 safety)
+            let iters = blocks.len() + 2;
+            let outcomes =
+                autotuned_run(&mut d, "matmul_tiled", size, iters, 42 + rep as u64).expect("run");
+            let chosen = outcomes.last().unwrap().value;
+            *counts_by_size.entry(size).or_default().entry(chosen).or_default() += 1;
+        }
+    }
+
+    // paper-style table: one row per size, counts per block candidate
+    print!("{:>6} |", "size");
+    for b in &blocks {
+        print!("{b:>6}");
+    }
+    println!();
+    println!("{}", "-".repeat(8 + 6 * blocks.len()));
+    for (&size, counts) in &counts_by_size {
+        print!("{size:>6} |");
+        for b in &blocks {
+            let c = counts.get(b).copied().unwrap_or(0);
+            print!("{c:>6}");
+        }
+        println!();
+        for b in &blocks {
+            rows.push(vec![
+                size.to_string(),
+                b.to_string(),
+                counts.get(b).copied().unwrap_or(0).to_string(),
+            ]);
+        }
+    }
+
+    // bar chart per size
+    println!();
+    for (&size, counts) in &counts_by_size {
+        let bars: Vec<(String, f64)> = blocks
+            .iter()
+            .map(|b| (format!("b{b}"), counts.get(b).copied().unwrap_or(0) as f64))
+            .collect();
+        print!("{}", chart::bars(&format!("n={size}"), &bars, 30));
+    }
+
+    let header = ["size", "block", "count"];
+    jitune::report::write_figure_file("fig1.csv", &chart::csv(&header, &rows)).expect("csv");
+    println!("wrote target/figures/fig1.csv\n");
+
+    // paper-shape sanity notes
+    for (&size, counts) in &counts_by_size {
+        let (&best_block, &n) = counts.iter().max_by_key(|(_, &c)| c).unwrap();
+        let stable = n == repeats;
+        println!(
+            "n={size}: modal choice b{best_block} ({n}/{repeats} runs{})",
+            if stable { ", stable" } else { "" }
+        );
+    }
+}

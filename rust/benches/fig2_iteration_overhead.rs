@@ -1,0 +1,80 @@
+//! **Figure 2** — Per-iteration execution time, first 15 iterations,
+//! three matrix sizes, log-scale y.
+//!
+//! The paper's benchmark chooses between three loop-order matmul
+//! implementations (Listing 5). Iterations 0–2 are tuning iterations
+//! (JIT compile + run each variant), iteration 3 compiles the final
+//! winner, and the rest run the cached winner. Compile cost dominates
+//! small sizes and becomes relatively negligible on larger ones.
+//!
+//! Output: stdout chart (log y) + `target/figures/fig2.csv`.
+
+use jitune::coordinator::CallRoute;
+use jitune::report::bench::{artifacts_or_skip, autotuned_run, fresh_dispatcher};
+use jitune::report::Figure;
+use jitune::util::chart::Series;
+
+const ITERS: usize = 15;
+const SIZES: &[i64] = &[64, 128, 256];
+
+fn main() {
+    jitune::util::logging::init();
+    let Some(manifest) = artifacts_or_skip("fig2") else { return };
+
+    println!(
+        "== Fig 2: per-iteration time, matmul loop-order choice, first {ITERS} iterations ==\n"
+    );
+    let mut series = Vec::new();
+    let mut rows = Vec::new();
+
+    for &size in SIZES {
+        let mut d = fresh_dispatcher(&manifest).expect("dispatcher");
+        let outcomes = autotuned_run(&mut d, "matmul_order", size, ITERS, 42).expect("run");
+        let points: Vec<(f64, f64)> = outcomes
+            .iter()
+            .enumerate()
+            .map(|(i, o)| (i as f64, o.total.as_secs_f64()))
+            .collect();
+        println!("n={size}:");
+        for (i, o) in outcomes.iter().enumerate() {
+            let phase = match o.route {
+                CallRoute::Explored => "explore",
+                CallRoute::Finalized => "finalize",
+                CallRoute::Tuned => "tuned",
+            };
+            println!(
+                "  iter {i:2} {phase:<9} {:<6} {:9.3}ms{}",
+                o.variant_id.split('.').nth(1).unwrap_or("?"),
+                o.total.as_secs_f64() * 1e3,
+                if o.compiled { "  [JIT compile]" } else { "" }
+            );
+            rows.push(vec![
+                size.to_string(),
+                i.to_string(),
+                format!("{:.6}", o.total.as_secs_f64()),
+                phase.to_string(),
+                o.variant_id.clone(),
+            ]);
+        }
+        println!();
+        series.push(Series::new(format!("n={size}"), points));
+    }
+
+    let fig = Figure {
+        stem: "fig2".into(),
+        title: "Fig 2: iteration time (s), log y — compile spikes on iters 0..3".into(),
+        header: vec![
+            "size".into(),
+            "iteration".into(),
+            "seconds".into(),
+            "phase".into(),
+            "variant".into(),
+        ],
+        rows,
+        series,
+        log_y: true,
+    };
+    let rendered = fig.emit().expect("emit");
+    println!("{rendered}");
+    println!("wrote target/figures/fig2.csv and fig2.txt");
+}

@@ -1,0 +1,158 @@
+//! §Perf probe — paired micro-measurements of the L3 hot-path changes,
+//! so before/after deltas are measured in one process on one machine
+//! state (immune to background load differences between runs).
+//!
+//! Probes:
+//!  1. Literal construction: `vec1 + reshape` (baseline) vs
+//!     `create_from_shape_and_untyped_data` (optimized single copy).
+//!  2. Call-plan resolution: `problem_for_inputs().clone()` per call
+//!     (baseline) vs the cached CallPlan lookup the dispatcher now uses.
+//!  3. End-to-end steady-state call vs raw executable dispatch — the
+//!     residual coordinator overhead.
+//!
+//! Output: stdout + `target/figures/perf_probe.csv`.
+
+use std::time::Instant;
+
+use jitune::coordinator::{CallRoute, KernelRegistry};
+use jitune::report::bench::{artifacts_or_skip, fresh_dispatcher};
+use jitune::runtime::{CompileCache, PjrtEngine};
+use jitune::tensor::HostTensor;
+use jitune::util::chart;
+use jitune::util::stats::Summary;
+
+fn time_n(n: usize, mut f: impl FnMut()) -> Summary {
+    let mut samples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let Some(manifest) = artifacts_or_skip("perf_probe") else { return };
+    let mut rows = Vec::new();
+    println!("== §Perf probe (paired in-process measurements) ==\n");
+
+    // ---- probe 1: literal construction --------------------------------
+    for shape in [vec![64usize, 64], vec![256, 512]] {
+        let t = HostTensor::random(&shape, 1);
+        let dims_i64: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let n = 2000;
+        let old = time_n(n, || {
+            let lit = xla::Literal::vec1(t.data()).reshape(&dims_i64).unwrap();
+            std::hint::black_box(&lit);
+        });
+        let new = time_n(n, || {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+            };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &shape,
+                bytes,
+            )
+            .unwrap();
+            std::hint::black_box(&lit);
+        });
+        let speedup = old.mean / new.mean;
+        println!(
+            "literal f32{shape:?}: vec1+reshape {:.1}µs -> single-copy {:.1}µs  ({speedup:.2}x)",
+            old.mean * 1e6,
+            new.mean * 1e6
+        );
+        rows.push(vec![
+            format!("literal_{}", shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")),
+            format!("{:.9}", old.mean),
+            format!("{:.9}", new.mean),
+            format!("{speedup:.3}"),
+        ]);
+    }
+
+    // ---- probe 2: per-call plan resolution -----------------------------
+    {
+        let registry = KernelRegistry::new(manifest.clone());
+        let inputs = [HostTensor::random(&[64, 64], 1), HostTensor::random(&[64, 64], 2)];
+        let n = 20_000;
+        let old = time_n(n, || {
+            // what the dispatcher used to do every call
+            let p = registry.problem_for_inputs("matmul_tiled", &inputs).unwrap().clone();
+            std::hint::black_box(&p);
+        });
+        // the cached-plan path: signature string + hashmap hit
+        let mut plans = std::collections::HashMap::new();
+        plans.insert(
+            (
+                "matmul_tiled".to_string(),
+                inputs.iter().map(HostTensor::signature).collect::<Vec<_>>().join(","),
+            ),
+            42usize,
+        );
+        let new = time_n(n, || {
+            let sig = inputs.iter().map(HostTensor::signature).collect::<Vec<_>>().join(",");
+            let v = plans.get(&("matmul_tiled".to_string(), sig)).unwrap();
+            std::hint::black_box(v);
+        });
+        let speedup = old.mean / new.mean;
+        println!(
+            "plan resolve: problem.clone() {:.2}µs -> cached plan {:.2}µs  ({speedup:.2}x)",
+            old.mean * 1e6,
+            new.mean * 1e6
+        );
+        rows.push(vec![
+            "plan_resolution".into(),
+            format!("{:.9}", old.mean),
+            format!("{:.9}", new.mean),
+            format!("{speedup:.3}"),
+        ]);
+    }
+
+    // ---- probe 3: dispatcher overhead over raw execution ----------------
+    {
+        let mut d = fresh_dispatcher(&manifest).expect("dispatcher");
+        let inputs = [HostTensor::random(&[64, 64], 1), HostTensor::random(&[64, 64], 2)];
+        // tune to steady state
+        loop {
+            if d.call("matmul_tiled", &inputs).unwrap().route == CallRoute::Finalized {
+                break;
+            }
+        }
+        let n = 300;
+        let full = time_n(n, || {
+            let out = d.call("matmul_tiled", &inputs).unwrap();
+            std::hint::black_box(&out);
+        });
+        // raw: same variant, executed straight off a compile cache
+        let mut cache = CompileCache::new(Box::new(PjrtEngine::cpu().expect("pjrt")));
+        let winner_value = d.tuned_value("matmul_tiled", 64).unwrap();
+        let problem = manifest.problem("matmul_tiled", 64).unwrap();
+        let variant =
+            problem.variants.iter().find(|v| v.value == winner_value).unwrap().clone();
+        cache.get_or_compile(&manifest, &variant).unwrap();
+        let raw = time_n(n, || {
+            let (exe, _) = cache.get_or_compile(&manifest, &variant).unwrap();
+            let out = exe.execute(&inputs).unwrap();
+            std::hint::black_box(&out);
+        });
+        let overhead_us = (full.median - raw.median) * 1e6;
+        println!(
+            "steady call: dispatcher p50 {:.1}µs vs raw p50 {:.1}µs -> coordinator overhead ≈ {overhead_us:.1}µs/call",
+            full.median * 1e6,
+            raw.median * 1e6
+        );
+        rows.push(vec![
+            "dispatch_overhead".into(),
+            format!("{:.9}", full.median),
+            format!("{:.9}", raw.median),
+            format!("{overhead_us:.3}"),
+        ]);
+    }
+
+    let header = ["probe", "baseline_s", "optimized_s", "speedup_or_us"];
+    jitune::report::write_figure_file("perf_probe.csv", &chart::csv(&header, &rows))
+        .expect("csv");
+    println!("\nwrote target/figures/perf_probe.csv");
+}

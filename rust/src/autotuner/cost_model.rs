@@ -1,0 +1,215 @@
+//! The paper's analytical overhead model (§3.3, Equations 1 and 2).
+//!
+//! With `k` variants of compile cost `C` each and execution times
+//! `E_0 ≤ E_1 ≤ … ≤ E_{k-1}`, `N` total calls, and a programmer-picked
+//! baseline variant with execution time `E_p`:
+//!
+//! **Eq. 1** — total autotuned cost:
+//! ```text
+//! E_auto = k·C + Σ_{i<k} E_i + C + (N − k − 1)·E_0
+//! ```
+//! (k tuning iterations each paying compile+run, one final compilation of
+//! the winner — whose call also runs, hence the extra `E_0` — and the
+//! remaining `N−k−1` calls at the optimal time.)
+//!
+//! **Eq. 2** — autotuning pays off when:
+//! ```text
+//! (N − k)(E_p − E_0) ≥ (k+1)·C + Σ_{i<k} E_i − k·E_p
+//! ```
+//!
+//! `benches/costmodel_validation.rs` plugs measured `C` and `E_i` in and
+//! checks the predicted crossover against the measured cumulative curves.
+
+/// Inputs to the model: one tuning problem's measured constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostModel {
+    /// Per-variant compile cost `C` (the paper assumes it equal across
+    /// variants).
+    pub compile_cost: f64,
+    /// Execution times of all k variants, any order (`E_i`).
+    pub exec_times: Vec<f64>,
+}
+
+impl CostModel {
+    /// Build a model; `exec_times` must be non-empty and positive.
+    pub fn new(compile_cost: f64, exec_times: Vec<f64>) -> CostModel {
+        assert!(!exec_times.is_empty(), "need at least one variant");
+        CostModel { compile_cost, exec_times }
+    }
+
+    /// Number of variants `k`.
+    pub fn k(&self) -> usize {
+        self.exec_times.len()
+    }
+
+    /// Best execution time `E_0`.
+    pub fn e0(&self) -> f64 {
+        self.exec_times.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Sum of all variant execution times `Σ E_i`.
+    pub fn sum_e(&self) -> f64 {
+        self.exec_times.iter().sum()
+    }
+
+    /// **Eq. 1**: total cost of `n` calls under JIT autotuning.
+    /// For `n ≤ k` the schedule is truncated: only the first `n` tuning
+    /// iterations happen.
+    pub fn e_auto(&self, n: usize) -> f64 {
+        let k = self.k();
+        let c = self.compile_cost;
+        if n == 0 {
+            return 0.0;
+        }
+        if n <= k {
+            // truncated: n tuning iterations, no finalization yet
+            return n as f64 * c + self.exec_times[..n].iter().sum::<f64>();
+        }
+        // k·C + Σ E_i  (tuning iterations)
+        // + C + E_0    (finalization call: winner recompiled and run)
+        // + (N−k−1)·E_0 (steady state)
+        // = k·C + Σ E_i + C + (N−k)·E_0
+        // (the paper's Eq. 1 second line drops the finalization call's
+        // E_0 that its first line includes; we keep the exact total,
+        // verified call-by-call by `simulate_schedule`.)
+        k as f64 * c + self.sum_e() + c + (n as f64 - k as f64) * self.e0()
+    }
+
+    /// Total cost of `n` calls when the programmer fixed variant `p`
+    /// (AOT baseline: no JIT compile on the request path).
+    pub fn e_fixed(&self, p: usize, n: usize) -> f64 {
+        n as f64 * self.exec_times[p]
+    }
+
+    /// **Eq. 2** left side: gain over the last `n−k` calls.
+    pub fn gain(&self, p: usize, n: usize) -> f64 {
+        (n as f64 - self.k() as f64) * (self.exec_times[p] - self.e0())
+    }
+
+    /// **Eq. 2** right side: tuning overhead vs the fixed baseline.
+    pub fn overhead(&self, p: usize) -> f64 {
+        let k = self.k() as f64;
+        (k + 1.0) * self.compile_cost + self.sum_e() - k * self.exec_times[p]
+    }
+
+    /// Does autotuning pay off within `n` calls against baseline `p`?
+    pub fn pays_off(&self, p: usize, n: usize) -> bool {
+        self.gain(p, n) >= self.overhead(p)
+    }
+
+    /// Crossover call count `N*`: the smallest `n` for which autotuning
+    /// beats baseline `p`. `None` if it never does (baseline is already
+    /// optimal or better).
+    pub fn crossover(&self, p: usize) -> Option<u64> {
+        let ep = self.exec_times[p];
+        let e0 = self.e0();
+        if ep <= e0 {
+            // no gain per call: pays off only if overhead ≤ 0 (impossible
+            // with positive compile cost)
+            return if self.overhead(p) <= 0.0 { Some(0) } else { None };
+        }
+        let k = self.k() as f64;
+        let n = k + self.overhead(p) / (ep - e0);
+        Some(n.max(0.0).ceil() as u64)
+    }
+
+    /// Simulate the exact call-by-call schedule (for property-testing
+    /// Eq. 1 against the telescoped closed form): returns per-call costs.
+    pub fn simulate_schedule(&self, n: usize) -> Vec<f64> {
+        let k = self.k();
+        let mut costs = Vec::with_capacity(n);
+        for call in 0..n {
+            if call < k {
+                // tuning iteration: compile variant `call` + run it
+                costs.push(self.compile_cost + self.exec_times[call]);
+            } else if call == k {
+                // finalization: compile winner again + run it
+                costs.push(self.compile_cost + self.e0());
+            } else {
+                costs.push(self.e0());
+            }
+        }
+        costs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel::new(10.0, vec![1.0, 4.0, 2.0])
+    }
+
+    #[test]
+    fn eq1_matches_simulated_schedule() {
+        let m = model();
+        for n in [0usize, 1, 2, 3, 4, 5, 10, 100] {
+            let sim: f64 = m.simulate_schedule(n).iter().sum();
+            let closed = m.e_auto(n);
+            assert!((sim - closed).abs() < 1e-9, "n={n}: sim={sim} closed={closed}");
+        }
+    }
+
+    #[test]
+    fn e0_and_sums() {
+        let m = model();
+        assert_eq!(m.e0(), 1.0);
+        assert_eq!(m.sum_e(), 7.0);
+        assert_eq!(m.k(), 3);
+    }
+
+    #[test]
+    fn eq2_consistency_with_curves() {
+        // pays_off(p, n) must agree with comparing the cumulative curves
+        let m = model();
+        for p in 0..3 {
+            for n in 4..200 {
+                let curves_say = m.e_auto(n) <= m.e_fixed(p, n);
+                let eq2_says = m.pays_off(p, n);
+                assert_eq!(curves_say, eq2_says, "p={p} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn crossover_is_tight() {
+        let m = model();
+        // baseline p=1 (E_p=4): gain 3/call after tuning
+        let n_star = m.crossover(1).unwrap();
+        assert!(m.pays_off(1, n_star as usize));
+        assert!(!m.pays_off(1, n_star as usize - 1));
+    }
+
+    #[test]
+    fn no_crossover_when_baseline_optimal() {
+        let m = model();
+        // baseline p=0 is already the best variant: compile cost never
+        // amortizes
+        assert_eq!(m.crossover(0), None);
+        assert!(!m.pays_off(0, 1_000_000));
+    }
+
+    #[test]
+    fn small_matrix_regime_large_crossover() {
+        // Fig 3 regime: compile cost dwarfs per-call gain → huge N*
+        let m = CostModel::new(100.0, vec![1.0, 1.2, 1.1]);
+        let n_star = m.crossover(1).unwrap();
+        assert!(n_star > 1000, "n_star={n_star}");
+    }
+
+    #[test]
+    fn large_matrix_regime_small_crossover() {
+        // Fig 5 regime: compile cost small vs exec gain → crossover in a
+        // few iterations
+        let m = CostModel::new(0.5, vec![10.0, 30.0, 20.0]);
+        let n_star = m.crossover(1).unwrap();
+        assert!(n_star <= 10, "n_star={n_star}");
+    }
+
+    #[test]
+    fn truncated_schedule_below_k() {
+        let m = model();
+        assert_eq!(m.e_auto(2), 2.0 * 10.0 + 1.0 + 4.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Tuning-problem identity.
+
+use std::fmt;
+
+/// Identifies one tuning problem: a kernel, its autotune-parameter name
+/// and the argument signature it is being called with.
+///
+/// The paper keys tuner state on the autotune parameter's *name* and
+/// restarts tuning when it changes; calls with different argument sizes
+/// are "another autotuning problem". Folding the signature into the key
+/// implements exactly that: a mid-run shape change starts a fresh tuner
+/// (exercised by `benches/ablation_retune.rs`).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProblemKey {
+    /// Kernel family name.
+    pub kernel: String,
+    /// Autotune parameter name (`block`, `order`, `chunk`, ...).
+    pub param: String,
+    /// Argument signature, e.g. `f32[128,128],f32[128,128]`.
+    pub signature: String,
+}
+
+impl ProblemKey {
+    /// Build a key.
+    pub fn new(
+        kernel: impl Into<String>,
+        param: impl Into<String>,
+        signature: impl Into<String>,
+    ) -> ProblemKey {
+        ProblemKey { kernel: kernel.into(), param: param.into(), signature: signature.into() }
+    }
+
+    /// Key for a manifest problem (kernel + param + joined input sigs).
+    pub fn for_problem(p: &crate::manifest::Problem) -> ProblemKey {
+        ProblemKey::new(&p.kernel, &p.param, p.variants[0].inputs.join(","))
+    }
+}
+
+impl fmt::Display for ProblemKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}[{}]({})", self.kernel, self.param, self.signature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equality_and_hash_key_on_all_fields() {
+        use std::collections::HashSet;
+        let a = ProblemKey::new("k", "block", "f32[8,8]");
+        let b = ProblemKey::new("k", "block", "f32[8,8]");
+        let c = ProblemKey::new("k", "block", "f32[16,16]"); // new shape → new problem
+        let d = ProblemKey::new("k", "unroll", "f32[8,8]"); // new param name → new problem
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        let set: HashSet<_> = [a, b, c, d].into_iter().collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn display_format() {
+        let k = ProblemKey::new("matmul", "block", "f32[8,8],f32[8,8]");
+        assert_eq!(k.to_string(), "matmul[block](f32[8,8],f32[8,8])");
+    }
+}

@@ -1,0 +1,185 @@
+//! Performance measurement — the paper's §3.2 *Performance measurement*.
+//!
+//! The paper counts CPU cycles with `rdtsc` but notes the measurement
+//! function "can be overloaded and any other measurement function can be
+//! used to count any other metric, such as energy consumption". [`Metric`]
+//! is that overload point; three implementations ship.
+
+use std::time::Instant;
+
+/// A cost metric the tuner minimizes. Object-safe so the dispatcher can
+/// hold `Box<dyn Metric>`.
+pub trait Metric: Send {
+    /// Metric name for reports.
+    fn name(&self) -> &'static str;
+    /// Unit string for reports ("s", "cycles", "J").
+    fn unit(&self) -> &'static str;
+    /// Opaque begin token.
+    fn begin(&self) -> u64;
+    /// Cost since `begin`, in metric units.
+    fn end(&self, begin: u64) -> f64;
+}
+
+/// Monotonic wall-clock seconds.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    /// New wall-clock metric.
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Metric for WallClock {
+    fn name(&self) -> &'static str {
+        "wall_clock"
+    }
+
+    fn unit(&self) -> &'static str {
+        "s"
+    }
+
+    fn begin(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    fn end(&self, begin: u64) -> f64 {
+        (self.epoch.elapsed().as_nanos() as u64).saturating_sub(begin) as f64 * 1e-9
+    }
+}
+
+/// CPU cycle counter — the paper's default (`rdtsc`). Falls back to
+/// nanosecond wall time on non-x86_64 targets.
+pub struct Rdtsc;
+
+impl Rdtsc {
+    #[cfg(target_arch = "x86_64")]
+    fn read() -> u64 {
+        // SAFETY: RDTSC is unprivileged and side-effect free.
+        unsafe { core::arch::x86_64::_rdtsc() }
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn read() -> u64 {
+        use std::sync::OnceLock;
+        static EPOCH: OnceLock<Instant> = OnceLock::new();
+        EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+    }
+}
+
+impl Metric for Rdtsc {
+    fn name(&self) -> &'static str {
+        "rdtsc"
+    }
+
+    fn unit(&self) -> &'static str {
+        "cycles"
+    }
+
+    fn begin(&self) -> u64 {
+        Self::read()
+    }
+
+    fn end(&self, begin: u64) -> f64 {
+        Self::read().saturating_sub(begin) as f64
+    }
+}
+
+/// Simulated energy metric: joules ≈ wall time × active power. The paper
+/// mentions energy as an alternative objective without evaluating it;
+/// this model exercises the same code path (see DESIGN.md §Substitutions).
+pub struct EnergyModel {
+    clock: WallClock,
+    /// Modelled active power draw in watts.
+    pub active_watts: f64,
+}
+
+impl EnergyModel {
+    /// Energy model with the given active power.
+    pub fn new(active_watts: f64) -> EnergyModel {
+        EnergyModel { clock: WallClock::new(), active_watts }
+    }
+}
+
+impl Metric for EnergyModel {
+    fn name(&self) -> &'static str {
+        "energy_model"
+    }
+
+    fn unit(&self) -> &'static str {
+        "J"
+    }
+
+    fn begin(&self) -> u64 {
+        self.clock.begin()
+    }
+
+    fn end(&self, begin: u64) -> f64 {
+        self.clock.end(begin) * self.active_watts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::spin_for;
+    use std::time::Duration;
+
+    #[test]
+    fn wall_clock_measures_spin() {
+        let m = WallClock::new();
+        let b = m.begin();
+        spin_for(Duration::from_millis(2));
+        let cost = m.end(b);
+        assert!(cost >= 0.002, "cost={cost}");
+        assert!(cost < 0.2, "cost={cost}");
+    }
+
+    #[test]
+    fn rdtsc_monotone_and_positive() {
+        let m = Rdtsc;
+        let b = m.begin();
+        spin_for(Duration::from_micros(100));
+        let cost = m.end(b);
+        assert!(cost > 0.0);
+        // a longer spin must cost more
+        let b2 = m.begin();
+        spin_for(Duration::from_millis(2));
+        let cost2 = m.end(b2);
+        assert!(cost2 > cost, "cost2={cost2} cost={cost}");
+    }
+
+    #[test]
+    fn energy_scales_with_power() {
+        let lo = EnergyModel::new(10.0);
+        let hi = EnergyModel::new(100.0);
+        let bl = lo.begin();
+        spin_for(Duration::from_millis(1));
+        let jl = lo.end(bl);
+        let bh = hi.begin();
+        spin_for(Duration::from_millis(1));
+        let jh = hi.end(bh);
+        // same duration, 10x the power → roughly 10x the joules
+        let ratio = jh / jl;
+        assert!(ratio > 5.0 && ratio < 20.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn metric_is_object_safe() {
+        let metrics: Vec<Box<dyn Metric>> =
+            vec![Box::new(WallClock::new()), Box::new(Rdtsc), Box::new(EnergyModel::new(65.0))];
+        for m in &metrics {
+            let b = m.begin();
+            let c = m.end(b);
+            assert!(c >= 0.0, "{} went negative", m.name());
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! The paper's contribution: just-in-time autotuning (§3.2).
+//!
+//! A *tuning problem* is one JIT-compiled function with one autotune
+//! parameter and one argument signature ([`ProblemKey`]). For each
+//! problem the tuner walks a [`TuningState`] machine:
+//!
+//! 1. **Exploring** — each call runs the next candidate variant chosen by
+//!    the [`search::SearchStrategy`] (the paper sweeps the parameter
+//!    array in order); the call is JIT-compiled and measured with the
+//!    configured [`Metric`].
+//! 2. **Finalizing** — when the strategy is exhausted, the best variant
+//!    is compiled *one last time* (the paper keeps only ASTs — we keep
+//!    only HLO text — so the winner needs a final compilation into the
+//!    instantiation cache) and losing executables are evicted.
+//! 3. **Tuned** — every subsequent call uses the cached winner, and the
+//!    winning parameter value is exposed for reuse by other kernels
+//!    (the paper's Listing 6 workflow).
+//!
+//! The tuner is engine-agnostic: the coordinator's dispatcher drives it
+//! and performs the actual compilation/execution.
+
+pub mod cost_model;
+mod key;
+mod measurement;
+mod record;
+pub mod search;
+mod state;
+
+use std::collections::HashMap;
+
+pub use key::ProblemKey;
+pub use measurement::{EnergyModel, Metric, Rdtsc, WallClock};
+pub use record::{History, TuningReport, VariantRecord};
+pub use search::{Anneal, HillClimb, RandomSearch, SearchStrategy, Sweep};
+pub use state::{Decision, Phase, TuningState};
+
+use crate::util::json::Value;
+
+/// Factory producing a fresh search strategy for a new tuning problem,
+/// given the candidate parameter values in declaration order.
+pub type StrategyFactory = Box<dyn Fn(&[i64]) -> Box<dyn SearchStrategy> + Send>;
+
+/// The autotuner: a map of tuning problems to their state machines.
+///
+/// Mirrors the paper's design: "another DenseMap" next to the JIT
+/// instantiation cache, keyed by function + autotune-parameter name (we
+/// add the argument signature, which the paper handles by restarting the
+/// tuner when the parameter name changes — see §3.2 *Handling calls with
+/// different arguments*).
+pub struct Autotuner {
+    states: HashMap<ProblemKey, TuningState>,
+    factory: StrategyFactory,
+}
+
+impl Autotuner {
+    /// Autotuner using the paper's exhaustive in-order sweep.
+    pub fn sweep() -> Autotuner {
+        Autotuner::with_factory(Box::new(|values| Box::new(Sweep::new(values.len()))))
+    }
+
+    /// Autotuner with a custom strategy factory.
+    pub fn with_factory(factory: StrategyFactory) -> Autotuner {
+        Autotuner { states: HashMap::new(), factory }
+    }
+
+    /// Get (or create) the state machine for a problem. `values` are the
+    /// candidate parameter values in declaration order — the paper's
+    /// `__autotune__` array.
+    pub fn state(&mut self, key: &ProblemKey, values: &[i64]) -> &mut TuningState {
+        if !self.states.contains_key(key) {
+            let strategy = (self.factory)(values);
+            self.states.insert(key.clone(), TuningState::new(values.to_vec(), strategy));
+        }
+        self.states.get_mut(key).unwrap()
+    }
+
+    /// Peek at a problem's state without creating it.
+    pub fn peek(&self, key: &ProblemKey) -> Option<&TuningState> {
+        self.states.get(key)
+    }
+
+    /// The tuned parameter value for a problem, once tuning completed —
+    /// the paper's "the programmer can obtain the optimal parameters and
+    /// use them for other kernels".
+    pub fn tuned_value(&self, key: &ProblemKey) -> Option<i64> {
+        self.states.get(key).and_then(|s| s.tuned_value())
+    }
+
+    /// Number of problems with tuner state.
+    pub fn problems(&self) -> usize {
+        self.states.len()
+    }
+
+    /// Export a JSON report of every problem's history (CLI `inspect`).
+    pub fn report(&self) -> Value {
+        let mut problems: Vec<(String, Value)> = self
+            .states
+            .iter()
+            .map(|(k, s)| (k.to_string(), s.snapshot().to_json_value()))
+            .collect();
+        problems.sort_by(|a, b| a.0.cmp(&b.0));
+        Value::Obj(problems)
+    }
+
+    /// Export tuned results as persistable state.
+    ///
+    /// The paper contrasts offline tuning ("the optimal parameters found
+    /// ... can be used for any program") with online tuning (results die
+    /// with the execution). Exporting the tuned map bridges the two: a
+    /// later run imports it and warm-starts without tuning iterations.
+    /// Only `Tuned` problems are exported — in-flight exploration is
+    /// execution-specific by design.
+    pub fn export_state(&self) -> Value {
+        let mut entries: Vec<(ProblemKey, &TuningState)> = self
+            .states
+            .iter()
+            .filter(|(_, s)| s.phase() == Phase::Tuned)
+            .map(|(k, s)| (k.clone(), s))
+            .collect();
+        entries.sort_by(|a, b| a.0.cmp(&b.0));
+        Value::Arr(
+            entries
+                .into_iter()
+                .map(|(k, s)| {
+                    let winner = s.winner().expect("tuned state has winner");
+                    Value::Obj(vec![
+                        ("kernel".into(), crate::util::json::s(k.kernel)),
+                        ("param".into(), crate::util::json::s(k.param)),
+                        ("signature".into(), crate::util::json::s(k.signature)),
+                        (
+                            "values".into(),
+                            Value::Arr(
+                                (0..s.history().len())
+                                    .map(|i| crate::util::json::n(s.value_of(i) as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        ("winner_value".into(), crate::util::json::n(s.value_of(winner) as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Import previously exported state; returns how many problems were
+    /// warm-started. Entries whose candidate values no longer match the
+    /// current manifest are rejected (the artifact set changed — stale
+    /// tuning results must not be trusted).
+    pub fn import_state(&mut self, state: &Value) -> crate::Result<usize> {
+        let arr = state
+            .as_arr()
+            .ok_or_else(|| crate::Error::Autotune("state: expected array".into()))?;
+        let mut imported = 0;
+        for entry in arr {
+            let kernel = entry.req_str("kernel")?;
+            let param = entry.req_str("param")?;
+            let signature = entry.req_str("signature")?;
+            let values: Vec<i64> = entry
+                .req_arr("values")?
+                .iter()
+                .map(|v| {
+                    v.as_i64()
+                        .ok_or_else(|| crate::Error::Autotune("state: non-integer value".into()))
+                })
+                .collect::<crate::Result<_>>()?;
+            let winner_value = entry.req_i64("winner_value")?;
+            let winner_idx = values.iter().position(|&v| v == winner_value).ok_or_else(|| {
+                crate::Error::Autotune(format!(
+                    "state: winner {winner_value} not among candidates for {kernel}/{param}"
+                ))
+            })?;
+            let key = ProblemKey::new(kernel, param, signature);
+            let strategy = (self.factory)(&values);
+            self.states.insert(key, TuningState::pre_tuned(values, winner_idx, strategy));
+            imported += 1;
+        }
+        Ok(imported)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: i64) -> ProblemKey {
+        ProblemKey::new("k", "p", format!("f32[{n},{n}]"))
+    }
+
+    #[test]
+    fn state_created_on_demand_and_keyed() {
+        let mut t = Autotuner::sweep();
+        t.state(&key(8), &[1, 2, 3]);
+        t.state(&key(16), &[1, 2, 3]);
+        t.state(&key(8), &[1, 2, 3]); // same key, no new state
+        assert_eq!(t.problems(), 2);
+    }
+
+    #[test]
+    fn tuned_value_flows_through() {
+        let mut t = Autotuner::sweep();
+        let k = key(8);
+        // run the sweep: 3 variants, variant 1 fastest
+        let costs = [3.0, 1.0, 2.0];
+        loop {
+            let st = t.state(&k, &[10, 20, 30]);
+            match st.decide() {
+                Decision::Explore(i) => st.report(i, costs[i]),
+                Decision::Finalize(i) => st.confirm_finalized(i),
+                Decision::Use(_) => break,
+            }
+        }
+        assert_eq!(t.tuned_value(&k), Some(20));
+        assert_eq!(t.peek(&k).unwrap().phase(), Phase::Tuned);
+    }
+
+    #[test]
+    fn report_is_json_object() {
+        let mut t = Autotuner::sweep();
+        t.state(&key(8), &[1, 2]);
+        let v = t.report();
+        assert!(v.as_obj().is_some());
+        assert_eq!(v.as_obj().unwrap().len(), 1);
+    }
+}

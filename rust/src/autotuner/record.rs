@@ -1,0 +1,226 @@
+//! Per-problem measurement history and reporting.
+
+use crate::util::json::{n, s, Value};
+use crate::util::stats::Summary;
+
+/// Samples collected for one candidate variant.
+#[derive(Debug, Clone, Default)]
+pub struct VariantRecord {
+    /// Parameter value this variant embodies.
+    pub value: i64,
+    /// Measured costs (metric units), in collection order.
+    pub samples: Vec<f64>,
+    /// Whether the variant failed (compile or execute) and is excluded.
+    pub failed: bool,
+}
+
+impl VariantRecord {
+    /// Best (minimum) observed cost — the paper keeps "the execution
+    /// time of the best execution".
+    pub fn best(&self) -> Option<f64> {
+        self.samples.iter().copied().reduce(f64::min)
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+}
+
+/// Measurement history for one tuning problem — what search strategies
+/// consult to decide the next candidate.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    /// One record per candidate, index-aligned with the parameter array.
+    pub records: Vec<VariantRecord>,
+    /// Total explore calls (successful measurements).
+    pub explore_calls: usize,
+}
+
+impl History {
+    /// Fresh history over the candidate parameter values.
+    pub fn new(values: &[i64]) -> History {
+        History {
+            records: values
+                .iter()
+                .map(|&value| VariantRecord { value, ..VariantRecord::default() })
+                .collect(),
+            explore_calls: 0,
+        }
+    }
+
+    /// Number of candidates.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when no candidates exist.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Record a measurement for candidate `idx`.
+    pub fn record(&mut self, idx: usize, cost: f64) {
+        self.records[idx].samples.push(cost);
+        self.explore_calls += 1;
+    }
+
+    /// Mark candidate `idx` failed.
+    pub fn mark_failed(&mut self, idx: usize) {
+        self.records[idx].failed = true;
+    }
+
+    /// Indices not yet measured and not failed.
+    pub fn untried(&self) -> Vec<usize> {
+        self.records
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.failed && r.samples.is_empty())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Index of the best (minimum best-sample) non-failed candidate.
+    pub fn best_index(&self) -> Option<usize> {
+        self.records
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.failed)
+            .filter_map(|(i, r)| r.best().map(|b| (i, b)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(i, _)| i)
+    }
+
+    /// Best cost observed for candidate `idx`, if measured.
+    pub fn best_of(&self, idx: usize) -> Option<f64> {
+        self.records.get(idx).and_then(|r| r.best())
+    }
+
+    /// True when every candidate has failed.
+    pub fn all_failed(&self) -> bool {
+        self.records.iter().all(|r| r.failed)
+    }
+}
+
+/// Immutable report of a finished (or in-flight) tuning problem.
+#[derive(Debug, Clone)]
+pub struct TuningReport {
+    /// Phase name ("exploring", "finalizing", "tuned", "failed").
+    pub phase: String,
+    /// Winning value, when decided.
+    pub tuned_value: Option<i64>,
+    /// Per-variant (value, best cost, sample count, failed).
+    pub variants: Vec<(i64, Option<f64>, usize, bool)>,
+    /// Total explore calls.
+    pub explore_calls: usize,
+}
+
+impl TuningReport {
+    /// Render as JSON for the CLI / state export.
+    pub fn to_json_value(&self) -> Value {
+        let variants: Vec<Value> = self
+            .variants
+            .iter()
+            .map(|(value, best, count, failed)| {
+                Value::Obj(vec![
+                    ("value".into(), n(*value as f64)),
+                    ("best".into(), best.map(Value::Num).unwrap_or(Value::Null)),
+                    ("samples".into(), n(*count as f64)),
+                    ("failed".into(), Value::Bool(*failed)),
+                ])
+            })
+            .collect();
+        Value::Obj(vec![
+            ("phase".into(), s(self.phase.clone())),
+            (
+                "tuned_value".into(),
+                self.tuned_value.map(|v| n(v as f64)).unwrap_or(Value::Null),
+            ),
+            ("explore_calls".into(), n(self.explore_calls as f64)),
+            ("variants".into(), Value::Arr(variants)),
+        ])
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "phase={} tuned_value={:?} explore_calls={}\n",
+            self.phase, self.tuned_value, self.explore_calls
+        );
+        for (value, best, count, failed) in &self.variants {
+            let best_s = best.map(|b| format!("{b:.6}")).unwrap_or_else(|| "-".into());
+            out.push_str(&format!(
+                "  value={value:<8} best={best_s:<12} samples={count}{}\n",
+                if *failed { " FAILED" } else { "" }
+            ));
+        }
+        out
+    }
+
+    /// Summary stats over one variant's samples (bench reporting).
+    pub fn summary_of(history: &History, idx: usize) -> Summary {
+        Summary::of(&history.records[idx].samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_index_is_argmin_of_best_samples() {
+        let mut h = History::new(&[10, 20, 30]);
+        h.record(0, 5.0);
+        h.record(0, 3.0); // best of 0 = 3
+        h.record(1, 2.5); // best of 1 = 2.5  ← winner
+        h.record(2, 2.6);
+        assert_eq!(h.best_index(), Some(1));
+        assert_eq!(h.best_of(1), Some(2.5));
+        assert_eq!(h.explore_calls, 4);
+    }
+
+    #[test]
+    fn failed_candidates_excluded() {
+        let mut h = History::new(&[1, 2]);
+        h.record(0, 1.0);
+        h.record(1, 0.5);
+        h.mark_failed(1);
+        assert_eq!(h.best_index(), Some(0));
+        assert!(!h.all_failed());
+        h.mark_failed(0);
+        assert!(h.all_failed());
+        assert_eq!(h.best_index(), None);
+    }
+
+    #[test]
+    fn untried_shrinks_as_measured() {
+        let mut h = History::new(&[1, 2, 3]);
+        assert_eq!(h.untried(), vec![0, 1, 2]);
+        h.record(1, 1.0);
+        assert_eq!(h.untried(), vec![0, 2]);
+        h.mark_failed(0);
+        assert_eq!(h.untried(), vec![2]);
+    }
+
+    #[test]
+    fn empty_history_has_no_best() {
+        let h = History::new(&[]);
+        assert!(h.is_empty());
+        assert_eq!(h.best_index(), None);
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let r = TuningReport {
+            phase: "tuned".into(),
+            tuned_value: Some(64),
+            variants: vec![(32, Some(1.5), 1, false), (64, Some(1.0), 1, false)],
+            explore_calls: 2,
+        };
+        let v = r.to_json_value();
+        assert_eq!(v.get("phase").unwrap().as_str(), Some("tuned"));
+        assert_eq!(v.get("tuned_value").unwrap().as_i64(), Some(64));
+        assert_eq!(v.get("variants").unwrap().as_arr().unwrap().len(), 2);
+        assert!(r.render().contains("value=64"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Hill climbing over the (ordered) parameter axis.
+//!
+//! Tuning parameters like block sizes are ordered and their cost surface
+//! is usually unimodal-ish; hill climbing starts in the middle and walks
+//! toward lower cost, measuring only a fraction of the grid. One of the
+//! paper's §5 faster-convergence heuristics.
+
+use super::{History, SearchStrategy};
+
+/// Greedy neighbor-descent on the candidate index axis.
+pub struct HillClimb {
+    /// Next index to evaluate, if already picked.
+    pending: Option<usize>,
+    /// Current position (best measured so far in the walk).
+    current: Option<usize>,
+    /// Direction of travel: +1 / -1; None while probing both neighbors.
+    probing: Vec<usize>,
+    done: bool,
+}
+
+impl HillClimb {
+    /// New climber (starts at the middle candidate).
+    pub fn new() -> HillClimb {
+        HillClimb { pending: None, current: None, probing: Vec::new(), done: false }
+    }
+
+    fn cost(history: &History, idx: usize) -> Option<f64> {
+        history.best_of(idx)
+    }
+}
+
+impl Default for HillClimb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SearchStrategy for HillClimb {
+    fn name(&self) -> &'static str {
+        "hillclimb"
+    }
+
+    fn next(&mut self, history: &History) -> Option<usize> {
+        if self.done || history.is_empty() || history.all_failed() {
+            return None;
+        }
+        let n = history.len();
+        let alive = |i: usize| !history.records[i].failed;
+
+        // Start: measure the middle candidate.
+        if self.current.is_none() {
+            if let Some(p) = self.pending {
+                if Self::cost(history, p).is_some() {
+                    self.current = Some(p);
+                    self.pending = None;
+                    // queue both neighbors
+                    self.probing.clear();
+                    if p > 0 {
+                        self.probing.push(p - 1);
+                    }
+                    if p + 1 < n {
+                        self.probing.push(p + 1);
+                    }
+                } else if alive(p) {
+                    return Some(p); // re-issue (previous failed to report)
+                }
+            }
+            if self.current.is_none() {
+                let mid = n / 2;
+                let start = (0..n)
+                    .min_by_key(|&i| (i as i64 - mid as i64).abs() + if alive(i) { 0 } else { n as i64 * 2 })?;
+                if !alive(start) {
+                    return None;
+                }
+                self.pending = Some(start);
+                return Some(start);
+            }
+        }
+
+        // Probe queued neighbors.
+        while let Some(i) = self.probing.pop() {
+            if alive(i) && Self::cost(history, i).is_none() {
+                return Some(i);
+            }
+        }
+
+        // All probes measured: move to the best neighbor if it improves.
+        let cur = self.current.unwrap();
+        let cur_cost = Self::cost(history, cur).unwrap_or(f64::INFINITY);
+        let mut best = cur;
+        let mut best_cost = cur_cost;
+        for i in [cur.wrapping_sub(1), cur + 1] {
+            if i < n && alive(i) {
+                if let Some(c) = Self::cost(history, i) {
+                    if c < best_cost {
+                        best = i;
+                        best_cost = c;
+                    }
+                }
+            }
+        }
+        if best == cur {
+            self.done = true; // local minimum
+            return None;
+        }
+        self.current = Some(best);
+        // queue unmeasured neighbors of the new position
+        self.probing.clear();
+        if best > 0 {
+            self.probing.push(best - 1);
+        }
+        if best + 1 < n {
+            self.probing.push(best + 1);
+        }
+        while let Some(i) = self.probing.pop() {
+            if alive(i) && Self::cost(history, i).is_none() {
+                return Some(i);
+            }
+        }
+        self.done = true;
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport::run_to_completion;
+    use super::*;
+
+    #[test]
+    fn descends_to_unimodal_minimum() {
+        // costs over indices 0..8: V-shape with min at index 6
+        let values: Vec<i64> = (0..8).collect();
+        let (best, iters) = run_to_completion(
+            Box::new(HillClimb::new()),
+            &values,
+            |v| ((v - 6).abs() as f64) + 1.0,
+            100,
+        );
+        assert_eq!(best, Some(6));
+        assert!(iters < 8, "should not exhaustively sweep (used {iters})");
+    }
+
+    #[test]
+    fn stops_at_local_minimum_of_middle_start() {
+        let values: Vec<i64> = (0..5).collect();
+        // min at middle: immediate local stop after probing neighbors
+        let (best, iters) = run_to_completion(
+            Box::new(HillClimb::new()),
+            &values,
+            |v| ((v - 2).abs() as f64) + 1.0,
+            100,
+        );
+        assert_eq!(best, Some(2));
+        assert!(iters <= 3);
+    }
+
+    #[test]
+    fn handles_single_candidate() {
+        let (best, iters) =
+            run_to_completion(Box::new(HillClimb::new()), &[42], |_| 1.0, 10);
+        assert_eq!(best, Some(0));
+        assert_eq!(iters, 1);
+    }
+
+    #[test]
+    fn walks_to_edge() {
+        let values: Vec<i64> = (0..6).collect();
+        // monotone decreasing cost: min at last index
+        let (best, _) = run_to_completion(
+            Box::new(HillClimb::new()),
+            &values,
+            |v| (10 - v) as f64,
+            100,
+        );
+        assert_eq!(best, Some(5));
+    }
+
+    #[test]
+    fn all_failed_returns_none() {
+        let mut s = HillClimb::new();
+        let mut h = History::new(&[1, 2, 3]);
+        for i in 0..3 {
+            h.mark_failed(i);
+        }
+        assert_eq!(s.next(&h), None);
+    }
+}

@@ -1,0 +1,98 @@
+//! Parameter-search strategies.
+//!
+//! The paper uses an exhaustive in-order [`Sweep`] of the `__autotune__`
+//! array and names faster-convergence heuristics as future work (§5,
+//! citing Bayesian-optimization autotuners). [`RandomSearch`],
+//! [`HillClimb`] and [`Anneal`] implement that future work; the
+//! `ablation_search` bench compares them on iterations-to-optimum and
+//! regret.
+
+mod anneal;
+mod hillclimb;
+mod random;
+mod sweep;
+
+pub use anneal::Anneal;
+pub use hillclimb::HillClimb;
+pub use random::RandomSearch;
+pub use sweep::Sweep;
+
+use super::record::History;
+
+/// A strategy picks which candidate the next tuning iteration should
+/// evaluate, based on the measurements so far. Returning `None` ends the
+/// exploration phase (the tuner then finalizes the best candidate).
+pub trait SearchStrategy: Send {
+    /// Strategy name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Index of the next candidate to measure, or `None` when done.
+    /// Must never return a failed candidate's index.
+    fn next(&mut self, history: &History) -> Option<usize>;
+}
+
+/// Parse a strategy spec string (CLI/config): `sweep`, `random:K`,
+/// `hillclimb`, `anneal:K`.
+pub fn from_spec(spec: &str, n_candidates: usize, seed: u64) -> crate::Result<Box<dyn SearchStrategy>> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    let parse_budget = |default: usize| -> crate::Result<usize> {
+        match arg {
+            None => Ok(default),
+            Some(a) => a
+                .parse::<usize>()
+                .map_err(|_| crate::Error::Config(format!("bad strategy budget `{a}`"))),
+        }
+    };
+    match name {
+        "sweep" => Ok(Box::new(Sweep::new(n_candidates))),
+        "random" => Ok(Box::new(RandomSearch::new(parse_budget(n_candidates)?, seed))),
+        "hillclimb" => Ok(Box::new(HillClimb::new())),
+        "anneal" => Ok(Box::new(Anneal::new(parse_budget(2 * n_candidates)?, seed))),
+        other => Err(crate::Error::Config(format!("unknown search strategy `{other}`"))),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use super::*;
+
+    /// Run a strategy against a synthetic cost function until it stops or
+    /// `max_iters` is hit; returns (chosen best index, iterations used).
+    pub fn run_to_completion(
+        mut strategy: Box<dyn SearchStrategy>,
+        values: &[i64],
+        cost_fn: impl Fn(i64) -> f64,
+        max_iters: usize,
+    ) -> (Option<usize>, usize) {
+        let mut history = History::new(values);
+        let mut iters = 0;
+        while iters < max_iters {
+            match strategy.next(&history) {
+                Some(idx) => {
+                    history.record(idx, cost_fn(values[idx]));
+                    iters += 1;
+                }
+                None => break,
+            }
+        }
+        (history.best_index(), iters)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_spec_parses_all() {
+        assert_eq!(from_spec("sweep", 4, 0).unwrap().name(), "sweep");
+        assert_eq!(from_spec("random:10", 4, 0).unwrap().name(), "random");
+        assert_eq!(from_spec("hillclimb", 4, 0).unwrap().name(), "hillclimb");
+        assert_eq!(from_spec("anneal:16", 4, 0).unwrap().name(), "anneal");
+        assert!(from_spec("nope", 4, 0).is_err());
+        assert!(from_spec("random:x", 4, 0).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Budgeted random search (paper §5 future-work heuristic).
+
+use super::{History, SearchStrategy};
+use crate::util::prng::Rng;
+
+/// Uniform random sampling of candidates under an iteration budget.
+/// Guarantees every candidate is tried at least once if the budget
+/// allows (first pass is a shuffled sweep), then re-samples randomly —
+/// re-measurement sharpens the best-sample estimate under noise.
+pub struct RandomSearch {
+    budget: usize,
+    used: usize,
+    rng: Rng,
+    first_pass: Vec<usize>,
+}
+
+impl RandomSearch {
+    /// Random search with a total measurement budget.
+    pub fn new(budget: usize, seed: u64) -> RandomSearch {
+        RandomSearch { budget, used: 0, rng: Rng::seed(seed), first_pass: Vec::new() }
+    }
+}
+
+impl SearchStrategy for RandomSearch {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn next(&mut self, history: &History) -> Option<usize> {
+        if self.used >= self.budget || history.all_failed() {
+            return None;
+        }
+        self.used += 1;
+        // Shuffled first pass covering all candidates.
+        if self.first_pass.is_empty() && self.used == 1 {
+            self.first_pass = (0..history.len()).collect();
+            self.rng.shuffle(&mut self.first_pass);
+        }
+        while let Some(idx) = self.first_pass.pop() {
+            if !history.records[idx].failed {
+                return Some(idx);
+            }
+        }
+        // Random re-measurement among non-failed candidates.
+        let alive: Vec<usize> =
+            (0..history.len()).filter(|&i| !history.records[i].failed).collect();
+        if alive.is_empty() {
+            return None;
+        }
+        Some(alive[self.rng.below(alive.len())])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport::run_to_completion;
+    use super::*;
+
+    #[test]
+    fn covers_all_candidates_when_budget_allows() {
+        let mut s = RandomSearch::new(8, 42);
+        let mut h = History::new(&[1, 2, 3, 4]);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..4 {
+            let i = s.next(&h).unwrap();
+            seen.insert(i);
+            h.record(i, 1.0);
+        }
+        assert_eq!(seen.len(), 4, "first pass must cover all candidates");
+    }
+
+    #[test]
+    fn respects_budget() {
+        let (_, iters) =
+            run_to_completion(Box::new(RandomSearch::new(6, 1)), &[1, 2, 3], |_| 1.0, 100);
+        assert_eq!(iters, 6);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        for seed in [0u64, 7, 99] {
+            let mut a = RandomSearch::new(10, seed);
+            let mut b = RandomSearch::new(10, seed);
+            let mut ha = History::new(&[1, 2, 3, 4, 5]);
+            let mut hb = History::new(&[1, 2, 3, 4, 5]);
+            for _ in 0..10 {
+                let ia = a.next(&ha).unwrap();
+                let ib = b.next(&hb).unwrap();
+                assert_eq!(ia, ib);
+                ha.record(ia, 1.0);
+                hb.record(ib, 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn finds_optimum_with_enough_budget() {
+        let values = [8i64, 16, 32, 64, 128];
+        let (best, _) = run_to_completion(
+            Box::new(RandomSearch::new(10, 3)),
+            &values,
+            |v| ((v - 64).abs() as f64) + 1.0,
+            100,
+        );
+        assert_eq!(best, Some(3));
+    }
+
+    #[test]
+    fn stops_when_all_failed() {
+        let mut s = RandomSearch::new(10, 0);
+        let mut h = History::new(&[1, 2]);
+        h.mark_failed(0);
+        h.mark_failed(1);
+        assert_eq!(s.next(&h), None);
+    }
+}

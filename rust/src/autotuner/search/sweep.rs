@@ -1,0 +1,69 @@
+//! The paper's strategy: try every candidate once, in declaration order.
+
+use super::{History, SearchStrategy};
+
+/// Exhaustive in-order sweep — "the first time the function is called,
+/// it is generated and executed with the first autotuning parameter, and
+/// so on for each parameter" (§3.2).
+pub struct Sweep {
+    n: usize,
+}
+
+impl Sweep {
+    /// Sweep over `n` candidates.
+    pub fn new(n: usize) -> Sweep {
+        Sweep { n }
+    }
+}
+
+impl SearchStrategy for Sweep {
+    fn name(&self) -> &'static str {
+        "sweep"
+    }
+
+    fn next(&mut self, history: &History) -> Option<usize> {
+        debug_assert_eq!(history.len(), self.n);
+        // First untried, non-failed candidate in declaration order.
+        history.untried().into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testsupport::run_to_completion;
+    use super::*;
+
+    #[test]
+    fn visits_each_candidate_exactly_once_in_order() {
+        let mut s = Sweep::new(4);
+        let mut h = History::new(&[10, 20, 30, 40]);
+        let mut order = Vec::new();
+        while let Some(i) = s.next(&h) {
+            order.push(i);
+            h.record(i, 1.0 + i as f64);
+        }
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        assert_eq!(s.next(&h), None);
+    }
+
+    #[test]
+    fn skips_failed_candidates() {
+        let mut s = Sweep::new(3);
+        let mut h = History::new(&[1, 2, 3]);
+        h.mark_failed(0);
+        assert_eq!(s.next(&h), Some(1));
+        h.record(1, 1.0);
+        h.mark_failed(2);
+        assert_eq!(s.next(&h), None);
+    }
+
+    #[test]
+    fn finds_global_optimum() {
+        let values = [8i64, 16, 32, 64, 128];
+        // cost minimized at 32
+        let (best, iters) =
+            run_to_completion(Box::new(Sweep::new(5)), &values, |v| ((v - 32).abs() as f64) + 1.0, 100);
+        assert_eq!(best, Some(2));
+        assert_eq!(iters, 5); // exactly k iterations, as the paper schedules
+    }
+}

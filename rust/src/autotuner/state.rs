@@ -1,0 +1,326 @@
+//! The per-problem tuning state machine (§3.2 of the paper).
+//!
+//! ```text
+//!   Exploring ──(strategy exhausted)──▶ Finalizing ──▶ Tuned
+//!       │                                                ▲
+//!       └––(every candidate failed)──▶ Failed            │
+//!                         (winner recompiled one last time)
+//! ```
+//!
+//! The dispatcher calls [`TuningState::decide`] before each kernel call:
+//!
+//! * [`Decision::Explore(i)`] — JIT-compile + run candidate `i`, measure
+//!   it, and feed the cost back via [`TuningState::report`] (or
+//!   [`TuningState::report_failure`]).
+//! * [`Decision::Finalize(i)`] — compile the winner `i` into the
+//!   instantiation cache (the paper's extra final compilation: "we can
+//!   only keep ASTs ... and not the binary compiled by LLVM"), run it,
+//!   then acknowledge with [`TuningState::confirm_finalized`].
+//! * [`Decision::Use(i)`] — steady state: run the cached winner.
+
+use super::record::{History, TuningReport};
+use super::search::SearchStrategy;
+
+/// What the dispatcher should do for the next call of this problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Run candidate `i` as a tuning iteration and report its cost.
+    Explore(usize),
+    /// Tuning finished: recompile winner `i` (final compilation), then
+    /// `confirm_finalized(i)`.
+    Finalize(usize),
+    /// Steady state: use tuned winner `i`.
+    Use(usize),
+}
+
+/// Lifecycle phase of a tuning problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Tuning iterations in progress.
+    Exploring,
+    /// Winner picked; awaiting its final compilation.
+    Finalizing,
+    /// Winner in use.
+    Tuned,
+    /// Every candidate failed; the problem cannot be executed.
+    Failed,
+}
+
+/// State machine for one tuning problem.
+pub struct TuningState {
+    values: Vec<i64>,
+    history: History,
+    strategy: Box<dyn SearchStrategy>,
+    phase: Phase,
+    winner: Option<usize>,
+    /// Candidate currently awaiting a report (catches protocol misuse).
+    outstanding: Option<usize>,
+}
+
+impl TuningState {
+    /// New state over the candidate parameter values.
+    pub fn new(values: Vec<i64>, strategy: Box<dyn SearchStrategy>) -> TuningState {
+        let history = History::new(&values);
+        let phase = if values.is_empty() { Phase::Failed } else { Phase::Exploring };
+        TuningState { values, history, strategy, phase, winner: None, outstanding: None }
+    }
+
+    /// A state pre-tuned to `winner_idx` — used when importing persisted
+    /// tuning results (warm start: no tuning iterations, the winner still
+    /// pays its one JIT compilation on first use via the normal
+    /// `Finalizing` path, since only HLO text persists across runs).
+    pub fn pre_tuned(
+        values: Vec<i64>,
+        winner_idx: usize,
+        strategy: Box<dyn SearchStrategy>,
+    ) -> TuningState {
+        assert!(winner_idx < values.len(), "winner index out of range");
+        let history = History::new(&values);
+        TuningState {
+            values,
+            history,
+            strategy,
+            phase: Phase::Finalizing,
+            winner: Some(winner_idx),
+            outstanding: None,
+        }
+    }
+
+    /// Decide what the next call should run.
+    pub fn decide(&mut self) -> Decision {
+        match self.phase {
+            Phase::Exploring => {
+                if let Some(idx) = self.outstanding {
+                    // A previous Explore was never reported (e.g. the
+                    // caller dropped the call). Re-issue it.
+                    return Decision::Explore(idx);
+                }
+                match self.strategy.next(&self.history) {
+                    Some(idx) => {
+                        debug_assert!(idx < self.values.len(), "strategy oob");
+                        self.outstanding = Some(idx);
+                        Decision::Explore(idx)
+                    }
+                    None => match self.history.best_index() {
+                        Some(best) => {
+                            self.phase = Phase::Finalizing;
+                            self.winner = Some(best);
+                            Decision::Finalize(best)
+                        }
+                        None => {
+                            self.phase = Phase::Failed;
+                            // Nothing runnable; callers check phase() on
+                            // Failed and surface Error::Autotune.
+                            Decision::Explore(0)
+                        }
+                    },
+                }
+            }
+            Phase::Finalizing => Decision::Finalize(self.winner.expect("finalizing has winner")),
+            Phase::Tuned => Decision::Use(self.winner.expect("tuned has winner")),
+            Phase::Failed => Decision::Explore(0),
+        }
+    }
+
+    /// Report a successful measurement for an explored candidate.
+    pub fn report(&mut self, idx: usize, cost: f64) {
+        debug_assert_eq!(self.outstanding, Some(idx), "report for unexpected candidate");
+        self.outstanding = None;
+        self.history.record(idx, cost);
+    }
+
+    /// Report that a candidate failed to compile or execute; it is
+    /// excluded and tuning continues with the rest (failure injection
+    /// tests drive this path).
+    pub fn report_failure(&mut self, idx: usize) {
+        if self.outstanding == Some(idx) {
+            self.outstanding = None;
+        }
+        self.history.mark_failed(idx);
+        // A winner that fails its final compilation is demoted and the
+        // tuner re-selects among the remaining candidates.
+        if self.phase == Phase::Finalizing && self.winner == Some(idx) {
+            self.winner = None;
+            self.phase = Phase::Exploring;
+        }
+        if self.history.all_failed() {
+            self.phase = Phase::Failed;
+        }
+    }
+
+    /// Acknowledge that the winner's final compilation happened.
+    pub fn confirm_finalized(&mut self, idx: usize) {
+        debug_assert_eq!(self.winner, Some(idx));
+        debug_assert_eq!(self.phase, Phase::Finalizing);
+        self.phase = Phase::Tuned;
+    }
+
+    /// Current phase.
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Winning candidate index, once decided.
+    pub fn winner(&self) -> Option<usize> {
+        self.winner
+    }
+
+    /// Winning parameter value, once tuned (Listing 6 reuse).
+    pub fn tuned_value(&self) -> Option<i64> {
+        match self.phase {
+            Phase::Tuned => self.winner.map(|i| self.values[i]),
+            _ => None,
+        }
+    }
+
+    /// Parameter value of candidate `idx`.
+    pub fn value_of(&self, idx: usize) -> i64 {
+        self.values[idx]
+    }
+
+    /// Measurement history (benches/reports).
+    pub fn history(&self) -> &History {
+        &self.history
+    }
+
+    /// Snapshot report.
+    pub fn snapshot(&self) -> TuningReport {
+        TuningReport {
+            phase: match self.phase {
+                Phase::Exploring => "exploring",
+                Phase::Finalizing => "finalizing",
+                Phase::Tuned => "tuned",
+                Phase::Failed => "failed",
+            }
+            .to_string(),
+            tuned_value: self.tuned_value(),
+            variants: self
+                .history
+                .records
+                .iter()
+                .map(|r| (r.value, r.best(), r.count(), r.failed))
+                .collect(),
+            explore_calls: self.history.explore_calls,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::search::Sweep;
+    use super::*;
+
+    fn sweep_state(values: &[i64]) -> TuningState {
+        TuningState::new(values.to_vec(), Box::new(Sweep::new(values.len())))
+    }
+
+    /// Drive a state machine with a synthetic cost table; returns the
+    /// sequence of decisions taken.
+    fn drive(state: &mut TuningState, costs: &[f64], calls: usize) -> Vec<Decision> {
+        let mut decisions = Vec::new();
+        for _ in 0..calls {
+            let d = state.decide();
+            decisions.push(d);
+            match d {
+                Decision::Explore(i) => state.report(i, costs[i]),
+                Decision::Finalize(i) => state.confirm_finalized(i),
+                Decision::Use(_) => {}
+            }
+        }
+        decisions
+    }
+
+    #[test]
+    fn paper_schedule_n_variants_then_finalize_then_use() {
+        // The paper: k tuning iterations, one finalize compile, then use.
+        let mut st = sweep_state(&[2, 4, 8]);
+        let costs = [3.0, 1.0, 2.0];
+        let ds = drive(&mut st, &costs, 6);
+        assert_eq!(
+            ds,
+            vec![
+                Decision::Explore(0),
+                Decision::Explore(1),
+                Decision::Explore(2),
+                Decision::Finalize(1),
+                Decision::Use(1),
+                Decision::Use(1),
+            ]
+        );
+        assert_eq!(st.tuned_value(), Some(4));
+        assert_eq!(st.phase(), Phase::Tuned);
+    }
+
+    #[test]
+    fn winner_is_argmin() {
+        for (costs, want) in [([5.0, 6.0, 1.0], 2usize), ([0.1, 6.0, 1.0], 0), ([5.0, 0.2, 1.0], 1)] {
+            let mut st = sweep_state(&[10, 20, 30]);
+            drive(&mut st, &costs, 5);
+            assert_eq!(st.winner(), Some(want), "costs {costs:?}");
+        }
+    }
+
+    #[test]
+    fn failures_are_skipped() {
+        let mut st = sweep_state(&[10, 20, 30]);
+        // candidate 0 fails, 1 and 2 measured; 2 is fastest
+        match st.decide() {
+            Decision::Explore(0) => st.report_failure(0),
+            d => panic!("unexpected {d:?}"),
+        }
+        let ds = drive(&mut st, &[99.0, 2.0, 1.0], 4);
+        assert_eq!(st.phase(), Phase::Tuned);
+        assert_eq!(st.tuned_value(), Some(30));
+        assert!(ds.contains(&Decision::Finalize(2)));
+    }
+
+    #[test]
+    fn all_failed_goes_to_failed_phase() {
+        let mut st = sweep_state(&[1, 2]);
+        for _ in 0..2 {
+            match st.decide() {
+                Decision::Explore(i) => st.report_failure(i),
+                d => panic!("unexpected {d:?}"),
+            }
+        }
+        assert_eq!(st.phase(), Phase::Failed);
+        assert_eq!(st.tuned_value(), None);
+    }
+
+    #[test]
+    fn unreported_explore_is_reissued() {
+        let mut st = sweep_state(&[1, 2]);
+        let d1 = st.decide();
+        let d2 = st.decide(); // caller "dropped" the first call
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn empty_values_is_failed() {
+        let st = sweep_state(&[]);
+        assert_eq!(st.phase(), Phase::Failed);
+    }
+
+    #[test]
+    fn tuned_value_absent_until_finalized() {
+        let mut st = sweep_state(&[7, 9]);
+        assert_eq!(st.tuned_value(), None);
+        match st.decide() {
+            Decision::Explore(i) => st.report(i, 1.0),
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(st.tuned_value(), None);
+        match st.decide() {
+            Decision::Explore(i) => st.report(i, 2.0),
+            d => panic!("{d:?}"),
+        }
+        match st.decide() {
+            Decision::Finalize(i) => {
+                assert_eq!(st.tuned_value(), None); // still finalizing
+                st.confirm_finalized(i);
+            }
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(st.tuned_value(), Some(7));
+    }
+}

@@ -1,0 +1,157 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Grammar: `jitune <subcommand> [--flag value]... [--switch]...`.
+//! Flags are declared up front so typos fail fast with a usage message.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Declaration of one accepted flag.
+#[derive(Debug, Clone)]
+pub struct FlagSpec {
+    /// Flag name without the leading `--`.
+    pub name: &'static str,
+    /// Whether the flag takes a value (`--iters 100`) or is a switch.
+    pub takes_value: bool,
+    /// Help text.
+    pub help: &'static str,
+}
+
+/// A parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    /// The subcommand (first positional).
+    pub command: String,
+    /// Flag values (`--key value`).
+    pub flags: BTreeMap<String, String>,
+    /// Present switches (`--verbose`).
+    pub switches: Vec<String>,
+    /// Remaining positionals after the subcommand.
+    pub positionals: Vec<String>,
+}
+
+impl Parsed {
+    /// Flag value as string.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    /// Flag with default.
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Integer flag with default.
+    pub fn i64_or(&self, name: &str, default: i64) -> Result<i64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} `{v}` is not an integer"))),
+        }
+    }
+
+    /// Switch presence.
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+}
+
+/// Parse `args` (without argv[0]) against the accepted flags.
+pub fn parse(args: &[String], specs: &[FlagSpec]) -> Result<Parsed> {
+    let mut parsed = Parsed::default();
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        if let Some(name) = arg.strip_prefix("--") {
+            let spec = specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| Error::Config(format!("unknown flag --{name}")))?;
+            if spec.takes_value {
+                let value = it
+                    .next()
+                    .ok_or_else(|| Error::Config(format!("--{name} requires a value")))?;
+                parsed.flags.insert(name.to_string(), value.clone());
+            } else {
+                parsed.switches.push(name.to_string());
+            }
+        } else if parsed.command.is_empty() {
+            parsed.command = arg.clone();
+        } else {
+            parsed.positionals.push(arg.clone());
+        }
+    }
+    Ok(parsed)
+}
+
+/// Render a usage block from flag specs.
+pub fn usage(program: &str, commands: &[(&str, &str)], specs: &[FlagSpec]) -> String {
+    let mut out = format!("usage: {program} <command> [flags]\n\ncommands:\n");
+    for (name, help) in commands {
+        out.push_str(&format!("  {name:<12} {help}\n"));
+    }
+    out.push_str("\nflags:\n");
+    for s in specs {
+        let name = if s.takes_value { format!("--{} <v>", s.name) } else { format!("--{}", s.name) };
+        out.push_str(&format!("  {name:<20} {}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "iters", takes_value: true, help: "iterations" },
+            FlagSpec { name: "verbose", takes_value: false, help: "chatty" },
+        ]
+    }
+
+    fn args(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_switches_positionals() {
+        let p = parse(&args("tune --iters 100 --verbose matmul"), &specs()).unwrap();
+        assert_eq!(p.command, "tune");
+        assert_eq!(p.i64_or("iters", 0).unwrap(), 100);
+        assert!(p.has("verbose"));
+        assert_eq!(p.positionals, vec!["matmul"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(parse(&args("x --nope"), &specs()).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&args("x --iters"), &specs()).is_err());
+    }
+
+    #[test]
+    fn bad_integer_rejected() {
+        let p = parse(&args("x --iters abc"), &specs()).unwrap();
+        assert!(p.i64_or("iters", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = parse(&args("x"), &specs()).unwrap();
+        assert_eq!(p.i64_or("iters", 7).unwrap(), 7);
+        assert_eq!(p.str_or("missing", "d"), "d");
+        assert!(!p.has("verbose"));
+    }
+
+    #[test]
+    fn usage_lists_everything() {
+        let u = usage("jitune", &[("tune", "tune a kernel")], &specs());
+        assert!(u.contains("tune a kernel"));
+        assert!(u.contains("--iters"));
+        assert!(u.contains("--verbose"));
+    }
+}

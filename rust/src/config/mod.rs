@@ -1,0 +1,232 @@
+//! Run configuration: TOML-lite file + environment overrides.
+//!
+//! The launcher reads an optional config file (a flat TOML subset:
+//! `key = value` lines, `#` comments, optional `[section]` headers that
+//! prefix keys as `section.key`), then applies `JITUNE_*` environment
+//! overrides, then CLI flags (highest precedence, applied by the caller).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// A parsed configuration: flat map of dotted keys to raw string values,
+/// with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Empty config.
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse the TOML-lite text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::Config(format!("line {}: empty key", lineno + 1)));
+            }
+            let full_key =
+                if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let value = value.trim().trim_matches('"').to_string();
+            values.insert(full_key, value);
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Config::parse(&text)
+    }
+
+    /// Apply `JITUNE_<KEY>` environment overrides (dots become
+    /// underscores, case-insensitive): `JITUNE_TUNE_STRATEGY=random:8`
+    /// overrides `tune.strategy`.
+    pub fn apply_env(&mut self) {
+        for (k, v) in std::env::vars() {
+            if let Some(rest) = k.strip_prefix("JITUNE_") {
+                if rest == "LOG" {
+                    continue; // belongs to the logger
+                }
+                let key = rest.to_lowercase().replace("__", ".").replace('_', ".");
+                self.values.insert(key, v);
+            }
+        }
+    }
+
+    /// Set a value programmatically (CLI flags).
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    /// String with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Integer with default.
+    pub fn i64_or(&self, key: &str, default: i64) -> Result<i64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<i64>()
+                .map_err(|_| Error::Config(format!("`{key}` = `{v}` is not an integer"))),
+        }
+    }
+
+    /// Float with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<f64>()
+                .map_err(|_| Error::Config(format!("`{key}` = `{v}` is not a number"))),
+        }
+    }
+
+    /// Boolean with default (`true/false/1/0/yes/no`).
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.to_lowercase().as_str() {
+                "true" | "1" | "yes" => Ok(true),
+                "false" | "0" | "no" => Ok(false),
+                other => Err(Error::Config(format!("`{key}` = `{other}` is not a boolean"))),
+            },
+        }
+    }
+
+    /// All keys (for `--help` / debugging).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(String::as_str)
+    }
+}
+
+/// The resolved runtime settings used by the launcher and examples.
+#[derive(Debug, Clone)]
+pub struct RunSettings {
+    /// Artifacts directory.
+    pub artifacts: String,
+    /// Search strategy spec (`sweep`, `random:K`, `hillclimb`, `anneal:K`).
+    pub strategy: String,
+    /// Metric name (`wall_clock`, `rdtsc`, `energy`).
+    pub metric: String,
+    /// Global workload seed.
+    pub seed: u64,
+}
+
+impl RunSettings {
+    /// Resolve from a config.
+    pub fn from_config(cfg: &Config) -> Result<RunSettings> {
+        Ok(RunSettings {
+            artifacts: cfg.str_or("artifacts", "artifacts"),
+            strategy: cfg.str_or("tune.strategy", "sweep"),
+            metric: cfg.str_or("tune.metric", "wall_clock"),
+            seed: cfg.i64_or("seed", 42)? as u64,
+        })
+    }
+
+    /// Build the metric object named by `metric`.
+    pub fn build_metric(&self) -> Result<Box<dyn crate::autotuner::Metric>> {
+        match self.metric.as_str() {
+            "wall_clock" => Ok(Box::new(crate::autotuner::WallClock::new())),
+            "rdtsc" => Ok(Box::new(crate::autotuner::Rdtsc)),
+            "energy" => Ok(Box::new(crate::autotuner::EnergyModel::new(65.0))),
+            other => Err(Error::Config(format!("unknown metric `{other}`"))),
+        }
+    }
+
+    /// Build the strategy factory named by `strategy`.
+    pub fn build_strategy_factory(&self) -> Result<crate::autotuner::StrategyFactory> {
+        // validate the spec eagerly against a dummy candidate count
+        crate::autotuner::search::from_spec(&self.strategy, 4, self.seed)?;
+        let spec = self.strategy.clone();
+        let seed = self.seed;
+        Ok(Box::new(move |values| {
+            crate::autotuner::search::from_spec(&spec, values.len(), seed)
+                .expect("spec validated at startup")
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_and_sections() {
+        let cfg = Config::parse(
+            "artifacts = \"artifacts\"\nseed = 7\n# comment\n[tune]\nstrategy = random:8\nmetric = rdtsc\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("artifacts"), Some("artifacts"));
+        assert_eq!(cfg.i64_or("seed", 0).unwrap(), 7);
+        assert_eq!(cfg.get("tune.strategy"), Some("random:8"));
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(Config::parse("= value").is_err());
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let cfg = Config::parse("a = 3\nb = 2.5\nc = yes\nd = nope\n").unwrap();
+        assert_eq!(cfg.i64_or("a", 0).unwrap(), 3);
+        assert_eq!(cfg.f64_or("b", 0.0).unwrap(), 2.5);
+        assert!(cfg.bool_or("c", false).unwrap());
+        assert!(cfg.bool_or("d", false).is_err());
+        assert_eq!(cfg.i64_or("missing", 9).unwrap(), 9);
+        assert!(cfg.i64_or("b", 0).is_err());
+    }
+
+    #[test]
+    fn run_settings_resolve_and_build() {
+        let mut cfg = Config::new();
+        cfg.set("tune.strategy", "hillclimb");
+        cfg.set("tune.metric", "energy");
+        let rs = RunSettings::from_config(&cfg).unwrap();
+        assert_eq!(rs.strategy, "hillclimb");
+        assert!(rs.build_metric().is_ok());
+        let factory = rs.build_strategy_factory().unwrap();
+        assert_eq!(factory(&[1, 2, 3]).name(), "hillclimb");
+    }
+
+    #[test]
+    fn bad_strategy_and_metric_rejected() {
+        let mut cfg = Config::new();
+        cfg.set("tune.metric", "nope");
+        let rs = RunSettings::from_config(&cfg).unwrap();
+        assert!(rs.build_metric().is_err());
+        let mut cfg2 = Config::new();
+        cfg2.set("tune.strategy", "nope");
+        let rs2 = RunSettings::from_config(&cfg2).unwrap();
+        assert!(rs2.build_strategy_factory().is_err());
+    }
+}

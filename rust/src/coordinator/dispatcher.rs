@@ -1,0 +1,532 @@
+//! The call dispatcher — `__clang_jit` with autotuning (paper §3.2).
+
+use std::time::{Duration, Instant};
+
+use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, WallClock};
+use crate::error::{Error, Result};
+use crate::manifest::Variant;
+use crate::runtime::{CacheStats, CompileCache, Engine};
+use crate::tensor::HostTensor;
+
+use super::registry::KernelRegistry;
+use super::stats::CoordStats;
+
+/// How a call was routed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallRoute {
+    /// Tuning iteration: variant JIT-compiled, run, measured, discarded.
+    Explored,
+    /// The winner's final compilation into the instantiation cache.
+    Finalized,
+    /// Steady state: cached winner.
+    Tuned,
+}
+
+/// Everything observable about one dispatched call (benches consume this
+/// to regenerate the paper's figures).
+#[derive(Debug, Clone)]
+pub struct CallOutcome {
+    /// Kernel output.
+    pub output: HostTensor,
+    /// Variant that actually ran.
+    pub variant_id: String,
+    /// Parameter value of that variant.
+    pub value: i64,
+    /// Routing phase of this call.
+    pub route: CallRoute,
+    /// Whether this call paid a JIT compilation.
+    pub compiled: bool,
+    /// Measured execution cost in metric units (tuning iterations) or
+    /// wall seconds (steady state).
+    pub exec_cost: f64,
+    /// End-to-end call duration including any compilation.
+    pub total: Duration,
+}
+
+/// The dispatcher: owns the registry, the JIT compile cache, the
+/// autotuner and the measurement metric. Single-threaded by design (PJRT
+/// pinning); the [`super::server::Coordinator`] provides the
+/// multi-threaded facade.
+/// Cached per-problem call metadata — built on a problem's first call so
+/// the steady-state path performs no manifest walks and no allocations
+/// beyond the reply itself (§Perf).
+struct CallPlan {
+    problem_idx: usize,
+    key: ProblemKey,
+    values: Vec<i64>,
+}
+
+pub struct Dispatcher {
+    registry: KernelRegistry,
+    cache: CompileCache,
+    tuner: Autotuner,
+    metric: Box<dyn Metric>,
+    stats: CoordStats,
+    plans: std::collections::HashMap<(String, String), CallPlan>,
+}
+
+impl Dispatcher {
+    /// Dispatcher with the paper's defaults: sweep strategy + wall-clock
+    /// metric.
+    pub fn new(registry: KernelRegistry, engine: Box<dyn Engine>) -> Dispatcher {
+        Dispatcher::with(registry, engine, Autotuner::sweep(), Box::new(WallClock::new()))
+    }
+
+    /// Fully parameterized constructor.
+    pub fn with(
+        registry: KernelRegistry,
+        engine: Box<dyn Engine>,
+        tuner: Autotuner,
+        metric: Box<dyn Metric>,
+    ) -> Dispatcher {
+        Dispatcher {
+            registry,
+            cache: CompileCache::new(engine),
+            tuner,
+            metric,
+            stats: CoordStats::new(),
+            plans: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Dispatch one kernel call: the `__clang_jit` entry point.
+    ///
+    /// The problem is identified by the kernel name plus the *actual*
+    /// argument signature (paper: a different argument set is a different
+    /// autotuning problem).
+    pub fn call(&mut self, kernel: &str, inputs: &[HostTensor]) -> Result<CallOutcome> {
+        let t0 = Instant::now();
+        // Resolve the cached call plan (built on the problem's first call
+        // — steady-state calls do no manifest walks, §Perf).
+        let sig = inputs.iter().map(HostTensor::signature).collect::<Vec<_>>().join(",");
+        let plan_key = (kernel.to_string(), sig);
+        if !self.plans.contains_key(&plan_key) {
+            let (idx, problem) = {
+                let p = self.registry.problem_for_inputs(kernel, inputs)?;
+                let idx = self
+                    .registry
+                    .manifest()
+                    .problems
+                    .iter()
+                    .position(|q| std::ptr::eq(q, p))
+                    .expect("problem from this manifest");
+                (idx, p)
+            };
+            let plan = CallPlan {
+                problem_idx: idx,
+                key: ProblemKey::for_problem(problem),
+                values: problem.variants.iter().map(|v| v.value).collect(),
+            };
+            self.plans.insert(plan_key.clone(), plan);
+        }
+        let (pidx, key, values) = {
+            let plan = &self.plans[&plan_key];
+            (plan.problem_idx, plan.key.clone(), plan.values.clone())
+        };
+
+        // Failure-retry loop: a failing variant is excluded and the next
+        // decision is consulted, until the call succeeds or every
+        // candidate is dead.
+        loop {
+            let decision = {
+                let st = self.tuner.state(&key, &values);
+                if st.phase() == Phase::Failed {
+                    return Err(Error::Autotune(format!(
+                        "every variant of {key} failed; cannot execute"
+                    )));
+                }
+                st.decide()
+            };
+            match decision {
+                Decision::Explore(i) => {
+                    let variant = self.registry.manifest().problems[pidx].variants[i].clone();
+                    match self.explore(&key, &variant, i, inputs, t0) {
+                        Ok(outcome) => return Ok(outcome),
+                        Err(e) => {
+                            log::warn!("variant {} failed during tuning: {e}", variant.id);
+                            self.stats.failure(kernel);
+                            self.tuner.state(&key, &values).report_failure(i);
+                            continue;
+                        }
+                    }
+                }
+                Decision::Finalize(i) => {
+                    let problem = &self.registry.manifest().problems[pidx];
+                    let variant = problem.variants[i].clone();
+                    let all_ids: Vec<String> =
+                        problem.variants.iter().map(|v| v.id.clone()).collect();
+                    match self.finalize(&variant, &all_ids, inputs, t0) {
+                        Ok(mut outcome) => {
+                            self.tuner.state(&key, &values).confirm_finalized(i);
+                            self.stats.finalized(kernel, outcome.total);
+                            outcome.route = CallRoute::Finalized;
+                            log::info!(
+                                "{key} tuned: value={} ({})",
+                                outcome.value,
+                                outcome.variant_id
+                            );
+                            return Ok(outcome);
+                        }
+                        Err(e) => {
+                            log::warn!("winner {} failed finalization: {e}", variant.id);
+                            self.stats.failure(kernel);
+                            self.tuner.state(&key, &values).report_failure(i);
+                            continue;
+                        }
+                    }
+                }
+                Decision::Use(i) => {
+                    // §Perf fast path: no variant clone — disjoint field
+                    // borrows let the executable run straight off the
+                    // cache while the registry stays immutably borrowed.
+                    let manifest = self.registry.manifest();
+                    let variant = &manifest.problems[pidx].variants[i];
+                    let (exe, compiled) = self.cache.get_or_compile(manifest, variant)?;
+                    let begin = self.metric.begin();
+                    let output = exe.execute(inputs)?;
+                    let cost = self.metric.end(begin);
+                    debug_assert!(!compiled, "steady-state call should hit the cache");
+                    let outcome = CallOutcome {
+                        output,
+                        variant_id: variant.id.clone(),
+                        value: variant.value,
+                        route: CallRoute::Tuned,
+                        compiled,
+                        exec_cost: cost,
+                        total: t0.elapsed(),
+                    };
+                    self.stats.tuned_call(kernel, outcome.total);
+                    return Ok(outcome);
+                }
+            }
+        }
+    }
+
+    /// One tuning iteration: compile (uncached — the paper keeps only
+    /// ASTs during tuning, not binaries), run under the metric, discard
+    /// the executable, report the cost.
+    fn explore(
+        &mut self,
+        key: &ProblemKey,
+        variant: &Variant,
+        idx: usize,
+        inputs: &[HostTensor],
+        t0: Instant,
+    ) -> Result<CallOutcome> {
+        let (output, cost, compiled) = {
+            let manifest = self.registry.manifest();
+            let (exe, compiled) = self.cache.get_or_compile(manifest, variant)?;
+            let begin = self.metric.begin();
+            let output = exe.execute(inputs)?;
+            let cost = self.metric.end(begin);
+            (output, cost, compiled)
+        };
+        // Tuning iterations do not populate the instantiation cache: only
+        // tuning info is kept (paper §3.2 "Generating variants").
+        self.cache.evict(&variant.id);
+        let st = self.tuner.state(key, &[]);
+        st.report(idx, cost);
+        self.stats.explored(&variant.kernel, t0.elapsed());
+        Ok(CallOutcome {
+            output,
+            variant_id: variant.id.clone(),
+            value: variant.value,
+            route: CallRoute::Explored,
+            compiled,
+            exec_cost: cost,
+            total: t0.elapsed(),
+        })
+    }
+
+    /// The winner's final compilation (paper: "generating the best
+    /// specialization one last time ... inserted into __clang_jit's cache
+    /// of instantiations"), plus eviction of the losers.
+    fn finalize(
+        &mut self,
+        variant: &Variant,
+        all_ids: &[String],
+        inputs: &[HostTensor],
+        t0: Instant,
+    ) -> Result<CallOutcome> {
+        self.cache.evict_losers(all_ids, &variant.id);
+        let manifest = self.registry.manifest();
+        let (exe, compiled) = self.cache.get_or_compile(manifest, variant)?;
+        let begin = self.metric.begin();
+        let output = exe.execute(inputs)?;
+        let cost = self.metric.end(begin);
+        Ok(CallOutcome {
+            output,
+            variant_id: variant.id.clone(),
+            value: variant.value,
+            route: CallRoute::Finalized,
+            compiled,
+            exec_cost: cost,
+            total: t0.elapsed(),
+        })
+    }
+
+    /// Tuned parameter value for a kernel at a problem size, once tuned
+    /// (the paper's Listing 6 parameter reuse).
+    pub fn tuned_value(&self, kernel: &str, size: i64) -> Option<i64> {
+        let problem = self.registry.problem(kernel, size).ok()?;
+        let key =
+            ProblemKey::new(&problem.kernel, &problem.param, problem.variants[0].inputs.join(","));
+        self.tuner.tuned_value(&key)
+    }
+
+    /// Tuning phase for a kernel/size, if any state exists.
+    pub fn phase(&self, kernel: &str, size: i64) -> Option<Phase> {
+        let problem = self.registry.problem(kernel, size).ok()?;
+        let key =
+            ProblemKey::new(&problem.kernel, &problem.param, problem.variants[0].inputs.join(","));
+        self.tuner.peek(&key).map(|s| s.phase())
+    }
+
+    /// Registry accessor.
+    pub fn registry(&self) -> &KernelRegistry {
+        &self.registry
+    }
+
+    /// Coordinator statistics.
+    pub fn stats(&self) -> &CoordStats {
+        &self.stats
+    }
+
+    /// Mutable statistics (the server leader records queue depths here).
+    pub fn stats_mut(&mut self) -> &mut CoordStats {
+        &mut self.stats
+    }
+
+    /// Compile-cache statistics.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Autotuner report (CLI `inspect`).
+    pub fn tuning_report(&self) -> crate::util::json::Value {
+        self.tuner.report()
+    }
+
+    /// Persist tuned results to a JSON file (see
+    /// [`crate::autotuner::Autotuner::export_state`]).
+    pub fn save_state(&self, path: &std::path::Path) -> Result<usize> {
+        let state = self.tuner.export_state();
+        let n = state.as_arr().map(<[_]>::len).unwrap_or(0);
+        std::fs::write(path, state.to_json_pretty())
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Ok(n)
+    }
+
+    /// Warm-start from persisted tuning results. Entries are validated
+    /// against the live manifest: a problem whose candidate values
+    /// changed since the state was saved is skipped (stale results must
+    /// not be trusted across artifact regenerations). Returns
+    /// (imported, skipped).
+    pub fn load_state(&mut self, path: &std::path::Path) -> Result<(usize, usize)> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        let parsed = crate::util::json::parse(&text)?;
+        let arr = parsed
+            .as_arr()
+            .ok_or_else(|| Error::Autotune("state file: expected array".into()))?;
+        let mut valid = Vec::new();
+        let mut skipped = 0;
+        for entry in arr {
+            let kernel = entry.req_str("kernel")?;
+            let param = entry.req_str("param")?;
+            let signature = entry.req_str("signature")?;
+            let values: Vec<i64> = entry
+                .req_arr("values")?
+                .iter()
+                .filter_map(crate::util::json::Value::as_i64)
+                .collect();
+            let matches = self.registry.manifest().problems.iter().any(|p| {
+                p.kernel == kernel
+                    && p.param == param
+                    && p.variants[0].inputs.join(",") == signature
+                    && p.variants.iter().map(|v| v.value).collect::<Vec<_>>() == values
+            });
+            if matches {
+                valid.push(entry.clone());
+            } else {
+                log::warn!("state: skipping stale entry {kernel}/{param} ({signature})");
+                skipped += 1;
+            }
+        }
+        let imported =
+            self.tuner.import_state(&crate::util::json::Value::Arr(valid))?;
+        Ok((imported, skipped))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::{MockEngine, MockSpec};
+    use std::time::Duration;
+
+    fn dispatcher(spec: MockSpec) -> Dispatcher {
+        let manifest = crate::manifest::tests::sample_manifest().unwrap();
+        let registry = KernelRegistry::new(manifest);
+        Dispatcher::new(registry, Box::new(MockEngine::new(spec)))
+    }
+
+    fn inputs8() -> Vec<HostTensor> {
+        vec![HostTensor::zeros(&[8, 8])]
+    }
+
+    #[test]
+    fn full_lifecycle_explore_finalize_use() {
+        // k.a.n8 (value 1) slow, k.b.n8 (value 2) fast → tuner must pick b.
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        let mut d = dispatcher(spec);
+        let routes: Vec<CallRoute> =
+            (0..5).map(|_| d.call("k", &inputs8()).unwrap().route).collect();
+        assert_eq!(
+            routes,
+            vec![
+                CallRoute::Explored,
+                CallRoute::Explored,
+                CallRoute::Finalized,
+                CallRoute::Tuned,
+                CallRoute::Tuned
+            ]
+        );
+        assert_eq!(d.tuned_value("k", 8), Some(2));
+        // output of tuned calls encodes the winning variant's value
+        let out = d.call("k", &inputs8()).unwrap();
+        assert!(out.output.data().iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn explore_calls_pay_compile_finalize_pays_again() {
+        let mut d = dispatcher(MockSpec::default());
+        let o1 = d.call("k", &inputs8()).unwrap();
+        assert!(o1.compiled, "tuning iteration JIT-compiles");
+        let o2 = d.call("k", &inputs8()).unwrap();
+        assert!(o2.compiled);
+        let o3 = d.call("k", &inputs8()).unwrap();
+        assert_eq!(o3.route, CallRoute::Finalized);
+        assert!(o3.compiled, "the paper's final compilation is a real compile");
+        let o4 = d.call("k", &inputs8()).unwrap();
+        assert!(!o4.compiled, "steady state hits the instantiation cache");
+        // cache holds only the winner
+        assert_eq!(d.cache_stats().misses, 3);
+    }
+
+    #[test]
+    fn different_shapes_are_independent_problems() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(60))
+            .with_cost("k.b.n8", Duration::from_micros(600));
+        let mut d = dispatcher(spec);
+        // tune the n8 problem to completion
+        for _ in 0..4 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(1));
+        // n16 problem starts fresh (single variant k.a.n16)
+        let o = d.call("k", &[HostTensor::zeros(&[16, 16])]).unwrap();
+        assert_eq!(o.route, CallRoute::Explored);
+        assert_eq!(d.tuned_value("k", 16), None);
+    }
+
+    #[test]
+    fn compile_failure_skips_variant() {
+        let mut spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(50))
+            .with_cost("k.b.n8", Duration::from_micros(500));
+        spec.fail_compile.insert("k.a.n8".into());
+        let mut d = dispatcher(spec);
+        // first call: variant a fails to compile, dispatcher retries with b
+        let o = d.call("k", &inputs8()).unwrap();
+        assert_eq!(o.variant_id, "k.b.n8");
+        // tuning completes with only b alive
+        let o2 = d.call("k", &inputs8()).unwrap();
+        assert_eq!(o2.route, CallRoute::Finalized);
+        assert_eq!(d.tuned_value("k", 8), Some(2));
+        assert_eq!(d.stats().total_failures(), 1);
+    }
+
+    #[test]
+    fn all_variants_failing_is_an_error() {
+        let mut spec = MockSpec::default();
+        spec.fail_compile.insert("k.a.n8".into());
+        spec.fail_compile.insert("k.b.n8".into());
+        let mut d = dispatcher(spec);
+        let err = d.call("k", &inputs8()).err().expect("must fail");
+        assert!(err.to_string().contains("every variant"), "{err}");
+        // subsequent calls keep failing fast
+        assert!(d.call("k", &inputs8()).is_err());
+    }
+
+    #[test]
+    fn unknown_kernel_and_bad_shape() {
+        let mut d = dispatcher(MockSpec::default());
+        assert!(d.call("nope", &inputs8()).is_err());
+        assert!(d.call("k", &[HostTensor::zeros(&[5, 5])]).is_err());
+    }
+
+    #[test]
+    fn state_roundtrip_warm_starts_without_tuning() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        let mut d = dispatcher(spec.clone());
+        for _ in 0..4 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(2));
+        let path = std::env::temp_dir().join(format!("jitune-state-{}.json", std::process::id()));
+        assert_eq!(d.save_state(&path).unwrap(), 1);
+
+        // fresh dispatcher, same manifest layout: import → no explores
+        let mut d2 = dispatcher(spec);
+        let (imported, skipped) = d2.load_state(&path).unwrap();
+        assert_eq!((imported, skipped), (1, 0));
+        let first = d2.call("k", &inputs8()).unwrap();
+        // warm start: the winner is recompiled once (HLO-text-only
+        // persistence, like the paper's AST cache) but never explored
+        assert_eq!(first.route, CallRoute::Finalized);
+        assert_eq!(first.value, 2);
+        let second = d2.call("k", &inputs8()).unwrap();
+        assert_eq!(second.route, CallRoute::Tuned);
+        assert_eq!(d2.stats().kernel("k").unwrap().explored, 0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stale_state_entries_are_skipped() {
+        let mut d = dispatcher(MockSpec::default());
+        let path =
+            std::env::temp_dir().join(format!("jitune-stale-{}.json", std::process::id()));
+        // candidate values [9, 99] do not match the manifest's [1, 2]
+        std::fs::write(
+            &path,
+            r#"[{"kernel":"k","param":"p","signature":"f32[8,8]",
+                 "values":[9,99],"winner_value":9}]"#,
+        )
+        .unwrap();
+        let (imported, skipped) = d.load_state(&path).unwrap();
+        assert_eq!((imported, skipped), (0, 1));
+        // tuning starts from scratch
+        let first = d.call("k", &inputs8()).unwrap();
+        assert_eq!(first.route, CallRoute::Explored);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut d = dispatcher(MockSpec::default());
+        for _ in 0..6 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        let s = d.stats();
+        assert_eq!(s.kernel("k").unwrap().explored, 2);
+        assert_eq!(s.kernel("k").unwrap().finalized, 1);
+        assert_eq!(s.kernel("k").unwrap().tuned, 3);
+        assert_eq!(s.total_calls(), 6);
+    }
+}

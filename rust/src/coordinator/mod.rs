@@ -1,0 +1,24 @@
+//! The run-time coordinator: registry, dispatcher, threaded server.
+//!
+//! The [`Dispatcher`] is the heart of the system — the piece that plays
+//! ClangJIT's `__clang_jit` role with autotuning folded in (paper §3.2):
+//! every kernel call consults the [`crate::autotuner::TuningState`] for
+//! its problem, JIT-compiles whatever variant the tuner asks for,
+//! measures tuning iterations, finalizes the winner into the
+//! instantiation cache, and routes steady-state calls to it.
+//!
+//! [`server::Coordinator`] wraps the dispatcher in a leader thread
+//! (PJRT clients are thread-pinned) with a channel-based request
+//! protocol, so any number of application threads can call kernels
+//! concurrently — the analog of the paper's multi-threaded execution
+//! conditions, and the mutex-protected compilation protocol.
+
+mod dispatcher;
+mod registry;
+pub mod server;
+mod stats;
+
+pub use dispatcher::{CallOutcome, CallRoute, Dispatcher};
+pub use registry::KernelRegistry;
+pub use server::{BatchOptions, Coordinator, CoordinatorHandle};
+pub use stats::{CoordStats, KernelStats};

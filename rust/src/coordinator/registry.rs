@@ -1,0 +1,115 @@
+//! Kernel registry: resolves calls to manifest problems.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::manifest::{Manifest, Problem};
+use crate::tensor::HostTensor;
+
+/// Index over the manifest for O(1) call resolution.
+pub struct KernelRegistry {
+    manifest: Manifest,
+    /// (kernel, size) → problem index in `manifest.problems`.
+    by_kernel_size: HashMap<(String, i64), usize>,
+    /// (kernel, input signature) → problem index.
+    by_kernel_sig: HashMap<(String, String), usize>,
+}
+
+impl KernelRegistry {
+    /// Build the index.
+    pub fn new(manifest: Manifest) -> KernelRegistry {
+        let mut by_kernel_size = HashMap::new();
+        let mut by_kernel_sig = HashMap::new();
+        for (i, p) in manifest.problems.iter().enumerate() {
+            by_kernel_size.insert((p.kernel.clone(), p.size), i);
+            by_kernel_sig.insert((p.kernel.clone(), p.variants[0].inputs.join(",")), i);
+        }
+        KernelRegistry { manifest, by_kernel_size, by_kernel_sig }
+    }
+
+    /// The wrapped manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Resolve by kernel + problem size.
+    pub fn problem(&self, kernel: &str, size: i64) -> Result<&Problem> {
+        self.by_kernel_size
+            .get(&(kernel.to_string(), size))
+            .map(|&i| &self.manifest.problems[i])
+            .ok_or_else(|| Error::Unknown { kind: "problem", name: format!("{kernel}/n{size}") })
+    }
+
+    /// Resolve by kernel + the actual call arguments: the paper's
+    /// "calls with different arguments are a different autotuning
+    /// problem" — the signature is derived from the inputs themselves.
+    pub fn problem_for_inputs(&self, kernel: &str, inputs: &[HostTensor]) -> Result<&Problem> {
+        let sig = inputs.iter().map(HostTensor::signature).collect::<Vec<_>>().join(",");
+        self.by_kernel_sig
+            .get(&(kernel.to_string(), sig.clone()))
+            .map(|&i| &self.manifest.problems[i])
+            .ok_or_else(|| Error::ShapeMismatch {
+                kernel: kernel.to_string(),
+                expected: self.known_signatures(kernel),
+                got: sig,
+            })
+    }
+
+    /// Candidate parameter values of a problem, declaration order.
+    pub fn values(&self, p: &Problem) -> Vec<i64> {
+        p.variants.iter().map(|v| v.value).collect()
+    }
+
+    fn known_signatures(&self, kernel: &str) -> String {
+        let mut sigs: Vec<String> = self
+            .manifest
+            .problems
+            .iter()
+            .filter(|p| p.kernel == kernel)
+            .map(|p| p.variants[0].inputs.join(","))
+            .collect();
+        sigs.sort();
+        if sigs.is_empty() {
+            format!("(unknown kernel `{kernel}`)")
+        } else {
+            sigs.join(" | ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> KernelRegistry {
+        KernelRegistry::new(crate::manifest::tests::sample_manifest().unwrap())
+    }
+
+    #[test]
+    fn resolves_by_size_and_signature() {
+        let r = registry();
+        assert_eq!(r.problem("k", 8).unwrap().size, 8);
+        let inputs = [HostTensor::zeros(&[8, 8])];
+        assert_eq!(r.problem_for_inputs("k", &inputs).unwrap().size, 8);
+        let inputs16 = [HostTensor::zeros(&[16, 16])];
+        assert_eq!(r.problem_for_inputs("k", &inputs16).unwrap().size, 16);
+    }
+
+    #[test]
+    fn unknown_kernel_and_shape_errors() {
+        let r = registry();
+        assert!(r.problem("nope", 8).is_err());
+        let bad = [HostTensor::zeros(&[3, 3])];
+        let err = r.problem_for_inputs("k", &bad).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("f32[3,3]"), "{msg}");
+        assert!(msg.contains("f32[8,8]"), "should list known signatures: {msg}");
+    }
+
+    #[test]
+    fn values_in_declaration_order() {
+        let r = registry();
+        let p = r.problem("k", 8).unwrap();
+        assert_eq!(r.values(p), vec![1, 2]);
+    }
+}

@@ -1,0 +1,291 @@
+//! Threaded coordinator: leader thread owning the dispatcher, serving
+//! requests from any number of application threads.
+//!
+//! PJRT clients are thread-pinned (`Rc` internally), so the dispatcher
+//! lives on one leader thread. Application threads hold cloneable
+//! [`CoordinatorHandle`]s and submit calls over an mpsc channel; replies
+//! come back on per-request rendezvous channels. The single consumer
+//! serializes JIT compilations, providing the paper's "compilation is
+//! protected by a mutex" guarantee at the channel boundary — and the
+//! tuner observes executions under real cross-request contention, which
+//! is exactly the paper's argument for *online* tuning.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+use crate::util::json::Value;
+
+enum Request {
+    Call {
+        kernel: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::SyncSender<Result<CallOutcome>>,
+    },
+    TunedValue {
+        kernel: String,
+        size: i64,
+        reply: mpsc::SyncSender<Option<i64>>,
+    },
+    Stats {
+        reply: mpsc::SyncSender<(String, Value)>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle for submitting kernel calls to the leader.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl CoordinatorHandle {
+    /// Dispatch a kernel call and wait for its result.
+    pub fn call(&self, kernel: &str, inputs: Vec<HostTensor>) -> Result<CallOutcome> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Call { kernel: kernel.to_string(), inputs, reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
+    }
+
+    /// Tuned parameter value for a problem, if tuning completed.
+    pub fn tuned_value(&self, kernel: &str, size: i64) -> Result<Option<i64>> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::TunedValue { kernel: kernel.to_string(), size, reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
+    }
+
+    /// Rendered stats + JSON tuning report.
+    pub fn stats(&self) -> Result<(String, Value)> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Stats { reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
+    }
+}
+
+/// Batching policy for the leader loop.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOptions {
+    /// Maximum requests drained from the queue per scheduling round.
+    /// Draining lets the leader observe queue depth (admission stats)
+    /// and keeps reply latency fair under burst load.
+    pub max_batch: usize,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { max_batch: 16 }
+    }
+}
+
+/// The running coordinator (leader thread + handle factory).
+pub struct Coordinator {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn with default batching.
+    pub fn spawn<F>(factory: F) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Dispatcher> + Send + 'static,
+    {
+        Coordinator::spawn_with(factory, BatchOptions::default())
+    }
+
+    /// Spawn the leader thread around a dispatcher factory.
+    ///
+    /// The factory runs *on the leader thread* because PJRT clients must
+    /// be created on the thread that uses them.
+    pub fn spawn_with<F>(factory: F, batch: BatchOptions) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Dispatcher> + Send + 'static,
+    {
+        let max_batch = batch.max_batch.max(1);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let join = std::thread::Builder::new()
+            .name("jitune-leader".into())
+            .spawn(move || {
+                let mut dispatcher = match factory() {
+                    Ok(d) => {
+                        let _ = ready_tx.send(Ok(()));
+                        d
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                'serve: while let Ok(first) = rx.recv() {
+                    // Drain a scheduling round: the blocking head request
+                    // plus whatever queued behind it, up to max_batch.
+                    let mut round = vec![first];
+                    while round.len() < max_batch {
+                        match rx.try_recv() {
+                            Ok(req) => round.push(req),
+                            Err(_) => break,
+                        }
+                    }
+                    let depth = round.len();
+                    for req in round {
+                        match req {
+                            Request::Call { kernel, inputs, reply } => {
+                                dispatcher.stats_mut().enqueue_round(depth);
+                                let result = dispatcher.call(&kernel, &inputs);
+                                let _ = reply.send(result);
+                            }
+                            Request::TunedValue { kernel, size, reply } => {
+                                let _ = reply.send(dispatcher.tuned_value(&kernel, size));
+                            }
+                            Request::Stats { reply } => {
+                                let rendered = format!(
+                                    "{}cache: {:?}\n",
+                                    dispatcher.stats().render(),
+                                    dispatcher.cache_stats()
+                                );
+                                let _ = reply.send((rendered, dispatcher.tuning_report()));
+                            }
+                            Request::Shutdown => break 'serve,
+                        }
+                    }
+                }
+            })
+            .map_err(|e| Error::Coordinator(format!("spawn: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Coordinator("leader died during init".into()))??;
+        Ok(Coordinator { tx, join: Some(join) })
+    }
+
+    /// A new handle for this coordinator.
+    pub fn handle(&self) -> CoordinatorHandle {
+        CoordinatorHandle { tx: self.tx.clone() }
+    }
+
+    /// Graceful shutdown (also triggered by Drop).
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::KernelRegistry;
+    use crate::runtime::mock::{MockEngine, MockSpec};
+    use std::time::Duration;
+
+    fn spawn_mock(spec: MockSpec) -> Coordinator {
+        Coordinator::spawn(move || {
+            let manifest = crate::manifest::tests::sample_manifest()?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_calls_from_multiple_threads() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(400))
+            .with_cost("k.b.n8", Duration::from_micros(40));
+        let coord = spawn_mock(spec);
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            let h = coord.handle();
+            joins.push(std::thread::spawn(move || {
+                let mut values = Vec::new();
+                for _ in 0..5 {
+                    let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+                    values.push(out.value);
+                }
+                (t, values)
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        // after 20 calls tuning is long done; winner is the fast variant
+        let tuned = coord.handle().tuned_value("k", 8).unwrap();
+        assert_eq!(tuned, Some(2));
+    }
+
+    #[test]
+    fn stats_reachable_through_handle() {
+        let coord = spawn_mock(MockSpec::default());
+        let h = coord.handle();
+        for _ in 0..4 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        let (rendered, report) = h.stats().unwrap();
+        assert!(rendered.contains("k:"), "{rendered}");
+        assert!(report.as_obj().is_some());
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let result = Coordinator::spawn(|| Err(Error::Coordinator("nope".into())));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn shutdown_then_call_errors() {
+        let mut coord = spawn_mock(MockSpec::default());
+        let h = coord.handle();
+        coord.shutdown();
+        assert!(h.call("k", vec![HostTensor::zeros(&[8, 8])]).is_err());
+    }
+
+    #[test]
+    fn errors_propagate_to_caller() {
+        let coord = spawn_mock(MockSpec::default());
+        let h = coord.handle();
+        assert!(h.call("unknown", vec![]).is_err());
+    }
+
+    #[test]
+    fn burst_load_records_scheduling_rounds() {
+        let spec = MockSpec::default();
+        let coord = Coordinator::spawn_with(
+            move || {
+                let manifest = crate::manifest::tests::sample_manifest()?;
+                let registry = KernelRegistry::new(manifest);
+                Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+            },
+            BatchOptions { max_batch: 8 },
+        )
+        .unwrap();
+        // burst: many threads firing concurrently builds queue depth > 1
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let h = coord.handle();
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let (rendered, _) = coord.handle().stats().unwrap();
+        assert!(rendered.contains("scheduling rounds"), "{rendered}");
+    }
+}

@@ -1,0 +1,226 @@
+//! Coordinator statistics: per-kernel counters + latency histograms.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::util::hist::Histogram;
+use crate::util::json::{n, Value};
+
+/// Counters for one kernel family.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    /// Tuning iterations dispatched.
+    pub explored: u64,
+    /// Final compilations performed.
+    pub finalized: u64,
+    /// Steady-state (tuned) calls.
+    pub tuned: u64,
+    /// Variant failures observed (compile or execute).
+    pub failures: u64,
+    /// End-to-end latency of every call.
+    pub latency: Histogram,
+    /// Latency of steady-state calls only (the post-tuning service level).
+    pub tuned_latency: Histogram,
+}
+
+impl KernelStats {
+    fn new() -> KernelStats {
+        KernelStats {
+            explored: 0,
+            finalized: 0,
+            tuned: 0,
+            failures: 0,
+            latency: Histogram::latency(),
+            tuned_latency: Histogram::latency(),
+        }
+    }
+
+    /// Total calls routed for this kernel.
+    pub fn calls(&self) -> u64 {
+        self.explored + self.finalized + self.tuned
+    }
+}
+
+/// All coordinator statistics.
+#[derive(Debug, Clone)]
+pub struct CoordStats {
+    kernels: BTreeMap<String, KernelStats>,
+    /// Scheduling-round sizes observed by the leader loop (queue depth
+    /// at drain time) → occurrence count.
+    rounds: BTreeMap<usize, u64>,
+}
+
+impl CoordStats {
+    /// Empty stats.
+    pub fn new() -> CoordStats {
+        CoordStats { kernels: BTreeMap::new(), rounds: BTreeMap::new() }
+    }
+
+    /// Record the queue depth of one leader scheduling round.
+    pub fn enqueue_round(&mut self, depth: usize) {
+        *self.rounds.entry(depth).or_default() += 1;
+    }
+
+    /// Distribution of scheduling-round sizes.
+    pub fn round_sizes(&self) -> &BTreeMap<usize, u64> {
+        &self.rounds
+    }
+
+    /// Maximum observed queue depth.
+    pub fn max_queue_depth(&self) -> usize {
+        self.rounds.keys().max().copied().unwrap_or(0)
+    }
+
+    fn entry(&mut self, kernel: &str) -> &mut KernelStats {
+        self.kernels.entry(kernel.to_string()).or_insert_with(KernelStats::new)
+    }
+
+    /// Record a tuning iteration.
+    pub fn explored(&mut self, kernel: &str, total: Duration) {
+        let e = self.entry(kernel);
+        e.explored += 1;
+        e.latency.record(total.as_secs_f64());
+    }
+
+    /// Record a finalization call.
+    pub fn finalized(&mut self, kernel: &str, total: Duration) {
+        let e = self.entry(kernel);
+        e.finalized += 1;
+        e.latency.record(total.as_secs_f64());
+    }
+
+    /// Record a steady-state call.
+    pub fn tuned_call(&mut self, kernel: &str, total: Duration) {
+        let e = self.entry(kernel);
+        e.tuned += 1;
+        e.latency.record(total.as_secs_f64());
+        e.tuned_latency.record(total.as_secs_f64());
+    }
+
+    /// Record a variant failure.
+    pub fn failure(&mut self, kernel: &str) {
+        self.entry(kernel).failures += 1;
+    }
+
+    /// Stats for one kernel.
+    pub fn kernel(&self, kernel: &str) -> Option<&KernelStats> {
+        self.kernels.get(kernel)
+    }
+
+    /// Total calls across kernels.
+    pub fn total_calls(&self) -> u64 {
+        self.kernels.values().map(KernelStats::calls).sum()
+    }
+
+    /// Total failures across kernels.
+    pub fn total_failures(&self) -> u64 {
+        self.kernels.values().map(|k| k.failures).sum()
+    }
+
+    /// JSON export (CLI / server introspection).
+    pub fn to_json(&self) -> Value {
+        Value::Obj(
+            self.kernels
+                .iter()
+                .map(|(k, s)| {
+                    (
+                        k.clone(),
+                        Value::Obj(vec![
+                            ("explored".into(), n(s.explored as f64)),
+                            ("finalized".into(), n(s.finalized as f64)),
+                            ("tuned".into(), n(s.tuned as f64)),
+                            ("failures".into(), n(s.failures as f64)),
+                            ("mean_latency_s".into(), n(s.latency.mean())),
+                            ("p95_latency_s".into(), n(s.latency.percentile(95.0))),
+                            ("tuned_mean_latency_s".into(), n(s.tuned_latency.mean())),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Human-readable multi-line rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        if !self.rounds.is_empty() {
+            let depths: Vec<String> =
+                self.rounds.iter().map(|(d, c)| format!("{d}x{c}")).collect();
+            out.push_str(&format!(
+                "scheduling rounds (depth x count): {} (max depth {})\n",
+                depths.join(" "),
+                self.max_queue_depth()
+            ));
+        }
+        for (k, s) in &self.kernels {
+            out.push_str(&format!(
+                "{k}: calls={} (explore={} finalize={} tuned={} failures={})\n  all   {}\n  tuned {}\n",
+                s.calls(),
+                s.explored,
+                s.finalized,
+                s.tuned,
+                s.failures,
+                s.latency.render_ms(),
+                s.tuned_latency.render_ms(),
+            ));
+        }
+        out
+    }
+}
+
+impl Default for CoordStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency() {
+        let mut s = CoordStats::new();
+        s.explored("k", Duration::from_millis(10));
+        s.explored("k", Duration::from_millis(12));
+        s.finalized("k", Duration::from_millis(11));
+        s.tuned_call("k", Duration::from_millis(1));
+        s.failure("k");
+        let ks = s.kernel("k").unwrap();
+        assert_eq!(ks.explored, 2);
+        assert_eq!(ks.finalized, 1);
+        assert_eq!(ks.tuned, 1);
+        assert_eq!(ks.failures, 1);
+        assert_eq!(ks.calls(), 4);
+        assert_eq!(s.total_calls(), 4);
+        // tuned latency only tracks the steady-state call
+        assert_eq!(ks.tuned_latency.count(), 1);
+        assert!(ks.tuned_latency.mean() < ks.latency.mean());
+    }
+
+    #[test]
+    fn json_export_shape() {
+        let mut s = CoordStats::new();
+        s.tuned_call("a", Duration::from_millis(5));
+        let v = s.to_json();
+        assert_eq!(v.get("a").unwrap().get("tuned").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn render_contains_kernels() {
+        let mut s = CoordStats::new();
+        s.explored("matmul", Duration::from_millis(1));
+        assert!(s.render().contains("matmul"));
+    }
+
+    #[test]
+    fn scheduling_rounds_tracked() {
+        let mut s = CoordStats::new();
+        s.enqueue_round(1);
+        s.enqueue_round(1);
+        s.enqueue_round(5);
+        assert_eq!(s.max_queue_depth(), 5);
+        assert_eq!(s.round_sizes().get(&1), Some(&2));
+        assert!(s.render().contains("max depth 5"));
+    }
+}

@@ -1,0 +1,121 @@
+//! Crate-wide error type.
+//!
+//! Everything that can fail on the request path funnels into [`Error`] so
+//! the coordinator can decide between retrying, skipping a variant (the
+//! failure-injection path exercised in tests) and aborting.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All error conditions surfaced by the jitune runtime.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Error bubbled up from the PJRT / XLA runtime (compile or execute).
+    #[error("xla: {0}")]
+    Xla(String),
+
+    /// Artifact or manifest I/O failure.
+    #[error("io: {path}: {source}")]
+    Io {
+        /// Path involved in the failed operation.
+        path: String,
+        /// Underlying OS error.
+        #[source]
+        source: std::io::Error,
+    },
+
+    /// Malformed JSON (manifest, config, tuning-state export).
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json {
+        /// Byte offset of the first offending character.
+        offset: usize,
+        /// Human-readable description.
+        msg: String,
+    },
+
+    /// Manifest is syntactically valid JSON but semantically broken.
+    #[error("manifest: {0}")]
+    Manifest(String),
+
+    /// Configuration file / CLI error.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// A kernel, variant or problem key that the registry does not know.
+    #[error("unknown {kind}: {name}")]
+    Unknown {
+        /// What category of entity was looked up ("kernel", "variant", ...).
+        kind: &'static str,
+        /// The name that failed to resolve.
+        name: String,
+    },
+
+    /// Shape/dtype mismatch between caller-provided tensors and the
+    /// artifact's expected signature.
+    #[error("shape mismatch for {kernel}: expected {expected}, got {got}")]
+    ShapeMismatch {
+        /// Kernel being invoked.
+        kernel: String,
+        /// Signature recorded in the manifest.
+        expected: String,
+        /// Signature derived from the call's arguments.
+        got: String,
+    },
+
+    /// JIT compilation of a variant failed (also produced by the
+    /// failure-injecting mock engine in tests).
+    #[error("compile failed for variant {variant}: {msg}")]
+    CompileFailed {
+        /// Variant id that failed to compile.
+        variant: String,
+        /// Reason.
+        msg: String,
+    },
+
+    /// The autotuner was asked for a decision it cannot make yet or at all
+    /// (e.g. every variant failed to compile).
+    #[error("autotuner: {0}")]
+    Autotune(String),
+
+    /// Coordinator lifecycle error (server already stopped, queue closed...).
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Helper to build an [`Error::Io`] with path context.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::Unknown { kind: "kernel", name: "nope".into() };
+        assert_eq!(e.to_string(), "unknown kernel: nope");
+        let e = Error::ShapeMismatch {
+            kernel: "matmul".into(),
+            expected: "f32[8,8]".into(),
+            got: "f32[4,4]".into(),
+        };
+        assert!(e.to_string().contains("expected f32[8,8]"));
+    }
+
+    #[test]
+    fn io_helper_keeps_path() {
+        let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(e.to_string().contains("/tmp/x"));
+    }
+}

@@ -1,0 +1,37 @@
+//! # jitune — Just-in-Time autotuning
+//!
+//! Reproduction of *Just-in-Time autotuning* (Morel & Coti, 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (build time)** — Pallas kernels (`python/compile/kernels/`)
+//!   parameterized by the paper's tuning axes (block size, loop order,
+//!   unroll factor).
+//! * **Layer 2 (build time)** — JAX entry points lowered per variant to HLO
+//!   text artifacts plus a manifest (`python/compile/aot.py`).
+//! * **Layer 3 (run time, this crate)** — the paper's contribution: a
+//!   just-in-time autotuning runtime. The first *k* calls of a kernel
+//!   JIT-compile (PJRT `compile`) and measure each variant; the winner is
+//!   then recompiled into the instantiation cache and used for every
+//!   subsequent call ([`autotuner`], [`runtime::CompileCache`],
+//!   [`coordinator`]).
+//!
+//! Python never runs on the request path: `make artifacts` is the only
+//! Python invocation, and the resulting binary is self-contained.
+//!
+//! See `DESIGN.md` for the paper→system mapping and the experiment index.
+
+pub mod autotuner;
+pub mod baseline;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod manifest;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod testutil;
+pub mod util;
+pub mod workload;
+
+pub use error::{Error, Result};

@@ -1,0 +1,257 @@
+//! `jitune` launcher: inspect artifacts, tune kernels, replay traces,
+//! run the serving demo — all through the public library API.
+
+use jitune::autotuner::Autotuner;
+use jitune::cli::{self, FlagSpec};
+use jitune::config::{Config, RunSettings};
+use jitune::coordinator::{CallRoute, Dispatcher, KernelRegistry};
+use jitune::manifest::Manifest;
+use jitune::runtime::PjrtEngine;
+use jitune::workload::{inputs_for, CallTrace};
+use jitune::{Error, Result};
+
+const COMMANDS: &[(&str, &str)] = &[
+    ("inspect", "list kernels, problems and variants in the manifest"),
+    ("tune", "tune one kernel at one size and print the tuning report"),
+    ("run", "replay a call trace (kernel:size:iters[,...]) through the dispatcher"),
+    ("stats", "tune then print coordinator + cache statistics"),
+    ("help", "show this message"),
+];
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "config", takes_value: true, help: "config file (TOML-lite)" },
+        FlagSpec { name: "artifacts", takes_value: true, help: "artifacts directory" },
+        FlagSpec { name: "kernel", takes_value: true, help: "kernel family (default matmul_tiled)" },
+        FlagSpec { name: "size", takes_value: true, help: "problem size (default 128)" },
+        FlagSpec { name: "iters", takes_value: true, help: "call count (default 20)" },
+        FlagSpec { name: "trace", takes_value: true, help: "trace spec kernel:size:iters[,...]" },
+        FlagSpec { name: "strategy", takes_value: true, help: "sweep|random:K|hillclimb|anneal:K" },
+        FlagSpec { name: "metric", takes_value: true, help: "wall_clock|rdtsc|energy" },
+        FlagSpec { name: "seed", takes_value: true, help: "workload seed (default 42)" },
+        FlagSpec { name: "json", takes_value: false, help: "emit JSON reports" },
+        FlagSpec {
+            name: "state-file",
+            takes_value: true,
+            help: "persisted tuning state: warm-start from it, save back after",
+        },
+    ]
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let specs = flag_specs();
+    let parsed = cli::parse(args, &specs)?;
+
+    let mut cfg = match parsed.get("config") {
+        Some(path) => Config::load(path)?,
+        None => Config::new(),
+    };
+    cfg.apply_env();
+    for key in ["artifacts", "seed"] {
+        if let Some(v) = parsed.get(key) {
+            cfg.set(key, v);
+        }
+    }
+    if let Some(v) = parsed.get("strategy") {
+        cfg.set("tune.strategy", v);
+    }
+    if let Some(v) = parsed.get("metric") {
+        cfg.set("tune.metric", v);
+    }
+    let settings = RunSettings::from_config(&cfg)?;
+
+    match parsed.command.as_str() {
+        "inspect" => inspect(&settings, parsed.has("json")),
+        "tune" => tune_with_state(
+            &settings,
+            &parsed.str_or("kernel", "matmul_tiled"),
+            parsed.i64_or("size", 128)?,
+            parsed.i64_or("iters", 20)? as usize,
+            parsed.has("json"),
+            parsed.get("state-file"),
+        ),
+        "run" => {
+            let spec = parsed
+                .get("trace")
+                .ok_or_else(|| Error::Config("run requires --trace".into()))?
+                .to_string();
+            run_trace(&settings, &spec, parsed.get("state-file"))
+        }
+        "stats" => tune_with_stats(
+            &settings,
+            &parsed.str_or("kernel", "matmul_tiled"),
+            parsed.i64_or("size", 128)?,
+            parsed.i64_or("iters", 20)? as usize,
+        ),
+        "help" | "" => {
+            println!("{}", cli::usage("jitune", COMMANDS, &specs));
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command `{other}` (try `help`)"))),
+    }
+}
+
+fn build_dispatcher(settings: &RunSettings) -> Result<Dispatcher> {
+    let manifest = Manifest::load(&settings.artifacts)?;
+    let registry = KernelRegistry::new(manifest);
+    let engine = PjrtEngine::cpu()?;
+    let tuner = Autotuner::with_factory(settings.build_strategy_factory()?);
+    let metric = settings.build_metric()?;
+    Ok(Dispatcher::with(registry, Box::new(engine), tuner, metric))
+}
+
+fn inspect(settings: &RunSettings, json: bool) -> Result<()> {
+    let manifest = Manifest::load(&settings.artifacts)?;
+    if json {
+        println!(
+            "{}",
+            jitune::util::json::Value::Obj(vec![
+                ("jax_version".into(), jitune::util::json::s(manifest.jax_version.clone())),
+                (
+                    "kernels".into(),
+                    jitune::util::json::Value::Arr(
+                        manifest.kernels().into_iter().map(jitune::util::json::s).collect()
+                    )
+                ),
+                ("variants".into(), jitune::util::json::n(manifest.variants.len() as f64)),
+                ("problems".into(), jitune::util::json::n(manifest.problems.len() as f64)),
+            ])
+            .to_json_pretty()
+        );
+        return Ok(());
+    }
+    println!("manifest: {} (jax {})", settings.artifacts, manifest.jax_version);
+    println!("{} variants across {} problems\n", manifest.variants.len(), manifest.problems.len());
+    for p in &manifest.problems {
+        let labels: Vec<&str> = p.variants.iter().map(|v| v.label.as_str()).collect();
+        println!("{:<44} param={:<6} candidates: {}", p.key(), p.param, labels.join(" "));
+    }
+    Ok(())
+}
+
+/// Warm-start from `--state-file` if present; returns the path for the
+/// save-back after the run.
+fn load_state_flag(
+    dispatcher: &mut Dispatcher,
+    state_file: Option<&str>,
+) -> Result<Option<std::path::PathBuf>> {
+    let Some(path) = state_file else { return Ok(None) };
+    let path = std::path::PathBuf::from(path);
+    if path.exists() {
+        let (imported, skipped) = dispatcher.load_state(&path)?;
+        println!("state: warm-started {imported} problem(s), skipped {skipped} stale");
+    }
+    Ok(Some(path))
+}
+
+fn save_state_flag(dispatcher: &Dispatcher, path: &Option<std::path::PathBuf>) -> Result<()> {
+    if let Some(path) = path {
+        let n = dispatcher.save_state(path)?;
+        println!("state: saved {n} tuned problem(s) to {}", path.display());
+    }
+    Ok(())
+}
+
+fn tune_with_state(
+    settings: &RunSettings,
+    kernel: &str,
+    size: i64,
+    iters: usize,
+    json: bool,
+    state_file: Option<&str>,
+) -> Result<()> {
+    let mut dispatcher = build_dispatcher(settings)?;
+    let state_path = load_state_flag(&mut dispatcher, state_file)?;
+    let problem = dispatcher.registry().problem(kernel, size)?.clone();
+    let inputs = inputs_for(&problem, settings.seed);
+    println!(
+        "tuning {kernel} at n={size} over {} candidates ({} calls)...",
+        problem.variants.len(),
+        iters
+    );
+    for i in 0..iters {
+        let out = dispatcher.call(kernel, &inputs)?;
+        let route = match out.route {
+            CallRoute::Explored => "explore",
+            CallRoute::Finalized => "finalize",
+            CallRoute::Tuned => "tuned",
+        };
+        println!(
+            "call {i:3}: {route:<8} variant={:<28} value={:<6} compile={} total={:.3}ms",
+            out.variant_id,
+            out.value,
+            out.compiled,
+            out.total.as_secs_f64() * 1e3
+        );
+    }
+    if json {
+        println!("{}", dispatcher.tuning_report().to_json_pretty());
+    } else if let Some(v) = dispatcher.tuned_value(kernel, size) {
+        println!("\ntuned value for {kernel}/n{size}: {v}");
+    } else {
+        println!("\ntuning not finished after {iters} calls");
+    }
+    save_state_flag(&dispatcher, &state_path)?;
+    Ok(())
+}
+
+fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Result<()> {
+    let mut dispatcher = build_dispatcher(settings)?;
+    let state_path = load_state_flag(&mut dispatcher, state_file)?;
+    let mut trace = CallTrace::default();
+    for part in spec.split(',') {
+        let fields: Vec<&str> = part.split(':').collect();
+        if fields.len() != 3 {
+            return Err(Error::Config(format!(
+                "bad trace part `{part}` (want kernel:size:iters)"
+            )));
+        }
+        let size: i64 =
+            fields[1].parse().map_err(|_| Error::Config(format!("bad size in `{part}`")))?;
+        let iters: usize =
+            fields[2].parse().map_err(|_| Error::Config(format!("bad iters in `{part}`")))?;
+        trace.calls.extend(CallTrace::uniform(fields[0], size, iters).calls);
+    }
+    println!("replaying {} calls...", trace.len());
+    let t0 = std::time::Instant::now();
+    for call in &trace.calls {
+        let problem = dispatcher.registry().problem(&call.kernel, call.size)?.clone();
+        let inputs = inputs_for(&problem, settings.seed);
+        dispatcher.call(&call.kernel, &inputs)?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done in {:.3}s ({:.1} calls/s)\n",
+        dt.as_secs_f64(),
+        trace.len() as f64 / dt.as_secs_f64()
+    );
+    print!("{}", dispatcher.stats().render());
+    println!("cache: {:?}", dispatcher.cache_stats());
+    save_state_flag(&dispatcher, &state_path)?;
+    Ok(())
+}
+
+fn tune_with_stats(settings: &RunSettings, kernel: &str, size: i64, iters: usize) -> Result<()> {
+    let mut dispatcher = build_dispatcher(settings)?;
+    let problem = dispatcher.registry().problem(kernel, size)?.clone();
+    let inputs = inputs_for(&problem, settings.seed);
+    for _ in 0..iters {
+        dispatcher.call(kernel, &inputs)?;
+    }
+    print!("{}", dispatcher.stats().render());
+    println!("cache: {:?}", dispatcher.cache_stats());
+    println!("{}", dispatcher.tuning_report().to_json_pretty());
+    Ok(())
+}

@@ -1,0 +1,343 @@
+//! Artifact manifest: the Rust-side view of what `make artifacts` built.
+//!
+//! The manifest is the analog of ClangJIT's serialized-AST store: it tells
+//! the runtime which kernel variants exist, which tuning-parameter value
+//! each one embodies, and where the HLO text lives. The coordinator's
+//! [`crate::coordinator::KernelRegistry`] is built from this.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Schema version this loader understands (bump with `aot.py`).
+pub const SCHEMA_VERSION: i64 = 1;
+
+/// One lowered artifact: a (kernel, tuning-parameter value, problem size)
+/// point of the variant grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Variant {
+    /// Globally unique id, e.g. `matmul_tiled.b8.n128`.
+    pub id: String,
+    /// Kernel family name.
+    pub kernel: String,
+    /// Tuning-parameter name (the paper keys tuner state on this).
+    pub param: String,
+    /// Tuning-parameter value (e.g. block size, or implementation index).
+    pub value: i64,
+    /// Human label (`b8`, `ijk`, ...).
+    pub label: String,
+    /// Problem-size scalar (matrix edge / vector length / batch).
+    pub size: i64,
+    /// Input signatures, e.g. `["f32[128,128]", "f32[128,128]"]`.
+    pub inputs: Vec<String>,
+    /// Output signature.
+    pub output: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: String,
+    /// Nominal FLOP count of one execution (throughput reporting).
+    pub flops: i64,
+}
+
+impl Variant {
+    /// Parse one manifest entry.
+    fn from_json(v: &Value) -> Result<Variant> {
+        Ok(Variant {
+            id: v.req_str("id")?.to_string(),
+            kernel: v.req_str("kernel")?.to_string(),
+            param: v.req_str("param")?.to_string(),
+            value: v.req_i64("value")?,
+            label: v.req_str("label")?.to_string(),
+            size: v.req_i64("size")?,
+            inputs: v
+                .req_arr("inputs")?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| Error::Manifest("non-string input signature".into()))
+                })
+                .collect::<Result<_>>()?,
+            output: v.req_str("output")?.to_string(),
+            path: v.req_str("path")?.to_string(),
+            flops: v.req_i64("flops")?,
+        })
+    }
+
+    /// Parse dims out of a signature like `f32[128,64]`.
+    pub fn parse_sig(sig: &str) -> Result<Vec<usize>> {
+        let inner = sig
+            .strip_prefix("f32[")
+            .and_then(|s| s.strip_suffix(']'))
+            .ok_or_else(|| Error::Manifest(format!("bad signature `{sig}`")))?;
+        inner
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| Error::Manifest(format!("bad dim in `{sig}`")))
+            })
+            .collect()
+    }
+
+    /// Input shapes as dim vectors.
+    pub fn input_shapes(&self) -> Result<Vec<Vec<usize>>> {
+        self.inputs.iter().map(|s| Variant::parse_sig(s)).collect()
+    }
+
+    /// Output shape as a dim vector.
+    pub fn output_shape(&self) -> Result<Vec<usize>> {
+        Variant::parse_sig(&self.output)
+    }
+}
+
+/// A *tuning problem*: one kernel at one problem size — the unit the
+/// autotuner optimizes (the paper's "function + autotune parameter +
+/// argument set"). Holds the candidate variants in manifest order (the
+/// order the sweep tries them, like the paper's parameter array).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Kernel family.
+    pub kernel: String,
+    /// Tuning-parameter name.
+    pub param: String,
+    /// Problem-size scalar.
+    pub size: i64,
+    /// Candidate variants, in declaration order.
+    pub variants: Vec<Variant>,
+}
+
+impl Problem {
+    /// Unique key string for maps/logs: `kernel/param/size`.
+    pub fn key(&self) -> String {
+        format!("{}/{}/n{}", self.kernel, self.param, self.size)
+    }
+}
+
+/// The whole loaded manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the artifact paths are relative to.
+    pub dir: PathBuf,
+    /// All variants, manifest order.
+    pub variants: Vec<Variant>,
+    /// Problems grouped from the variants, ordered by (kernel, param, size).
+    pub problems: Vec<Problem>,
+    /// JAX version recorded by the generator (provenance).
+    pub jax_version: String,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        Manifest::from_json_str(&text, dir)
+    }
+
+    /// Parse from a JSON string (tests use this directly).
+    pub fn from_json_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let schema = root.req_i64("schema")?;
+        if schema != SCHEMA_VERSION {
+            return Err(Error::Manifest(format!(
+                "schema {schema} unsupported (want {SCHEMA_VERSION})"
+            )));
+        }
+        let jax_version =
+            root.get("jax_version").and_then(Value::as_str).unwrap_or("?").to_string();
+        let variants: Vec<Variant> = root
+            .req_arr("entries")?
+            .iter()
+            .map(Variant::from_json)
+            .collect::<Result<_>>()?;
+        if variants.is_empty() {
+            return Err(Error::Manifest("no entries".into()));
+        }
+        // uniqueness of ids
+        let mut seen = std::collections::HashSet::new();
+        for v in &variants {
+            if !seen.insert(&v.id) {
+                return Err(Error::Manifest(format!("duplicate variant id `{}`", v.id)));
+            }
+        }
+        let problems = group_problems(&variants)?;
+        Ok(Manifest { dir, variants, problems, jax_version })
+    }
+
+    /// Absolute path of a variant's HLO file.
+    pub fn artifact_path(&self, v: &Variant) -> PathBuf {
+        self.dir.join(&v.path)
+    }
+
+    /// Find a problem by kernel + size.
+    pub fn problem(&self, kernel: &str, size: i64) -> Result<&Problem> {
+        self.problems
+            .iter()
+            .find(|p| p.kernel == kernel && p.size == size)
+            .ok_or_else(|| Error::Unknown { kind: "problem", name: format!("{kernel}/n{size}") })
+    }
+
+    /// Find a variant by id.
+    pub fn variant(&self, id: &str) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.id == id)
+            .ok_or_else(|| Error::Unknown { kind: "variant", name: id.to_string() })
+    }
+
+    /// Kernel family names, sorted and deduplicated.
+    pub fn kernels(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.variants.iter().map(|v| v.kernel.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    /// Sizes available for a kernel family, ascending.
+    pub fn sizes(&self, kernel: &str) -> Vec<i64> {
+        let mut sizes: Vec<i64> =
+            self.problems.iter().filter(|p| p.kernel == kernel).map(|p| p.size).collect();
+        sizes.sort_unstable();
+        sizes
+    }
+}
+
+fn group_problems(variants: &[Variant]) -> Result<Vec<Problem>> {
+    let mut map: BTreeMap<(String, String, i64), Vec<Variant>> = BTreeMap::new();
+    for v in variants {
+        let key = (v.kernel.clone(), v.param.clone(), v.size);
+        map.entry(key).or_default().push(v.clone());
+    }
+    let mut problems = Vec::new();
+    for ((kernel, param, size), vs) in map {
+        // A problem must have consistent signatures across its variants —
+        // they are interchangeable implementations of the same call.
+        let sig0 = (vs[0].inputs.clone(), vs[0].output.clone());
+        for v in &vs[1..] {
+            if (v.inputs.clone(), v.output.clone()) != sig0 {
+                return Err(Error::Manifest(format!(
+                    "variant `{}` signature differs within problem {kernel}/{param}/n{size}",
+                    v.id
+                )));
+            }
+        }
+        problems.push(Problem { kernel, param, size, variants: vs });
+    }
+    Ok(problems)
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Shared fixture: a manifest whose artifact files actually exist
+    /// (dummy HLO text in a unique temp dir), for CompileCache and
+    /// coordinator tests running against the mock engine.
+    pub(crate) fn sample_manifest() -> Result<Manifest> {
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "jitune-test-{}-{}",
+            std::process::id(),
+            COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+        let m = Manifest::from_json_str(&sample_manifest_json(), dir.clone())?;
+        for v in &m.variants {
+            std::fs::write(dir.join(&v.path), format!("HloModule dummy_{}\n", v.id))
+                .map_err(|e| Error::io(v.path.clone(), e))?;
+        }
+        Ok(m)
+    }
+
+    /// Shared fixture for other test modules.
+    pub(crate) fn sample_manifest_json() -> String {
+        r#"{
+          "schema": 1,
+          "generated_by": "test",
+          "jax_version": "0.8.2",
+          "entries": [
+            {"id": "k.a.n8", "kernel": "k", "param": "p", "value": 1, "label": "a",
+             "size": 8, "inputs": ["f32[8,8]"], "output": "f32[8,8]",
+             "path": "k.a.n8.hlo.txt", "flops": 1024},
+            {"id": "k.b.n8", "kernel": "k", "param": "p", "value": 2, "label": "b",
+             "size": 8, "inputs": ["f32[8,8]"], "output": "f32[8,8]",
+             "path": "k.b.n8.hlo.txt", "flops": 1024},
+            {"id": "k.a.n16", "kernel": "k", "param": "p", "value": 1, "label": "a",
+             "size": 16, "inputs": ["f32[16,16]"], "output": "f32[16,16]",
+             "path": "k.a.n16.hlo.txt", "flops": 8192}
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn loads_and_groups() {
+        let m = Manifest::from_json_str(&sample_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.variants.len(), 3);
+        assert_eq!(m.problems.len(), 2);
+        let p = m.problem("k", 8).unwrap();
+        assert_eq!(p.variants.len(), 2);
+        assert_eq!(p.key(), "k/p/n8");
+        assert_eq!(m.sizes("k"), vec![8, 16]);
+        assert_eq!(m.kernels(), vec!["k".to_string()]);
+    }
+
+    #[test]
+    fn variant_order_preserved_within_problem() {
+        let m = Manifest::from_json_str(&sample_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        let p = m.problem("k", 8).unwrap();
+        assert_eq!(p.variants[0].label, "a");
+        assert_eq!(p.variants[1].label, "b");
+    }
+
+    #[test]
+    fn rejects_duplicate_ids() {
+        let text = sample_manifest_json().replace("k.b.n8", "k.a.n8");
+        assert!(Manifest::from_json_str(&text, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let text = sample_manifest_json().replace("\"schema\": 1", "\"schema\": 99");
+        assert!(Manifest::from_json_str(&text, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_signatures() {
+        let text = sample_manifest_json().replace(
+            r#""size": 8, "inputs": ["f32[8,8]"], "output": "f32[8,8]",
+             "path": "k.b.n8.hlo.txt""#,
+            r#""size": 8, "inputs": ["f32[4,4]"], "output": "f32[4,4]",
+             "path": "k.b.n8.hlo.txt""#,
+        );
+        assert!(Manifest::from_json_str(&text, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn parse_sig_roundtrip() {
+        assert_eq!(Variant::parse_sig("f32[128,64]").unwrap(), vec![128, 64]);
+        assert_eq!(Variant::parse_sig("f32[5]").unwrap(), vec![5]);
+        assert!(Variant::parse_sig("i32[5]").is_err());
+        assert!(Variant::parse_sig("f32[a]").is_err());
+    }
+
+    #[test]
+    fn unknown_lookups_error() {
+        let m = Manifest::from_json_str(&sample_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        assert!(m.problem("nope", 8).is_err());
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn input_shapes_parsed() {
+        let m = Manifest::from_json_str(&sample_manifest_json(), PathBuf::from("/tmp")).unwrap();
+        let v = m.variant("k.a.n16").unwrap();
+        assert_eq!(v.input_shapes().unwrap(), vec![vec![16, 16]]);
+        assert_eq!(v.output_shape().unwrap(), vec![16, 16]);
+    }
+}

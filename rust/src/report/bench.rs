@@ -1,0 +1,153 @@
+//! Shared support for the figure benches (`rust/benches/*`).
+//!
+//! Benches are `harness = false` binaries (criterion is unavailable
+//! offline); this module carries the common plumbing: artifact
+//! discovery with graceful skip, fresh-dispatcher construction, and the
+//! instrumented call loops whose outputs the figures plot.
+
+use std::time::Duration;
+
+use crate::autotuner::Autotuner;
+use crate::coordinator::{CallOutcome, CallRoute, Dispatcher, KernelRegistry};
+use crate::manifest::Manifest;
+use crate::runtime::PjrtEngine;
+use crate::tensor::HostTensor;
+use crate::workload::inputs_for;
+use crate::{Error, Result};
+
+/// Locate the artifacts dir; `None` (with a notice) when not built, so
+/// `cargo bench` degrades gracefully instead of failing.
+pub fn artifacts_or_skip(bench: &str) -> Option<Manifest> {
+    let dir = std::env::var("JITUNE_ARTIFACTS").unwrap_or_else(|_| {
+        format!("{}/artifacts", env!("CARGO_MANIFEST_DIR"))
+    });
+    match Manifest::load(&dir) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            println!("[{bench}] SKIP: {e} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+/// A fresh PJRT-backed dispatcher with the paper's defaults (sweep +
+/// wall clock). Each tuning experiment starts from a clean tuner state.
+pub fn fresh_dispatcher(manifest: &Manifest) -> Result<Dispatcher> {
+    let registry = KernelRegistry::new(manifest.clone());
+    let engine = PjrtEngine::cpu()?;
+    Ok(Dispatcher::new(registry, Box::new(engine)))
+}
+
+/// Same, with a custom strategy factory.
+pub fn fresh_dispatcher_with(
+    manifest: &Manifest,
+    tuner: Autotuner,
+) -> Result<Dispatcher> {
+    let registry = KernelRegistry::new(manifest.clone());
+    let engine = PjrtEngine::cpu()?;
+    Ok(Dispatcher::with(
+        registry,
+        Box::new(engine),
+        tuner,
+        Box::new(crate::autotuner::WallClock::new()),
+    ))
+}
+
+/// One instrumented autotuned run: `iters` calls of `kernel` at `size`,
+/// returning every call's outcome (timings, routes, variants).
+pub fn autotuned_run(
+    dispatcher: &mut Dispatcher,
+    kernel: &str,
+    size: i64,
+    iters: usize,
+    seed: u64,
+) -> Result<Vec<CallOutcome>> {
+    let problem = dispatcher.registry().problem(kernel, size)?.clone();
+    let inputs = inputs_for(&problem, seed);
+    (0..iters).map(|_| dispatcher.call(kernel, &inputs)).collect()
+}
+
+/// Cumulative per-call seconds from a run's outcomes.
+pub fn cumulative(outcomes: &[CallOutcome]) -> Vec<f64> {
+    let mut acc = 0.0;
+    outcomes
+        .iter()
+        .map(|o| {
+            acc += o.total.as_secs_f64();
+            acc
+        })
+        .collect()
+}
+
+/// Index of the first call routed `Tuned` (steady state begins).
+pub fn steady_start(outcomes: &[CallOutcome]) -> Option<usize> {
+    outcomes.iter().position(|o| o.route == CallRoute::Tuned)
+}
+
+/// Measure one variant's steady execution time: compile (untimed), then
+/// `reps` timed executions, returning the minimum (the paper keeps best
+/// samples).
+pub fn steady_exec_time(
+    manifest: &Manifest,
+    cache: &mut crate::runtime::CompileCache,
+    variant: &crate::manifest::Variant,
+    inputs: &[HostTensor],
+    reps: usize,
+) -> Result<Duration> {
+    let (exe, _) = cache.get_or_compile(manifest, variant)?;
+    let mut best = Duration::MAX;
+    for _ in 0..reps {
+        let t = std::time::Instant::now();
+        exe.execute(inputs)?;
+        best = best.min(t.elapsed());
+    }
+    if best == Duration::MAX {
+        return Err(Error::Autotune("no reps".into()));
+    }
+    Ok(best)
+}
+
+/// Env-tunable repetition count (`JITUNE_BENCH_REPEATS`), default `d`.
+pub fn repeats(d: usize) -> usize {
+    std::env::var("JITUNE_BENCH_REPEATS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CallRoute;
+    use std::time::Duration;
+
+    fn outcome(ms: u64, route: CallRoute) -> CallOutcome {
+        CallOutcome {
+            output: HostTensor::zeros(&[1]),
+            variant_id: "v".into(),
+            value: 0,
+            route,
+            compiled: false,
+            exec_cost: 0.0,
+            total: Duration::from_millis(ms),
+        }
+    }
+
+    #[test]
+    fn cumulative_and_steady_start() {
+        let outcomes = vec![
+            outcome(10, CallRoute::Explored),
+            outcome(10, CallRoute::Finalized),
+            outcome(1, CallRoute::Tuned),
+        ];
+        let cum = cumulative(&outcomes);
+        assert_eq!(cum.len(), 3);
+        assert!((cum[2] - 0.021).abs() < 1e-9);
+        assert_eq!(steady_start(&outcomes), Some(2));
+    }
+
+    #[test]
+    fn repeats_env_default() {
+        assert_eq!(repeats(7), 7);
+    }
+}

@@ -1,0 +1,80 @@
+//! Figure/table emission: every bench writes a CSV (machine-readable)
+//! and an ASCII chart (human-readable) under `target/figures/`.
+
+pub mod bench;
+
+use std::path::PathBuf;
+
+use crate::error::{Error, Result};
+use crate::util::chart;
+
+/// Where figures land (`target/figures/` next to the workspace root).
+pub fn figures_dir() -> PathBuf {
+    let base = std::env::var("CARGO_MANIFEST_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("."));
+    base.join("target").join("figures")
+}
+
+/// Write `content` to `target/figures/<name>` (creating directories).
+pub fn write_figure_file(name: &str, content: &str) -> Result<PathBuf> {
+    let dir = figures_dir();
+    std::fs::create_dir_all(&dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let path = dir.join(name);
+    std::fs::write(&path, content).map_err(|e| Error::io(path.display().to_string(), e))?;
+    Ok(path)
+}
+
+/// Emit one figure: CSV + ASCII chart, returning the rendered chart so
+/// benches can also print it to stdout.
+pub struct Figure {
+    /// Stem for output files (`fig1`, `fig3_n128`, ...).
+    pub stem: String,
+    /// Chart title.
+    pub title: String,
+    /// CSV header.
+    pub header: Vec<String>,
+    /// CSV rows.
+    pub rows: Vec<Vec<String>>,
+    /// Chart series.
+    pub series: Vec<chart::Series>,
+    /// Log-scale y axis (the paper's Fig 2).
+    pub log_y: bool,
+}
+
+impl Figure {
+    /// Write the CSV and chart files; returns the rendered ASCII chart.
+    pub fn emit(&self) -> Result<String> {
+        let header: Vec<&str> = self.header.iter().map(String::as_str).collect();
+        let csv = chart::csv(&header, &self.rows);
+        write_figure_file(&format!("{}.csv", self.stem), &csv)?;
+        let rendered = chart::render(&self.title, &self.series, 72, 20, self.log_y);
+        write_figure_file(&format!("{}.txt", self.stem), &rendered)?;
+        Ok(rendered)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_emits_csv_and_chart() {
+        let fig = Figure {
+            stem: "zz_selftest".into(),
+            title: "test".into(),
+            header: vec!["x".into(), "y".into()],
+            rows: vec![vec!["1".into(), "2".into()]],
+            series: vec![chart::Series::new("s", vec![(1.0, 2.0), (2.0, 4.0)])],
+            log_y: false,
+        };
+        let rendered = fig.emit().unwrap();
+        assert!(rendered.contains("## test"));
+        let csv_path = figures_dir().join("zz_selftest.csv");
+        let content = std::fs::read_to_string(&csv_path).unwrap();
+        assert_eq!(content, "x,y\n1,2\n");
+        // clean up so bench figure listings stay tidy
+        let _ = std::fs::remove_file(csv_path);
+        let _ = std::fs::remove_file(figures_dir().join("zz_selftest.txt"));
+    }
+}

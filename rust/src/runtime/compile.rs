@@ -1,0 +1,227 @@
+//! JIT compile cache — the analog of ClangJIT's instantiation cache.
+//!
+//! The first request for a variant reads its HLO text and JIT-compiles it
+//! through the engine (the paper's run-time specialization, cost *C*);
+//! subsequent requests hit the cache. ClangJIT guards this with a mutex so
+//! no two threads compile the same instantiation concurrently; here the
+//! cache lives on the single engine thread (PJRT is thread-pinned), which
+//! serializes compilations by construction — the coordinator documents the
+//! equivalent protocol at its channel boundary.
+//!
+//! Per the paper (§3.2 *Generating variants*), only the winning variant is
+//! kept compiled after tuning: `evict` drops losing executables so memory
+//! stays proportional to the number of *tuned* problems, not the whole
+//! variant grid — we "can only keep ASTs" (HLO text) for the rest.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::manifest::{Manifest, Variant};
+use crate::runtime::engine::{CompiledKernel, Engine};
+
+/// Aggregate cache statistics (exposed via coordinator stats and used by
+/// the §Perf report).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    /// Cache hits (no compilation needed).
+    pub hits: u64,
+    /// Cache misses (a JIT compilation was performed).
+    pub misses: u64,
+    /// Evicted executables (losing variants dropped after tuning).
+    pub evictions: u64,
+    /// Compilations that failed.
+    pub failures: u64,
+    /// Total time spent JIT-compiling.
+    pub compile_time: Duration,
+}
+
+/// The instantiation cache: variant id → compiled executable.
+pub struct CompileCache {
+    engine: Box<dyn Engine>,
+    cache: HashMap<String, Box<dyn CompiledKernel>>,
+    /// HLO text cache: avoids re-reading artifacts on recompilation after
+    /// eviction (the paper keeps ASTs in memory the same way).
+    hlo_text: HashMap<String, String>,
+    stats: CacheStats,
+}
+
+impl CompileCache {
+    /// Wrap an engine with an empty cache.
+    pub fn new(engine: Box<dyn Engine>) -> CompileCache {
+        CompileCache { engine, cache: HashMap::new(), hlo_text: HashMap::new(), stats: CacheStats::default() }
+    }
+
+    /// Engine backing this cache.
+    pub fn engine_name(&self) -> &str {
+        self.engine.name()
+    }
+
+    /// Get the compiled executable for `variant`, JIT-compiling on miss.
+    ///
+    /// Returns whether this call compiled (`true` = miss) alongside the
+    /// executable, so callers can attribute the compile cost (Fig 2 shows
+    /// it per iteration).
+    pub fn get_or_compile(
+        &mut self,
+        manifest: &Manifest,
+        variant: &Variant,
+    ) -> Result<(&dyn CompiledKernel, bool)> {
+        // NOTE: written as two lookups (not entry()) because compilation
+        // borrows `self` mutably for the text cache too.
+        if self.cache.contains_key(&variant.id) {
+            self.stats.hits += 1;
+            return Ok((self.cache[&variant.id].as_ref(), false));
+        }
+        let text = self.load_hlo(manifest, variant)?;
+        let t0 = Instant::now();
+        let compiled = match self.engine.compile(variant, &text) {
+            Ok(c) => c,
+            Err(e) => {
+                self.stats.failures += 1;
+                return Err(e);
+            }
+        };
+        self.stats.compile_time += t0.elapsed();
+        self.stats.misses += 1;
+        self.cache.insert(variant.id.clone(), compiled);
+        Ok((self.cache[&variant.id].as_ref(), true))
+    }
+
+    /// Time one compilation explicitly (benches want the raw cost *C*).
+    pub fn compile_timed(
+        &mut self,
+        manifest: &Manifest,
+        variant: &Variant,
+    ) -> Result<Duration> {
+        self.evict(&variant.id);
+        let t0 = Instant::now();
+        self.get_or_compile(manifest, variant)?;
+        Ok(t0.elapsed())
+    }
+
+    /// Drop a compiled variant (losing variants after tuning).
+    pub fn evict(&mut self, variant_id: &str) {
+        if self.cache.remove(variant_id).is_some() {
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Drop every compiled variant of `problem_key`'s kernel except
+    /// `keep_id`. Called when tuning finalizes.
+    pub fn evict_losers(&mut self, variant_ids: &[String], keep_id: &str) {
+        for id in variant_ids {
+            if id != keep_id {
+                self.evict(id);
+            }
+        }
+    }
+
+    /// Whether a variant is currently compiled.
+    pub fn contains(&self, variant_id: &str) -> bool {
+        self.cache.contains_key(variant_id)
+    }
+
+    /// Number of resident executables.
+    pub fn resident(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Statistics snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    fn load_hlo(&mut self, manifest: &Manifest, variant: &Variant) -> Result<String> {
+        if let Some(text) = self.hlo_text.get(&variant.id) {
+            return Ok(text.clone());
+        }
+        let path = manifest.artifact_path(variant);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        self.hlo_text.insert(variant.id.clone(), text.clone());
+        Ok(text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::{MockEngine, MockSpec};
+    use std::path::PathBuf;
+
+    fn setup() -> (Manifest, CompileCache) {
+        let manifest = crate::manifest::tests::sample_manifest()
+            .expect("sample manifest");
+        let engine = MockEngine::new(MockSpec::default());
+        (manifest, CompileCache::new(Box::new(engine)))
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let (m, mut cache) = setup();
+        let v = m.variant("k.a.n8").unwrap().clone();
+        let (_, compiled) = cache.get_or_compile(&m, &v).unwrap();
+        assert!(compiled);
+        let (_, compiled) = cache.get_or_compile(&m, &v).unwrap();
+        assert!(!compiled);
+        let s = cache.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(cache.resident(), 1);
+    }
+
+    #[test]
+    fn evict_losers_keeps_winner() {
+        let (m, mut cache) = setup();
+        let ids: Vec<String> = m.problem("k", 8).unwrap().variants.iter().map(|v| v.id.clone()).collect();
+        for id in &ids {
+            let v = m.variant(id).unwrap().clone();
+            cache.get_or_compile(&m, &v).unwrap();
+        }
+        assert_eq!(cache.resident(), 2);
+        cache.evict_losers(&ids, "k.a.n8");
+        assert_eq!(cache.resident(), 1);
+        assert!(cache.contains("k.a.n8"));
+        assert!(!cache.contains("k.b.n8"));
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn recompile_after_evict_uses_text_cache() {
+        let (m, mut cache) = setup();
+        let v = m.variant("k.a.n8").unwrap().clone();
+        cache.get_or_compile(&m, &v).unwrap();
+        cache.evict(&v.id);
+        let (_, compiled) = cache.get_or_compile(&m, &v).unwrap();
+        assert!(compiled);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn compile_failure_counted() {
+        let manifest = crate::manifest::tests::sample_manifest().unwrap();
+        let mut spec = MockSpec::default();
+        spec.fail_compile.insert("k.a.n8".to_string());
+        let mut cache = CompileCache::new(Box::new(MockEngine::new(spec)));
+        let v = manifest.variant("k.a.n8").unwrap().clone();
+        assert!(cache.get_or_compile(&manifest, &v).is_err());
+        assert_eq!(cache.stats().failures, 1);
+        assert_eq!(cache.resident(), 0);
+    }
+
+    #[test]
+    fn missing_artifact_file_is_io_error() {
+        let text = crate::manifest::tests::sample_manifest_json();
+        let m = Manifest::from_json_str(&text, PathBuf::from("/nonexistent-dir-xyz")).unwrap();
+        // load_hlo reads the artifact from disk before the engine is ever
+        // consulted; the missing directory must surface as an IO error.
+        let mut cache = CompileCache::new(Box::new(MockEngine::new(MockSpec::default())));
+        let v = m.variant("k.a.n8").unwrap().clone();
+        let err = match cache.get_or_compile(&m, &v) {
+            Err(e) => e,
+            Ok(_) => panic!("expected IO error"),
+        };
+        assert!(err.to_string().contains("nonexistent-dir-xyz"));
+    }
+}

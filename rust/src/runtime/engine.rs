@@ -1,0 +1,48 @@
+//! Engine abstraction: anything that can JIT-compile a variant and execute
+//! it. Two implementations ship: [`crate::runtime::PjrtEngine`] (real PJRT
+//! CPU client) and [`crate::runtime::mock::MockEngine`] (deterministic
+//! latencies + failure injection for tests and ablations).
+
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::manifest::Variant;
+use crate::tensor::HostTensor;
+
+/// A compiled, executable kernel variant.
+pub trait CompiledKernel {
+    /// Execute with host inputs, producing the kernel's (single) output.
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor>;
+
+    /// Variant id this executable was compiled from.
+    fn variant_id(&self) -> &str;
+}
+
+/// Result of one engine execution plus the engine-side wall time (used by
+/// benches; the autotuner applies its own [`crate::autotuner::Metric`]).
+#[derive(Debug)]
+pub struct ExecOutcome {
+    /// Kernel output.
+    pub output: HostTensor,
+    /// Engine-measured execution duration.
+    pub elapsed: Duration,
+}
+
+/// A JIT compilation + execution backend.
+///
+/// Deliberately `!Send`: the PJRT client is thread-pinned; the coordinator
+/// owns the engine on its leader thread.
+pub trait Engine {
+    /// JIT-compile a variant from its HLO text. This is the run-time
+    /// compilation step of the paper (cost *C* in Eq. 1).
+    fn compile(&self, variant: &Variant, hlo_text: &str) -> Result<Box<dyn CompiledKernel>>;
+
+    /// Backend name for logs/reports.
+    fn name(&self) -> &str;
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine behaviour is exercised through MockEngine (runtime::mock) and
+    // the PJRT integration tests (rust/tests/integration.rs).
+}

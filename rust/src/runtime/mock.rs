@@ -1,0 +1,235 @@
+//! Deterministic mock engine for tests, ablations and failure injection.
+//!
+//! The mock "compiles" and "executes" by spinning for configurable
+//! durations, so the autotuner and coordinator observe realistic timing
+//! behaviour with controlled ground truth: tests know which variant *is*
+//! fastest and can assert the tuner finds it. Executions return a tensor
+//! filled with the variant's tuning value, so routing is observable from
+//! the output alone.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::manifest::Variant;
+use crate::runtime::engine::{CompiledKernel, Engine};
+use crate::tensor::HostTensor;
+use crate::util::prng::Rng;
+
+/// Configuration for the mock engine.
+#[derive(Debug, Clone)]
+pub struct MockSpec {
+    /// Cost of every JIT compilation (the paper's *C*).
+    pub compile_cost: Duration,
+    /// Per-variant execution cost; falls back to `default_exec_cost`.
+    pub exec_cost: HashMap<String, Duration>,
+    /// Execution cost for variants not listed in `exec_cost`.
+    pub default_exec_cost: Duration,
+    /// Multiplicative gaussian jitter (fraction of the base cost).
+    pub jitter_frac: f64,
+    /// Variant ids whose compilation fails (failure injection).
+    pub fail_compile: HashSet<String>,
+    /// Variant ids whose execution fails (failure injection).
+    pub fail_execute: HashSet<String>,
+    /// Jitter RNG seed.
+    pub seed: u64,
+}
+
+impl Default for MockSpec {
+    fn default() -> Self {
+        MockSpec {
+            compile_cost: Duration::from_micros(200),
+            exec_cost: HashMap::new(),
+            default_exec_cost: Duration::from_micros(50),
+            jitter_frac: 0.0,
+            fail_compile: HashSet::new(),
+            fail_execute: HashSet::new(),
+            seed: 0x6a69_7475,
+        }
+    }
+}
+
+impl MockSpec {
+    /// Builder helper: set a per-variant execution cost.
+    pub fn with_cost(mut self, variant_id: &str, cost: Duration) -> Self {
+        self.exec_cost.insert(variant_id.to_string(), cost);
+        self
+    }
+
+    /// Builder helper: set the compile cost.
+    pub fn with_compile_cost(mut self, cost: Duration) -> Self {
+        self.compile_cost = cost;
+        self
+    }
+}
+
+/// The mock engine.
+pub struct MockEngine {
+    spec: MockSpec,
+    rng: Mutex<Rng>,
+    compiles: Mutex<Vec<String>>,
+}
+
+impl MockEngine {
+    /// Build from a spec.
+    pub fn new(spec: MockSpec) -> MockEngine {
+        let rng = Mutex::new(Rng::seed(spec.seed));
+        MockEngine { spec, rng, compiles: Mutex::new(Vec::new()) }
+    }
+
+    /// Variant ids compiled so far, in order (test observability).
+    pub fn compiled_order(&self) -> Vec<String> {
+        self.compiles.lock().unwrap().clone()
+    }
+}
+
+/// Spin-wait for `d` — `thread::sleep` is too coarse below ~1ms and the
+/// mock needs microsecond-scale distinguishable costs.
+pub fn spin_for(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+impl Engine for MockEngine {
+    fn compile(&self, variant: &Variant, _hlo_text: &str) -> Result<Box<dyn CompiledKernel>> {
+        if self.spec.fail_compile.contains(&variant.id) {
+            return Err(Error::CompileFailed {
+                variant: variant.id.clone(),
+                msg: "injected compile failure".into(),
+            });
+        }
+        spin_for(self.spec.compile_cost);
+        self.compiles.lock().unwrap().push(variant.id.clone());
+        let base = self
+            .spec
+            .exec_cost
+            .get(&variant.id)
+            .copied()
+            .unwrap_or(self.spec.default_exec_cost);
+        Ok(Box::new(MockKernel {
+            variant_id: variant.id.clone(),
+            value: variant.value,
+            output_shape: variant.output_shape()?,
+            base,
+            jitter_frac: self.spec.jitter_frac,
+            fail: self.spec.fail_execute.contains(&variant.id),
+            rng: Mutex::new(self.rng.lock().unwrap().split()),
+        }))
+    }
+
+    fn name(&self) -> &str {
+        "mock"
+    }
+}
+
+struct MockKernel {
+    variant_id: String,
+    value: i64,
+    output_shape: Vec<usize>,
+    base: Duration,
+    jitter_frac: f64,
+    fail: bool,
+    rng: Mutex<Rng>,
+}
+
+impl CompiledKernel for MockKernel {
+    fn execute(&self, _inputs: &[HostTensor]) -> Result<HostTensor> {
+        if self.fail {
+            return Err(Error::Xla(format!("injected execute failure for {}", self.variant_id)));
+        }
+        let mut cost = self.base.as_secs_f64();
+        if self.jitter_frac > 0.0 {
+            let z = self.rng.lock().unwrap().normal();
+            cost *= (1.0 + self.jitter_frac * z).max(0.1);
+        }
+        spin_for(Duration::from_secs_f64(cost));
+        // Output encodes the executed variant's tuning value — tests can
+        // observe routing decisions from data alone.
+        Ok(HostTensor::full(&self.output_shape, self.value as f32))
+    }
+
+    fn variant_id(&self) -> &str {
+        &self.variant_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+
+    fn manifest() -> Manifest {
+        crate::manifest::tests::sample_manifest().unwrap()
+    }
+
+    #[test]
+    fn output_encodes_variant_value() {
+        let m = manifest();
+        let engine = MockEngine::new(MockSpec::default());
+        let v = m.variant("k.b.n8").unwrap();
+        let kernel = engine.compile(v, "").unwrap();
+        let out = kernel.execute(&[]).unwrap();
+        assert_eq!(out.shape(), &[8, 8]);
+        assert!(out.data().iter().all(|&x| x == 2.0)); // value of k.b.n8
+    }
+
+    #[test]
+    fn exec_cost_is_respected() {
+        let m = manifest();
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(800))
+            .with_cost("k.b.n8", Duration::from_micros(50));
+        let engine = MockEngine::new(spec);
+        let slow = engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        let fast = engine.compile(m.variant("k.b.n8").unwrap(), "").unwrap();
+        let t0 = Instant::now();
+        slow.execute(&[]).unwrap();
+        let slow_t = t0.elapsed();
+        let t1 = Instant::now();
+        fast.execute(&[]).unwrap();
+        let fast_t = t1.elapsed();
+        assert!(slow_t > fast_t * 2, "slow={slow_t:?} fast={fast_t:?}");
+    }
+
+    #[test]
+    fn injected_failures() {
+        let m = manifest();
+        let mut spec = MockSpec::default();
+        spec.fail_compile.insert("k.a.n8".into());
+        spec.fail_execute.insert("k.b.n8".into());
+        let engine = MockEngine::new(spec);
+        assert!(engine.compile(m.variant("k.a.n8").unwrap(), "").is_err());
+        let kernel = engine.compile(m.variant("k.b.n8").unwrap(), "").unwrap();
+        assert!(kernel.execute(&[]).is_err());
+    }
+
+    #[test]
+    fn compiled_order_recorded() {
+        let m = manifest();
+        let engine = MockEngine::new(MockSpec::default());
+        engine.compile(m.variant("k.b.n8").unwrap(), "").unwrap();
+        engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        assert_eq!(engine.compiled_order(), vec!["k.b.n8".to_string(), "k.a.n8".to_string()]);
+    }
+
+    #[test]
+    fn jitter_produces_spread_but_stays_positive() {
+        let m = manifest();
+        let spec = MockSpec { jitter_frac: 0.3, default_exec_cost: Duration::from_micros(100), ..MockSpec::default() };
+        let engine = MockEngine::new(spec);
+        let kernel = engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        let mut times = Vec::new();
+        for _ in 0..10 {
+            let t0 = Instant::now();
+            kernel.execute(&[]).unwrap();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        assert!(times.iter().all(|&t| t > 0.0));
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        assert!(max > min, "jitter should spread timings");
+    }
+}

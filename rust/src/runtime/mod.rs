@@ -1,0 +1,20 @@
+//! Run-time execution layer: PJRT client, JIT compile cache, engines.
+//!
+//! This is the analog of ClangJIT's runtime library: it owns the
+//! instantiation cache and performs the actual just-in-time compilation
+//! (PJRT `compile()` of an HLO-text artifact) the first time a variant is
+//! needed.
+//!
+//! `xla::PjRtClient` is `Rc`-based and must stay on one thread; the
+//! coordinator therefore runs the engine on a dedicated thread and feeds
+//! it through channels ([`crate::coordinator::server`]). Everything here
+//! is deliberately `!Send`.
+
+mod compile;
+mod engine;
+pub mod mock;
+mod pjrt;
+
+pub use compile::{CacheStats, CompileCache};
+pub use engine::{CompiledKernel, Engine, ExecOutcome};
+pub use pjrt::PjrtEngine;

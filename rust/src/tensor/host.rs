@@ -1,0 +1,171 @@
+//! Row-major f32 host tensor.
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// A dense row-major f32 tensor on the host.
+///
+/// This is deliberately minimal — the request path only needs to stage
+/// buffers for PJRT, seed them reproducibly, and compare results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl HostTensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let len = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; len] }
+    }
+
+    /// Tensor from existing data; the element count must match the shape.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let want: usize = shape.iter().product();
+        if want != data.len() {
+            return Err(Error::ShapeMismatch {
+                kernel: "HostTensor::from_vec".into(),
+                expected: format!("{want} elements for shape {shape:?}"),
+                got: format!("{} elements", data.len()),
+            });
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+
+    /// Deterministically seeded uniform values in [-1, 1).
+    pub fn random(shape: &[usize], seed: u64) -> Self {
+        let mut rng = Rng::seed(seed);
+        let len = shape.iter().product();
+        let data = (0..len).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], value: f32) -> Self {
+        let len = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), data: vec![value; len] }
+    }
+
+    /// Shape (row-major dims).
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// 2-D accessor (row-major). Panics on rank ≠ 2 or OOB in debug.
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// 2-D mutable accessor.
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[i * self.shape[1] + j] = v;
+    }
+
+    /// Signature string like `f32[128,128]` — matches the manifest format.
+    pub fn signature(&self) -> String {
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("f32[{}]", dims.join(","))
+    }
+
+    /// Max absolute element-wise difference; `None` on shape mismatch.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Option<f32> {
+        if self.shape != other.shape {
+            return None;
+        }
+        Some(
+            self.data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max),
+        )
+    }
+
+    /// Relative allclose with atol+rtol (numpy semantics).
+    pub fn allclose(&self, other: &HostTensor, rtol: f32, atol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_full() {
+        let z = HostTensor::zeros(&[2, 3]);
+        assert_eq!(z.len(), 6);
+        assert!(z.data().iter().all(|&x| x == 0.0));
+        let f = HostTensor::full(&[4], 2.5);
+        assert!(f.data().iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    fn from_vec_checks_length() {
+        assert!(HostTensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+        assert!(HostTensor::from_vec(&[2, 2], vec![1.0; 5]).is_err());
+    }
+
+    #[test]
+    fn random_is_seeded_and_bounded() {
+        let a = HostTensor::random(&[100], 42);
+        let b = HostTensor::random(&[100], 42);
+        let c = HostTensor::random(&[100], 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.data().iter().all(|&x| (-1.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn indexing_2d_row_major() {
+        let mut t = HostTensor::zeros(&[2, 3]);
+        t.set2(1, 2, 7.0);
+        assert_eq!(t.at2(1, 2), 7.0);
+        assert_eq!(t.data()[5], 7.0);
+    }
+
+    #[test]
+    fn signature_format() {
+        assert_eq!(HostTensor::zeros(&[128, 64]).signature(), "f32[128,64]");
+        assert_eq!(HostTensor::zeros(&[5]).signature(), "f32[5]");
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = HostTensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = HostTensor::from_vec(&[2], vec![1.0 + 1e-6, 2.0 - 1e-6]).unwrap();
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        assert!(!a.allclose(&b, 0.0, 1e-8));
+        let c = HostTensor::zeros(&[3]);
+        assert!(!a.allclose(&c, 1.0, 1.0)); // shape mismatch
+    }
+}

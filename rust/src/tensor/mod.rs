@@ -1,0 +1,13 @@
+//! Host-side tensors and pure-Rust reference kernels.
+//!
+//! [`HostTensor`] is the coordinator's in-memory array type (row-major f32)
+//! used to stage inputs for PJRT and read back outputs. The `ref_*`
+//! functions are independent Rust implementations of every kernel the
+//! Python layer ships — the cross-language correctness oracle: the HLO
+//! executed through PJRT must agree with these to within float tolerance.
+
+mod host;
+mod reference;
+
+pub use host::HostTensor;
+pub use reference::{ref_matmul, ref_mlp_block, ref_relu, ref_saxpy, ref_stencil3};

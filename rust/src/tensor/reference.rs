@@ -1,0 +1,148 @@
+//! Pure-Rust reference implementations of every shipped kernel.
+//!
+//! These mirror `python/compile/kernels/ref.py` and serve as the
+//! cross-language oracle: integration tests execute the AOT-lowered HLO
+//! through PJRT and assert agreement with these functions.
+
+use crate::error::{Error, Result};
+use crate::tensor::HostTensor;
+
+/// Naive triple-loop matmul: `C[M,N] = A[M,K] @ B[K,N]`.
+///
+/// f64 accumulation keeps the oracle more accurate than the f32 kernels it
+/// checks, so tolerance failures indicate kernel bugs, not oracle noise.
+pub fn ref_matmul(a: &HostTensor, b: &HostTensor) -> Result<HostTensor> {
+    let (ash, bsh) = (a.shape(), b.shape());
+    if ash.len() != 2 || bsh.len() != 2 || ash[1] != bsh[0] {
+        return Err(Error::ShapeMismatch {
+            kernel: "ref_matmul".into(),
+            expected: "A[M,K] x B[K,N]".into(),
+            got: format!("{ash:?} x {bsh:?}"),
+        });
+    }
+    let (m, k, n) = (ash[0], ash[1], bsh[1]);
+    let mut c = HostTensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for p in 0..k {
+                acc += a.at2(i, p) as f64 * b.at2(p, j) as f64;
+            }
+            c.set2(i, j, acc as f32);
+        }
+    }
+    Ok(c)
+}
+
+/// saxpy: `y' = a*x + y` (element-wise, any matching shapes).
+pub fn ref_saxpy(a: f32, x: &HostTensor, y: &HostTensor) -> Result<HostTensor> {
+    if x.shape() != y.shape() {
+        return Err(Error::ShapeMismatch {
+            kernel: "ref_saxpy".into(),
+            expected: x.signature(),
+            got: y.signature(),
+        });
+    }
+    let data = x.data().iter().zip(y.data()).map(|(xv, yv)| a * xv + yv).collect();
+    HostTensor::from_vec(x.shape(), data)
+}
+
+/// 3-point Jacobi stencil over a 1-D array with fixed (copied) boundaries:
+/// `out[i] = (x[i-1] + x[i] + x[i+1]) / 3` for interior points.
+pub fn ref_stencil3(x: &HostTensor) -> Result<HostTensor> {
+    if x.shape().len() != 1 {
+        return Err(Error::ShapeMismatch {
+            kernel: "ref_stencil3".into(),
+            expected: "rank-1".into(),
+            got: x.signature(),
+        });
+    }
+    let n = x.len();
+    let src = x.data();
+    let mut out = src.to_vec();
+    for i in 1..n.saturating_sub(1) {
+        out[i] = (src[i - 1] + src[i] + src[i + 1]) / 3.0;
+    }
+    HostTensor::from_vec(x.shape(), out)
+}
+
+/// ReLU.
+pub fn ref_relu(x: &HostTensor) -> HostTensor {
+    let data = x.data().iter().map(|&v| v.max(0.0)).collect();
+    HostTensor::from_vec(x.shape(), data).expect("same shape")
+}
+
+/// The end-to-end example's MLP block: `relu(x @ w1) @ w2`.
+pub fn ref_mlp_block(x: &HostTensor, w1: &HostTensor, w2: &HostTensor) -> Result<HostTensor> {
+    let h = ref_relu(&ref_matmul(x, w1)?);
+    ref_matmul(&h, w2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = HostTensor::full(&[2, 2], 1.0);
+        let c = ref_matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 8;
+        let mut eye = HostTensor::zeros(&[n, n]);
+        for i in 0..n {
+            eye.set2(i, i, 1.0);
+        }
+        let a = HostTensor::random(&[n, n], 1);
+        let c = ref_matmul(&a, &eye).unwrap();
+        assert!(c.allclose(&a, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn matmul_rejects_bad_shapes() {
+        let a = HostTensor::zeros(&[2, 3]);
+        let b = HostTensor::zeros(&[2, 3]);
+        assert!(ref_matmul(&a, &b).is_err());
+    }
+
+    #[test]
+    fn saxpy_values() {
+        let x = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = HostTensor::from_vec(&[3], vec![10.0, 20.0, 30.0]).unwrap();
+        let r = ref_saxpy(2.0, &x, &y).unwrap();
+        assert_eq!(r.data(), &[12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn stencil_preserves_boundaries() {
+        let x = HostTensor::from_vec(&[5], vec![3.0, 0.0, 3.0, 0.0, 3.0]).unwrap();
+        let r = ref_stencil3(&x).unwrap();
+        assert_eq!(r.data()[0], 3.0);
+        assert_eq!(r.data()[4], 3.0);
+        assert_eq!(r.data()[1], 2.0);
+        assert_eq!(r.data()[2], 1.0);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = HostTensor::from_vec(&[4], vec![-1.0, 0.0, 2.0, -0.5]).unwrap();
+        assert_eq!(ref_relu(&x).data(), &[0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn mlp_block_composes() {
+        let x = HostTensor::random(&[4, 8], 1);
+        let w1 = HostTensor::random(&[8, 16], 2);
+        let w2 = HostTensor::random(&[16, 4], 3);
+        let out = ref_mlp_block(&x, &w1, &w2).unwrap();
+        assert_eq!(out.shape(), &[4, 4]);
+        // manual check of one element path: h = relu(x@w1)
+        let h = ref_relu(&ref_matmul(&x, &w1).unwrap());
+        let expect = ref_matmul(&h, &w2).unwrap();
+        assert!(out.allclose(&expect, 0.0, 0.0));
+    }
+}

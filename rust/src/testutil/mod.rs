@@ -1,0 +1,185 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Provides seeded generators and a `forall` runner with shrinking for
+//! integer-vector inputs. Deliberately small: enough to express the
+//! repo's invariant suites (`rust/tests/autotuner_props.rs`), fully
+//! deterministic, zero dependencies.
+
+use crate::util::prng::Rng;
+
+/// A generator of random values of `T`.
+pub trait Gen<T> {
+    /// Produce one value.
+    fn generate(&self, rng: &mut Rng) -> T;
+}
+
+impl<T, F: Fn(&mut Rng) -> T> Gen<T> for F {
+    fn generate(&self, rng: &mut Rng) -> T {
+        self(rng)
+    }
+}
+
+/// Uniform integer in [lo, hi].
+pub fn int_range(lo: i64, hi: i64) -> impl Gen<i64> {
+    move |rng: &mut Rng| rng.range_i64(lo, hi)
+}
+
+/// Uniform f64 in [lo, hi).
+pub fn f64_range(lo: f64, hi: f64) -> impl Gen<f64> {
+    move |rng: &mut Rng| lo + rng.f64() * (hi - lo)
+}
+
+/// Vector of `len ∈ [min_len, max_len]` values from `inner`.
+pub fn vec_of<T, G: Gen<T>>(inner: G, min_len: usize, max_len: usize) -> impl Gen<Vec<T>> {
+    move |rng: &mut Rng| {
+        let len = min_len + rng.below(max_len - min_len + 1);
+        (0..len).map(|_| inner.generate(rng)).collect()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case derives `seed + case_index`).
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 100, seed: 0x1234_5678 }
+    }
+}
+
+/// Run `prop` on `cases` generated inputs; panics with the seed and a
+/// debug rendering of the (shrunk, when possible) counterexample.
+pub fn forall<T: Clone + std::fmt::Debug, G: Gen<T>>(
+    config: &PropConfig,
+    gen: G,
+    prop: impl Fn(&T) -> bool,
+) {
+    for case in 0..config.cases {
+        let mut rng = Rng::seed(config.seed.wrapping_add(case as u64));
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {}):\n  input: {input:?}",
+                config.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// `forall` specialized to `Vec<i64>` with element-drop + value-halving
+/// shrinking on failure: reports the smallest failing vector found.
+pub fn forall_vec_i64(
+    config: &PropConfig,
+    gen: impl Gen<Vec<i64>>,
+    prop: impl Fn(&[i64]) -> bool,
+) {
+    for case in 0..config.cases {
+        let mut rng = Rng::seed(config.seed.wrapping_add(case as u64));
+        let input = gen.generate(&mut rng);
+        if !prop(&input) {
+            let shrunk = shrink_vec(&input, &prop);
+            panic!(
+                "property failed at case {case} (seed {}):\n  original: {input:?}\n  shrunk:   {shrunk:?}",
+                config.seed.wrapping_add(case as u64)
+            );
+        }
+    }
+}
+
+/// Greedy shrink: repeatedly try dropping one element or halving one
+/// value while the property still fails.
+fn shrink_vec(failing: &[i64], prop: &impl Fn(&[i64]) -> bool) -> Vec<i64> {
+    let mut current = failing.to_vec();
+    let mut improved = true;
+    while improved {
+        improved = false;
+        // try dropping each element
+        for i in 0..current.len() {
+            let mut candidate = current.clone();
+            candidate.remove(i);
+            if !candidate.is_empty() && !prop(&candidate) {
+                current = candidate;
+                improved = true;
+                break;
+            }
+        }
+        if improved {
+            continue;
+        }
+        // try halving each element toward zero
+        for i in 0..current.len() {
+            if current[i].abs() > 1 {
+                let mut candidate = current.clone();
+                candidate[i] /= 2;
+                if !prop(&candidate) {
+                    current = candidate;
+                    improved = true;
+                    break;
+                }
+            }
+        }
+    }
+    current
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_true_property() {
+        forall(&PropConfig::default(), int_range(0, 100), |&x| (0..=100).contains(&x));
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(&PropConfig { cases: 200, seed: 1 }, int_range(0, 100), |&x| x < 90);
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        let g = vec_of(int_range(-5, 5), 1, 8);
+        let mut a = Rng::seed(9);
+        let mut b = Rng::seed(9);
+        assert_eq!(g.generate(&mut a), g.generate(&mut b));
+    }
+
+    #[test]
+    fn shrinking_finds_small_counterexample() {
+        // property: no element is >= 50. Failing vectors shrink toward a
+        // single offending element.
+        let failing = vec![3, 120, 7, 64];
+        let shrunk = shrink_vec(&failing, &|v: &[i64]| v.iter().all(|&x| x < 50));
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 50);
+        // halving shrinks the value close to the boundary
+        assert!(shrunk[0] <= 120);
+    }
+
+    #[test]
+    fn vec_gen_respects_bounds() {
+        let g = vec_of(int_range(1, 3), 2, 5);
+        let mut rng = Rng::seed(4);
+        for _ in 0..100 {
+            let v = g.generate(&mut rng);
+            assert!((2..=5).contains(&v.len()));
+            assert!(v.iter().all(|x| (1..=3).contains(x)));
+        }
+    }
+
+    #[test]
+    fn f64_range_bounds() {
+        let g = f64_range(-2.0, 3.0);
+        let mut rng = Rng::seed(5);
+        for _ in 0..1000 {
+            let x = g.generate(&mut rng);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! ASCII chart rendering for the figure benches — every paper figure is
+//! regenerated both as a CSV (machine-readable) and an ASCII chart
+//! (eyeball-checkable in the bench output).
+
+/// A named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    /// Legend label.
+    pub name: String,
+    /// Data points.
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    /// Construct from a label and points.
+    pub fn new(name: impl Into<String>, points: Vec<(f64, f64)>) -> Self {
+        Series { name: name.into(), points }
+    }
+}
+
+const MARKS: &[char] = &['*', '+', 'o', 'x', '#', '@', '%', '&'];
+
+/// Render a multi-series scatter/line chart into a text block.
+///
+/// `log_y` applies a log10 transform to the y axis (Fig 2 in the paper is
+/// log-scale). Width/height are the plot area in characters.
+pub fn render(title: &str, series: &[Series], width: usize, height: usize, log_y: bool) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("## {title}\n"));
+    let all: Vec<(f64, f64)> = series.iter().flat_map(|s| s.points.iter().copied()).collect();
+    if all.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let ty = |y: f64| if log_y { y.max(1e-300).log10() } else { y };
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(ty(y));
+        ymax = ymax.max(ty(y));
+    }
+    if (xmax - xmin).abs() < 1e-300 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-300 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((ty(y) - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            let col = cx.min(width - 1);
+            // Later series overwrite; collisions get '?'.
+            grid[row][col] = if grid[row][col] == ' ' || grid[row][col] == mark { mark } else { '?' };
+        }
+    }
+    let ylab = |v: f64| if log_y { format!("{:.3e}", 10f64.powf(v)) } else { format!("{v:.4}") };
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f64 / (height - 1) as f64;
+        let label = if i == 0 || i == height - 1 || i == height / 2 {
+            format!("{:>11} |", ylab(yv))
+        } else {
+            format!("{:>11} |", "")
+        };
+        out.push_str(&label);
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>12}+{}\n", "", "-".repeat(width)));
+    out.push_str(&format!("{:>13}{:<w$.4}{:>8.4}\n", "", xmin, xmax, w = width - 7));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("  {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+/// Render a labelled horizontal bar chart (used for the Fig 1 histogram).
+pub fn bars(title: &str, rows: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("## {title}\n");
+    let max = rows.iter().map(|(_, v)| *v).fold(0.0, f64::max).max(1e-300);
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    for (label, v) in rows {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!("{label:>label_w$} | {}{} {v:.2}\n", "█".repeat(n), " ".repeat(width - n)));
+    }
+    out
+}
+
+/// Write rows as CSV. First row is the header.
+pub fn csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = header.join(",");
+    out.push('\n');
+    for row in rows {
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_legend_and_axes() {
+        let s = vec![
+            Series::new("fast", vec![(0.0, 1.0), (1.0, 2.0), (2.0, 3.0)]),
+            Series::new("slow", vec![(0.0, 3.0), (1.0, 6.0), (2.0, 9.0)]),
+        ];
+        let text = render("test chart", &s, 40, 10, false);
+        assert!(text.contains("## test chart"));
+        assert!(text.contains("* fast"));
+        assert!(text.contains("+ slow"));
+        assert!(text.lines().count() > 10);
+    }
+
+    #[test]
+    fn log_scale_handles_wide_range() {
+        let s = vec![Series::new("x", vec![(0.0, 1e-6), (1.0, 1e2)])];
+        let text = render("log", &s, 20, 5, true);
+        assert!(text.contains("## log"));
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let text = render("empty", &[], 10, 5, false);
+        assert!(text.contains("(no data)"));
+    }
+
+    #[test]
+    fn single_point_no_panic() {
+        let s = vec![Series::new("p", vec![(1.0, 1.0)])];
+        let _ = render("single", &s, 10, 5, false);
+        let _ = render("single-log", &s, 10, 5, true);
+    }
+
+    #[test]
+    fn bars_scale_to_max() {
+        let rows = vec![("a".to_string(), 10.0), ("bb".to_string(), 5.0)];
+        let text = bars("hist", &rows, 20);
+        let a_blocks = text.lines().nth(1).unwrap().matches('█').count();
+        let b_blocks = text.lines().nth(2).unwrap().matches('█').count();
+        assert_eq!(a_blocks, 20);
+        assert_eq!(b_blocks, 10);
+    }
+
+    #[test]
+    fn csv_shape() {
+        let text = csv(&["a", "b"], &[vec!["1".into(), "2".into()]]);
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,198 @@
+//! Fixed-boundary latency histogram (HdrHistogram-lite) used by the
+//! coordinator's stats and by the serving example's latency report.
+
+/// Histogram with exponentially spaced bucket boundaries, tracking counts
+/// plus exact min/max/sum so means stay exact even though percentiles are
+/// bucket-resolution.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Histogram {
+    /// Exponential buckets from `lo` to `hi` (both > 0), `per_decade`
+    /// buckets per factor of 10.
+    pub fn exponential(lo: f64, hi: f64, per_decade: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && per_decade > 0);
+        let mut bounds = Vec::new();
+        let ratio = 10f64.powf(1.0 / per_decade as f64);
+        let mut b = lo;
+        while b < hi {
+            bounds.push(b);
+            b *= ratio;
+        }
+        bounds.push(hi);
+        let n = bounds.len() + 1;
+        Histogram {
+            bounds,
+            counts: vec![0; n],
+            total: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default latency histogram: 1µs .. 100s in seconds.
+    pub fn latency() -> Self {
+        Histogram::exponential(1e-6, 100.0, 10)
+    }
+
+    /// Record one observation.
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bounds.partition_point(|&b| b <= x);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Exact mean of all observations.
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Exact minimum.
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum.
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate percentile (upper bound of the bucket containing the
+    /// p-th observation), `p` in [0,100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i == 0 {
+                    self.min
+                } else if i == self.counts.len() - 1 {
+                    // overflow bucket: everything here is above the top bound
+                    self.max
+                } else {
+                    self.bounds[i - 1].min(self.max).max(self.min)
+                };
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram with identical bounds.
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.bounds.len(), other.bounds.len(), "histogram bounds mismatch");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Compact one-line report (seconds → ms for readability).
+    pub fn render_ms(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.total,
+            self.mean() * 1e3,
+            self.percentile(50.0) * 1e3,
+            self.percentile(95.0) * 1e3,
+            self.percentile(99.0) * 1e3,
+            self.max() * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_counts() {
+        let mut h = Histogram::latency();
+        for i in 1..=100 {
+            h.record(i as f64 * 1e-3); // 1..100 ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 0.0505).abs() < 1e-9);
+        assert_eq!(h.min(), 1e-3);
+        assert_eq!(h.max(), 0.1);
+    }
+
+    #[test]
+    fn percentile_monotone_and_bounded() {
+        let mut h = Histogram::latency();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4);
+        }
+        let p50 = h.percentile(50.0);
+        let p95 = h.percentile(95.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 >= h.min() && p99 <= h.max());
+        // bucket resolution: p50 should be within ~30% of true median 0.05
+        assert!((p50 - 0.05).abs() / 0.05 < 0.3, "p50={p50}");
+    }
+
+    #[test]
+    fn merge_adds_up() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        a.record(0.001);
+        b.record(0.010);
+        b.record(0.100);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max(), 0.1);
+        assert_eq!(a.min(), 0.001);
+    }
+
+    #[test]
+    fn out_of_range_clamped_to_edge_buckets() {
+        let mut h = Histogram::exponential(1e-3, 1.0, 5);
+        h.record(1e-9);
+        h.record(50.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(0.0), 1e-9);
+        assert_eq!(h.percentile(100.0), 50.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroes() {
+        let h = Histogram::latency();
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.percentile(99.0), 0.0);
+    }
+}

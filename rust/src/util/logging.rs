@@ -1,0 +1,65 @@
+//! Tiny `log` facade backend (env_logger is unavailable offline).
+//!
+//! Level comes from `JITUNE_LOG` (error|warn|info|debug|trace), default
+//! `info`. Output goes to stderr with elapsed-time stamps so tuning-phase
+//! transitions are easy to correlate with bench output.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record<'_>) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:10.4}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent). Reads `JITUNE_LOG` for the level.
+pub fn init() {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    let level = match std::env::var("JITUNE_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    // set_logger fails if already set (tests call init repeatedly) — fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

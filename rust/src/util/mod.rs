@@ -1,0 +1,13 @@
+//! Infrastructure substrates.
+//!
+//! The build container has no crates.io access beyond the `xla` dependency
+//! tree, so the usual ecosystem crates (serde_json, rand, criterion's
+//! statistics, env_logger) are re-implemented here as small, fully tested
+//! modules.
+
+pub mod chart;
+pub mod hist;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod stats;

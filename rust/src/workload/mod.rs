@@ -1,0 +1,157 @@
+//! Workload generation: seeded inputs and call traces.
+//!
+//! Every benchmark and example drives the system through these
+//! generators, so runs are reproducible from the seed alone.
+
+use crate::manifest::{Problem, Variant};
+use crate::tensor::HostTensor;
+
+/// Build the input tensors for one problem from its manifest signature.
+///
+/// Inputs are uniform in [-1, 1) except shape-`[1]` scalars (saxpy's `a`),
+/// which get a fixed 2.5 so results stay comparable across variants.
+pub fn inputs_for(problem: &Problem, seed: u64) -> Vec<HostTensor> {
+    inputs_for_variant(&problem.variants[0], seed)
+}
+
+/// Same, from a single variant's signature.
+pub fn inputs_for_variant(variant: &Variant, seed: u64) -> Vec<HostTensor> {
+    variant
+        .input_shapes()
+        .expect("manifest signatures validated at load")
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            if shape == &[1usize] {
+                HostTensor::from_vec(&[1], vec![2.5]).unwrap()
+            } else {
+                HostTensor::random(shape, seed.wrapping_add(i as u64 * 0x9E37))
+            }
+        })
+        .collect()
+}
+
+/// One entry of a call trace.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CallSpec {
+    /// Kernel family to invoke.
+    pub kernel: String,
+    /// Problem size to invoke it at.
+    pub size: i64,
+}
+
+/// A sequence of kernel calls — the "program" driving the coordinator.
+#[derive(Debug, Clone, Default)]
+pub struct CallTrace {
+    /// Calls in order.
+    pub calls: Vec<CallSpec>,
+}
+
+impl CallTrace {
+    /// `iters` calls of one kernel at one size (the paper's benchmark
+    /// loop).
+    pub fn uniform(kernel: &str, size: i64, iters: usize) -> CallTrace {
+        CallTrace {
+            calls: (0..iters)
+                .map(|_| CallSpec { kernel: kernel.to_string(), size })
+                .collect(),
+        }
+    }
+
+    /// A trace that switches problem size mid-run (paper §3.2: a call
+    /// with different arguments is a new tuning problem — used by the
+    /// re-tuning ablation).
+    pub fn with_size_switch(
+        kernel: &str,
+        first: i64,
+        second: i64,
+        at: usize,
+        total: usize,
+    ) -> CallTrace {
+        assert!(at <= total);
+        let mut calls = Vec::with_capacity(total);
+        for i in 0..total {
+            calls.push(CallSpec {
+                kernel: kernel.to_string(),
+                size: if i < at { first } else { second },
+            });
+        }
+        CallTrace { calls }
+    }
+
+    /// Interleave several (kernel, size) streams round-robin — the
+    /// multi-kernel service mix of the serving example.
+    pub fn interleaved(streams: &[(&str, i64)], rounds: usize) -> CallTrace {
+        let mut calls = Vec::with_capacity(streams.len() * rounds);
+        for _ in 0..rounds {
+            for &(kernel, size) in streams {
+                calls.push(CallSpec { kernel: kernel.to_string(), size });
+            }
+        }
+        CallTrace { calls }
+    }
+
+    /// Number of calls.
+    pub fn len(&self) -> usize {
+        self.calls.len()
+    }
+
+    /// True when the trace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.calls.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_trace() {
+        let t = CallTrace::uniform("matmul", 128, 10);
+        assert_eq!(t.len(), 10);
+        assert!(t.calls.iter().all(|c| c.kernel == "matmul" && c.size == 128));
+    }
+
+    #[test]
+    fn size_switch_trace() {
+        let t = CallTrace::with_size_switch("k", 8, 16, 3, 7);
+        assert_eq!(t.len(), 7);
+        assert_eq!(t.calls[2].size, 8);
+        assert_eq!(t.calls[3].size, 16);
+        assert_eq!(t.calls[6].size, 16);
+    }
+
+    #[test]
+    fn interleaved_trace() {
+        let t = CallTrace::interleaved(&[("a", 1), ("b", 2)], 3);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.calls[0].kernel, "a");
+        assert_eq!(t.calls[1].kernel, "b");
+        assert_eq!(t.calls[4].kernel, "a");
+    }
+
+    #[test]
+    fn inputs_match_signature_and_seed() {
+        let m = crate::manifest::tests::sample_manifest().unwrap();
+        let p = m.problem("k", 8).unwrap();
+        let a = inputs_for(p, 42);
+        let b = inputs_for(p, 42);
+        let c = inputs_for(p, 43);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].shape(), &[8, 8]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn scalar_inputs_fixed() {
+        // fabricate a variant with a scalar input signature
+        let m = crate::manifest::tests::sample_manifest().unwrap();
+        let mut v = m.variants[0].clone();
+        v.inputs = vec!["f32[1]".into(), "f32[8]".into()];
+        let ins = inputs_for_variant(&v, 7);
+        assert_eq!(ins[0].data(), &[2.5]);
+        assert_eq!(ins[1].len(), 8);
+    }
+}

@@ -1,0 +1,207 @@
+//! Property suites over the autotuner — the §5 invariants in DESIGN.md.
+//!
+//! Driven by the in-crate mini property framework (`jitune::testutil`)
+//! with synthetic cost tables, so thousands of schedules run in
+//! milliseconds without touching PJRT.
+
+use jitune::autotuner::cost_model::CostModel;
+use jitune::autotuner::{
+    Autotuner, Decision, History, Phase, ProblemKey, Sweep, TuningState,
+};
+use jitune::testutil::{f64_range, forall, int_range, vec_of, PropConfig};
+use jitune::util::prng::Rng;
+
+/// Drive a sweep-strategy state machine over a synthetic cost table to
+/// completion; returns (decisions, state).
+fn run_sweep(costs: &[f64]) -> (Vec<Decision>, TuningState) {
+    let values: Vec<i64> = (0..costs.len() as i64).collect();
+    let mut st = TuningState::new(values, Box::new(Sweep::new(costs.len())));
+    let mut decisions = Vec::new();
+    for _ in 0..costs.len() + 2 {
+        let d = st.decide();
+        decisions.push(d);
+        match d {
+            Decision::Explore(i) => st.report(i, costs[i]),
+            Decision::Finalize(i) => st.confirm_finalized(i),
+            Decision::Use(_) => break,
+        }
+    }
+    (decisions, st)
+}
+
+#[test]
+fn prop_sweep_visits_each_variant_exactly_once() {
+    let cfg = PropConfig { cases: 300, ..PropConfig::default() };
+    forall(&cfg, vec_of(f64_range(0.001, 10.0), 1, 12), |costs| {
+        let (decisions, _) = run_sweep(costs);
+        let mut explored = vec![0usize; costs.len()];
+        for d in &decisions {
+            if let Decision::Explore(i) = d {
+                explored[*i] += 1;
+            }
+        }
+        explored.iter().all(|&c| c == 1)
+    });
+}
+
+#[test]
+fn prop_winner_is_argmin_of_costs() {
+    let cfg = PropConfig { cases: 300, ..PropConfig::default() };
+    forall(&cfg, vec_of(f64_range(0.001, 10.0), 1, 12), |costs| {
+        let (_, st) = run_sweep(costs);
+        let argmin = costs
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        st.winner() == Some(argmin) && st.phase() == Phase::Tuned
+    });
+}
+
+#[test]
+fn prop_schedule_is_k_explores_one_finalize_then_use() {
+    let cfg = PropConfig { cases: 200, ..PropConfig::default() };
+    forall(&cfg, vec_of(f64_range(0.001, 10.0), 1, 10), |costs| {
+        let (decisions, _) = run_sweep(costs);
+        let k = costs.len();
+        decisions.len() == k + 2
+            && decisions[..k].iter().all(|d| matches!(d, Decision::Explore(_)))
+            && matches!(decisions[k], Decision::Finalize(_))
+            && matches!(decisions[k + 1], Decision::Use(_))
+    });
+}
+
+#[test]
+fn prop_random_failures_never_break_convergence() {
+    // Inject failures on a random subset (never all) of candidates: the
+    // tuner must still converge to the argmin of the surviving ones.
+    let cfg = PropConfig { cases: 300, seed: 77 };
+    forall(&cfg, vec_of(f64_range(0.001, 10.0), 2, 10), |costs| {
+        let n = costs.len();
+        let mut rng = Rng::seed(costs.iter().map(|c| c.to_bits()).fold(0, u64::wrapping_add));
+        let mut fail: Vec<bool> = (0..n).map(|_| rng.chance(0.3)).collect();
+        if fail.iter().all(|&f| f) {
+            fail[rng.below(n)] = false; // keep one alive
+        }
+        let values: Vec<i64> = (0..n as i64).collect();
+        let mut st = TuningState::new(values, Box::new(Sweep::new(n)));
+        for _ in 0..2 * n + 2 {
+            match st.decide() {
+                Decision::Explore(i) => {
+                    if fail[i] {
+                        st.report_failure(i);
+                    } else {
+                        st.report(i, costs[i]);
+                    }
+                }
+                Decision::Finalize(i) => st.confirm_finalized(i),
+                Decision::Use(_) => break,
+            }
+        }
+        let alive_argmin = costs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !fail[*i])
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i);
+        st.phase() == Phase::Tuned && st.winner() == alive_argmin
+    });
+}
+
+#[test]
+fn prop_problem_keys_never_share_state() {
+    let cfg = PropConfig { cases: 100, ..PropConfig::default() };
+    forall(&cfg, vec_of(int_range(1, 1024), 2, 6), |sizes| {
+        let mut tuner = Autotuner::sweep();
+        // touch one key per distinct size
+        for &s in sizes {
+            let key = ProblemKey::new("k", "block", format!("f32[{s},{s}]"));
+            tuner.state(&key, &[1, 2, 3]);
+        }
+        let distinct: std::collections::HashSet<_> = sizes.iter().collect();
+        tuner.problems() == distinct.len()
+    });
+}
+
+#[test]
+fn prop_eq1_closed_form_equals_simulation() {
+    let cfg = PropConfig { cases: 300, ..PropConfig::default() };
+    forall(&cfg, vec_of(f64_range(0.01, 5.0), 1, 10), |exec_times| {
+        let model = CostModel::new(0.7, exec_times.to_vec());
+        (0..60).all(|n| {
+            let sim: f64 = model.simulate_schedule(n).iter().sum();
+            (model.e_auto(n) - sim).abs() < 1e-9
+        })
+    });
+}
+
+#[test]
+fn prop_eq2_payoff_iff_curves_cross() {
+    let cfg = PropConfig { cases: 200, seed: 5 };
+    forall(&cfg, vec_of(f64_range(0.01, 5.0), 2, 8), |exec_times| {
+        let model = CostModel::new(0.3, exec_times.to_vec());
+        (0..exec_times.len()).all(|p| {
+            (exec_times.len() + 1..100).all(|n| {
+                model.pays_off(p, n) == (model.e_auto(n) <= model.e_fixed(p, n))
+            })
+        })
+    });
+}
+
+#[test]
+fn prop_crossover_is_minimal() {
+    let cfg = PropConfig { cases: 200, seed: 9 };
+    forall(&cfg, vec_of(f64_range(0.01, 5.0), 2, 8), |exec_times| {
+        let model = CostModel::new(0.2, exec_times.to_vec());
+        (0..exec_times.len()).all(|p| match model.crossover(p) {
+            Some(n_star) => {
+                let n = n_star as usize;
+                model.pays_off(p, n) && (n == 0 || !model.pays_off(p, n - 1))
+            }
+            None => !model.pays_off(p, 1_000_000),
+        })
+    });
+}
+
+#[test]
+fn prop_strategies_always_terminate_and_find_something() {
+    // every strategy, on every surface, terminates within a generous
+    // bound and leaves a best index among the non-failed candidates
+    let cfg = PropConfig { cases: 150, seed: 21 };
+    forall(&cfg, vec_of(f64_range(0.01, 10.0), 1, 12), |costs| {
+        for spec in ["sweep", "random:16", "hillclimb", "anneal:20"] {
+            let n = costs.len();
+            let mut strategy = jitune::autotuner::search::from_spec(spec, n, 3).unwrap();
+            let values: Vec<i64> = (0..n as i64).collect();
+            let mut history = History::new(&values);
+            let mut iters = 0;
+            while let Some(idx) = strategy.next(&history) {
+                if idx >= n {
+                    return false; // out of bounds = broken strategy
+                }
+                history.record(idx, costs[idx]);
+                iters += 1;
+                if iters > 300 {
+                    return false; // non-termination
+                }
+            }
+            if history.best_index().is_none() {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_tuned_value_matches_winner_value() {
+    let cfg = PropConfig { cases: 200, seed: 31 };
+    forall(&cfg, vec_of(f64_range(0.001, 10.0), 1, 10), |costs| {
+        let (_, st) = run_sweep(costs);
+        match (st.winner(), st.tuned_value()) {
+            (Some(w), Some(v)) => v == st.value_of(w),
+            _ => false,
+        }
+    });
+}

@@ -1,0 +1,192 @@
+//! Coordinator integration over the mock engine: lifecycle, routing,
+//! concurrency, failure injection — no PJRT required, so these run fast
+//! and deterministically in any environment.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, KernelRegistry,
+};
+use jitune::manifest::Manifest;
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::util::json;
+use jitune::util::prng::Rng;
+
+/// A synthetic manifest with `k` variants of one kernel at sizes 8/16,
+/// backed by dummy artifact files on disk.
+fn synthetic_manifest(k: usize) -> Manifest {
+    static COUNTER: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "jitune-coord-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut entries = Vec::new();
+    for size in [8i64, 16] {
+        for i in 0..k {
+            let id = format!("kern.v{i}.n{size}");
+            std::fs::write(dir.join(format!("{id}.hlo.txt")), "HloModule dummy\n").unwrap();
+            entries.push(format!(
+                r#"{{"id":"{id}","kernel":"kern","param":"p","value":{i},"label":"v{i}",
+                    "size":{size},"inputs":["f32[{size},{size}]"],"output":"f32[{size},{size}]",
+                    "path":"{id}.hlo.txt","flops":100}}"#
+            ));
+        }
+    }
+    let text = format!(
+        r#"{{"schema":1,"jax_version":"test","entries":[{}]}}"#,
+        entries.join(",")
+    );
+    Manifest::from_json_str(&text, dir).unwrap()
+}
+
+fn spec_with_costs(costs_us: &[u64]) -> MockSpec {
+    let mut spec = MockSpec::default();
+    for (i, &c) in costs_us.iter().enumerate() {
+        for size in [8, 16] {
+            spec = spec.with_cost(&format!("kern.v{i}.n{size}"), Duration::from_micros(c));
+        }
+    }
+    spec
+}
+
+fn dispatcher(k: usize, spec: MockSpec) -> Dispatcher {
+    let registry = KernelRegistry::new(synthetic_manifest(k));
+    Dispatcher::new(registry, Box::new(MockEngine::new(spec)))
+}
+
+#[test]
+fn five_variant_lifecycle_and_winner() {
+    // costs: v3 is the clear winner
+    let mut d = dispatcher(5, spec_with_costs(&[400, 300, 500, 40, 350]));
+    let inputs = [HostTensor::zeros(&[8, 8])];
+    let mut routes = Vec::new();
+    for _ in 0..8 {
+        routes.push(d.call("kern", &inputs).unwrap().route);
+    }
+    assert_eq!(routes.iter().filter(|r| **r == CallRoute::Explored).count(), 5);
+    assert_eq!(routes.iter().filter(|r| **r == CallRoute::Finalized).count(), 1);
+    assert_eq!(routes.iter().filter(|r| **r == CallRoute::Tuned).count(), 2);
+    assert_eq!(d.tuned_value("kern", 8), Some(3));
+    // exactly k+1 JIT compilations happened (k tuning + 1 final)
+    assert_eq!(d.cache_stats().misses, 6);
+    // only the winner stays resident
+    assert_eq!(d.cache_stats().evictions, 5);
+}
+
+#[test]
+fn outputs_observable_route_the_winner() {
+    let mut d = dispatcher(3, spec_with_costs(&[300, 30, 300]));
+    let inputs = [HostTensor::zeros(&[8, 8])];
+    for _ in 0..5 {
+        d.call("kern", &inputs).unwrap();
+    }
+    // mock kernels fill outputs with their variant value: steady calls
+    // must all carry the winner's value
+    for _ in 0..3 {
+        let out = d.call("kern", &inputs).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+        assert!(out.output.data().iter().all(|&x| x == 1.0));
+    }
+}
+
+#[test]
+fn execute_failure_mid_tuning_is_survived() {
+    let mut spec = spec_with_costs(&[100, 100, 100]);
+    spec.fail_execute.insert("kern.v1.n8".into());
+    let mut d = dispatcher(3, spec);
+    let inputs = [HostTensor::zeros(&[8, 8])];
+    for _ in 0..6 {
+        d.call("kern", &inputs).unwrap();
+    }
+    let winner = d.tuned_value("kern", 8).unwrap();
+    assert_ne!(winner, 1, "failed variant must not win");
+    assert_eq!(d.stats().total_failures(), 1);
+}
+
+#[test]
+fn tuning_report_json_is_complete() {
+    let mut d = dispatcher(2, spec_with_costs(&[100, 50]));
+    let inputs = [HostTensor::zeros(&[8, 8])];
+    for _ in 0..4 {
+        d.call("kern", &inputs).unwrap();
+    }
+    let report = d.tuning_report();
+    let text = report.to_json();
+    // parses back and contains the tuned phase + winner
+    let parsed = json::parse(&text).unwrap();
+    let (_, problem) = &parsed.as_obj().unwrap()[0];
+    assert_eq!(problem.get("phase").unwrap().as_str(), Some("tuned"));
+    assert_eq!(problem.get("tuned_value").unwrap().as_i64(), Some(1));
+    assert_eq!(problem.get("variants").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn concurrent_clients_see_consistent_winner() {
+    let spec = spec_with_costs(&[500, 50, 400, 300]);
+    let coordinator = Coordinator::spawn(move || {
+        let registry = KernelRegistry::new(synthetic_manifest(4));
+        Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+    })
+    .unwrap();
+
+    let mut joins = Vec::new();
+    for seed in 0..6u64 {
+        let h = coordinator.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::seed(seed);
+            let mut steady_values = HashSet::new();
+            for _ in 0..10 {
+                let size = *rng.choose(&[8usize, 16]);
+                let out = h.call("kern", vec![HostTensor::zeros(&[size, size])]).unwrap();
+                if out.route == CallRoute::Tuned {
+                    steady_values.insert((size, out.value));
+                }
+            }
+            steady_values
+        }));
+    }
+    let mut all: HashSet<(usize, i64)> = HashSet::new();
+    for j in joins {
+        all.extend(j.join().unwrap());
+    }
+    // each problem's steady state must be a single consistent winner
+    for size in [8usize, 16] {
+        let winners: Vec<i64> =
+            all.iter().filter(|(s, _)| *s == size).map(|(_, v)| *v).collect();
+        assert!(winners.len() <= 1, "size {size} saw multiple steady winners: {winners:?}");
+    }
+    // and the winner (once tuning is done) is the fast variant
+    assert_eq!(coordinator.handle().tuned_value("kern", 8).unwrap(), Some(1));
+    assert_eq!(coordinator.handle().tuned_value("kern", 16).unwrap(), Some(1));
+}
+
+#[test]
+fn jittered_measurements_still_pick_clear_winner() {
+    let mut spec = spec_with_costs(&[800, 80, 700]);
+    spec.jitter_frac = 0.15;
+    let mut d = dispatcher(3, spec);
+    let inputs = [HostTensor::zeros(&[8, 8])];
+    for _ in 0..5 {
+        d.call("kern", &inputs).unwrap();
+    }
+    // 10x margin: jitter cannot flip the ranking
+    assert_eq!(d.tuned_value("kern", 8), Some(1));
+}
+
+#[test]
+fn stats_latency_histograms_populated() {
+    let mut d = dispatcher(2, spec_with_costs(&[100, 50]));
+    let inputs = [HostTensor::zeros(&[8, 8])];
+    for _ in 0..10 {
+        d.call("kern", &inputs).unwrap();
+    }
+    let ks = d.stats().kernel("kern").unwrap();
+    assert_eq!(ks.latency.count(), 10);
+    assert_eq!(ks.tuned_latency.count(), 7);
+    // tuned calls skip compilation: their latency must be clearly lower
+    assert!(ks.tuned_latency.mean() < ks.latency.mean());
+}

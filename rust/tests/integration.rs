@@ -1,0 +1,147 @@
+//! End-to-end integration: real artifacts, real PJRT engine.
+//!
+//! These tests load the HLO artifacts produced by `make artifacts`,
+//! JIT-compile them through the PJRT CPU client and compare results with
+//! the independent pure-Rust references (`jitune::tensor`). They skip
+//! (with a notice) when artifacts have not been built.
+
+use jitune::manifest::Manifest;
+use jitune::runtime::{CompileCache, PjrtEngine};
+use jitune::tensor::{ref_matmul, ref_mlp_block, ref_saxpy, ref_stencil3, HostTensor};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn setup() -> Option<(Manifest, CompileCache)> {
+    let dir = artifacts_dir()?;
+    let manifest = Manifest::load(dir).expect("manifest loads");
+    let engine = PjrtEngine::cpu().expect("pjrt cpu client");
+    Some((manifest, CompileCache::new(Box::new(engine))))
+}
+
+#[test]
+fn manifest_loads_and_covers_all_kernels() {
+    let Some((manifest, _)) = setup() else { return };
+    let kernels = manifest.kernels();
+    for k in ["matmul_tiled", "matmul_order", "saxpy", "stencil", "mlp_block"] {
+        assert!(kernels.iter().any(|n| n == k), "missing kernel {k}");
+    }
+    // every artifact file exists
+    for v in &manifest.variants {
+        assert!(manifest.artifact_path(v).exists(), "missing artifact {}", v.path);
+    }
+}
+
+#[test]
+fn matmul_tiled_all_blocks_match_rust_ref() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let n = 64usize;
+    let a = HostTensor::random(&[n, n], 11);
+    let b = HostTensor::random(&[n, n], 12);
+    let want = ref_matmul(&a, &b).unwrap();
+    let problem = manifest.problem("matmul_tiled", n as i64).unwrap().clone();
+    for v in &problem.variants {
+        let (exe, compiled) = cache.get_or_compile(&manifest, v).unwrap();
+        assert!(compiled);
+        let got = exe.execute(&[a.clone(), b.clone()]).unwrap();
+        assert!(
+            got.allclose(&want, 1e-4, 1e-4),
+            "variant {} diverges: max diff {:?}",
+            v.id,
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn matmul_orders_match_rust_ref() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let n = 128usize;
+    let a = HostTensor::random(&[n, n], 21);
+    let b = HostTensor::random(&[n, n], 22);
+    let want = ref_matmul(&a, &b).unwrap();
+    let problem = manifest.problem("matmul_order", n as i64).unwrap().clone();
+    assert_eq!(problem.variants.len(), 3);
+    for v in &problem.variants {
+        let (exe, _) = cache.get_or_compile(&manifest, v).unwrap();
+        let got = exe.execute(&[a.clone(), b.clone()]).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4), "order {} diverges", v.label);
+    }
+}
+
+#[test]
+fn saxpy_matches_rust_ref() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let n = 16384usize;
+    let a = HostTensor::from_vec(&[1], vec![2.5]).unwrap();
+    let x = HostTensor::random(&[n], 31);
+    let y = HostTensor::random(&[n], 32);
+    let want = ref_saxpy(2.5, &x, &y).unwrap();
+    let problem = manifest.problem("saxpy", n as i64).unwrap().clone();
+    for v in &problem.variants {
+        let (exe, _) = cache.get_or_compile(&manifest, v).unwrap();
+        let got = exe.execute(&[a.clone(), x.clone(), y.clone()]).unwrap();
+        assert!(got.allclose(&want, 1e-5, 1e-5), "chunk {} diverges", v.label);
+    }
+}
+
+#[test]
+fn stencil_matches_rust_ref() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let n = 16384usize;
+    let x = HostTensor::random(&[n], 41);
+    let want = ref_stencil3(&x).unwrap();
+    let problem = manifest.problem("stencil", n as i64).unwrap().clone();
+    for v in &problem.variants {
+        let (exe, _) = cache.get_or_compile(&manifest, v).unwrap();
+        let got = exe.execute(&[x.clone()]).unwrap();
+        assert!(got.allclose(&want, 1e-5, 1e-5), "block {} diverges", v.label);
+    }
+}
+
+#[test]
+fn mlp_block_matches_rust_ref() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let (b, d, h, o) = (64usize, 256usize, 512usize, 256usize);
+    let x = HostTensor::random(&[b, d], 51);
+    let w1 = HostTensor::random(&[d, h], 52);
+    let w2 = HostTensor::random(&[h, o], 53);
+    let want = ref_mlp_block(&x, &w1, &w2).unwrap();
+    let problem = manifest.problem("mlp_block", b as i64).unwrap().clone();
+    for v in &problem.variants {
+        let (exe, _) = cache.get_or_compile(&manifest, v).unwrap();
+        let got = exe.execute(&[x.clone(), w1.clone(), w2.clone()]).unwrap();
+        assert!(got.allclose(&want, 1e-3, 1e-3), "mlp {} diverges", v.label);
+    }
+}
+
+#[test]
+fn compile_cache_hit_skips_recompilation() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let v = manifest.problem("matmul_tiled", 64).unwrap().variants[0].clone();
+    let (_, first) = cache.get_or_compile(&manifest, &v).unwrap();
+    assert!(first);
+    let t0 = std::time::Instant::now();
+    let (_, second) = cache.get_or_compile(&manifest, &v).unwrap();
+    assert!(!second);
+    // cache hit must be orders of magnitude cheaper than a compile
+    assert!(t0.elapsed().as_micros() < 10_000);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (1, 1));
+}
+
+#[test]
+fn wrong_shape_inputs_rejected() {
+    let Some((manifest, mut cache)) = setup() else { return };
+    let v = manifest.problem("matmul_tiled", 64).unwrap().variants[0].clone();
+    let (exe, _) = cache.get_or_compile(&manifest, &v).unwrap();
+    let bad = HostTensor::random(&[32, 32], 1);
+    assert!(exe.execute(&[bad.clone(), bad]).is_err());
+}

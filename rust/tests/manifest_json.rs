@@ -1,0 +1,101 @@
+//! Manifest + JSON round-trip properties, against both synthetic inputs
+//! and the real generated manifest when present.
+
+use jitune::manifest::{Manifest, Variant};
+use jitune::testutil::{forall, int_range, vec_of, PropConfig};
+use jitune::util::json::{self, Value};
+
+#[test]
+fn prop_json_number_roundtrip() {
+    forall(&PropConfig { cases: 500, seed: 11 }, int_range(-1_000_000_000, 1_000_000_000), |&x| {
+        let v = Value::Num(x as f64);
+        json::parse(&v.to_json()).map(|p| p.as_i64() == Some(x)).unwrap_or(false)
+    });
+}
+
+#[test]
+fn prop_json_array_roundtrip() {
+    forall(&PropConfig { cases: 300, seed: 13 }, vec_of(int_range(-5000, 5000), 0, 20), |xs| {
+        let v = Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect());
+        let back = json::parse(&v.to_json()).unwrap();
+        back == v && json::parse(&v.to_json_pretty()).unwrap() == v
+    });
+}
+
+#[test]
+fn prop_json_string_roundtrip_with_special_chars() {
+    let alphabet: Vec<char> =
+        "abc\"\\\n\t\u{e9}\u{4e16}\u{1F600} {}[]:,".chars().collect();
+    forall(&PropConfig { cases: 300, seed: 17 }, vec_of(int_range(0, alphabet.len() as i64 - 1), 0, 30), |idxs| {
+        let s: String = idxs.iter().map(|&i| alphabet[i as usize]).collect();
+        let v = Value::Str(s);
+        json::parse(&v.to_json()).map(|p| p == v).unwrap_or(false)
+    });
+}
+
+#[test]
+fn real_manifest_invariants() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    // 5 kernel families, every problem has >= 1 variant, consistent sigs
+    assert_eq!(m.kernels().len(), 5);
+    for p in &m.problems {
+        assert!(!p.variants.is_empty());
+        for v in &p.variants {
+            assert_eq!(v.kernel, p.kernel);
+            assert_eq!(v.size, p.size);
+            assert!(v.flops > 0);
+            // signatures parse and output is well-formed
+            v.input_shapes().unwrap();
+            assert!(!v.output_shape().unwrap().is_empty());
+            assert!(m.artifact_path(v).exists());
+        }
+        // variant values are unique within a problem
+        let mut values: Vec<i64> = p.variants.iter().map(|v| v.value).collect();
+        values.sort_unstable();
+        values.dedup();
+        assert_eq!(values.len(), p.variants.len(), "duplicate values in {}", p.key());
+    }
+    // the Fig-1 problem set: all blocks present per size
+    for &size in &[32i64, 64, 128, 256, 512] {
+        let p = m.problem("matmul_tiled", size).unwrap();
+        assert_eq!(p.variants.len(), 6, "n={size}");
+    }
+    // Fig-2 problem set: exactly the three loop orders
+    for &size in &[64i64, 128, 256, 512] {
+        let p = m.problem("matmul_order", size).unwrap();
+        let labels: Vec<&str> = p.variants.iter().map(|v| v.label.as_str()).collect();
+        assert_eq!(labels, vec!["ijk", "ikj", "jik"]);
+    }
+}
+
+#[test]
+fn signature_parser_rejects_malformed() {
+    for bad in ["f32[", "f32[]", "[8]", "f64[8]", "f32[8,]", "f32[8x8]"] {
+        assert!(Variant::parse_sig(bad).is_err(), "`{bad}` should be rejected");
+    }
+}
+
+#[test]
+fn real_manifest_hlo_artifacts_parse_as_hlo_text() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built");
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    // spot-check one artifact per kernel family
+    let mut seen = std::collections::HashSet::new();
+    for v in &m.variants {
+        if seen.insert(v.kernel.clone()) {
+            let text = std::fs::read_to_string(m.artifact_path(v)).unwrap();
+            assert!(text.starts_with("HloModule"), "{}: not HLO text", v.id);
+            assert!(text.contains("ROOT"), "{}: no ROOT computation", v.id);
+        }
+    }
+    assert_eq!(seen.len(), 5);
+}
