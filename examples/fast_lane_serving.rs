@@ -1,0 +1,87 @@
+//! Multi-threaded serving on the tuned fast lane — self-contained demo
+//! on the mock engine (no artifacts or PJRT needed, runs anywhere).
+//!
+//! The coordinator tunes a kernel online (exploration serialized on the
+//! leader thread), publishes the winner into the fast lane, and then N
+//! application threads hammer the tuned kernel: each call executes on
+//! the calling thread, so throughput scales with the threads instead of
+//! being capped by the leader. Compare with `serve_mlp`, the PJRT-backed
+//! serving demo, where every call flows through the leader.
+//!
+//! Run with: `cargo run --example fast_lane_serving [threads]`
+
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{CallRoute, Coordinator, Dispatcher, KernelRegistry};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+
+const CALLS_PER_THREAD: usize = 400;
+
+fn main() {
+    jitune::util::logging::init();
+    let threads: usize =
+        std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(4);
+
+    // Three candidate variants; v1 is 10x faster. Sleep-based execution
+    // models a kernel offloaded to an accelerator.
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(2000))
+        .with_cost("kern.v1.n8", Duration::from_micros(200))
+        .with_cost("kern.v2.n8", Duration::from_micros(1500))
+        .with_sleep_exec();
+    let coordinator = Coordinator::spawn(move || {
+        let manifest = synthetic_manifest("kern", 3, &[8])?;
+        let registry = KernelRegistry::new(manifest);
+        Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+    })
+    .expect("spawn coordinator");
+
+    // Phase 1: online tuning (leader lane, serialized).
+    let h = coordinator.handle();
+    println!("tuning...");
+    loop {
+        let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("call");
+        println!("  {:?} variant={} value={}", o.route, o.variant_id, o.value);
+        if o.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    println!(
+        "tuned value: {:?}; fast-lane entries: {}",
+        h.tuned_value("kern", 8).expect("tuned_value"),
+        h.fast_lane_published()
+    );
+
+    // Phase 2: steady-state serving from many threads (fast lane).
+    println!("\nserving from {threads} thread(s), {CALLS_PER_THREAD} calls each...");
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = coordinator.handle();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..CALLS_PER_THREAD {
+                let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("steady call");
+                assert_eq!(o.route, CallRoute::Tuned);
+            }
+            t
+        }));
+    }
+    for j in joins {
+        j.join().expect("worker");
+    }
+    let dt = t0.elapsed();
+    let total = threads * CALLS_PER_THREAD;
+    println!(
+        "served {total} calls in {:.3}s -> {:.0} calls/s across {threads} thread(s)",
+        dt.as_secs_f64(),
+        total as f64 / dt.as_secs_f64()
+    );
+
+    for (kernel, hits, mean) in h.fast_lane_stats() {
+        println!("fast lane: {kernel}: hits={hits} mean={:.3}ms", mean * 1e3);
+    }
+    let (rendered, _report) = h.stats().expect("stats");
+    println!("\n{rendered}");
+}

@@ -6,7 +6,9 @@
 //!  1. Literal construction: `vec1 + reshape` (baseline) vs
 //!     `create_from_shape_and_untyped_data` (optimized single copy).
 //!  2. Call-plan resolution: `problem_for_inputs().clone()` per call
-//!     (baseline) vs the cached CallPlan lookup the dispatcher now uses.
+//!     (baseline) vs the signature-string cached plan (first pass) vs
+//!     the allocation-free hashed CallPlan lookup the dispatcher now
+//!     uses (`fastlane::plan_hash`).
 //!  3. End-to-end steady-state call vs raw executable dispatch — the
 //!     residual coordinator overhead.
 //!
@@ -14,7 +16,7 @@
 
 use std::time::Instant;
 
-use jitune::coordinator::{CallRoute, KernelRegistry};
+use jitune::coordinator::{fastlane, CallRoute, KernelRegistry};
 use jitune::report::bench::{artifacts_or_skip, fresh_dispatcher};
 use jitune::runtime::{CompileCache, PjrtEngine};
 use jitune::tensor::HostTensor;
@@ -78,11 +80,12 @@ fn main() {
         let inputs = [HostTensor::random(&[64, 64], 1), HostTensor::random(&[64, 64], 2)];
         let n = 20_000;
         let old = time_n(n, || {
-            // what the dispatcher used to do every call
+            // what the dispatcher originally did every call
             let p = registry.problem_for_inputs("matmul_tiled", &inputs).unwrap().clone();
             std::hint::black_box(&p);
         });
-        // the cached-plan path: signature string + hashmap hit
+        // the signature-string cached-plan path (first §Perf pass): a
+        // string join + (String, String) key allocation on every hit
         let mut plans = std::collections::HashMap::new();
         plans.insert(
             (
@@ -91,22 +94,40 @@ fn main() {
             ),
             42usize,
         );
-        let new = time_n(n, || {
+        let strings = time_n(n, || {
             let sig = inputs.iter().map(HostTensor::signature).collect::<Vec<_>>().join(",");
             let v = plans.get(&("matmul_tiled".to_string(), sig)).unwrap();
             std::hint::black_box(v);
         });
+        // the hashed-plan path the dispatcher uses now: zero allocations
+        // on the hit (jitune::coordinator::fastlane::plan_hash)
+        let mut hashed = std::collections::HashMap::new();
+        hashed.insert(fastlane::plan_hash("matmul_tiled", &inputs), 42usize);
+        let new = time_n(n, || {
+            let h = fastlane::plan_hash("matmul_tiled", &inputs);
+            let v = hashed.get(&h).unwrap();
+            std::hint::black_box(v);
+        });
         let speedup = old.mean / new.mean;
         println!(
-            "plan resolve: problem.clone() {:.2}µs -> cached plan {:.2}µs  ({speedup:.2}x)",
+            "plan resolve: problem.clone() {:.2}µs -> sig strings {:.2}µs -> hashed plan \
+             {:.2}µs  ({speedup:.2}x vs clone, {:.2}x vs strings)",
             old.mean * 1e6,
-            new.mean * 1e6
+            strings.mean * 1e6,
+            new.mean * 1e6,
+            strings.mean / new.mean
         );
         rows.push(vec![
             "plan_resolution".into(),
             format!("{:.9}", old.mean),
             format!("{:.9}", new.mean),
             format!("{speedup:.3}"),
+        ]);
+        rows.push(vec![
+            "plan_resolution_vs_strings".into(),
+            format!("{:.9}", strings.mean),
+            format!("{:.9}", new.mean),
+            format!("{:.3}", strings.mean / new.mean),
         ]);
     }
 

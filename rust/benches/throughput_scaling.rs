@@ -1,0 +1,161 @@
+//! **Throughput scaling** — steady-state tuned-call throughput at
+//! 1/2/4/8 application threads, single-lane baseline (every call through
+//! the leader channel) vs the published-winner fast lane (tuned calls
+//! execute on the caller's thread).
+//!
+//! Runs on the mock engine with sleep-based execution, modelling a kernel
+//! offloaded to an accelerator: the host CPU is free during execution, so
+//! the measurement isolates the *coordination* bottleneck rather than
+//! host core count. The single lane serializes every call behind one
+//! leader (throughput flat as threads grow); the fast lane scales with
+//! the callers.
+//!
+//! Output: stdout chart + `target/figures/throughput_scaling.csv` (same
+//! Figure pipeline as the fig* benches) + a machine-readable JSON report
+//! `target/figures/throughput_scaling.json`.
+//!
+//! Env knobs: `JITUNE_BENCH_CALLS` (calls per thread, default 300),
+//! `JITUNE_BENCH_EXEC_US` (per-call execution sleep, default 200).
+
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, KernelRegistry, ServerOptions,
+};
+use jitune::report::Figure;
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+use jitune::util::chart::Series;
+use jitune::util::json::{n, s, Value};
+
+const THREADS: &[usize] = &[1, 2, 4, 8];
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn spawn(fast_lane: bool, exec_us: u64) -> Coordinator {
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(4 * exec_us))
+        .with_cost("kern.v1.n8", Duration::from_micros(exec_us))
+        .with_sleep_exec();
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        },
+        ServerOptions { fast_lane, ..ServerOptions::default() },
+    )
+    .expect("spawn coordinator")
+}
+
+/// Tune to steady state, then hammer from `threads` threads; returns
+/// steady-state calls/second.
+fn measure(coord: &Coordinator, threads: usize, calls_per_thread: usize) -> f64 {
+    let h = coord.handle();
+    loop {
+        let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("warm call");
+        if o.route == CallRoute::Tuned {
+            break;
+        }
+    }
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..threads {
+        let h = coord.handle();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..calls_per_thread {
+                let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("steady call");
+                assert_eq!(o.value, 1, "steady state must serve the winner");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("worker");
+    }
+    (threads * calls_per_thread) as f64 / t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let calls = env_usize("JITUNE_BENCH_CALLS", 300);
+    let exec_us = env_usize("JITUNE_BENCH_EXEC_US", 200) as u64;
+    println!(
+        "== throughput scaling: tuned calls/sec vs threads ({calls} calls/thread, \
+         {exec_us}us exec) =="
+    );
+
+    let modes: &[(&str, bool)] = &[("single_lane", false), ("fast_lane", true)];
+    let mut rows = Vec::new();
+    let mut series = Vec::new();
+    let mut results = Vec::new();
+    for &(mode, fast) in modes {
+        let mut points = Vec::new();
+        for &threads in THREADS {
+            // fresh coordinator per cell: clean tuner, clean stats
+            let coord = spawn(fast, exec_us);
+            let cps = measure(&coord, threads, calls);
+            println!("  {mode:<12} threads={threads}  {cps:10.0} calls/s");
+            rows.push(vec![
+                mode.to_string(),
+                threads.to_string(),
+                format!("{cps:.1}"),
+            ]);
+            points.push((threads as f64, cps));
+            results.push(Value::Obj(vec![
+                ("mode".into(), s(mode)),
+                ("threads".into(), n(threads as f64)),
+                ("calls_per_sec".into(), n(cps)),
+            ]));
+        }
+        series.push(Series::new(mode, points));
+    }
+
+    // headline ratio: fast lane vs single lane at each thread count
+    let cps_of = |mode: &str, threads: usize| {
+        results
+            .iter()
+            .find(|r| {
+                r.get("mode").and_then(Value::as_str) == Some(mode)
+                    && r.get("threads").and_then(Value::as_i64) == Some(threads as i64)
+            })
+            .and_then(|r| r.get("calls_per_sec").and_then(Value::as_f64))
+            .unwrap_or(0.0)
+    };
+    let mut speedups = Vec::new();
+    for &threads in THREADS {
+        let single = cps_of("single_lane", threads);
+        let fast = cps_of("fast_lane", threads);
+        let ratio = if single > 0.0 { fast / single } else { 0.0 };
+        println!("  speedup at {threads} thread(s): {ratio:.2}x");
+        speedups.push(Value::Obj(vec![
+            ("threads".into(), n(threads as f64)),
+            ("fast_over_single".into(), n(ratio)),
+        ]));
+    }
+
+    let fig = Figure {
+        stem: "throughput_scaling".into(),
+        title: "tuned calls/sec vs application threads (single lane vs fast lane)".into(),
+        header: vec!["mode".into(), "threads".into(), "calls_per_sec".into()],
+        rows,
+        series,
+        log_y: false,
+    };
+    let rendered = fig.emit().expect("emit");
+    println!("{rendered}");
+
+    let report = Value::Obj(vec![
+        ("bench".into(), s("throughput_scaling")),
+        ("engine".into(), s("mock(sleep)")),
+        ("exec_us".into(), n(exec_us as f64)),
+        ("calls_per_thread".into(), n(calls as f64)),
+        ("results".into(), Value::Arr(results)),
+        ("speedups".into(), Value::Arr(speedups)),
+    ]);
+    jitune::report::write_figure_file("throughput_scaling.json", &report.to_json_pretty())
+        .expect("json");
+    println!("wrote target/figures/throughput_scaling.{{csv,txt,json}}");
+}

@@ -32,7 +32,7 @@ pub use key::ProblemKey;
 pub use measurement::{EnergyModel, Metric, Rdtsc, WallClock};
 pub use record::{History, TuningReport, VariantRecord};
 pub use search::{Anneal, HillClimb, RandomSearch, SearchStrategy, Sweep};
-pub use state::{Decision, Phase, TuningState};
+pub use state::{Decision, Phase, TuningState, WinnerSnapshot};
 
 use crate::util::json::Value;
 
@@ -84,6 +84,22 @@ impl Autotuner {
     /// use them for other kernels".
     pub fn tuned_value(&self, key: &ProblemKey) -> Option<i64> {
         self.states.get(key).and_then(|s| s.tuned_value())
+    }
+
+    /// Discard a problem's tuning results and start a fresh exploration on
+    /// its next call — the serving layer's retune/demotion hook (callers
+    /// must also invalidate any published fast-lane entry). Returns
+    /// whether state existed.
+    pub fn retune(&mut self, key: &ProblemKey) -> bool {
+        match self.states.remove(key) {
+            Some(old) => {
+                let values = old.values().to_vec();
+                let strategy = (self.factory)(&values);
+                self.states.insert(key.clone(), TuningState::new(values, strategy));
+                true
+            }
+            None => false,
+        }
     }
 
     /// Number of problems with tuner state.
@@ -211,6 +227,28 @@ mod tests {
         }
         assert_eq!(t.tuned_value(&k), Some(20));
         assert_eq!(t.peek(&k).unwrap().phase(), Phase::Tuned);
+    }
+
+    #[test]
+    fn retune_resets_to_exploring() {
+        let mut t = Autotuner::sweep();
+        let k = key(8);
+        let costs = [3.0, 1.0];
+        loop {
+            let st = t.state(&k, &[10, 20]);
+            match st.decide() {
+                Decision::Explore(i) => st.report(i, costs[i]),
+                Decision::Finalize(i) => st.confirm_finalized(i),
+                Decision::Use(_) => break,
+            }
+        }
+        assert_eq!(t.tuned_value(&k), Some(20));
+        assert!(t.retune(&k));
+        assert_eq!(t.tuned_value(&k), None);
+        assert_eq!(t.peek(&k).unwrap().phase(), Phase::Exploring);
+        // values survive the reset; the sweep starts over
+        assert_eq!(t.peek(&k).unwrap().values(), &[10, 20]);
+        assert!(!t.retune(&ProblemKey::new("other", "p", "f32[1]")));
     }
 
     #[test]

@@ -33,6 +33,17 @@ pub enum Decision {
     Use(usize),
 }
 
+/// Publishable snapshot of a tuned problem's winner — what the
+/// coordinator's fast lane needs to publish an immutable `TunedEntry`
+/// without reaching back into mutable tuner state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WinnerSnapshot {
+    /// Candidate index of the winner (into the parameter-value array).
+    pub index: usize,
+    /// Winning parameter value.
+    pub value: i64,
+}
+
 /// Lifecycle phase of a tuning problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -173,6 +184,22 @@ impl TuningState {
         }
     }
 
+    /// Immutable winner snapshot, available once `Tuned` — the fast
+    /// lane's publication source.
+    pub fn winner_snapshot(&self) -> Option<WinnerSnapshot> {
+        match self.phase {
+            Phase::Tuned => {
+                self.winner.map(|i| WinnerSnapshot { index: i, value: self.values[i] })
+            }
+            _ => None,
+        }
+    }
+
+    /// Candidate parameter values, declaration order.
+    pub fn values(&self) -> &[i64] {
+        &self.values
+    }
+
     /// Parameter value of candidate `idx`.
     pub fn value_of(&self, idx: usize) -> i64 {
         self.values[idx]
@@ -299,6 +326,15 @@ mod tests {
     fn empty_values_is_failed() {
         let st = sweep_state(&[]);
         assert_eq!(st.phase(), Phase::Failed);
+    }
+
+    #[test]
+    fn winner_snapshot_only_when_tuned() {
+        let mut st = sweep_state(&[2, 4, 8]);
+        assert_eq!(st.winner_snapshot(), None);
+        drive(&mut st, &[3.0, 1.0, 2.0], 4); // 3 explores + finalize
+        assert_eq!(st.winner_snapshot(), Some(WinnerSnapshot { index: 1, value: 4 }));
+        assert_eq!(st.values(), &[2, 4, 8]);
     }
 
     #[test]

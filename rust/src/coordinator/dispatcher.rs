@@ -1,13 +1,16 @@
 //! The call dispatcher — `__clang_jit` with autotuning (paper §3.2).
 
+use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, WallClock};
+use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, TuningState, WallClock};
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
 use crate::runtime::{CacheStats, CompileCache, Engine};
 use crate::tensor::HostTensor;
 
+use super::fastlane::{self, FastLane};
 use super::registry::KernelRegistry;
 use super::stats::CoordStats;
 
@@ -43,26 +46,47 @@ pub struct CallOutcome {
     pub total: Duration,
 }
 
-/// The dispatcher: owns the registry, the JIT compile cache, the
-/// autotuner and the measurement metric. Single-threaded by design (PJRT
-/// pinning); the [`super::server::Coordinator`] provides the
-/// multi-threaded facade.
 /// Cached per-problem call metadata — built on a problem's first call so
 /// the steady-state path performs no manifest walks and no allocations
-/// beyond the reply itself (§Perf).
+/// beyond the reply itself (§Perf). Keyed by [`fastlane::plan_hash`] so
+/// the hot-path lookup needs neither a signature-string join nor a
+/// `(String, String)` key clone; the plan verifies kernel + shapes on
+/// hit, so a hash collision degrades to a bucket scan, never a wrong
+/// plan.
 struct CallPlan {
+    kernel: String,
+    input_shapes: Vec<Vec<usize>>,
     problem_idx: usize,
     key: ProblemKey,
     values: Vec<i64>,
+    /// Set when a publication attempt found the engine's executables
+    /// thread-pinned (PJRT). Shareability never changes at run time, so
+    /// once set the steady-state leader path stops re-attempting the
+    /// fast-lane self-heal — keeping the hot path allocation-free for
+    /// non-shareable backends too.
+    unshareable: bool,
 }
 
+impl CallPlan {
+    fn matches(&self, kernel: &str, inputs: &[HostTensor]) -> bool {
+        fastlane::shapes_match(&self.kernel, &self.input_shapes, kernel, inputs)
+    }
+}
+
+/// The dispatcher: owns the registry, the JIT compile cache, the
+/// autotuner and the measurement metric. Single-threaded by design (PJRT
+/// pinning); the [`super::server::Coordinator`] provides the
+/// multi-threaded facade, and publishes tuned winners into the attached
+/// [`FastLane`] (when the engine's executables are shareable) so
+/// steady-state calls can bypass the leader entirely.
 pub struct Dispatcher {
     registry: KernelRegistry,
     cache: CompileCache,
     tuner: Autotuner,
     metric: Box<dyn Metric>,
     stats: CoordStats,
-    plans: std::collections::HashMap<(String, String), CallPlan>,
+    plans: HashMap<u64, Vec<CallPlan>>,
+    fast_lane: Option<Arc<FastLane>>,
 }
 
 impl Dispatcher {
@@ -85,8 +109,58 @@ impl Dispatcher {
             tuner,
             metric,
             stats: CoordStats::new(),
-            plans: std::collections::HashMap::new(),
+            plans: HashMap::new(),
+            fast_lane: None,
         }
+    }
+
+    /// Attach the published-winner fast lane (the coordinator does this
+    /// when it spawns the leader). Problems tuned before attachment are
+    /// re-published lazily on their next leader-lane call.
+    pub fn set_fast_lane(&mut self, lane: Arc<FastLane>) {
+        self.fast_lane = Some(lane);
+    }
+
+    /// The attached fast lane, if any.
+    pub fn fast_lane(&self) -> Option<&Arc<FastLane>> {
+        self.fast_lane.as_ref()
+    }
+
+    /// Resolve the cached call plan for (kernel, inputs), building it on
+    /// the problem's first call. Hit path: one hash + bucket scan, no
+    /// allocation.
+    fn plan_slot(&mut self, kernel: &str, inputs: &[HostTensor]) -> Result<(u64, usize)> {
+        let hash = fastlane::plan_hash(kernel, inputs);
+        if let Some(bucket) = self.plans.get(&hash) {
+            if let Some(slot) = bucket.iter().position(|p| p.matches(kernel, inputs)) {
+                return Ok((hash, slot));
+            }
+        }
+        // First call of this problem: resolve against the manifest. The
+        // allocations below happen once per problem, not per call (§Perf).
+        let (problem_idx, key, values) = {
+            let problem = self.registry.problem_for_inputs(kernel, inputs)?;
+            let idx = self
+                .registry
+                .manifest()
+                .problems
+                .iter()
+                .position(|q| std::ptr::eq(q, problem))
+                .expect("problem from this manifest");
+            let values: Vec<i64> = problem.variants.iter().map(|v| v.value).collect();
+            (idx, ProblemKey::for_problem(problem), values)
+        };
+        let plan = CallPlan {
+            kernel: kernel.to_string(),
+            input_shapes: inputs.iter().map(|t| t.shape().to_vec()).collect(),
+            problem_idx,
+            key,
+            values,
+            unshareable: false,
+        };
+        let bucket = self.plans.entry(hash).or_default();
+        bucket.push(plan);
+        Ok((hash, bucket.len() - 1))
     }
 
     /// Dispatch one kernel call: the `__clang_jit` entry point.
@@ -96,72 +170,62 @@ impl Dispatcher {
     /// autotuning problem).
     pub fn call(&mut self, kernel: &str, inputs: &[HostTensor]) -> Result<CallOutcome> {
         let t0 = Instant::now();
-        // Resolve the cached call plan (built on the problem's first call
-        // — steady-state calls do no manifest walks, §Perf).
-        let sig = inputs.iter().map(HostTensor::signature).collect::<Vec<_>>().join(",");
-        let plan_key = (kernel.to_string(), sig);
-        if !self.plans.contains_key(&plan_key) {
-            let (idx, problem) = {
-                let p = self.registry.problem_for_inputs(kernel, inputs)?;
-                let idx = self
-                    .registry
-                    .manifest()
-                    .problems
-                    .iter()
-                    .position(|q| std::ptr::eq(q, p))
-                    .expect("problem from this manifest");
-                (idx, p)
-            };
-            let plan = CallPlan {
-                problem_idx: idx,
-                key: ProblemKey::for_problem(problem),
-                values: problem.variants.iter().map(|v| v.value).collect(),
-            };
-            self.plans.insert(plan_key.clone(), plan);
-        }
-        let (pidx, key, values) = {
-            let plan = &self.plans[&plan_key];
-            (plan.problem_idx, plan.key.clone(), plan.values.clone())
-        };
+        let (hash, slot) = self.plan_slot(kernel, inputs)?;
 
         // Failure-retry loop: a failing variant is excluded and the next
         // decision is consulted, until the call succeeds or every
         // candidate is dead.
         loop {
             let decision = {
-                let st = self.tuner.state(&key, &values);
+                let plan = &self.plans[&hash][slot];
+                let st = self.tuner.state(&plan.key, &plan.values);
                 if st.phase() == Phase::Failed {
                     return Err(Error::Autotune(format!(
-                        "every variant of {key} failed; cannot execute"
+                        "every variant of {} failed; cannot execute",
+                        plan.key
                     )));
                 }
                 st.decide()
             };
             match decision {
                 Decision::Explore(i) => {
-                    let variant = self.registry.manifest().problems[pidx].variants[i].clone();
+                    let (key, variant) = {
+                        let plan = &self.plans[&hash][slot];
+                        let manifest = self.registry.manifest();
+                        (plan.key.clone(), manifest.problems[plan.problem_idx].variants[i].clone())
+                    };
                     match self.explore(&key, &variant, i, inputs, t0) {
                         Ok(outcome) => return Ok(outcome),
                         Err(e) => {
                             log::warn!("variant {} failed during tuning: {e}", variant.id);
                             self.stats.failure(kernel);
-                            self.tuner.state(&key, &values).report_failure(i);
+                            self.candidate_failed(hash, slot, i);
                             continue;
                         }
                     }
                 }
                 Decision::Finalize(i) => {
-                    let problem = &self.registry.manifest().problems[pidx];
-                    let variant = problem.variants[i].clone();
-                    let all_ids: Vec<String> =
-                        problem.variants.iter().map(|v| v.id.clone()).collect();
+                    let (variant, all_ids) = {
+                        let plan = &self.plans[&hash][slot];
+                        let problem = &self.registry.manifest().problems[plan.problem_idx];
+                        let all_ids: Vec<String> =
+                            problem.variants.iter().map(|v| v.id.clone()).collect();
+                        (problem.variants[i].clone(), all_ids)
+                    };
                     match self.finalize(&variant, &all_ids, inputs, t0) {
                         Ok(mut outcome) => {
-                            self.tuner.state(&key, &values).confirm_finalized(i);
+                            {
+                                let plan = &self.plans[&hash][slot];
+                                self.tuner.state(&plan.key, &plan.values).confirm_finalized(i);
+                            }
+                            // The winner is compiled and confirmed: hand a
+                            // shareable executable to caller threads.
+                            self.publish_winner(hash, slot);
                             self.stats.finalized(kernel, outcome.total);
                             outcome.route = CallRoute::Finalized;
                             log::info!(
-                                "{key} tuned: value={} ({})",
+                                "{} tuned: value={} ({})",
+                                self.plans[&hash][slot].key,
                                 outcome.value,
                                 outcome.variant_id
                             );
@@ -170,15 +234,18 @@ impl Dispatcher {
                         Err(e) => {
                             log::warn!("winner {} failed finalization: {e}", variant.id);
                             self.stats.failure(kernel);
-                            self.tuner.state(&key, &values).report_failure(i);
+                            self.candidate_failed(hash, slot, i);
                             continue;
                         }
                     }
                 }
                 Decision::Use(i) => {
-                    // §Perf fast path: no variant clone — disjoint field
-                    // borrows let the executable run straight off the
-                    // cache while the registry stays immutably borrowed.
+                    // §Perf fast path: no allocation before the reply —
+                    // the hashed plan lookup replaced the signature join,
+                    // and disjoint field borrows let the executable run
+                    // straight off the cache while the registry stays
+                    // immutably borrowed.
+                    let pidx = self.plans[&hash][slot].problem_idx;
                     let manifest = self.registry.manifest();
                     let variant = &manifest.problems[pidx].variants[i];
                     let (exe, compiled) = self.cache.get_or_compile(manifest, variant)?;
@@ -196,8 +263,64 @@ impl Dispatcher {
                         total: t0.elapsed(),
                     };
                     self.stats.tuned_call(kernel, outcome.total);
+                    // Self-heal the published entry: republish when the
+                    // lane lost it (attached late, warm start, or a
+                    // transient fast-lane failure) — unless the engine
+                    // already proved unshareable for this problem.
+                    let needs_publish = match &self.fast_lane {
+                        Some(lane) => {
+                            !self.plans[&hash][slot].unshareable
+                                && !lane.contains(kernel, inputs)
+                        }
+                        None => false,
+                    };
+                    if needs_publish {
+                        self.publish_winner(hash, slot);
+                    }
                     return Ok(outcome);
                 }
+            }
+        }
+    }
+
+    /// Report a candidate failure to the tuner and unpublish any fast-lane
+    /// entry for the problem (a demoted winner must not keep serving).
+    fn candidate_failed(&mut self, hash: u64, slot: usize, idx: usize) {
+        let plan = &self.plans[&hash][slot];
+        self.tuner.state(&plan.key, &plan.values).report_failure(idx);
+        if let Some(lane) = &self.fast_lane {
+            lane.invalidate(&plan.kernel, &plan.input_shapes);
+        }
+    }
+
+    /// Publish the tuned winner's shareable executable into the fast
+    /// lane. No-op when no lane is attached, the problem is not `Tuned`,
+    /// or the engine's executables are thread-pinned (PJRT).
+    fn publish_winner(&mut self, hash: u64, slot: usize) {
+        let Some(lane) = self.fast_lane.clone() else { return };
+        let (kernel, shapes, variant_id, value) = {
+            let plan = &self.plans[&hash][slot];
+            let Some(win) = self.tuner.peek(&plan.key).and_then(TuningState::winner_snapshot)
+            else {
+                return;
+            };
+            let variant = &self.registry.manifest().problems[plan.problem_idx].variants[win.index];
+            debug_assert_eq!(variant.value, win.value);
+            (plan.kernel.clone(), plan.input_shapes.clone(), variant.id.clone(), variant.value)
+        };
+        match self.cache.shared_handle(&variant_id) {
+            Some(exe) => {
+                log::debug!("fast lane: published {variant_id} for {kernel}");
+                lane.publish(&kernel, shapes, variant_id, value, exe);
+            }
+            None => {
+                // Shareability is an engine property and never changes
+                // at run time: remember the miss so the steady-state
+                // leader path stops re-attempting publication.
+                if let Some(bucket) = self.plans.get_mut(&hash) {
+                    bucket[slot].unshareable = true;
+                }
+                log::debug!("fast lane: {variant_id} is thread-pinned; leader keeps serving");
             }
         }
     }
@@ -263,6 +386,32 @@ impl Dispatcher {
             exec_cost: cost,
             total: t0.elapsed(),
         })
+    }
+
+    /// Restart tuning for a problem: tuner state is reset to exploring,
+    /// resident executables are evicted (every candidate pays its compile
+    /// again — only HLO text persists, as in the paper), and the
+    /// published fast-lane entry is invalidated so callers return to the
+    /// leader until a new winner is finalized. Returns whether tuner
+    /// state existed.
+    pub fn retune(&mut self, kernel: &str, size: i64) -> Result<bool> {
+        let (key, kernel_name, shapes, variant_ids) = {
+            let problem = self.registry.problem(kernel, size)?;
+            let shapes = problem.variants[0].input_shapes()?;
+            let ids: Vec<String> = problem.variants.iter().map(|v| v.id.clone()).collect();
+            (ProblemKey::for_problem(problem), problem.kernel.clone(), shapes, ids)
+        };
+        let existed = self.tuner.retune(&key);
+        for id in &variant_ids {
+            self.cache.evict(id);
+        }
+        if let Some(lane) = &self.fast_lane {
+            lane.invalidate(&kernel_name, &shapes);
+        }
+        if existed {
+            log::info!("retune: {key} reset to exploring; published entry invalidated");
+        }
+        Ok(existed)
     }
 
     /// Tuned parameter value for a kernel at a problem size, once tuned
@@ -353,8 +502,13 @@ impl Dispatcher {
                 skipped += 1;
             }
         }
-        let imported =
-            self.tuner.import_state(&crate::util::json::Value::Arr(valid))?;
+        // Imported winners replace live tuning state wholesale; published
+        // entries may describe superseded winners, so drop them all — the
+        // leader republishes lazily after each import's finalization.
+        if let Some(lane) = &self.fast_lane {
+            lane.clear();
+        }
+        let imported = self.tuner.import_state(&crate::util::json::Value::Arr(valid))?;
         Ok((imported, skipped))
     }
 }
@@ -528,5 +682,136 @@ mod tests {
         assert_eq!(s.kernel("k").unwrap().finalized, 1);
         assert_eq!(s.kernel("k").unwrap().tuned, 3);
         assert_eq!(s.total_calls(), 6);
+    }
+
+    #[test]
+    fn fast_lane_published_on_finalize() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        let mut d = dispatcher(spec);
+        let lane = Arc::new(FastLane::new());
+        d.set_fast_lane(lane.clone());
+        assert!(lane.lookup("k", &inputs8()).is_none());
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        // finalization published the winner; it executes off-leader
+        let entry = lane.lookup("k", &inputs8()).expect("published on finalize");
+        assert_eq!(entry.variant_id(), "k.b.n8");
+        let out = entry.call(&inputs8(), Instant::now()).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+        assert!(out.output.data().iter().all(|&x| x == 2.0));
+    }
+
+    #[test]
+    fn retune_invalidates_published_entry_and_reexplores() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        let mut d = dispatcher(spec);
+        let lane = Arc::new(FastLane::new());
+        d.set_fast_lane(lane.clone());
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert!(lane.lookup("k", &inputs8()).is_some());
+        assert!(d.retune("k", 8).unwrap());
+        assert!(lane.lookup("k", &inputs8()).is_none(), "retune unpublishes");
+        assert_eq!(d.tuned_value("k", 8), None);
+        let o = d.call("k", &inputs8()).unwrap();
+        assert_eq!(o.route, CallRoute::Explored);
+        assert!(o.compiled, "retune evicted the resident winner");
+        // tuning completes again and republishes
+        for _ in 0..2 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert!(lane.lookup("k", &inputs8()).is_some(), "republished");
+        // unknown problems report an error, untuned ones Ok(false)
+        assert!(d.retune("nope", 8).is_err());
+        assert!(!d.retune("k", 16).unwrap());
+    }
+
+    #[test]
+    fn thread_pinned_engine_never_publishes_but_keeps_serving() {
+        // An engine whose kernels keep the default `shared() -> None`
+        // (the PJRT shape): the lane must stay empty, steady-state calls
+        // must keep working through the leader path, and the plan
+        // remembers the miss so publication is not re-attempted.
+        struct PinnedKernel {
+            id: String,
+            shape: Vec<usize>,
+        }
+        impl crate::runtime::CompiledKernel for PinnedKernel {
+            fn execute(&self, _inputs: &[HostTensor]) -> crate::Result<HostTensor> {
+                Ok(HostTensor::full(&self.shape, 7.0))
+            }
+            fn variant_id(&self) -> &str {
+                &self.id
+            }
+        }
+        struct PinnedEngine;
+        impl Engine for PinnedEngine {
+            fn compile(
+                &self,
+                variant: &crate::manifest::Variant,
+                _hlo: &str,
+            ) -> crate::Result<Box<dyn crate::runtime::CompiledKernel>> {
+                Ok(Box::new(PinnedKernel {
+                    id: variant.id.clone(),
+                    shape: variant.output_shape()?,
+                }))
+            }
+            fn name(&self) -> &str {
+                "pinned"
+            }
+        }
+
+        let manifest = crate::manifest::tests::sample_manifest().unwrap();
+        let mut d = Dispatcher::new(KernelRegistry::new(manifest), Box::new(PinnedEngine));
+        let lane = Arc::new(FastLane::new());
+        d.set_fast_lane(lane.clone());
+        for _ in 0..6 {
+            let o = d.call("k", &inputs8()).unwrap();
+            assert!(o.output.data().iter().all(|&x| x == 7.0));
+        }
+        assert_eq!(lane.published(), 0, "thread-pinned executables never publish");
+        assert_eq!(d.stats().kernel("k").unwrap().tuned, 3, "leader keeps serving");
+    }
+
+    #[test]
+    fn lane_republished_lazily_after_late_attach() {
+        let mut d = dispatcher(MockSpec::default());
+        for _ in 0..4 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        // lane attached after tuning finished: the next steady call
+        // self-heals the missing entry
+        let lane = Arc::new(FastLane::new());
+        d.set_fast_lane(lane.clone());
+        assert!(lane.lookup("k", &inputs8()).is_none());
+        let o = d.call("k", &inputs8()).unwrap();
+        assert_eq!(o.route, CallRoute::Tuned);
+        assert!(lane.lookup("k", &inputs8()).is_some(), "lazy republish");
+    }
+
+    #[test]
+    fn failed_candidate_never_published() {
+        // b would be the fastest, but it fails at execution during
+        // tuning: it is excluded and the published winner must be a.
+        let mut spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        spec.fail_execute.insert("k.b.n8".into());
+        let mut d = dispatcher(spec);
+        let lane = Arc::new(FastLane::new());
+        d.set_fast_lane(lane.clone());
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(1), "failed variant cannot win");
+        let entry = lane.lookup("k", &inputs8()).expect("winner published");
+        assert_eq!(entry.variant_id(), "k.a.n8");
+        assert_eq!(d.stats().total_failures(), 1);
     }
 }

@@ -1,0 +1,507 @@
+//! The tuned-path fast lane: a read-mostly map of published winners.
+//!
+//! Once a problem reaches `Phase::Tuned`, the leader publishes an
+//! immutable [`TunedEntry`] — the winning variant plus a `Send + Sync`
+//! handle to its finalized executable — into this map. Application
+//! threads consult it from [`super::server::CoordinatorHandle::call`]
+//! *before* touching the leader's channel: a hit executes right on the
+//! calling thread, so steady-state throughput scales with application
+//! threads instead of being capped at one leader-serialized call at a
+//! time. Misses (exploring / finalizing / retuned / non-shareable
+//! backend) fall through to the leader exactly as before, which keeps the
+//! paper's "compilation protected by a mutex" guarantee: only the leader
+//! ever compiles or measures.
+//!
+//! Concurrency model: `RwLock<HashMap>` with entries behind `Arc`. Reads
+//! hold the lock only for the lookup (the returned entry is an `Arc`
+//! clone), writes happen once per tuning lifecycle event (publish,
+//! retune, demotion), so contention on the lock is negligible. Call
+//! statistics use sharded atomic counters so concurrent recorders do not
+//! bounce a single cache line.
+//!
+//! Invalidation: an in-flight call that obtained an entry just before its
+//! invalidation may still complete on the old executable — equivalent to
+//! a call that started a moment earlier, and the executable stays alive
+//! through the `Arc`. New lookups miss immediately.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{BTreeMap, HashMap};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::dispatcher::{CallOutcome, CallRoute};
+use crate::error::Result;
+use crate::runtime::SharedKernel;
+use crate::tensor::HostTensor;
+use crate::util::json::{n, Value};
+
+/// Hash identifying a (kernel, argument-signature) call plan without
+/// allocating: the dispatcher and the fast lane key their maps on this.
+/// Entries verify the full key on hit, so a collision degrades to a miss,
+/// never to a wrong kernel.
+pub fn plan_hash(kernel: &str, inputs: &[HostTensor]) -> u64 {
+    let mut h = DefaultHasher::new();
+    kernel.hash(&mut h);
+    inputs.len().hash(&mut h);
+    for t in inputs {
+        t.shape().hash(&mut h);
+    }
+    h.finish()
+}
+
+/// Whether a stored (kernel, shapes) key serves a call with these inputs
+/// — the single definition used by both the dispatcher's `CallPlan` and
+/// [`TunedEntry`], so the two maps can never disagree about which calls
+/// a key serves.
+pub(crate) fn shapes_match(
+    stored_kernel: &str,
+    stored_shapes: &[Vec<usize>],
+    kernel: &str,
+    inputs: &[HostTensor],
+) -> bool {
+    stored_kernel == kernel
+        && stored_shapes.len() == inputs.len()
+        && stored_shapes.iter().zip(inputs).all(|(s, t)| s.as_slice() == t.shape())
+}
+
+/// Same hash computed from stored shapes (publication/invalidation side).
+/// Must agree with [`plan_hash`]: `Vec<usize>` hashes as its slice.
+fn shape_hash(kernel: &str, shapes: &[Vec<usize>]) -> u64 {
+    let mut h = DefaultHasher::new();
+    kernel.hash(&mut h);
+    shapes.len().hash(&mut h);
+    for shape in shapes {
+        shape.as_slice().hash(&mut h);
+    }
+    h.finish()
+}
+
+const LANE_SHARDS: usize = 8;
+
+/// One counter shard, alone on its cache line so concurrent recorders on
+/// different threads do not false-share.
+#[repr(align(64))]
+struct LaneShard {
+    hits: AtomicU64,
+    nanos: AtomicU64,
+}
+
+/// Sharded hit/latency counters for one kernel family. Threads are
+/// assigned shards round-robin on first use (thread-local cache), so the
+/// common case is an uncontended `fetch_add` on a private line.
+pub struct LaneCounters {
+    shards: [LaneShard; LANE_SHARDS],
+}
+
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static SHARD_INDEX: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % LANE_SHARDS;
+}
+
+impl LaneCounters {
+    fn new() -> LaneCounters {
+        LaneCounters {
+            shards: std::array::from_fn(|_| LaneShard {
+                hits: AtomicU64::new(0),
+                nanos: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    fn record(&self, total: Duration) {
+        let shard = &self.shards[SHARD_INDEX.with(|i| *i)];
+        shard.hits.fetch_add(1, Ordering::Relaxed);
+        shard.nanos.fetch_add(total.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    /// (hit count, summed latency) across shards.
+    pub fn totals(&self) -> (u64, Duration) {
+        let mut hits = 0u64;
+        let mut nanos = 0u64;
+        for shard in &self.shards {
+            hits += shard.hits.load(Ordering::Relaxed);
+            nanos += shard.nanos.load(Ordering::Relaxed);
+        }
+        (hits, Duration::from_nanos(nanos))
+    }
+}
+
+/// An immutable published winner: everything a caller thread needs to
+/// execute a tuned problem without the leader.
+pub struct TunedEntry {
+    kernel: String,
+    input_shapes: Vec<Vec<usize>>,
+    variant_id: String,
+    value: i64,
+    exe: Arc<dyn SharedKernel>,
+    counters: Arc<LaneCounters>,
+}
+
+impl TunedEntry {
+    /// Winning variant id.
+    pub fn variant_id(&self) -> &str {
+        &self.variant_id
+    }
+
+    /// Winning parameter value.
+    pub fn value(&self) -> i64 {
+        self.value
+    }
+
+    /// Input shapes this entry serves (the lane's invalidation key).
+    pub fn input_shapes(&self) -> &[Vec<usize>] {
+        &self.input_shapes
+    }
+
+    fn matches(&self, kernel: &str, inputs: &[HostTensor]) -> bool {
+        shapes_match(&self.kernel, &self.input_shapes, kernel, inputs)
+    }
+
+    /// Execute the published winner on the calling thread. `t0` is the
+    /// caller's call-entry instant so end-to-end latency stats line up
+    /// with the leader lane's. Stats are recorded only on success — a
+    /// failing call falls back to the leader and is counted there.
+    pub fn call(&self, inputs: &[HostTensor], t0: Instant) -> Result<CallOutcome> {
+        let e0 = Instant::now();
+        let output = self.exe.execute(inputs)?;
+        let exec = e0.elapsed();
+        let total = t0.elapsed();
+        self.counters.record(total);
+        Ok(CallOutcome {
+            output,
+            variant_id: self.variant_id.clone(),
+            value: self.value,
+            route: CallRoute::Tuned,
+            compiled: false,
+            exec_cost: exec.as_secs_f64(),
+            total,
+        })
+    }
+}
+
+fn read_lock<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_lock<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(|e| e.into_inner())
+}
+
+fn mutex_lock<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The published-winner map shared between the leader (writer) and every
+/// [`super::server::CoordinatorHandle`] (readers).
+pub struct FastLane {
+    /// plan hash → entries (a `Vec` bucket absorbs hash collisions;
+    /// entries verify kernel + shapes on hit).
+    entries: RwLock<HashMap<u64, Vec<Arc<TunedEntry>>>>,
+    /// Per-kernel counters, kept across invalidations so stats survive
+    /// retunes. `Mutex` (not `RwLock`): touched only on publish and on
+    /// stats rendering.
+    counters: Mutex<BTreeMap<String, Arc<LaneCounters>>>,
+}
+
+impl FastLane {
+    /// An empty lane.
+    pub fn new() -> FastLane {
+        FastLane { entries: RwLock::new(HashMap::new()), counters: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Look up the published entry serving `kernel` called with `inputs`.
+    /// This is the per-call read path: one hash, one brief read lock, one
+    /// `Arc` clone.
+    pub fn lookup(&self, kernel: &str, inputs: &[HostTensor]) -> Option<Arc<TunedEntry>> {
+        let map = read_lock(&self.entries);
+        map.get(&plan_hash(kernel, inputs))?
+            .iter()
+            .find(|e| e.matches(kernel, inputs))
+            .cloned()
+    }
+
+    /// Whether an entry is published for this call shape.
+    pub fn contains(&self, kernel: &str, inputs: &[HostTensor]) -> bool {
+        self.lookup(kernel, inputs).is_some()
+    }
+
+    /// Publish (or replace) the winner for a (kernel, shapes) problem.
+    /// Leader-only.
+    pub fn publish(
+        &self,
+        kernel: &str,
+        input_shapes: Vec<Vec<usize>>,
+        variant_id: String,
+        value: i64,
+        exe: Arc<dyn SharedKernel>,
+    ) {
+        let counters = mutex_lock(&self.counters)
+            .entry(kernel.to_string())
+            .or_insert_with(|| Arc::new(LaneCounters::new()))
+            .clone();
+        let hash = shape_hash(kernel, &input_shapes);
+        let entry = Arc::new(TunedEntry {
+            kernel: kernel.to_string(),
+            input_shapes,
+            variant_id,
+            value,
+            exe,
+            counters,
+        });
+        let mut map = write_lock(&self.entries);
+        let bucket = map.entry(hash).or_default();
+        bucket.retain(|e| !(e.kernel == entry.kernel && e.input_shapes == entry.input_shapes));
+        bucket.push(entry);
+    }
+
+    /// Drop the published entry for a (kernel, shapes) problem — retune,
+    /// demotion, or a winner failing at execution. Returns whether an
+    /// entry was removed.
+    pub fn invalidate(&self, kernel: &str, input_shapes: &[Vec<usize>]) -> bool {
+        let hash = shape_hash(kernel, input_shapes);
+        let mut map = write_lock(&self.entries);
+        let Some(bucket) = map.get_mut(&hash) else { return false };
+        let before = bucket.len();
+        bucket.retain(|e| !(e.kernel == kernel && e.input_shapes.as_slice() == input_shapes));
+        let removed = bucket.len() != before;
+        if bucket.is_empty() {
+            map.remove(&hash);
+        }
+        removed
+    }
+
+    /// Remove exactly this entry (pointer identity). Used by callers
+    /// that observed the entry failing: invalidating by key instead
+    /// could clobber a newer, healthy entry the leader republished after
+    /// the failing caller's lookup. Returns whether the entry was still
+    /// published.
+    pub fn invalidate_entry(&self, entry: &Arc<TunedEntry>) -> bool {
+        let hash = shape_hash(&entry.kernel, &entry.input_shapes);
+        let mut map = write_lock(&self.entries);
+        let Some(bucket) = map.get_mut(&hash) else { return false };
+        let before = bucket.len();
+        bucket.retain(|e| !Arc::ptr_eq(e, entry));
+        let removed = bucket.len() != before;
+        if bucket.is_empty() {
+            map.remove(&hash);
+        }
+        removed
+    }
+
+    /// Drop every published entry (state import / bulk reset).
+    pub fn clear(&self) {
+        write_lock(&self.entries).clear();
+    }
+
+    /// Number of published entries.
+    pub fn published(&self) -> usize {
+        read_lock(&self.entries).values().map(Vec::len).sum()
+    }
+
+    /// Per-kernel (hits, mean latency seconds) snapshot, sorted by kernel.
+    pub fn snapshot(&self) -> Vec<(String, u64, f64)> {
+        mutex_lock(&self.counters)
+            .iter()
+            .map(|(kernel, c)| {
+                let (hits, total) = c.totals();
+                let mean = if hits > 0 { total.as_secs_f64() / hits as f64 } else { 0.0 };
+                (kernel.clone(), hits, mean)
+            })
+            .collect()
+    }
+
+    /// Human-readable rendering for the coordinator's stats output.
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = format!("fast lane: {} published entr(ies)\n", self.published());
+        for (kernel, hits, mean) in snap {
+            out.push_str(&format!(
+                "  {kernel}: hits={hits} mean={:.3}ms\n",
+                mean * 1e3
+            ));
+        }
+        out
+    }
+
+    /// JSON export for machine-readable stats.
+    pub fn to_json(&self) -> Value {
+        let kernels = self
+            .snapshot()
+            .into_iter()
+            .map(|(kernel, hits, mean)| {
+                (
+                    kernel,
+                    Value::Obj(vec![
+                        ("hits".into(), n(hits as f64)),
+                        ("mean_latency_s".into(), n(mean)),
+                    ]),
+                )
+            })
+            .collect();
+        Value::Obj(vec![
+            ("published".into(), n(self.published() as f64)),
+            ("kernels".into(), Value::Obj(kernels)),
+        ])
+    }
+}
+
+impl Default for FastLane {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    struct FixedKernel {
+        id: String,
+        value: f32,
+        fail: bool,
+    }
+
+    impl SharedKernel for FixedKernel {
+        fn execute(&self, _inputs: &[HostTensor]) -> Result<HostTensor> {
+            if self.fail {
+                return Err(Error::Xla("boom".into()));
+            }
+            Ok(HostTensor::full(&[2, 2], self.value))
+        }
+
+        fn variant_id(&self) -> &str {
+            &self.id
+        }
+    }
+
+    fn publish_fixed(lane: &FastLane, kernel: &str, dim: usize, value: f32, fail: bool) {
+        lane.publish(
+            kernel,
+            vec![vec![dim, dim]],
+            format!("{kernel}.v{value}"),
+            value as i64,
+            Arc::new(FixedKernel { id: format!("{kernel}.v{value}"), value, fail }),
+        );
+    }
+
+    #[test]
+    fn lookup_hits_only_matching_kernel_and_shapes() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "k", 2, 7.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).expect("published");
+        assert_eq!(entry.value(), 7);
+        assert!(lane.lookup("other", &inputs).is_none());
+        assert!(lane.lookup("k", &[HostTensor::zeros(&[3, 3])]).is_none());
+        assert!(lane.lookup("k", &[]).is_none());
+        assert_eq!(lane.published(), 1);
+    }
+
+    #[test]
+    fn call_executes_and_records_stats() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "k", 2, 3.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).unwrap();
+        let out = entry.call(&inputs, Instant::now()).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+        assert!(!out.compiled);
+        assert!(out.output.data().iter().all(|&x| x == 3.0));
+        let snap = lane.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!((snap[0].0.as_str(), snap[0].1), ("k", 1));
+    }
+
+    #[test]
+    fn republish_replaces_and_invalidate_removes() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "k", 2, 1.0, false);
+        publish_fixed(&lane, "k", 2, 2.0, false); // retune picked a new winner
+        assert_eq!(lane.published(), 1, "replaced, not duplicated");
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        assert_eq!(lane.lookup("k", &inputs).unwrap().value(), 2);
+        assert!(lane.invalidate("k", &[vec![2, 2]]));
+        assert!(!lane.invalidate("k", &[vec![2, 2]]), "already gone");
+        assert!(lane.lookup("k", &inputs).is_none());
+        assert_eq!(lane.published(), 0);
+    }
+
+    #[test]
+    fn invalidate_entry_spares_a_newer_republished_entry() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "k", 2, 1.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let stale = lane.lookup("k", &inputs).unwrap();
+        // leader republishes (retune picked a new winner) while a caller
+        // still holds the old entry it observed failing
+        publish_fixed(&lane, "k", 2, 2.0, false);
+        assert!(!lane.invalidate_entry(&stale), "stale entry already replaced");
+        let current = lane.lookup("k", &inputs).expect("healthy entry survives");
+        assert_eq!(current.value(), 2);
+        // identity invalidation does remove a still-published entry
+        assert!(lane.invalidate_entry(&current));
+        assert!(lane.lookup("k", &inputs).is_none());
+    }
+
+    #[test]
+    fn clear_drops_everything_but_keeps_counters() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "a", 2, 1.0, false);
+        publish_fixed(&lane, "b", 4, 2.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        lane.lookup("a", &inputs).unwrap().call(&inputs, Instant::now()).unwrap();
+        lane.clear();
+        assert_eq!(lane.published(), 0);
+        // hit history survives for reporting
+        let snap = lane.snapshot();
+        assert_eq!(snap.iter().find(|(k, _, _)| k == "a").unwrap().1, 1);
+        let json = lane.to_json();
+        assert_eq!(json.get("published").unwrap().as_i64(), Some(0));
+    }
+
+    #[test]
+    fn concurrent_readers_and_stats() {
+        let lane = Arc::new(FastLane::new());
+        publish_fixed(&lane, "k", 2, 5.0, false);
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let lane = lane.clone();
+            joins.push(std::thread::spawn(move || {
+                let inputs = [HostTensor::zeros(&[2, 2])];
+                for _ in 0..50 {
+                    let entry = lane.lookup("k", &inputs).unwrap();
+                    let out = entry.call(&inputs, Instant::now()).unwrap();
+                    assert!(out.output.data().iter().all(|&x| x == 5.0));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = lane.snapshot();
+        assert_eq!(snap[0].1, 200, "every hit counted across shards");
+        assert!(lane.render().contains("hits=200"));
+    }
+
+    #[test]
+    fn plan_hash_matches_shape_hash() {
+        let inputs = [HostTensor::zeros(&[8, 8]), HostTensor::zeros(&[8])];
+        let shapes = vec![vec![8usize, 8], vec![8usize]];
+        assert_eq!(plan_hash("k", &inputs), shape_hash("k", &shapes));
+        assert_ne!(plan_hash("k", &inputs), shape_hash("j", &shapes));
+    }
+
+    #[test]
+    fn failing_entry_surfaces_error_without_recording_hit() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "k", 2, 9.0, true);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).unwrap();
+        assert!(entry.call(&inputs, Instant::now()).is_err());
+        assert_eq!(lane.snapshot()[0].1, 0);
+    }
+}

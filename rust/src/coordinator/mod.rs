@@ -1,4 +1,5 @@
-//! The run-time coordinator: registry, dispatcher, threaded server.
+//! The run-time coordinator: registry, dispatcher, threaded server, and
+//! the tuned-path fast lane.
 //!
 //! The [`Dispatcher`] is the heart of the system — the piece that plays
 //! ClangJIT's `__clang_jit` role with autotuning folded in (paper §3.2):
@@ -7,11 +8,39 @@
 //! measures tuning iterations, finalizes the winner into the
 //! instantiation cache, and routes steady-state calls to it.
 //!
-//! [`server::Coordinator`] wraps the dispatcher in a leader thread
-//! (PJRT clients are thread-pinned) with a channel-based request
-//! protocol, so any number of application threads can call kernels
-//! concurrently — the analog of the paper's multi-threaded execution
-//! conditions, and the mutex-protected compilation protocol.
+//! # Two-lane architecture
+//!
+//! [`server::Coordinator`] serves application threads through two lanes:
+//!
+//! * **Leader lane** — a dedicated leader thread owns the dispatcher
+//!   (PJRT clients are thread-pinned) and drains an mpsc request queue.
+//!   Every call that *tunes* — exploration, the winner's final
+//!   compilation, retuned problems — takes this lane, so compilation and
+//!   measurement stay serialized: the paper's "compilation is protected
+//!   by a mutex" guarantee, enforced at the channel boundary, with the
+//!   tuner observing executions under real cross-request contention.
+//!
+//! * **Tuned fast lane** — when a problem reaches `Phase::Tuned`, the
+//!   leader publishes an immutable [`fastlane::TunedEntry`] (winning
+//!   variant + an `Arc`'d `Send + Sync` executable handle) into the
+//!   shared [`FastLane`] map. [`server::CoordinatorHandle::call`]
+//!   consults that map *before* touching the channel; hits execute right
+//!   on the calling thread and record latency into sharded atomic
+//!   counters, so steady-state throughput scales with application
+//!   threads instead of being capped at one leader-serialized call at a
+//!   time.
+//!
+//! **Publication protocol.** Publish happens on `confirm_finalized`
+//! (plus a lazy self-heal on leader-lane tuned calls, covering warm
+//! starts and lanes attached late). Invalidation happens on retune, on a
+//! candidate failure that demotes the winner, on tuning-state import,
+//! and on a fast-lane execution failure (the failing call then retries
+//! through the leader, so no call is ever lost). Backends whose
+//! executables cannot leave the leader thread (PJRT) simply never
+//! publish — their steady-state calls keep flowing through the leader,
+//! preserving exact pre-fast-lane behaviour.
+
+pub mod fastlane;
 
 mod dispatcher;
 mod registry;
@@ -19,6 +48,7 @@ pub mod server;
 mod stats;
 
 pub use dispatcher::{CallOutcome, CallRoute, Dispatcher};
+pub use fastlane::FastLane;
 pub use registry::KernelRegistry;
-pub use server::{BatchOptions, Coordinator, CoordinatorHandle};
+pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
 pub use stats::{CoordStats, KernelStats};

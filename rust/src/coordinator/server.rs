@@ -1,19 +1,25 @@
 //! Threaded coordinator: leader thread owning the dispatcher, serving
-//! requests from any number of application threads.
+//! requests from any number of application threads — plus the tuned-path
+//! fast lane that lets steady-state calls skip the leader entirely.
 //!
 //! PJRT clients are thread-pinned (`Rc` internally), so the dispatcher
 //! lives on one leader thread. Application threads hold cloneable
-//! [`CoordinatorHandle`]s and submit calls over an mpsc channel; replies
-//! come back on per-request rendezvous channels. The single consumer
-//! serializes JIT compilations, providing the paper's "compilation is
-//! protected by a mutex" guarantee at the channel boundary — and the
-//! tuner observes executions under real cross-request contention, which
-//! is exactly the paper's argument for *online* tuning.
+//! [`CoordinatorHandle`]s. A call first consults the shared
+//! [`FastLane`]: problems whose tuning already finished (and whose
+//! engine hands out `Send + Sync` executables) run right on the calling
+//! thread. Everything else — tuning iterations, finalizations, retunes,
+//! thread-pinned backends — is submitted over an mpsc channel and
+//! serialized by the single leader, which preserves the paper's
+//! "compilation is protected by a mutex" guarantee and keeps the tuner
+//! observing executions under real cross-request contention.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
+use crate::coordinator::fastlane::FastLane;
 use crate::error::{Error, Result};
 use crate::tensor::HostTensor;
 use crate::util::json::Value;
@@ -29,21 +35,56 @@ enum Request {
         size: i64,
         reply: mpsc::SyncSender<Option<i64>>,
     },
+    Retune {
+        kernel: String,
+        size: i64,
+        reply: mpsc::SyncSender<Result<bool>>,
+    },
     Stats {
         reply: mpsc::SyncSender<(String, Value)>,
+    },
+    StatsJson {
+        reply: mpsc::SyncSender<Value>,
     },
     Shutdown,
 }
 
-/// Cloneable, `Send` handle for submitting kernel calls to the leader.
+/// Cloneable, `Send` handle for submitting kernel calls to the leader —
+/// or executing them directly when the tuned fast lane has a published
+/// winner for the problem.
 #[derive(Clone)]
 pub struct CoordinatorHandle {
     tx: mpsc::Sender<Request>,
+    fast_lane: Option<Arc<FastLane>>,
 }
 
 impl CoordinatorHandle {
     /// Dispatch a kernel call and wait for its result.
+    ///
+    /// Steady state: a fast-lane hit executes the published winner on
+    /// *this* thread — no channel, no leader, no serialization against
+    /// other callers. Misses (still tuning, retuned, thread-pinned
+    /// engine) fall back to the leader exactly as before. A published
+    /// winner that fails at execution is unpublished and the call retries
+    /// through the leader, so callers never observe a lost call.
     pub fn call(&self, kernel: &str, inputs: Vec<HostTensor>) -> Result<CallOutcome> {
+        let t0 = Instant::now();
+        if let Some(lane) = &self.fast_lane {
+            if let Some(entry) = lane.lookup(kernel, &inputs) {
+                match entry.call(&inputs, t0) {
+                    Ok(outcome) => return Ok(outcome),
+                    Err(e) => {
+                        log::warn!(
+                            "fast lane: {} failed ({e}); demoting to leader lane",
+                            entry.variant_id()
+                        );
+                        // By identity, not by key: a newer entry the
+                        // leader republished meanwhile must survive.
+                        lane.invalidate_entry(&entry);
+                    }
+                }
+            }
+        }
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
             .send(Request::Call { kernel: kernel.to_string(), inputs, reply })
@@ -60,6 +101,18 @@ impl CoordinatorHandle {
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
     }
 
+    /// Restart tuning for a problem. The leader resets the tuner state,
+    /// evicts resident executables and invalidates the published
+    /// fast-lane entry; subsequent calls re-explore. Returns whether
+    /// tuner state existed.
+    pub fn retune(&self, kernel: &str, size: i64) -> Result<bool> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Retune { kernel: kernel.to_string(), size, reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
+    }
+
     /// Rendered stats + JSON tuning report.
     pub fn stats(&self) -> Result<(String, Value)> {
         let (reply, rx) = mpsc::sync_channel(1);
@@ -67,6 +120,29 @@ impl CoordinatorHandle {
             .send(Request::Stats { reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
+    }
+
+    /// Machine-readable statistics: per-kernel leader-lane counters under
+    /// `"kernels"` plus (when enabled) the fast lane's counters under
+    /// `"fast_lane"`.
+    pub fn stats_json(&self) -> Result<Value> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::StatsJson { reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
+    }
+
+    /// Number of published fast-lane entries (0 when the lane is
+    /// disabled). Reads the shared map directly — no leader round-trip.
+    pub fn fast_lane_published(&self) -> usize {
+        self.fast_lane.as_ref().map_or(0, |l| l.published())
+    }
+
+    /// Fast-lane per-kernel `(kernel, hits, mean latency seconds)`
+    /// snapshot. Empty when the lane is disabled.
+    pub fn fast_lane_stats(&self) -> Vec<(String, u64, f64)> {
+        self.fast_lane.as_ref().map(|l| l.snapshot()).unwrap_or_default()
     }
 }
 
@@ -85,37 +161,71 @@ impl Default for BatchOptions {
     }
 }
 
+/// Full server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// Leader-loop batching.
+    pub batch: BatchOptions,
+    /// Publish tuned winners for lock-free execution on caller threads.
+    /// Disable to force every call through the leader (the pre-fast-lane
+    /// behaviour — the baseline the throughput-scaling bench compares
+    /// against).
+    pub fast_lane: bool,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { batch: BatchOptions::default(), fast_lane: true }
+    }
+}
+
 /// The running coordinator (leader thread + handle factory).
 pub struct Coordinator {
     tx: mpsc::Sender<Request>,
     join: Option<JoinHandle<()>>,
+    fast_lane: Option<Arc<FastLane>>,
 }
 
 impl Coordinator {
-    /// Spawn with default batching.
+    /// Spawn with default options (fast lane enabled).
     pub fn spawn<F>(factory: F) -> Result<Coordinator>
     where
         F: FnOnce() -> Result<Dispatcher> + Send + 'static,
     {
-        Coordinator::spawn_with(factory, BatchOptions::default())
+        Coordinator::spawn_with_options(factory, ServerOptions::default())
+    }
+
+    /// Spawn with custom batching (fast lane enabled).
+    pub fn spawn_with<F>(factory: F, batch: BatchOptions) -> Result<Coordinator>
+    where
+        F: FnOnce() -> Result<Dispatcher> + Send + 'static,
+    {
+        Coordinator::spawn_with_options(factory, ServerOptions { batch, fast_lane: true })
     }
 
     /// Spawn the leader thread around a dispatcher factory.
     ///
     /// The factory runs *on the leader thread* because PJRT clients must
-    /// be created on the thread that uses them.
-    pub fn spawn_with<F>(factory: F, batch: BatchOptions) -> Result<Coordinator>
+    /// be created on the thread that uses them. When the fast lane is
+    /// enabled, the leader gets the publishing side and every handle gets
+    /// the reading side of the shared map.
+    pub fn spawn_with_options<F>(factory: F, opts: ServerOptions) -> Result<Coordinator>
     where
         F: FnOnce() -> Result<Dispatcher> + Send + 'static,
     {
-        let max_batch = batch.max_batch.max(1);
+        let max_batch = opts.batch.max_batch.max(1);
+        let lane = if opts.fast_lane { Some(Arc::new(FastLane::new())) } else { None };
+        let leader_lane = lane.clone();
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let join = std::thread::Builder::new()
             .name("jitune-leader".into())
             .spawn(move || {
                 let mut dispatcher = match factory() {
-                    Ok(d) => {
+                    Ok(mut d) => {
+                        if let Some(lane) = leader_lane {
+                            d.set_fast_lane(lane);
+                        }
                         let _ = ready_tx.send(Ok(()));
                         d
                     }
@@ -145,13 +255,27 @@ impl Coordinator {
                             Request::TunedValue { kernel, size, reply } => {
                                 let _ = reply.send(dispatcher.tuned_value(&kernel, size));
                             }
+                            Request::Retune { kernel, size, reply } => {
+                                let _ = reply.send(dispatcher.retune(&kernel, size));
+                            }
                             Request::Stats { reply } => {
+                                let lane_render =
+                                    dispatcher.fast_lane().map(|l| l.render()).unwrap_or_default();
                                 let rendered = format!(
-                                    "{}cache: {:?}\n",
+                                    "{}cache: {:?}\n{}",
                                     dispatcher.stats().render(),
-                                    dispatcher.cache_stats()
+                                    dispatcher.cache_stats(),
+                                    lane_render
                                 );
                                 let _ = reply.send((rendered, dispatcher.tuning_report()));
+                            }
+                            Request::StatsJson { reply } => {
+                                let mut obj =
+                                    vec![("kernels".to_string(), dispatcher.stats().to_json())];
+                                if let Some(lane) = dispatcher.fast_lane() {
+                                    obj.push(("fast_lane".to_string(), lane.to_json()));
+                                }
+                                let _ = reply.send(Value::Obj(obj));
                             }
                             Request::Shutdown => break 'serve,
                         }
@@ -162,12 +286,12 @@ impl Coordinator {
         ready_rx
             .recv()
             .map_err(|_| Error::Coordinator("leader died during init".into()))??;
-        Ok(Coordinator { tx, join: Some(join) })
+        Ok(Coordinator { tx, join: Some(join), fast_lane: lane })
     }
 
     /// A new handle for this coordinator.
     pub fn handle(&self) -> CoordinatorHandle {
-        CoordinatorHandle { tx: self.tx.clone() }
+        CoordinatorHandle { tx: self.tx.clone(), fast_lane: self.fast_lane.clone() }
     }
 
     /// Graceful shutdown (also triggered by Drop).
@@ -189,6 +313,7 @@ impl Drop for Coordinator {
 mod tests {
     use super::*;
     use crate::coordinator::registry::KernelRegistry;
+    use crate::coordinator::CallRoute;
     use crate::runtime::mock::{MockEngine, MockSpec};
     use std::time::Duration;
 
@@ -198,6 +323,18 @@ mod tests {
             let registry = KernelRegistry::new(manifest);
             Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
         })
+        .unwrap()
+    }
+
+    fn spawn_mock_with(spec: MockSpec, opts: ServerOptions) -> Coordinator {
+        Coordinator::spawn_with_options(
+            move || {
+                let manifest = crate::manifest::tests::sample_manifest()?;
+                let registry = KernelRegistry::new(manifest);
+                Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+            },
+            opts,
+        )
         .unwrap()
     }
 
@@ -236,6 +373,7 @@ mod tests {
         }
         let (rendered, report) = h.stats().unwrap();
         assert!(rendered.contains("k:"), "{rendered}");
+        assert!(rendered.contains("fast lane:"), "{rendered}");
         assert!(report.as_obj().is_some());
     }
 
@@ -287,5 +425,73 @@ mod tests {
         }
         let (rendered, _) = coord.handle().stats().unwrap();
         assert!(rendered.contains("scheduling rounds"), "{rendered}");
+    }
+
+    #[test]
+    fn fast_lane_absorbs_steady_state_calls() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(400))
+            .with_cost("k.b.n8", Duration::from_micros(40));
+        let coord = spawn_mock(spec);
+        let h = coord.handle();
+        assert_eq!(h.fast_lane_published(), 0);
+        // 2 explores + 1 finalize completes tuning and publishes
+        for _ in 0..3 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert_eq!(h.fast_lane_published(), 1);
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+        assert_eq!(out.value, 2);
+        let stats = h.fast_lane_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].0, "k");
+        assert!(stats[0].1 >= 1, "fast-lane hit recorded: {stats:?}");
+        // machine-readable stats expose both lanes
+        let json = h.stats_json().unwrap();
+        assert!(json.get("kernels").is_some());
+        let lane = json.get("fast_lane").unwrap();
+        assert_eq!(lane.get("published").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn single_lane_option_disables_fast_lane() {
+        let opts = ServerOptions { fast_lane: false, ..ServerOptions::default() };
+        let coord = spawn_mock_with(MockSpec::default(), opts);
+        let h = coord.handle();
+        for _ in 0..5 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert_eq!(h.fast_lane_published(), 0);
+        assert!(h.fast_lane_stats().is_empty());
+        let json = h.stats_json().unwrap();
+        assert!(json.get("fast_lane").is_none());
+        // steady state still works, just through the leader
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+    }
+
+    #[test]
+    fn retune_through_handle_invalidates_and_reexplores() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(400))
+            .with_cost("k.b.n8", Duration::from_micros(40));
+        let coord = spawn_mock(spec);
+        let h = coord.handle();
+        for _ in 0..4 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert_eq!(h.fast_lane_published(), 1);
+        assert!(h.retune("k", 8).unwrap());
+        assert_eq!(h.fast_lane_published(), 0);
+        assert_eq!(h.tuned_value("k", 8).unwrap(), None);
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Explored, "retuned problem re-explores");
+        // finish retuning: winner republished
+        for _ in 0..2 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert_eq!(h.fast_lane_published(), 1);
+        assert_eq!(h.tuned_value("k", 8).unwrap(), Some(2));
     }
 }

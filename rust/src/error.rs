@@ -3,31 +3,30 @@
 //! Everything that can fail on the request path funnels into [`Error`] so
 //! the coordinator can decide between retrying, skipping a variant (the
 //! failure-injection path exercised in tests) and aborting.
+//!
+//! `Display`/`Error` are hand-implemented — `thiserror` is a proc-macro
+//! crate and the build environment is fully offline.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All error conditions surfaced by the jitune runtime.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Error bubbled up from the PJRT / XLA runtime (compile or execute).
-    #[error("xla: {0}")]
     Xla(String),
 
     /// Artifact or manifest I/O failure.
-    #[error("io: {path}: {source}")]
     Io {
         /// Path involved in the failed operation.
         path: String,
         /// Underlying OS error.
-        #[source]
         source: std::io::Error,
     },
 
     /// Malformed JSON (manifest, config, tuning-state export).
-    #[error("json parse error at byte {offset}: {msg}")]
     Json {
         /// Byte offset of the first offending character.
         offset: usize,
@@ -36,15 +35,12 @@ pub enum Error {
     },
 
     /// Manifest is syntactically valid JSON but semantically broken.
-    #[error("manifest: {0}")]
     Manifest(String),
 
     /// Configuration file / CLI error.
-    #[error("config: {0}")]
     Config(String),
 
     /// A kernel, variant or problem key that the registry does not know.
-    #[error("unknown {kind}: {name}")]
     Unknown {
         /// What category of entity was looked up ("kernel", "variant", ...).
         kind: &'static str,
@@ -54,7 +50,6 @@ pub enum Error {
 
     /// Shape/dtype mismatch between caller-provided tensors and the
     /// artifact's expected signature.
-    #[error("shape mismatch for {kernel}: expected {expected}, got {got}")]
     ShapeMismatch {
         /// Kernel being invoked.
         kernel: String,
@@ -66,7 +61,6 @@ pub enum Error {
 
     /// JIT compilation of a variant failed (also produced by the
     /// failure-injecting mock engine in tests).
-    #[error("compile failed for variant {variant}: {msg}")]
     CompileFailed {
         /// Variant id that failed to compile.
         variant: String,
@@ -76,12 +70,42 @@ pub enum Error {
 
     /// The autotuner was asked for a decision it cannot make yet or at all
     /// (e.g. every variant failed to compile).
-    #[error("autotuner: {0}")]
     Autotune(String),
 
     /// Coordinator lifecycle error (server already stopped, queue closed...).
-    #[error("coordinator: {0}")]
     Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(msg) => write!(f, "xla: {msg}"),
+            Error::Io { path, source } => write!(f, "io: {path}: {source}"),
+            Error::Json { offset, msg } => {
+                write!(f, "json parse error at byte {offset}: {msg}")
+            }
+            Error::Manifest(msg) => write!(f, "manifest: {msg}"),
+            Error::Config(msg) => write!(f, "config: {msg}"),
+            Error::Unknown { kind, name } => write!(f, "unknown {kind}: {name}"),
+            Error::ShapeMismatch { kernel, expected, got } => {
+                write!(f, "shape mismatch for {kernel}: expected {expected}, got {got}")
+            }
+            Error::CompileFailed { variant, msg } => {
+                write!(f, "compile failed for variant {variant}: {msg}")
+            }
+            Error::Autotune(msg) => write!(f, "autotuner: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -117,5 +141,7 @@ mod tests {
     fn io_helper_keeps_path() {
         let e = Error::io("/tmp/x", std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
         assert!(e.to_string().contains("/tmp/x"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

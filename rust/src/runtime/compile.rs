@@ -14,11 +14,12 @@
 //! variant grid — we "can only keep ASTs" (HLO text) for the rest.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::manifest::{Manifest, Variant};
-use crate::runtime::engine::{CompiledKernel, Engine};
+use crate::runtime::engine::{CompiledKernel, Engine, SharedKernel};
 
 /// Aggregate cache statistics (exposed via coordinator stats and used by
 /// the §Perf report).
@@ -122,6 +123,14 @@ impl CompileCache {
         self.cache.contains_key(variant_id)
     }
 
+    /// A `Send + Sync` handle to a resident executable, when the engine
+    /// supports cross-thread execution (the mock does; PJRT does not).
+    /// The coordinator's fast lane publishes this so steady-state calls
+    /// run on the caller's thread.
+    pub fn shared_handle(&self, variant_id: &str) -> Option<Arc<dyn SharedKernel>> {
+        self.cache.get(variant_id).and_then(|k| k.shared())
+    }
+
     /// Number of resident executables.
     pub fn resident(&self) -> usize {
         self.cache.len()
@@ -196,6 +205,20 @@ mod tests {
         let (_, compiled) = cache.get_or_compile(&m, &v).unwrap();
         assert!(compiled);
         assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn shared_handle_for_resident_mock_kernels() {
+        let (m, mut cache) = setup();
+        let v = m.variant("k.a.n8").unwrap().clone();
+        assert!(cache.shared_handle(&v.id).is_none(), "not compiled yet");
+        cache.get_or_compile(&m, &v).unwrap();
+        let shared = cache.shared_handle(&v.id).expect("mock kernels share");
+        assert_eq!(shared.variant_id(), "k.a.n8");
+        cache.evict(&v.id);
+        assert!(cache.shared_handle(&v.id).is_none(), "evicted");
+        // the handle obtained before eviction keeps working (Arc)
+        assert!(shared.execute(&[]).is_ok());
     }
 
     #[test]

@@ -3,11 +3,28 @@
 //! CPU client) and [`crate::runtime::mock::MockEngine`] (deterministic
 //! latencies + failure injection for tests and ablations).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::error::Result;
 use crate::manifest::Variant;
 use crate::tensor::HostTensor;
+
+/// A compiled kernel that may be executed from *any* thread — the handle
+/// the coordinator's tuned fast lane publishes so steady-state calls can
+/// run on the caller's thread without visiting the leader.
+///
+/// Split from [`CompiledKernel`] because not every backend can provide
+/// one: PJRT executables are `Rc`-based and thread-pinned, so the PJRT
+/// engine never offers a shared handle and its tuned calls keep flowing
+/// through the leader.
+pub trait SharedKernel: Send + Sync {
+    /// Execute with host inputs, producing the kernel's (single) output.
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor>;
+
+    /// Variant id this executable was compiled from.
+    fn variant_id(&self) -> &str;
+}
 
 /// A compiled, executable kernel variant.
 pub trait CompiledKernel {
@@ -16,6 +33,13 @@ pub trait CompiledKernel {
 
     /// Variant id this executable was compiled from.
     fn variant_id(&self) -> &str;
+
+    /// A `Send + Sync` handle to this executable for off-leader execution,
+    /// when the backend supports one. Default: `None` (thread-pinned
+    /// engines such as PJRT).
+    fn shared(&self) -> Option<Arc<dyn SharedKernel>> {
+        None
+    }
 }
 
 /// Result of one engine execution plus the engine-side wall time (used by

@@ -8,12 +8,12 @@
 //! the output alone.
 
 use std::collections::{HashMap, HashSet};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
-use crate::runtime::engine::{CompiledKernel, Engine};
+use crate::runtime::engine::{CompiledKernel, Engine, SharedKernel};
 use crate::tensor::HostTensor;
 use crate::util::prng::Rng;
 
@@ -34,6 +34,11 @@ pub struct MockSpec {
     pub fail_execute: HashSet<String>,
     /// Jitter RNG seed.
     pub seed: u64,
+    /// Model execution with `thread::sleep` instead of a busy spin.
+    /// Sleeping frees the host CPU — the behaviour of a kernel offloaded
+    /// to an accelerator — which is what the throughput-scaling bench
+    /// needs to show lane scaling independent of host core count.
+    pub exec_sleep: bool,
 }
 
 impl Default for MockSpec {
@@ -46,6 +51,7 @@ impl Default for MockSpec {
             fail_compile: HashSet::new(),
             fail_execute: HashSet::new(),
             seed: 0x6a69_7475,
+            exec_sleep: false,
         }
     }
 }
@@ -60,6 +66,13 @@ impl MockSpec {
     /// Builder helper: set the compile cost.
     pub fn with_compile_cost(mut self, cost: Duration) -> Self {
         self.compile_cost = cost;
+        self
+    }
+
+    /// Builder helper: model execution with `thread::sleep` (accelerator
+    /// offload) instead of a host-CPU busy spin.
+    pub fn with_sleep_exec(mut self) -> Self {
+        self.exec_sleep = true;
         self
     }
 }
@@ -110,13 +123,16 @@ impl Engine for MockEngine {
             .copied()
             .unwrap_or(self.spec.default_exec_cost);
         Ok(Box::new(MockKernel {
-            variant_id: variant.id.clone(),
-            value: variant.value,
-            output_shape: variant.output_shape()?,
-            base,
-            jitter_frac: self.spec.jitter_frac,
-            fail: self.spec.fail_execute.contains(&variant.id),
-            rng: Mutex::new(self.rng.lock().unwrap().split()),
+            inner: Arc::new(MockKernelState {
+                variant_id: variant.id.clone(),
+                value: variant.value,
+                output_shape: variant.output_shape()?,
+                base,
+                jitter_frac: self.spec.jitter_frac,
+                fail: self.spec.fail_execute.contains(&variant.id),
+                sleep: self.spec.exec_sleep,
+                rng: Mutex::new(self.rng.lock().unwrap().split()),
+            }),
         }))
     }
 
@@ -125,17 +141,21 @@ impl Engine for MockEngine {
     }
 }
 
-struct MockKernel {
+/// The sharable executable state: everything is `Send + Sync` (the RNG
+/// sits behind a mutex), so the coordinator's fast lane can publish mock
+/// kernels and run them from any application thread.
+struct MockKernelState {
     variant_id: String,
     value: i64,
     output_shape: Vec<usize>,
     base: Duration,
     jitter_frac: f64,
     fail: bool,
+    sleep: bool,
     rng: Mutex<Rng>,
 }
 
-impl CompiledKernel for MockKernel {
+impl SharedKernel for MockKernelState {
     fn execute(&self, _inputs: &[HostTensor]) -> Result<HostTensor> {
         if self.fail {
             return Err(Error::Xla(format!("injected execute failure for {}", self.variant_id)));
@@ -145,7 +165,11 @@ impl CompiledKernel for MockKernel {
             let z = self.rng.lock().unwrap().normal();
             cost *= (1.0 + self.jitter_frac * z).max(0.1);
         }
-        spin_for(Duration::from_secs_f64(cost));
+        if self.sleep {
+            std::thread::sleep(Duration::from_secs_f64(cost));
+        } else {
+            spin_for(Duration::from_secs_f64(cost));
+        }
         // Output encodes the executed variant's tuning value — tests can
         // observe routing decisions from data alone.
         Ok(HostTensor::full(&self.output_shape, self.value as f32))
@@ -153,6 +177,24 @@ impl CompiledKernel for MockKernel {
 
     fn variant_id(&self) -> &str {
         &self.variant_id
+    }
+}
+
+struct MockKernel {
+    inner: Arc<MockKernelState>,
+}
+
+impl CompiledKernel for MockKernel {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
+        SharedKernel::execute(&*self.inner, inputs)
+    }
+
+    fn variant_id(&self) -> &str {
+        &self.inner.variant_id
+    }
+
+    fn shared(&self) -> Option<Arc<dyn SharedKernel>> {
+        Some(self.inner.clone())
     }
 }
 
@@ -213,6 +255,18 @@ mod tests {
         engine.compile(m.variant("k.b.n8").unwrap(), "").unwrap();
         engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
         assert_eq!(engine.compiled_order(), vec!["k.b.n8".to_string(), "k.a.n8".to_string()]);
+    }
+
+    #[test]
+    fn kernels_are_shareable_across_threads() {
+        let m = manifest();
+        let engine = MockEngine::new(MockSpec::default());
+        let kernel = engine.compile(m.variant("k.b.n8").unwrap(), "").unwrap();
+        let shared = kernel.shared().expect("mock kernels are shareable");
+        assert_eq!(shared.variant_id(), "k.b.n8");
+        let join = std::thread::spawn(move || shared.execute(&[]).unwrap());
+        let out = join.join().unwrap();
+        assert!(out.data().iter().all(|&x| x == 2.0));
     }
 
     #[test]

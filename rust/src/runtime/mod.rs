@@ -7,8 +7,13 @@
 //!
 //! `xla::PjRtClient` is `Rc`-based and must stay on one thread; the
 //! coordinator therefore runs the engine on a dedicated thread and feeds
-//! it through channels ([`crate::coordinator::server`]). Everything here
-//! is deliberately `!Send`.
+//! it through channels ([`crate::coordinator::server`]). Engines and the
+//! cache are deliberately `!Send` — but an engine *may* hand out
+//! [`SharedKernel`] handles (`Send + Sync`) for individual compiled
+//! executables, which the coordinator's tuned fast lane publishes so
+//! steady-state calls can execute on application threads. The mock
+//! engine supports this; PJRT does not (its executables are `Rc`-based),
+//! so PJRT steady-state calls keep flowing through the leader.
 
 mod compile;
 mod engine;
@@ -16,5 +21,5 @@ pub mod mock;
 mod pjrt;
 
 pub use compile::{CacheStats, CompileCache};
-pub use engine::{CompiledKernel, Engine, ExecOutcome};
+pub use engine::{CompiledKernel, Engine, ExecOutcome, SharedKernel};
 pub use pjrt::PjrtEngine;

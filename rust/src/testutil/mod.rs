@@ -5,7 +5,39 @@
 //! repo's invariant suites (`rust/tests/autotuner_props.rs`), fully
 //! deterministic, zero dependencies.
 
+use crate::manifest::Manifest;
 use crate::util::prng::Rng;
+
+/// A synthetic manifest: `variants` interchangeable variants of one
+/// kernel at each of `sizes`, backed by dummy HLO files in a unique temp
+/// directory (the mock engine never parses them). Variant `i` carries
+/// tuning value `i` and id `{kernel}.v{i}.n{size}` — shared by the
+/// fast-lane stress tests, the throughput-scaling bench and the
+/// mock-backed serving example.
+pub fn synthetic_manifest(kernel: &str, variants: usize, sizes: &[i64]) -> crate::Result<Manifest> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "jitune-synth-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&dir).map_err(|e| crate::Error::io(dir.display().to_string(), e))?;
+    let mut entries = Vec::new();
+    for &size in sizes {
+        for i in 0..variants {
+            let id = format!("{kernel}.v{i}.n{size}");
+            std::fs::write(dir.join(format!("{id}.hlo.txt")), "HloModule dummy\n")
+                .map_err(|e| crate::Error::io(id.clone(), e))?;
+            entries.push(format!(
+                r#"{{"id":"{id}","kernel":"{kernel}","param":"p","value":{i},"label":"v{i}","size":{size},"inputs":["f32[{size},{size}]"],"output":"f32[{size},{size}]","path":"{id}.hlo.txt","flops":100}}"#
+            ));
+        }
+    }
+    let text =
+        format!(r#"{{"schema":1,"jax_version":"synthetic","entries":[{}]}}"#, entries.join(","));
+    Manifest::from_json_str(&text, dir)
+}
 
 /// A generator of random values of `T`.
 pub trait Gen<T> {
@@ -130,6 +162,20 @@ fn shrink_vec(failing: &[i64], prop: &impl Fn(&[i64]) -> bool) -> Vec<i64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn synthetic_manifest_loads_and_groups() {
+        let m = synthetic_manifest("kern", 3, &[8, 16]).unwrap();
+        assert_eq!(m.variants.len(), 6);
+        assert_eq!(m.problems.len(), 2);
+        let p = m.problem("kern", 8).unwrap();
+        assert_eq!(p.variants.len(), 3);
+        assert_eq!(p.variants[1].value, 1);
+        // artifact files exist so CompileCache can read them
+        for v in &m.variants {
+            assert!(m.artifact_path(v).exists(), "missing {}", v.path);
+        }
+    }
 
     #[test]
     fn forall_passes_true_property() {

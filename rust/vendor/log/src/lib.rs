@@ -1,0 +1,284 @@
+//! Minimal re-implementation of the `log` crate's facade API.
+//!
+//! The build environment is fully offline, so crates.io's `log` cannot be
+//! fetched; this path crate provides the exact subset jitune uses —
+//! `Level`, `LevelFilter`, the `Log` trait with `Record`/`Metadata`,
+//! `set_logger`/`set_max_level`/`max_level`, and the five leveled macros.
+//! Semantics mirror the real facade: records above `max_level()` are
+//! dropped before the logger is consulted, and `set_logger` succeeds only
+//! once.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a log record. Smaller = more severe (the real
+/// crate's ordering, so `Level <= LevelFilter` filters correctly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    /// Unrecoverable or must-see conditions.
+    Error = 1,
+    /// Recoverable faults (e.g. a variant failing during tuning).
+    Warn,
+    /// High-level lifecycle events.
+    Info,
+    /// Per-call diagnostics.
+    Debug,
+    /// Everything.
+    Trace,
+}
+
+/// Maximum-verbosity filter, `Level` plus `Off`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    /// Disable all logging.
+    Off = 0,
+    /// See [`Level::Error`].
+    Error,
+    /// See [`Level::Warn`].
+    Warn,
+    /// See [`Level::Info`].
+    Info,
+    /// See [`Level::Debug`].
+    Debug,
+    /// See [`Level::Trace`].
+    Trace,
+}
+
+impl LevelFilter {
+    fn from_usize(v: usize) -> LevelFilter {
+        match v {
+            1 => LevelFilter::Error,
+            2 => LevelFilter::Warn,
+            3 => LevelFilter::Info,
+            4 => LevelFilter::Debug,
+            5 => LevelFilter::Trace,
+            _ => LevelFilter::Off,
+        }
+    }
+}
+
+impl PartialEq<LevelFilter> for Level {
+    fn eq(&self, other: &LevelFilter) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<LevelFilter> for Level {
+    fn partial_cmp(&self, other: &LevelFilter) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl PartialEq<Level> for LevelFilter {
+    fn eq(&self, other: &Level) -> bool {
+        *self as usize == *other as usize
+    }
+}
+
+impl PartialOrd<Level> for LevelFilter {
+    fn partial_cmp(&self, other: &Level) -> Option<std::cmp::Ordering> {
+        (*self as usize).partial_cmp(&(*other as usize))
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Metadata about a log record (level + target module path).
+#[derive(Debug, Clone)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's verbosity level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path by default).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// One log record: metadata plus the formatted message arguments.
+#[derive(Debug, Clone)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    /// The record's verbosity level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's target.
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    /// The message, ready to render with `{}`.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging backend. Implementations must be thread-safe: records arrive
+/// from any thread.
+pub trait Log: Send + Sync {
+    /// Whether a record with this metadata would be logged.
+    fn enabled(&self, metadata: &Metadata<'_>) -> bool;
+    /// Log the record.
+    fn log(&self, record: &Record<'_>);
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+/// Error returned when [`set_logger`] is called more than once.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+/// Install the global logger. Fails if one is already installed.
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum verbosity.
+pub fn set_max_level(level: LevelFilter) {
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+/// The global maximum verbosity.
+pub fn max_level() -> LevelFilter {
+    LevelFilter::from_usize(MAX_LEVEL.load(Ordering::Relaxed))
+}
+
+/// Macro plumbing: filter against `max_level`, then forward to the
+/// installed logger (if any). Public because the exported macros expand to
+/// calls of it from other crates; not part of the supported API.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level, target }, args };
+        logger.log(&record);
+    }
+}
+
+/// Log at an explicit level: `log!(Level::Info, "x = {}", x)`.
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, ::core::module_path!(), ::core::format_args!($($arg)+))
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    struct CountingLogger {
+        seen: AtomicU64,
+    }
+
+    impl Log for CountingLogger {
+        fn enabled(&self, metadata: &Metadata<'_>) -> bool {
+            metadata.level() <= max_level()
+        }
+
+        fn log(&self, record: &Record<'_>) {
+            // exercise the accessors
+            let _ = (record.level(), record.target(), format!("{}", record.args()));
+            self.seen.fetch_add(1, Ordering::Relaxed);
+        }
+
+        fn flush(&self) {}
+    }
+
+    static TEST_LOGGER: CountingLogger = CountingLogger { seen: AtomicU64::new(0) };
+
+    #[test]
+    fn filtering_and_delivery() {
+        let _ = set_logger(&TEST_LOGGER);
+        set_max_level(LevelFilter::Info);
+        let before = TEST_LOGGER.seen.load(Ordering::Relaxed);
+        info!("hello {}", 42);
+        debug!("dropped: above max level");
+        let after = TEST_LOGGER.seen.load(Ordering::Relaxed);
+        assert_eq!(after - before, 1);
+        // second installation fails
+        assert!(set_logger(&TEST_LOGGER).is_err());
+    }
+
+    #[test]
+    fn level_vs_filter_ordering() {
+        assert!(Level::Error <= LevelFilter::Info);
+        assert!(Level::Info <= LevelFilter::Info);
+        assert!(Level::Debug > LevelFilter::Info);
+        assert!(Level::Trace > LevelFilter::Off);
+    }
+}

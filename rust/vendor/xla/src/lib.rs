@@ -1,0 +1,170 @@
+//! Stub of the `xla` (xla_extension) bindings used by `jitune`'s PJRT
+//! engine.
+//!
+//! The build environment has no network access and no XLA shared library,
+//! so the real bindings cannot be compiled. This crate mirrors the exact
+//! API surface `jitune::runtime::pjrt` and `benches/perf_probe` consume,
+//! with [`PjRtClient::cpu`] returning an error: everything compiles and
+//! every non-PJRT code path (mock engine, coordinator, autotuner, all
+//! mock-backed tests) runs, while attempts to use the real backend fail
+//! fast with an actionable message. Environments that ship the real
+//! `xla_extension` bindings replace this directory (the dependency is a
+//! plain path crate) and nothing else changes.
+
+use std::fmt;
+
+/// Error type mirroring the bindings' error.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias mirroring the bindings.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT backend unavailable: jitune was built against the stub `xla` crate \
+         (rust/vendor/xla). Install the real xla_extension bindings to run on PJRT; \
+         the mock engine and all coordinator/autotuner paths work without them."
+            .to_string(),
+    ))
+}
+
+/// A host literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+/// Element dtypes accepted by [`Literal::create_from_shape_and_untyped_data`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    /// 32-bit float.
+    F32,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Single-copy construction from raw bytes.
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    /// Unwrap a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        unavailable()
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module proto (stub).
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Parse HLO text without verification.
+    pub fn parse_and_return_unverified_module(_text: &[u8]) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module proto.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A device buffer produced by an execution (stub; never constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A loaded executable (stub; never constructed — `compile` errors first).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A PJRT client (stub: construction always fails).
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    /// Platform name.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Number of devices.
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Compile a computation. Always fails in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn literal_constructors_typecheck() {
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_ok());
+        let single = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[2], &[0; 8]);
+        assert!(single.is_ok());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
