@@ -1,0 +1,133 @@
+//! Drift-triggered automatic retuning — self-contained demo on the mock
+//! engine (no artifacts or PJRT needed, runs anywhere).
+//!
+//! The coordinator tunes a kernel online and serves it from the fast
+//! lane; mid-run the winning variant's latency is degraded 10x (the
+//! mock's `LatencyFault` models thermal throttling / co-tenancy / input
+//! shift). With `ServerOptions { drift: Some(policy) }` the leader
+//! notices the windowed latency regression against the tuning-time
+//! baseline and re-opens tuning **without any `retune()` call**; the
+//! rematch picks the variant that is now fastest and serving resumes.
+//!
+//! Run with: `cargo run --example drift_retune [--smoke]`
+//! (`--smoke` shortens every phase for CI.)
+
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, CoordinatorHandle, Dispatcher, DriftPolicy, KernelRegistry,
+    ServerOptions,
+};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+
+fn call(h: &CoordinatorHandle) -> jitune::coordinator::CallOutcome {
+    h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("call")
+}
+
+/// Serve steadily for `ms` milliseconds; returns (calls, mean latency ms).
+fn serve(h: &CoordinatorHandle, ms: u64) -> (usize, f64) {
+    let t0 = Instant::now();
+    let mut calls = 0usize;
+    while t0.elapsed() < Duration::from_millis(ms) {
+        call(h);
+        calls += 1;
+    }
+    let mean_ms = t0.elapsed().as_secs_f64() * 1e3 / calls.max(1) as f64;
+    (calls, mean_ms)
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    // slow_us sits between 1x and 10x of fast_us: after the 10x shift the
+    // degraded winner is decisively slower than the alternative, so the
+    // rematch flips the winner instead of re-picking it.
+    let (phase_ms, fast_us, slow_us) = if smoke { (300, 80, 300) } else { (1500, 200, 600) };
+
+    // v1 wins tuning; sleep-based execution models an
+    // accelerator-offloaded kernel.
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(slow_us))
+        .with_cost("kern.v1.n8", Duration::from_micros(fast_us))
+        .with_sleep_exec();
+    let fault = spec.latency_fault.clone();
+    let policy = DriftPolicy {
+        window: Duration::from_millis(100),
+        min_samples: 10,
+        ratio_threshold: 2.0,
+        cooldown: Duration::from_millis(200),
+        consecutive_windows: 2,
+        ..DriftPolicy::default()
+    };
+    let coordinator = Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        },
+        ServerOptions { drift: Some(policy), ..ServerOptions::default() },
+    )
+    .expect("spawn coordinator");
+    let h = coordinator.handle();
+
+    println!("tuning...");
+    loop {
+        let o = call(&h);
+        println!("  {:?} variant={} value={}", o.route, o.variant_id, o.value);
+        if o.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    println!("tuned value: {:?}\n", h.tuned_value("kern", 8).expect("tuned_value"));
+
+    let (calls, mean_ms) = serve(&h, phase_ms);
+    println!("healthy serving: {calls} calls, mean {mean_ms:.3}ms/call");
+
+    println!("\ninjecting 10x latency shift into the winner (thermal throttle)...");
+    fault.set_scale("kern.v1.n8", 10.0);
+
+    // Serve through the degradation: the drift policy must notice and
+    // re-open tuning on its own.
+    let t0 = Instant::now();
+    let mut detected = None;
+    while detected.is_none() {
+        let o = call(&h);
+        if o.route == CallRoute::Explored {
+            detected = Some(t0.elapsed());
+        }
+        if t0.elapsed() > Duration::from_secs(60) {
+            break;
+        }
+    }
+    match detected {
+        Some(dt) => println!(
+            "drift detected: automatic retune began {:.0}ms after the shift",
+            dt.as_secs_f64() * 1e3
+        ),
+        None => {
+            // CI runs this example in smoke mode as a regression check:
+            // a missing retune must fail the step, not just log.
+            eprintln!("ERROR: no automatic retune observed within 60s");
+            std::process::exit(1);
+        }
+    }
+    // let the rematch finish
+    loop {
+        if call(&h).route == CallRoute::Tuned {
+            break;
+        }
+    }
+    println!("new tuned value: {:?}", h.tuned_value("kern", 8).expect("tuned_value"));
+
+    let (calls, mean_ms) = serve(&h, phase_ms);
+    println!("recovered serving: {calls} calls, mean {mean_ms:.3}ms/call\n");
+
+    let (rendered, _report) = h.stats().expect("stats");
+    println!("{rendered}");
+    let json = h.stats_json().expect("stats_json");
+    if let Some(events) = json.get("drift_events") {
+        println!("drift_events: {}", events.to_json_pretty());
+    }
+}

@@ -1,0 +1,196 @@
+//! **Drift retune** — detection + recovery timeline of the automatic
+//! drift policy on a synthetic drifting workload.
+//!
+//! Worker threads hammer a tuned kernel on the fast lane; mid-run the
+//! winning variant's latency is degraded 3x (the mock's `LatencyFault`).
+//! The drift policy must notice the windowed regression, retune, and
+//! converge to the variant that is now fastest. The bench reports the
+//! per-slice mean latency timeline (healthy → degraded → recovered) and
+//! the detection latency: time from injection until the new winner
+//! serves.
+//!
+//! Output: stdout chart + `target/figures/drift_retune.csv` + a
+//! machine-readable JSON report `target/figures/drift_retune.json`.
+//!
+//! Env knobs: `JITUNE_BENCH_DRIFT_THREADS` (default 4),
+//! `JITUNE_BENCH_DRIFT_PHASE_MS` (healthy/recovered phase length,
+//! default 1000).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, DriftPolicy, KernelRegistry, ServerOptions,
+};
+use jitune::report::Figure;
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+use jitune::util::chart::Series;
+use jitune::util::json::{n, s, Value};
+
+const SLICE_MS: f64 = 100.0;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let threads = env_usize("JITUNE_BENCH_DRIFT_THREADS", 4);
+    let phase_ms = env_usize("JITUNE_BENCH_DRIFT_PHASE_MS", 1000) as u64;
+    println!(
+        "== drift retune: detection + recovery timeline ({threads} thread(s), \
+         {phase_ms}ms phases) =="
+    );
+
+    // v1 (250us) wins tuning; a 3x shift (750us) makes v0 (500us) the
+    // rightful winner of the rematch.
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(500))
+        .with_cost("kern.v1.n8", Duration::from_micros(250))
+        .with_sleep_exec();
+    let fault = spec.latency_fault.clone();
+    let policy = DriftPolicy {
+        window: Duration::from_millis(100),
+        min_samples: 20,
+        ratio_threshold: 2.0,
+        cooldown: Duration::from_millis(300),
+        consecutive_windows: 2,
+        ..DriftPolicy::default()
+    };
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        },
+        ServerOptions { drift: Some(policy), ..ServerOptions::default() },
+    )
+    .expect("spawn coordinator");
+
+    // tune to steady state
+    let h = coord.handle();
+    loop {
+        if h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("warm call").route
+            == CallRoute::Tuned
+        {
+            break;
+        }
+    }
+
+    // timeline: workers record (t, latency, served value) until stopped
+    let stop = Arc::new(AtomicBool::new(false));
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..threads {
+        let h = coord.handle();
+        let stop = stop.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut samples: Vec<(f64, f64, i64)> = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                let c0 = Instant::now();
+                let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("call");
+                samples.push((
+                    t0.elapsed().as_secs_f64(),
+                    c0.elapsed().as_secs_f64(),
+                    o.value,
+                ));
+            }
+            samples
+        }));
+    }
+
+    std::thread::sleep(Duration::from_millis(phase_ms));
+    let inject_at = t0.elapsed().as_secs_f64();
+    fault.set_scale("kern.v1.n8", 3.0);
+    println!("  injected 3x shift at t={inject_at:.2}s");
+
+    // wait for the policy to retune and the rematch to flip the winner
+    let detect_deadline = Instant::now() + Duration::from_secs(60);
+    let mut new_winner_at = None;
+    while new_winner_at.is_none() && Instant::now() < detect_deadline {
+        if h.tuned_value("kern", 8).expect("tuned_value") == Some(0) {
+            new_winner_at = Some(t0.elapsed().as_secs_f64());
+        } else {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    match new_winner_at {
+        Some(at) => println!(
+            "  new winner serving at t={at:.2}s (detection+rematch: {:.0}ms)",
+            (at - inject_at) * 1e3
+        ),
+        None => println!("  WARNING: no automatic retune observed within 60s"),
+    }
+
+    std::thread::sleep(Duration::from_millis(phase_ms));
+    stop.store(true, Ordering::Relaxed);
+    let mut samples: Vec<(f64, f64, i64)> = Vec::new();
+    for j in joins {
+        samples.extend(j.join().expect("worker"));
+    }
+    samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    // slice the timeline into SLICE_MS buckets of mean latency
+    let end = samples.last().map(|x| x.0).unwrap_or(0.0);
+    let slices = (end * 1e3 / SLICE_MS).ceil() as usize + 1;
+    let mut sums = vec![0.0f64; slices];
+    let mut counts = vec![0u64; slices];
+    for &(t, lat, _) in &samples {
+        let idx = ((t * 1e3 / SLICE_MS) as usize).min(slices - 1);
+        sums[idx] += lat;
+        counts[idx] += 1;
+    }
+    let mut rows = Vec::new();
+    let mut points = Vec::new();
+    for i in 0..slices {
+        if counts[i] == 0 {
+            continue;
+        }
+        let t_s = i as f64 * SLICE_MS / 1e3;
+        let mean_ms = sums[i] / counts[i] as f64 * 1e3;
+        rows.push(vec![format!("{t_s:.1}"), format!("{mean_ms:.3}"), counts[i].to_string()]);
+        points.push((t_s, mean_ms));
+    }
+
+    let fig = Figure {
+        stem: "drift_retune".into(),
+        title: "mean call latency timeline across a 3x drift + automatic retune".into(),
+        header: vec!["t_s".into(), "mean_latency_ms".into(), "calls".into()],
+        rows,
+        series: vec![Series::new("mean_latency_ms", points)],
+        log_y: false,
+    };
+    let rendered = fig.emit().expect("emit");
+    println!("{rendered}");
+
+    let json = h.stats_json().expect("stats_json");
+    let drift_retunes = json
+        .get("kernels")
+        .and_then(|k| k.get("kern"))
+        .and_then(|k| k.get("drift_retunes"))
+        .and_then(Value::as_f64)
+        .unwrap_or(0.0);
+    let report = Value::Obj(vec![
+        ("bench".into(), s("drift_retune")),
+        ("engine".into(), s("mock(sleep)")),
+        ("threads".into(), n(threads as f64)),
+        ("phase_ms".into(), n(phase_ms as f64)),
+        ("inject_at_s".into(), n(inject_at)),
+        (
+            "new_winner_at_s".into(),
+            new_winner_at.map(n).unwrap_or(Value::Null),
+        ),
+        (
+            "detection_ms".into(),
+            new_winner_at.map(|at| n((at - inject_at) * 1e3)).unwrap_or(Value::Null),
+        ),
+        ("drift_retunes".into(), n(drift_retunes)),
+        ("total_calls".into(), n(samples.len() as f64)),
+    ]);
+    jitune::report::write_figure_file("drift_retune.json", &report.to_json_pretty())
+        .expect("json");
+    println!("wrote target/figures/drift_retune.{{csv,txt,json}}");
+}

@@ -162,11 +162,15 @@ impl Autotuner {
     /// warm-started. Entries whose candidate values no longer match the
     /// current manifest are rejected (the artifact set changed — stale
     /// tuning results must not be trusted).
+    ///
+    /// The import is all-or-nothing: every entry is validated and staged
+    /// before anything is merged, so a corrupt entry anywhere in the
+    /// array leaves the tuner untouched.
     pub fn import_state(&mut self, state: &Value) -> crate::Result<usize> {
         let arr = state
             .as_arr()
             .ok_or_else(|| crate::Error::Autotune("state: expected array".into()))?;
-        let mut imported = 0;
+        let mut staged = Vec::new();
         for entry in arr {
             let kernel = entry.req_str("kernel")?;
             let param = entry.req_str("param")?;
@@ -187,8 +191,14 @@ impl Autotuner {
             })?;
             let key = ProblemKey::new(kernel, param, signature);
             let strategy = (self.factory)(&values);
-            self.states.insert(key, TuningState::pre_tuned(values, winner_idx, strategy));
-            imported += 1;
+            // A corrupt entry (out-of-range winner) aborts the whole
+            // import with Error::Autotune instead of panicking — and
+            // because nothing was merged yet, aborts it cleanly.
+            staged.push((key, TuningState::pre_tuned(values, winner_idx, strategy)?));
+        }
+        let imported = staged.len();
+        for (key, state) in staged {
+            self.states.insert(key, state);
         }
         Ok(imported)
     }
@@ -222,7 +232,7 @@ mod tests {
             match st.decide() {
                 Decision::Explore(i) => st.report(i, costs[i]),
                 Decision::Finalize(i) => st.confirm_finalized(i),
-                Decision::Use(_) => break,
+                Decision::Use(_) | Decision::Failed => break,
             }
         }
         assert_eq!(t.tuned_value(&k), Some(20));
@@ -239,7 +249,7 @@ mod tests {
             match st.decide() {
                 Decision::Explore(i) => st.report(i, costs[i]),
                 Decision::Finalize(i) => st.confirm_finalized(i),
-                Decision::Use(_) => break,
+                Decision::Use(_) | Decision::Failed => break,
             }
         }
         assert_eq!(t.tuned_value(&k), Some(20));
@@ -249,6 +259,32 @@ mod tests {
         // values survive the reset; the sweep starts over
         assert_eq!(t.peek(&k).unwrap().values(), &[10, 20]);
         assert!(!t.retune(&ProblemKey::new("other", "p", "f32[1]")));
+    }
+
+    #[test]
+    fn corrupt_import_winner_is_an_error_not_a_panic() {
+        fn entry(kernel: &str, winner: f64) -> Value {
+            Value::Obj(vec![
+                ("kernel".into(), crate::util::json::s(kernel)),
+                ("param".into(), crate::util::json::s("p")),
+                ("signature".into(), crate::util::json::s("f32[8,8]")),
+                (
+                    "values".into(),
+                    Value::Arr(vec![crate::util::json::n(1.0), crate::util::json::n(2.0)]),
+                ),
+                ("winner_value".into(), crate::util::json::n(winner)),
+            ])
+        }
+        let mut t = Autotuner::sweep();
+        // a valid entry followed by one whose winner 99 is not among the
+        // candidates: the import must fail atomically
+        let state = Value::Arr(vec![entry("good", 2.0), entry("bad", 99.0)]);
+        let err = t.import_state(&state).unwrap_err();
+        assert!(err.to_string().contains("winner"), "{err}");
+        assert_eq!(t.problems(), 0, "corrupt state imports nothing, not even valid entries");
+        // the same valid entry alone imports fine
+        assert_eq!(t.import_state(&Value::Arr(vec![entry("good", 2.0)])).unwrap(), 1);
+        assert_eq!(t.problems(), 1);
     }
 
     #[test]

@@ -25,6 +25,17 @@ impl VariantRecord {
     pub fn count(&self) -> usize {
         self.samples.len()
     }
+
+    /// Mean observed cost — steadier than [`best`](VariantRecord::best)
+    /// when used as a serving-latency baseline (drift detection), since
+    /// a single anomalously fast sample cannot skew it as far.
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.samples.iter().sum::<f64>() / self.samples.len() as f64)
+        }
+    }
 }
 
 /// Measurement history for one tuning problem — what search strategies
@@ -87,13 +98,19 @@ impl History {
             .enumerate()
             .filter(|(_, r)| !r.failed)
             .filter_map(|(i, r)| r.best().map(|b| (i, b)))
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            // total_cmp: a NaN measurement must not panic winner selection
+            .min_by(|a, b| a.1.total_cmp(&b.1))
             .map(|(i, _)| i)
     }
 
     /// Best cost observed for candidate `idx`, if measured.
     pub fn best_of(&self, idx: usize) -> Option<f64> {
         self.records.get(idx).and_then(|r| r.best())
+    }
+
+    /// Mean cost observed for candidate `idx`, if measured.
+    pub fn mean_of(&self, idx: usize) -> Option<f64> {
+        self.records.get(idx).and_then(VariantRecord::mean)
     }
 
     /// True when every candidate has failed.

@@ -17,6 +17,8 @@
 //!   only keep ASTs ... and not the binary compiled by LLVM"), run it,
 //!   then acknowledge with [`TuningState::confirm_finalized`].
 //! * [`Decision::Use(i)`] — steady state: run the cached winner.
+//! * [`Decision::Failed`] — every candidate is dead; nothing can run.
+//!   Callers surface this as an error instead of indexing anything.
 
 use super::record::{History, TuningReport};
 use super::search::SearchStrategy;
@@ -31,6 +33,10 @@ pub enum Decision {
     Finalize(usize),
     /// Steady state: use tuned winner `i`.
     Use(usize),
+    /// Every candidate failed (or none exist): the problem cannot be
+    /// executed. First-class so callers never receive an index into an
+    /// empty or fully-failed candidate set.
+    Failed,
 }
 
 /// Publishable snapshot of a tuned problem's winner — what the
@@ -80,21 +86,30 @@ impl TuningState {
     /// tuning results (warm start: no tuning iterations, the winner still
     /// pays its one JIT compilation on first use via the normal
     /// `Finalizing` path, since only HLO text persists across runs).
+    ///
+    /// An out-of-range winner index — a stale or corrupt state file —
+    /// returns [`crate::Error::Autotune`] so imports fail cleanly instead
+    /// of crashing the process.
     pub fn pre_tuned(
         values: Vec<i64>,
         winner_idx: usize,
         strategy: Box<dyn SearchStrategy>,
-    ) -> TuningState {
-        assert!(winner_idx < values.len(), "winner index out of range");
+    ) -> crate::Result<TuningState> {
+        if winner_idx >= values.len() {
+            return Err(crate::Error::Autotune(format!(
+                "pre-tuned winner index {winner_idx} out of range for {} candidate(s)",
+                values.len()
+            )));
+        }
         let history = History::new(&values);
-        TuningState {
+        Ok(TuningState {
             values,
             history,
             strategy,
             phase: Phase::Finalizing,
             winner: Some(winner_idx),
             outstanding: None,
-        }
+        })
     }
 
     /// Decide what the next call should run.
@@ -119,17 +134,17 @@ impl TuningState {
                             Decision::Finalize(best)
                         }
                         None => {
+                            // Nothing runnable: strategy exhausted with no
+                            // surviving measurement.
                             self.phase = Phase::Failed;
-                            // Nothing runnable; callers check phase() on
-                            // Failed and surface Error::Autotune.
-                            Decision::Explore(0)
+                            Decision::Failed
                         }
                     },
                 }
             }
             Phase::Finalizing => Decision::Finalize(self.winner.expect("finalizing has winner")),
             Phase::Tuned => Decision::Use(self.winner.expect("tuned has winner")),
-            Phase::Failed => Decision::Explore(0),
+            Phase::Failed => Decision::Failed,
         }
     }
 
@@ -252,6 +267,7 @@ mod tests {
                 Decision::Explore(i) => state.report(i, costs[i]),
                 Decision::Finalize(i) => state.confirm_finalized(i),
                 Decision::Use(_) => {}
+                Decision::Failed => break,
             }
         }
         decisions
@@ -280,7 +296,9 @@ mod tests {
 
     #[test]
     fn winner_is_argmin() {
-        for (costs, want) in [([5.0, 6.0, 1.0], 2usize), ([0.1, 6.0, 1.0], 0), ([5.0, 0.2, 1.0], 1)] {
+        for (costs, want) in
+            [([5.0, 6.0, 1.0], 2usize), ([0.1, 6.0, 1.0], 0), ([5.0, 0.2, 1.0], 1)]
+        {
             let mut st = sweep_state(&[10, 20, 30]);
             drive(&mut st, &costs, 5);
             assert_eq!(st.winner(), Some(want), "costs {costs:?}");
@@ -312,6 +330,9 @@ mod tests {
         }
         assert_eq!(st.phase(), Phase::Failed);
         assert_eq!(st.tuned_value(), None);
+        // a failed problem keeps deciding Failed — never an index
+        assert_eq!(st.decide(), Decision::Failed);
+        assert_eq!(st.decide(), Decision::Failed);
     }
 
     #[test]
@@ -324,8 +345,33 @@ mod tests {
 
     #[test]
     fn empty_values_is_failed() {
-        let st = sweep_state(&[]);
+        let mut st = sweep_state(&[]);
         assert_eq!(st.phase(), Phase::Failed);
+        assert_eq!(st.decide(), Decision::Failed);
+    }
+
+    #[test]
+    fn pre_tuned_rejects_out_of_range_winner() {
+        let err = TuningState::pre_tuned(vec![1, 2], 5, Box::new(Sweep::new(2)))
+            .err()
+            .expect("out-of-range winner must not construct");
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // empty candidate set: any index is out of range
+        assert!(TuningState::pre_tuned(Vec::new(), 0, Box::new(Sweep::new(0))).is_err());
+    }
+
+    #[test]
+    fn pre_tuned_in_range_finalizes_then_serves() {
+        let mut st = TuningState::pre_tuned(vec![7, 9], 1, Box::new(Sweep::new(2))).unwrap();
+        assert_eq!(st.phase(), Phase::Finalizing);
+        match st.decide() {
+            Decision::Finalize(i) => {
+                assert_eq!(i, 1);
+                st.confirm_finalized(i);
+            }
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(st.tuned_value(), Some(9));
     }
 
     #[test]

@@ -4,7 +4,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, TuningState, WallClock};
+use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, WallClock};
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
 use crate::runtime::{CacheStats, CompileCache, Engine};
@@ -178,16 +178,16 @@ impl Dispatcher {
         loop {
             let decision = {
                 let plan = &self.plans[&hash][slot];
-                let st = self.tuner.state(&plan.key, &plan.values);
-                if st.phase() == Phase::Failed {
+                self.tuner.state(&plan.key, &plan.values).decide()
+            };
+            match decision {
+                Decision::Failed => {
+                    let plan = &self.plans[&hash][slot];
                     return Err(Error::Autotune(format!(
                         "every variant of {} failed; cannot execute",
                         plan.key
                     )));
                 }
-                st.decide()
-            };
-            match decision {
                 Decision::Explore(i) => {
                     let (key, variant) = {
                         let plan = &self.plans[&hash][slot];
@@ -296,22 +296,46 @@ impl Dispatcher {
     /// Publish the tuned winner's shareable executable into the fast
     /// lane. No-op when no lane is attached, the problem is not `Tuned`,
     /// or the engine's executables are thread-pinned (PJRT).
+    ///
+    /// The winner's *mean* measured tuning cost rides along as the
+    /// entry's drift baseline (steadier than the selection-time minimum
+    /// when a strategy sampled the winner more than once); a warm-started
+    /// winner with an empty history publishes baseline 0, which the
+    /// monitor self-calibrates from its first full window. A residually
+    /// anomalous single-sample baseline can cause at most one spurious
+    /// retune per cooldown — the rematch re-measures and republishes a
+    /// fresh baseline, which self-corrects.
     fn publish_winner(&mut self, hash: u64, slot: usize) {
         let Some(lane) = self.fast_lane.clone() else { return };
-        let (kernel, shapes, variant_id, value) = {
+        let (kernel, shapes, variant_id, value, size, baseline) = {
             let plan = &self.plans[&hash][slot];
-            let Some(win) = self.tuner.peek(&plan.key).and_then(TuningState::winner_snapshot)
-            else {
-                return;
-            };
-            let variant = &self.registry.manifest().problems[plan.problem_idx].variants[win.index];
+            let Some(state) = self.tuner.peek(&plan.key) else { return };
+            let Some(win) = state.winner_snapshot() else { return };
+            let problem = &self.registry.manifest().problems[plan.problem_idx];
+            let variant = &problem.variants[win.index];
             debug_assert_eq!(variant.value, win.value);
-            (plan.kernel.clone(), plan.input_shapes.clone(), variant.id.clone(), variant.value)
+            let baseline = state.history().mean_of(win.index).unwrap_or(0.0);
+            (
+                plan.kernel.clone(),
+                plan.input_shapes.clone(),
+                variant.id.clone(),
+                variant.value,
+                problem.size,
+                baseline,
+            )
         };
         match self.cache.shared_handle(&variant_id) {
             Some(exe) => {
                 log::debug!("fast lane: published {variant_id} for {kernel}");
-                lane.publish(&kernel, shapes, variant_id, value, exe);
+                lane.publish(fastlane::Publication {
+                    kernel,
+                    input_shapes: shapes,
+                    variant_id,
+                    value,
+                    size,
+                    baseline_s: baseline,
+                    exe,
+                });
             }
             None => {
                 // Shareability is an engine property and never changes
@@ -386,6 +410,36 @@ impl Dispatcher {
             exec_cost: cost,
             total: t0.elapsed(),
         })
+    }
+
+    /// One drift-policy evaluation pass: drain every monitored fast-lane
+    /// entry's latency window and retune the problems the policy flags.
+    /// The coordinator's leader loop calls this every `DriftPolicy::window`;
+    /// tests may drive it directly for determinism. Returns the number of
+    /// retunes triggered (0 when no lane or no drift policy is attached).
+    pub fn drift_tick(&mut self) -> usize {
+        let Some(lane) = self.fast_lane.clone() else { return 0 };
+        let hits = lane.drift_scan();
+        let mut retuned = 0;
+        for hit in hits {
+            log::warn!(
+                "drift: {}/n{} window mean {:.3}ms = {:.2}x baseline {:.3}ms ({}); retuning",
+                hit.kernel,
+                hit.size,
+                hit.window.mean_s * 1e3,
+                hit.window.ratio,
+                hit.baseline_s * 1e3,
+                hit.variant_id,
+            );
+            match self.retune(&hit.kernel, hit.size) {
+                Ok(_) => {
+                    self.stats.drift_retune(&hit.kernel, hit.window.ratio);
+                    retuned += 1;
+                }
+                Err(e) => log::warn!("drift: retune of {}/n{} failed: {e}", hit.kernel, hit.size),
+            }
+        }
+        retuned
     }
 
     /// Restart tuning for a problem: tuner state is reset to exploring,
@@ -611,9 +665,11 @@ mod tests {
         spec.fail_compile.insert("k.b.n8".into());
         let mut d = dispatcher(spec);
         let err = d.call("k", &inputs8()).err().expect("must fail");
+        assert!(matches!(err, Error::Autotune(_)), "{err:?}");
         assert!(err.to_string().contains("every variant"), "{err}");
-        // subsequent calls keep failing fast
-        assert!(d.call("k", &inputs8()).is_err());
+        // subsequent calls keep failing fast through Decision::Failed
+        let err2 = d.call("k", &inputs8()).err().expect("still failing");
+        assert!(matches!(err2, Error::Autotune(_)), "{err2:?}");
     }
 
     #[test]
@@ -666,6 +722,28 @@ mod tests {
         let (imported, skipped) = d.load_state(&path).unwrap();
         assert_eq!((imported, skipped), (0, 1));
         // tuning starts from scratch
+        let first = d.call("k", &inputs8()).unwrap();
+        assert_eq!(first.route, CallRoute::Explored);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn corrupt_state_winner_errors_instead_of_panicking() {
+        let mut d = dispatcher(MockSpec::default());
+        let path =
+            std::env::temp_dir().join(format!("jitune-corrupt-{}.json", std::process::id()));
+        // candidate values match the manifest, but the recorded winner is
+        // not among them: a corrupt / hand-edited state file
+        std::fs::write(
+            &path,
+            r#"[{"kernel":"k","param":"p","signature":"f32[8,8]",
+                 "values":[1,2],"winner_value":99}]"#,
+        )
+        .unwrap();
+        let err = d.load_state(&path).err().expect("corrupt winner must error");
+        assert!(matches!(err, Error::Autotune(_)), "{err:?}");
+        assert!(err.to_string().contains("winner"), "{err}");
+        // the dispatcher stays usable: tuning starts from scratch
         let first = d.call("k", &inputs8()).unwrap();
         assert_eq!(first.route, CallRoute::Explored);
         let _ = std::fs::remove_file(path);
@@ -793,6 +871,56 @@ mod tests {
         let o = d.call("k", &inputs8()).unwrap();
         assert_eq!(o.route, CallRoute::Tuned);
         assert!(lane.lookup("k", &inputs8()).is_some(), "lazy republish");
+    }
+
+    #[test]
+    fn drift_tick_retunes_a_degraded_winner() {
+        use crate::coordinator::drift::DriftPolicy;
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(500))
+            .with_cost("k.b.n8", Duration::from_micros(300));
+        let fault = spec.latency_fault.clone();
+        let mut d = dispatcher(spec);
+        let policy = DriftPolicy {
+            min_samples: 4,
+            ratio_threshold: 2.0,
+            cooldown: Duration::ZERO,
+            consecutive_windows: 2,
+            ..DriftPolicy::default()
+        };
+        let lane = Arc::new(FastLane::with_drift(policy));
+        d.set_fast_lane(lane.clone());
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(2));
+        assert_eq!(d.drift_tick(), 0, "healthy winner never retunes");
+
+        // degrade the winner 3x at execution: 900us, well past a's 500us
+        fault.set_scale("k.b.n8", 3.0);
+        let entry = lane.lookup("k", &inputs8()).unwrap();
+        for _ in 0..8 {
+            entry.call(&inputs8(), Instant::now()).unwrap();
+        }
+        assert_eq!(d.drift_tick(), 0, "hysteresis: one bad window is not drift");
+        let entry = lane.lookup("k", &inputs8()).expect("still published");
+        for _ in 0..8 {
+            entry.call(&inputs8(), Instant::now()).unwrap();
+        }
+        assert_eq!(d.drift_tick(), 1, "second consecutive bad window retunes");
+        assert!(lane.lookup("k", &inputs8()).is_none(), "published entry invalidated");
+        assert_eq!(d.tuned_value("k", 8), None);
+
+        // re-exploration measures the degraded winner honestly: the
+        // previously-losing variant wins the rematch
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(1), "converged to a new winner");
+        assert!(lane.lookup("k", &inputs8()).is_some(), "new winner republished");
+        assert_eq!(d.stats().kernel("k").unwrap().drift_retunes, 1);
+        assert_eq!(d.stats().drift_events().len(), 1);
+        assert!(d.stats().drift_events()[0].ratio > 2.0);
     }
 
     #[test]

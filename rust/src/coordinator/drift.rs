@@ -1,0 +1,533 @@
+//! Drift-detection retune policy: notice a published winner going bad and
+//! re-open tuning automatically.
+//!
+//! The paper observes that its JIT autotuner "re-optimizes kernels when
+//! they are called with other parameters" and that a found optimum "seems
+//! stable" — but a winner picked once can *drift*: thermal throttling,
+//! co-tenant interference, or an input-distribution shift can turn
+//! yesterday's fastest variant into today's slowest. The fast lane's
+//! per-call latency stream is exactly the runtime performance monitor
+//! dynamic-autotuning systems (KTT, online machine-code tuning) use to
+//! re-trigger search, so this module closes the loop:
+//!
+//! * At finalization the leader captures a **baseline** for the published
+//!   entry (the winner's *mean* measured tuning cost; a warm-started
+//!   entry with no history self-calibrates from its first full window).
+//! * Every fast-lane hit feeds its *execution* latency — the same
+//!   quantity the tuning metric measured, so fixed lane overhead cannot
+//!   masquerade as drift — into a [`DriftMonitor`]: sharded atomic
+//!   window counters (count, summed nanos, log₂ latency buckets for an
+//!   approximate p95) that concurrent caller threads update without
+//!   contending on a shared cache line.
+//! * The leader loop periodically drains the window ([`DriftMonitor::scan`])
+//!   and evaluates the [`DriftPolicy`]: a window with at least
+//!   `min_samples` calls whose mean exceeds `ratio_threshold` × baseline
+//!   increments a streak; `consecutive_windows` such windows in a row —
+//!   the hysteresis that keeps a single noisy window from flapping — plus
+//!   an expired `cooldown` trigger an automatic
+//!   [`Dispatcher::retune`](super::Dispatcher::retune).
+//!
+//! The monitor lives inside the published
+//! [`TunedEntry`](super::fastlane::TunedEntry), so invalidation (retune,
+//! demotion, failure) retires the monitor with the entry and the
+//! replacement winner starts a fresh baseline + cooldown — retriggering
+//! cannot race a stale monitor.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{n, Value};
+
+use super::mutex_lock;
+
+/// When to declare a published winner drifted and retune it.
+///
+/// Enabled via `ServerOptions { drift: Some(policy), .. }`; `None` keeps
+/// the manual-retune-only behaviour bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftPolicy {
+    /// Evaluation cadence: how often the leader drains each entry's
+    /// window counters and re-evaluates the policy.
+    pub window: Duration,
+    /// Minimum accumulated fast-lane calls before a window is judged.
+    /// Sparser scans carry their samples forward (they neither
+    /// strengthen nor erase drift evidence until enough accumulate).
+    pub min_samples: u64,
+    /// A window is *bad* when its mean latency exceeds this multiple of
+    /// the entry's baseline.
+    pub ratio_threshold: f64,
+    /// Grace period after publication during which no retune fires —
+    /// bounds retune frequency and lets a fresh winner warm up.
+    pub cooldown: Duration,
+    /// Number of consecutive bad windows required to trigger (hysteresis
+    /// against one noisy window).
+    pub consecutive_windows: u32,
+    /// Smoothing factor for the exponentially weighted moving average of
+    /// window means exposed in stats, in (0, 1].
+    pub ewma_alpha: f64,
+}
+
+impl Default for DriftPolicy {
+    fn default() -> Self {
+        DriftPolicy {
+            window: Duration::from_millis(250),
+            min_samples: 32,
+            ratio_threshold: 2.0,
+            cooldown: Duration::from_secs(5),
+            consecutive_windows: 2,
+            ewma_alpha: 0.3,
+        }
+    }
+}
+
+/// One evaluated window of fast-lane latencies for a published entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSummary {
+    /// Fast-lane calls observed in the window.
+    pub samples: u64,
+    /// Mean execution latency (seconds).
+    pub mean_s: f64,
+    /// Approximate 95th percentile (upper bound of the log₂ bucket
+    /// holding the p95 observation), seconds.
+    pub p95_s: f64,
+    /// `mean_s / baseline` — the drift signal the policy thresholds.
+    pub ratio: f64,
+}
+
+/// A policy decision to retune one published entry, as returned by
+/// [`super::FastLane::drift_scan`] and consumed by
+/// [`super::Dispatcher::drift_tick`].
+#[derive(Debug, Clone)]
+pub struct DriftHit {
+    /// Kernel family of the drifted entry.
+    pub kernel: String,
+    /// Problem size (the registry's retune key).
+    pub size: i64,
+    /// Variant that was serving when drift was detected.
+    pub variant_id: String,
+    /// Baseline the window was compared against (seconds).
+    pub baseline_s: f64,
+    /// The triggering window.
+    pub window: WindowSummary,
+}
+
+const DRIFT_SHARDS: usize = 8;
+
+/// Log₂ nanosecond buckets: index `i` covers `[2^(i-1), 2^i)` ns, so 40
+/// buckets reach ~9 minutes — far beyond any sane kernel latency.
+const BUCKETS: usize = 40;
+
+fn bucket_of(nanos: u64) -> usize {
+    (64 - nanos.leading_zeros() as usize).min(BUCKETS - 1)
+}
+
+/// One window-counter shard, aligned so concurrent recorders on
+/// different threads do not false-share the hot `hits`/`nanos` line.
+#[repr(align(64))]
+struct DriftShard {
+    hits: AtomicU64,
+    nanos: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+static NEXT_DRIFT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static DRIFT_SHARD_INDEX: usize =
+        NEXT_DRIFT_SHARD.fetch_add(1, Ordering::Relaxed) % DRIFT_SHARDS;
+}
+
+/// Leader-side evaluation state. Only the leader's periodic scan touches
+/// it, so a plain mutex is uncontended.
+struct EvalState {
+    baseline_s: f64,
+    /// Whether the baseline has been confirmed (or replaced) by a full
+    /// serving window — the tuning-time baseline can be a single,
+    /// possibly anomalous measurement, and excludes call overhead.
+    calibrated: bool,
+    ewma_s: f64,
+    streak: u32,
+    last: Option<WindowSummary>,
+    triggered: u64,
+    /// When the last retune fired. Re-arms the cooldown even if the
+    /// retune failed and this monitor survived.
+    last_trigger: Option<Instant>,
+    /// Samples carried over from scans too sparse to judge — a low-rate
+    /// entry accumulates evidence across windows instead of having it
+    /// silently discarded.
+    pending_hits: u64,
+    pending_nanos: u64,
+    pending_buckets: [u64; BUCKETS],
+}
+
+/// Windowed latency monitor for one published fast-lane entry.
+///
+/// Caller threads feed [`record`](DriftMonitor::record) (lock-free
+/// sharded atomics); the leader periodically drains the window with
+/// [`scan`](DriftMonitor::scan), which applies the [`DriftPolicy`] and
+/// reports whether a retune should fire.
+pub struct DriftMonitor {
+    shards: [DriftShard; DRIFT_SHARDS],
+    created: Instant,
+    eval: Mutex<EvalState>,
+}
+
+impl DriftMonitor {
+    /// Monitor with the given baseline (seconds). A non-finite or
+    /// non-positive baseline — e.g. a warm-started winner with no tuning
+    /// history — self-calibrates: the first full window sets it.
+    pub fn new(baseline_s: f64) -> DriftMonitor {
+        let baseline = if baseline_s.is_finite() && baseline_s > 0.0 { baseline_s } else { 0.0 };
+        DriftMonitor {
+            shards: std::array::from_fn(|_| DriftShard {
+                hits: AtomicU64::new(0),
+                nanos: AtomicU64::new(0),
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            }),
+            created: Instant::now(),
+            eval: Mutex::new(EvalState {
+                baseline_s: baseline,
+                calibrated: false,
+                ewma_s: 0.0,
+                streak: 0,
+                last: None,
+                triggered: 0,
+                last_trigger: None,
+                pending_hits: 0,
+                pending_nanos: 0,
+                pending_buckets: [0; BUCKETS],
+            }),
+        }
+    }
+
+    /// Record one fast-lane call's execution latency (the same quantity
+    /// the tuning-time baseline measured). Hot path: three relaxed
+    /// `fetch_add`s on a thread-private shard.
+    pub fn record(&self, latency: Duration) {
+        let shard = &self.shards[DRIFT_SHARD_INDEX.with(|i| *i)];
+        let nanos = latency.as_nanos() as u64;
+        shard.hits.fetch_add(1, Ordering::Relaxed);
+        shard.nanos.fetch_add(nanos, Ordering::Relaxed);
+        shard.buckets[bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drain the current window and evaluate `policy`. Leader-only.
+    /// Returns the triggering window when an automatic retune should
+    /// fire, `None` otherwise.
+    ///
+    /// A scan with fewer than `min_samples` accumulated calls is not
+    /// judged, but the samples are *carried forward* — a low-rate entry
+    /// accumulates evidence across scans until it can be judged instead
+    /// of having drift rendered permanently undetectable.
+    pub fn scan(&self, policy: &DriftPolicy, now: Instant) -> Option<WindowSummary> {
+        let mut hits = 0u64;
+        let mut nanos = 0u64;
+        let mut buckets = [0u64; BUCKETS];
+        for shard in &self.shards {
+            hits += shard.hits.swap(0, Ordering::Relaxed);
+            nanos += shard.nanos.swap(0, Ordering::Relaxed);
+            for (acc, b) in buckets.iter_mut().zip(&shard.buckets) {
+                *acc += b.swap(0, Ordering::Relaxed);
+            }
+        }
+        let mut eval = mutex_lock(&self.eval);
+        eval.pending_hits += hits;
+        eval.pending_nanos += nanos;
+        for (acc, b) in eval.pending_buckets.iter_mut().zip(&buckets) {
+            *acc += b;
+        }
+        if eval.pending_hits < policy.min_samples.max(1) {
+            // Not enough evidence yet: keep accumulating; the streak and
+            // EWMA stay untouched.
+            return None;
+        }
+        let samples = eval.pending_hits;
+        let mean_s = (eval.pending_nanos as f64 / samples as f64) * 1e-9;
+        let p95_s = p95_from(&eval.pending_buckets, samples);
+        eval.pending_hits = 0;
+        eval.pending_nanos = 0;
+        eval.pending_buckets = [0; BUCKETS];
+        if eval.baseline_s <= 0.0 {
+            // Self-calibration: adopt the first judged window as the
+            // baseline and never treat it as drifted.
+            eval.baseline_s = mean_s;
+            eval.calibrated = true;
+            eval.ewma_s = mean_s;
+            eval.last = Some(WindowSummary { samples, mean_s, p95_s, ratio: 1.0 });
+            return None;
+        }
+        if !eval.calibrated {
+            eval.calibrated = true;
+            if mean_s / eval.baseline_s <= policy.ratio_threshold {
+                // The tuning-time baseline can be a single, anomalously
+                // fast measurement and excludes call overhead. A first
+                // window that still looks healthy replaces it with the
+                // steadier serving-time mean, so modest optimism cannot
+                // snowball into retune flapping. A first window already
+                // past the threshold falls through and is judged against
+                // the tuning baseline — that is genuine-looking drift.
+                eval.baseline_s = mean_s;
+                eval.ewma_s = mean_s;
+                eval.last = Some(WindowSummary { samples, mean_s, p95_s, ratio: 1.0 });
+                return None;
+            }
+        }
+        let alpha = policy.ewma_alpha.clamp(0.01, 1.0);
+        eval.ewma_s =
+            if eval.ewma_s > 0.0 { alpha * mean_s + (1.0 - alpha) * eval.ewma_s } else { mean_s };
+        let ratio = mean_s / eval.baseline_s;
+        let summary = WindowSummary { samples, mean_s, p95_s, ratio };
+        eval.last = Some(summary);
+        if ratio > policy.ratio_threshold {
+            eval.streak += 1;
+        } else {
+            eval.streak = 0;
+        }
+        // Cooldown re-arms from the last trigger (covers a failed retune
+        // that left this monitor alive), falling back to publication.
+        let anchor = eval.last_trigger.unwrap_or(self.created);
+        let warm = now.saturating_duration_since(anchor) >= policy.cooldown;
+        if warm && eval.streak >= policy.consecutive_windows.max(1) {
+            eval.streak = 0;
+            eval.triggered += 1;
+            eval.last_trigger = Some(now);
+            return Some(summary);
+        }
+        None
+    }
+
+    /// Current baseline (seconds); 0 until self-calibration completes.
+    pub fn baseline_s(&self) -> f64 {
+        mutex_lock(&self.eval).baseline_s
+    }
+
+    /// EWMA of judged window means (seconds); 0 before the first window.
+    pub fn ewma_s(&self) -> f64 {
+        mutex_lock(&self.eval).ewma_s
+    }
+
+    /// Consecutive bad windows so far.
+    pub fn streak(&self) -> u32 {
+        mutex_lock(&self.eval).streak
+    }
+
+    /// Retunes this monitor has triggered.
+    pub fn triggers(&self) -> u64 {
+        mutex_lock(&self.eval).triggered
+    }
+
+    /// Most recently judged window.
+    pub fn last_window(&self) -> Option<WindowSummary> {
+        mutex_lock(&self.eval).last
+    }
+
+    /// Machine-readable monitor state for `stats_json()`.
+    pub fn status_json(&self) -> Value {
+        let eval = mutex_lock(&self.eval);
+        let mut obj = vec![
+            ("baseline_s".to_string(), n(eval.baseline_s)),
+            ("ewma_s".to_string(), n(eval.ewma_s)),
+            ("streak".to_string(), n(eval.streak as f64)),
+            ("triggers".to_string(), n(eval.triggered as f64)),
+        ];
+        if let Some(w) = eval.last {
+            obj.push(("window_samples".to_string(), n(w.samples as f64)));
+            obj.push(("window_mean_s".to_string(), n(w.mean_s)));
+            obj.push(("window_p95_s".to_string(), n(w.p95_s)));
+            obj.push(("window_ratio".to_string(), n(w.ratio)));
+        }
+        Value::Obj(obj)
+    }
+}
+
+/// Upper bound (seconds) of the bucket holding the p95 observation.
+fn p95_from(buckets: &[u64; BUCKETS], total: u64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let target = ((0.95 * total as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= target {
+            return (1u64 << i) as f64 * 1e-9;
+        }
+    }
+    (1u64 << (BUCKETS - 1)) as f64 * 1e-9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> DriftPolicy {
+        DriftPolicy {
+            window: Duration::from_millis(10),
+            min_samples: 4,
+            ratio_threshold: 2.0,
+            cooldown: Duration::ZERO,
+            consecutive_windows: 2,
+            ewma_alpha: 0.5,
+        }
+    }
+
+    fn fill(m: &DriftMonitor, count: usize, each: Duration) {
+        for _ in 0..count {
+            m.record(each);
+        }
+    }
+
+    #[test]
+    fn healthy_windows_never_trigger() {
+        let m = DriftMonitor::new(100e-6);
+        let p = policy();
+        for _ in 0..10 {
+            fill(&m, 8, Duration::from_micros(100));
+            assert!(m.scan(&p, Instant::now()).is_none());
+        }
+        assert_eq!(m.triggers(), 0);
+        assert!((m.ewma_s() - 100e-6).abs() < 20e-6, "ewma tracks the mean");
+    }
+
+    #[test]
+    fn consecutive_bad_windows_trigger_once_and_reset() {
+        let m = DriftMonitor::new(100e-6);
+        let p = policy();
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none(), "hysteresis: one bad window");
+        assert_eq!(m.streak(), 1);
+        fill(&m, 8, Duration::from_micros(300));
+        let w = m.scan(&p, Instant::now()).expect("second consecutive bad window");
+        assert!(w.ratio > 2.0, "ratio {}", w.ratio);
+        assert_eq!(w.samples, 8);
+        assert_eq!(m.triggers(), 1);
+        assert_eq!(m.streak(), 0, "streak resets after a trigger");
+    }
+
+    #[test]
+    fn single_noisy_window_resets_streak() {
+        let m = DriftMonitor::new(100e-6);
+        let p = policy();
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        fill(&m, 8, Duration::from_micros(100)); // healthy again
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert_eq!(m.streak(), 0, "healthy window clears the streak");
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none(), "no flapping on isolated noise");
+    }
+
+    #[test]
+    fn sparse_window_neither_triggers_nor_resets() {
+        let m = DriftMonitor::new(100e-6);
+        let p = policy();
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert_eq!(m.streak(), 1);
+        fill(&m, 2, Duration::from_micros(300)); // below min_samples
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert_eq!(m.streak(), 1, "sparse window leaves evidence untouched");
+    }
+
+    #[test]
+    fn sparse_windows_accumulate_until_judgeable() {
+        let m = DriftMonitor::new(100e-6);
+        let p = policy(); // min_samples 4
+        // two scans of 2 samples each: the first carries forward, the
+        // second reaches 4 accumulated and is judged (bad → streak 1)
+        fill(&m, 2, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert_eq!(m.streak(), 0, "still accumulating");
+        fill(&m, 2, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert_eq!(m.streak(), 1, "accumulated sparse windows were judged");
+        // a second accumulated bad window completes the streak
+        fill(&m, 2, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        fill(&m, 2, Duration::from_micros(300));
+        assert!(
+            m.scan(&p, Instant::now()).is_some(),
+            "low-rate drift is detected, just more slowly"
+        );
+    }
+
+    #[test]
+    fn first_healthy_window_refines_an_optimistic_baseline() {
+        // Tuning-time best was anomalously fast (60us) but real serving
+        // runs at 100us (1.67x, under the 2x threshold): the first
+        // window absorbs the bias instead of snowballing into retunes.
+        let m = DriftMonitor::new(60e-6);
+        let p = policy();
+        fill(&m, 8, Duration::from_micros(100));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert!((m.baseline_s() - 100e-6).abs() < 5e-6, "baseline refined to window mean");
+        for _ in 0..5 {
+            fill(&m, 8, Duration::from_micros(100));
+            assert!(m.scan(&p, Instant::now()).is_none());
+        }
+        assert_eq!(m.triggers(), 0);
+        assert_eq!(m.streak(), 0);
+    }
+
+    #[test]
+    fn cooldown_rearms_after_a_trigger() {
+        let m = DriftMonitor::new(100e-6);
+        let mut p = policy();
+        p.consecutive_windows = 1;
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_some(), "cooldown zero: fires at once");
+        // the retune failed and this monitor survived: with a real
+        // cooldown it must not fire again immediately
+        p.cooldown = Duration::from_secs(3600);
+        for _ in 0..3 {
+            fill(&m, 8, Duration::from_micros(300));
+            assert!(m.scan(&p, Instant::now()).is_none(), "re-armed from last trigger");
+        }
+        assert_eq!(m.triggers(), 1);
+    }
+
+    #[test]
+    fn cooldown_blocks_triggering() {
+        let m = DriftMonitor::new(100e-6);
+        let mut p = policy();
+        p.cooldown = Duration::from_secs(3600);
+        for _ in 0..5 {
+            fill(&m, 8, Duration::from_micros(300));
+            assert!(m.scan(&p, Instant::now()).is_none(), "cooldown suppresses triggers");
+        }
+        assert_eq!(m.triggers(), 0);
+    }
+
+    #[test]
+    fn zero_baseline_self_calibrates() {
+        let m = DriftMonitor::new(0.0);
+        let p = policy();
+        fill(&m, 8, Duration::from_micros(100));
+        assert!(m.scan(&p, Instant::now()).is_none(), "calibration window never drifts");
+        assert!((m.baseline_s() - 100e-6).abs() < 5e-6);
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(m.scan(&p, Instant::now()).is_none());
+        fill(&m, 8, Duration::from_micros(300));
+        assert!(
+            m.scan(&p, Instant::now()).is_some(),
+            "drift detected against the self-calibrated baseline"
+        );
+    }
+
+    #[test]
+    fn window_summary_reports_mean_and_p95() {
+        let m = DriftMonitor::new(100e-6);
+        let p = policy();
+        fill(&m, 8, Duration::from_micros(300));
+        m.scan(&p, Instant::now());
+        let w = m.last_window().expect("window recorded");
+        assert_eq!(w.samples, 8);
+        assert!((w.mean_s - 300e-6).abs() < 5e-6, "mean {}", w.mean_s);
+        assert!(w.p95_s >= w.mean_s, "bucket upper bound dominates the mean");
+        assert!(w.p95_s <= 4.0 * w.mean_s, "log2 bucket stays within 2x");
+        let json = m.status_json();
+        assert!(json.get("window_ratio").is_some());
+        assert!(json.get("baseline_s").is_some());
+    }
+}

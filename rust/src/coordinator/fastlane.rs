@@ -28,10 +28,13 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::{BTreeMap, HashMap};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
 
+use super::mutex_lock;
+
 use crate::coordinator::dispatcher::{CallOutcome, CallRoute};
+use crate::coordinator::drift::{DriftHit, DriftMonitor, DriftPolicy};
 use crate::error::Result;
 use crate::runtime::SharedKernel;
 use crate::tensor::HostTensor;
@@ -129,6 +132,26 @@ impl LaneCounters {
     }
 }
 
+/// Everything the leader hands the lane when publishing a winner.
+pub struct Publication {
+    /// Kernel family.
+    pub kernel: String,
+    /// Input shapes the entry serves (the invalidation key).
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Winning variant id.
+    pub variant_id: String,
+    /// Winning parameter value.
+    pub value: i64,
+    /// Problem size (the `Dispatcher::retune` key).
+    pub size: i64,
+    /// Winner's tuning-time latency baseline for drift detection, in
+    /// seconds. Pass 0 to self-calibrate from the first full window;
+    /// ignored when the lane has no drift policy.
+    pub baseline_s: f64,
+    /// Shareable executable handle.
+    pub exe: Arc<dyn SharedKernel>,
+}
+
 /// An immutable published winner: everything a caller thread needs to
 /// execute a tuned problem without the leader.
 pub struct TunedEntry {
@@ -136,8 +159,14 @@ pub struct TunedEntry {
     input_shapes: Vec<Vec<usize>>,
     variant_id: String,
     value: i64,
+    /// Problem size — the key `Dispatcher::retune` takes, carried so a
+    /// drift trigger can name the problem without a registry lookup.
+    size: i64,
     exe: Arc<dyn SharedKernel>,
     counters: Arc<LaneCounters>,
+    /// Windowed drift monitor; present only when the lane was built with
+    /// a [`DriftPolicy`], so `drift: None` keeps the hit path unchanged.
+    monitor: Option<DriftMonitor>,
 }
 
 impl TunedEntry {
@@ -156,6 +185,16 @@ impl TunedEntry {
         &self.input_shapes
     }
 
+    /// Problem size this entry serves.
+    pub fn size(&self) -> i64 {
+        self.size
+    }
+
+    /// The entry's drift monitor, when the lane has a drift policy.
+    pub fn drift_monitor(&self) -> Option<&DriftMonitor> {
+        self.monitor.as_ref()
+    }
+
     fn matches(&self, kernel: &str, inputs: &[HostTensor]) -> bool {
         shapes_match(&self.kernel, &self.input_shapes, kernel, inputs)
     }
@@ -170,6 +209,14 @@ impl TunedEntry {
         let exec = e0.elapsed();
         let total = t0.elapsed();
         self.counters.record(total);
+        if let Some(monitor) = &self.monitor {
+            // Execution time, not end-to-end: the baseline was measured
+            // around `execute` alone during tuning, so feeding the same
+            // quantity keeps the drift ratio apples-to-apples — fixed
+            // lane overhead on a microsecond kernel must not read as
+            // drift.
+            monitor.record(exec);
+        }
         Ok(CallOutcome {
             output,
             variant_id: self.variant_id.clone(),
@@ -190,10 +237,6 @@ fn write_lock<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
     lock.write().unwrap_or_else(|e| e.into_inner())
 }
 
-fn mutex_lock<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
-    lock.lock().unwrap_or_else(|e| e.into_inner())
-}
-
 /// The published-winner map shared between the leader (writer) and every
 /// [`super::server::CoordinatorHandle`] (readers).
 pub struct FastLane {
@@ -204,12 +247,34 @@ pub struct FastLane {
     /// retunes. `Mutex` (not `RwLock`): touched only on publish and on
     /// stats rendering.
     counters: Mutex<BTreeMap<String, Arc<LaneCounters>>>,
+    /// Drift-retune policy; `None` disables monitoring entirely (no
+    /// window counters are even allocated on publish).
+    drift: Option<DriftPolicy>,
 }
 
 impl FastLane {
-    /// An empty lane.
+    /// An empty lane without drift monitoring.
     pub fn new() -> FastLane {
-        FastLane { entries: RwLock::new(HashMap::new()), counters: Mutex::new(BTreeMap::new()) }
+        FastLane {
+            entries: RwLock::new(HashMap::new()),
+            counters: Mutex::new(BTreeMap::new()),
+            drift: None,
+        }
+    }
+
+    /// An empty lane whose published entries carry drift monitors
+    /// evaluated against `policy`.
+    pub fn with_drift(policy: DriftPolicy) -> FastLane {
+        FastLane {
+            entries: RwLock::new(HashMap::new()),
+            counters: Mutex::new(BTreeMap::new()),
+            drift: Some(policy),
+        }
+    }
+
+    /// The lane's drift policy, if monitoring is enabled.
+    pub fn drift_policy(&self) -> Option<&DriftPolicy> {
+        self.drift.as_ref()
     }
 
     /// Look up the published entry serving `kernel` called with `inputs`.
@@ -230,26 +295,24 @@ impl FastLane {
 
     /// Publish (or replace) the winner for a (kernel, shapes) problem.
     /// Leader-only.
-    pub fn publish(
-        &self,
-        kernel: &str,
-        input_shapes: Vec<Vec<usize>>,
-        variant_id: String,
-        value: i64,
-        exe: Arc<dyn SharedKernel>,
-    ) {
+    pub fn publish(&self, publication: Publication) {
+        let Publication { kernel, input_shapes, variant_id, value, size, baseline_s, exe } =
+            publication;
         let counters = mutex_lock(&self.counters)
-            .entry(kernel.to_string())
+            .entry(kernel.clone())
             .or_insert_with(|| Arc::new(LaneCounters::new()))
             .clone();
-        let hash = shape_hash(kernel, &input_shapes);
+        let hash = shape_hash(&kernel, &input_shapes);
+        let monitor = self.drift.map(|_| DriftMonitor::new(baseline_s));
         let entry = Arc::new(TunedEntry {
-            kernel: kernel.to_string(),
+            kernel,
             input_shapes,
             variant_id,
             value,
+            size,
             exe,
             counters,
+            monitor,
         });
         let mut map = write_lock(&self.entries);
         let bucket = map.entry(hash).or_default();
@@ -301,6 +364,33 @@ impl FastLane {
         read_lock(&self.entries).values().map(Vec::len).sum()
     }
 
+    /// Drain every monitored entry's latency window and evaluate the
+    /// drift policy. Leader-only (the scan consumes the window counters).
+    /// Returns the entries whose windows demand a retune; empty when the
+    /// lane has no drift policy.
+    pub fn drift_scan(&self) -> Vec<DriftHit> {
+        let Some(policy) = self.drift else { return Vec::new() };
+        // Collect Arc clones first so policy evaluation runs without
+        // holding the read lock.
+        let entries: Vec<Arc<TunedEntry>> =
+            read_lock(&self.entries).values().flat_map(|b| b.iter().cloned()).collect();
+        let now = Instant::now();
+        let mut hits = Vec::new();
+        for entry in entries {
+            let Some(monitor) = &entry.monitor else { continue };
+            if let Some(window) = monitor.scan(&policy, now) {
+                hits.push(DriftHit {
+                    kernel: entry.kernel.clone(),
+                    size: entry.size,
+                    variant_id: entry.variant_id.clone(),
+                    baseline_s: monitor.baseline_s(),
+                    window,
+                });
+            }
+        }
+        hits
+    }
+
     /// Per-kernel (hits, mean latency seconds) snapshot, sorted by kernel.
     pub fn snapshot(&self) -> Vec<(String, u64, f64)> {
         mutex_lock(&self.counters)
@@ -323,6 +413,28 @@ impl FastLane {
                 mean * 1e3
             ));
         }
+        if self.drift.is_some() {
+            let mut lines: Vec<String> = read_lock(&self.entries)
+                .values()
+                .flatten()
+                .filter_map(|e| {
+                    e.monitor.as_ref().map(|m| {
+                        format!(
+                            "  drift {}/n{}: baseline={:.3}ms ewma={:.3}ms streak={}\n",
+                            e.kernel,
+                            e.size,
+                            m.baseline_s() * 1e3,
+                            m.ewma_s() * 1e3,
+                            m.streak(),
+                        )
+                    })
+                })
+                .collect();
+            lines.sort();
+            for line in lines {
+                out.push_str(&line);
+            }
+        }
         out
     }
 
@@ -341,10 +453,24 @@ impl FastLane {
                 )
             })
             .collect();
-        Value::Obj(vec![
+        let mut obj = vec![
             ("published".into(), n(self.published() as f64)),
             ("kernels".into(), Value::Obj(kernels)),
-        ])
+        ];
+        if self.drift.is_some() {
+            let mut monitors: Vec<(String, Value)> = read_lock(&self.entries)
+                .values()
+                .flatten()
+                .filter_map(|e| {
+                    e.monitor
+                        .as_ref()
+                        .map(|m| (format!("{}/n{}", e.kernel, e.size), m.status_json()))
+                })
+                .collect();
+            monitors.sort_by(|a, b| a.0.cmp(&b.0));
+            obj.push(("drift".into(), Value::Obj(monitors)));
+        }
+        Value::Obj(obj)
     }
 }
 
@@ -379,13 +505,15 @@ mod tests {
     }
 
     fn publish_fixed(lane: &FastLane, kernel: &str, dim: usize, value: f32, fail: bool) {
-        lane.publish(
-            kernel,
-            vec![vec![dim, dim]],
-            format!("{kernel}.v{value}"),
-            value as i64,
-            Arc::new(FixedKernel { id: format!("{kernel}.v{value}"), value, fail }),
-        );
+        lane.publish(Publication {
+            kernel: kernel.to_string(),
+            input_shapes: vec![vec![dim, dim]],
+            variant_id: format!("{kernel}.v{value}"),
+            value: value as i64,
+            size: dim as i64,
+            baseline_s: 100e-6,
+            exe: Arc::new(FixedKernel { id: format!("{kernel}.v{value}"), value, fail }),
+        });
     }
 
     #[test]
@@ -493,6 +621,57 @@ mod tests {
         let shapes = vec![vec![8usize, 8], vec![8usize]];
         assert_eq!(plan_hash("k", &inputs), shape_hash("k", &shapes));
         assert_ne!(plan_hash("k", &inputs), shape_hash("j", &shapes));
+    }
+
+    #[test]
+    fn drift_monitor_only_exists_with_policy() {
+        use crate::coordinator::drift::DriftPolicy;
+        let plain = FastLane::new();
+        publish_fixed(&plain, "k", 2, 1.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        assert!(plain.lookup("k", &inputs).unwrap().drift_monitor().is_none());
+        assert!(plain.drift_scan().is_empty());
+        assert!(plain.to_json().get("drift").is_none(), "no drift key without policy");
+
+        let lane = FastLane::with_drift(DriftPolicy::default());
+        publish_fixed(&lane, "k", 2, 1.0, false);
+        let entry = lane.lookup("k", &inputs).unwrap();
+        assert_eq!(entry.size(), 2);
+        let monitor = entry.drift_monitor().expect("policy arms a monitor");
+        assert!((monitor.baseline_s() - 100e-6).abs() < 1e-12);
+        entry.call(&inputs, Instant::now()).unwrap();
+        // healthy traffic: scan judges the window but demands nothing
+        assert!(lane.drift_scan().is_empty());
+        assert!(lane.to_json().get("drift").is_some());
+        assert!(lane.render().contains("drift k/n2"), "{}", lane.render());
+    }
+
+    #[test]
+    fn drift_scan_flags_degraded_entry() {
+        use crate::coordinator::drift::DriftPolicy;
+        let policy = DriftPolicy {
+            min_samples: 1,
+            ratio_threshold: 2.0,
+            cooldown: Duration::from_secs(0),
+            consecutive_windows: 1,
+            ..DriftPolicy::default()
+        };
+        let lane = FastLane::with_drift(policy);
+        publish_fixed(&lane, "k", 2, 1.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).unwrap();
+        // feed the monitor directly: 10 calls at 3x the 100us baseline
+        let monitor = entry.drift_monitor().unwrap();
+        for _ in 0..10 {
+            monitor.record(Duration::from_micros(300));
+        }
+        let hits = lane.drift_scan();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].kernel, "k");
+        assert_eq!(hits[0].size, 2);
+        assert!(hits[0].window.ratio > 2.0);
+        // window was drained: an immediate rescan is quiet
+        assert!(lane.drift_scan().is_empty());
     }
 
     #[test]

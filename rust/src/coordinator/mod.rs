@@ -39,7 +39,41 @@
 //! executables cannot leave the leader thread (PJRT) simply never
 //! publish — their steady-state calls keep flowing through the leader,
 //! preserving exact pre-fast-lane behaviour.
+//!
+//! # Drift monitoring
+//!
+//! A published winner is a bet that past measurements predict future
+//! latency; thermal throttling, co-tenancy, or input-distribution shift
+//! can silently invalidate it. With `ServerOptions { drift: Some(policy) }`
+//! the lanes close that loop:
+//!
+//! * On publication the entry captures a **baseline** (the winner's
+//!   *mean* tuning-time execution cost; warm starts self-calibrate from
+//!   the first full window).
+//! * Fast-lane hits additionally feed their execution latency — the same
+//!   quantity the baseline measured — into a [`drift::DriftMonitor`]:
+//!   sharded atomic window counters (count, summed nanos, log₂ buckets
+//!   for an approximate p95), still contention-free on the hot path.
+//! * The leader loop wakes at least every [`drift::DriftPolicy::window`]
+//!   (an idle-capable `recv_timeout` instead of the plain blocking
+//!   `recv`) and runs [`Dispatcher::drift_tick`]: windows with enough
+//!   samples whose mean exceeds `ratio_threshold` × baseline build a
+//!   streak, and `consecutive_windows` bad windows after the `cooldown`
+//!   trigger the existing [`Dispatcher::retune`] path — the entry is
+//!   invalidated, callers fall back to the leader, tuning re-explores,
+//!   and the new winner republishes with a fresh baseline and cooldown.
+//!   Hysteresis (streak + cooldown) keeps one noisy window from
+//!   flapping.
+//! * Every automatic retune is recorded in [`CoordStats`]
+//!   (`drift_retunes` per kernel, a capped `drift_events` log) and the
+//!   per-entry monitor state is exported under `fast_lane.drift` in
+//!   `stats_json()`.
+//!
+//! With `drift: None` (the default) none of this machinery is even
+//! allocated: the leader loop blocks exactly as before and published
+//! entries carry no monitor.
 
+pub mod drift;
 pub mod fastlane;
 
 mod dispatcher;
@@ -48,7 +82,14 @@ pub mod server;
 mod stats;
 
 pub use dispatcher::{CallOutcome, CallRoute, Dispatcher};
-pub use fastlane::FastLane;
+pub use drift::{DriftHit, DriftMonitor, DriftPolicy, WindowSummary};
+pub use fastlane::{FastLane, Publication};
 pub use registry::KernelRegistry;
 pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
-pub use stats::{CoordStats, KernelStats};
+pub use stats::{CoordStats, DriftEvent, KernelStats};
+
+/// Poison-tolerant mutex lock shared by the coordinator's modules: a
+/// panicked recorder must not take the stats/monitor state down with it.
+pub(crate) fn mutex_lock<T>(lock: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}

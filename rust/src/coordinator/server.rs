@@ -16,9 +16,10 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
+use crate::coordinator::drift::DriftPolicy;
 use crate::coordinator::fastlane::FastLane;
 use crate::error::{Error, Result};
 use crate::tensor::HostTensor;
@@ -171,11 +172,18 @@ pub struct ServerOptions {
     /// behaviour — the baseline the throughput-scaling bench compares
     /// against).
     pub fast_lane: bool,
+    /// Drift-detection retune policy. `Some(policy)` makes the leader
+    /// periodically compare each published winner's windowed fast-lane
+    /// latency against its tuning-time baseline and retune automatically
+    /// when the policy trips (requires `fast_lane`; ignored with a
+    /// warning otherwise). `None` preserves the manual-retune-only
+    /// behaviour exactly.
+    pub drift: Option<DriftPolicy>,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { batch: BatchOptions::default(), fast_lane: true }
+        ServerOptions { batch: BatchOptions::default(), fast_lane: true, drift: None }
     }
 }
 
@@ -200,7 +208,10 @@ impl Coordinator {
     where
         F: FnOnce() -> Result<Dispatcher> + Send + 'static,
     {
-        Coordinator::spawn_with_options(factory, ServerOptions { batch, fast_lane: true })
+        Coordinator::spawn_with_options(
+            factory,
+            ServerOptions { batch, ..ServerOptions::default() },
+        )
     }
 
     /// Spawn the leader thread around a dispatcher factory.
@@ -214,7 +225,27 @@ impl Coordinator {
         F: FnOnce() -> Result<Dispatcher> + Send + 'static,
     {
         let max_batch = opts.batch.max_batch.max(1);
-        let lane = if opts.fast_lane { Some(Arc::new(FastLane::new())) } else { None };
+        let lane = if opts.fast_lane {
+            Some(Arc::new(match opts.drift {
+                Some(policy) => FastLane::with_drift(policy),
+                None => FastLane::new(),
+            }))
+        } else {
+            if opts.drift.is_some() {
+                log::warn!(
+                    "drift policy ignored: the fast lane is disabled, so there \
+                     are no lane latency windows to monitor"
+                );
+            }
+            None
+        };
+        // Leader wake-up cadence for drift evaluation; None keeps the
+        // plain blocking recv loop (no behaviour change without drift).
+        let drift_every = if opts.fast_lane {
+            opts.drift.map(|p| p.window.max(Duration::from_millis(1)))
+        } else {
+            None
+        };
         let leader_lane = lane.clone();
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
@@ -234,7 +265,33 @@ impl Coordinator {
                         return;
                     }
                 };
-                'serve: while let Ok(first) = rx.recv() {
+                let mut next_tick = drift_every.map(|every| Instant::now() + every);
+                'serve: loop {
+                    // Block for the head request — with a deadline when a
+                    // drift policy needs periodic evaluation even while
+                    // the queue is idle.
+                    let first = match next_tick {
+                        Some(deadline) => {
+                            let timeout = deadline.saturating_duration_since(Instant::now());
+                            match rx.recv_timeout(timeout) {
+                                Ok(req) => Some(req),
+                                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+                            }
+                        }
+                        None => match rx.recv() {
+                            Ok(req) => Some(req),
+                            Err(_) => break 'serve,
+                        },
+                    };
+                    if let (Some(deadline), Some(every)) = (next_tick, drift_every) {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            dispatcher.drift_tick();
+                            next_tick = Some(now + every);
+                        }
+                    }
+                    let Some(first) = first else { continue 'serve };
                     // Drain a scheduling round: the blocking head request
                     // plus whatever queued behind it, up to max_batch.
                     let mut round = vec![first];
@@ -274,6 +331,12 @@ impl Coordinator {
                                     vec![("kernels".to_string(), dispatcher.stats().to_json())];
                                 if let Some(lane) = dispatcher.fast_lane() {
                                     obj.push(("fast_lane".to_string(), lane.to_json()));
+                                }
+                                if !dispatcher.stats().drift_events().is_empty() {
+                                    obj.push((
+                                        "drift_events".to_string(),
+                                        dispatcher.stats().drift_events_json(),
+                                    ));
                                 }
                                 let _ = reply.send(Value::Obj(obj));
                             }
@@ -469,6 +532,57 @@ mod tests {
         // steady state still works, just through the leader
         let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
         assert_eq!(out.route, CallRoute::Tuned);
+    }
+
+    #[test]
+    fn drift_without_fast_lane_is_ignored() {
+        // the drift signal comes from fast-lane windows; without a lane
+        // the policy is inert and serving is unchanged
+        let opts = ServerOptions {
+            fast_lane: false,
+            drift: Some(DriftPolicy {
+                window: Duration::from_millis(20),
+                ..DriftPolicy::default()
+            }),
+            ..ServerOptions::default()
+        };
+        let coord = spawn_mock_with(MockSpec::default(), opts);
+        let h = coord.handle();
+        for _ in 0..5 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(60)); // a few idle ticks
+        let json = h.stats_json().unwrap();
+        assert!(json.get("fast_lane").is_none());
+        assert!(json.get("drift_events").is_none());
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+    }
+
+    #[test]
+    fn idle_leader_with_drift_policy_stays_responsive() {
+        // drift enabled: the leader uses recv_timeout wake-ups; requests
+        // arriving between ticks must still be served promptly and
+        // shutdown must still terminate the thread
+        let opts = ServerOptions {
+            drift: Some(DriftPolicy {
+                window: Duration::from_millis(10),
+                ..DriftPolicy::default()
+            }),
+            ..ServerOptions::default()
+        };
+        let mut coord = spawn_mock_with(MockSpec::default(), opts);
+        let h = coord.handle();
+        for _ in 0..4 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(50)); // leader ticks while idle
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+        coord.shutdown();
+        // leader-lane operations fail once the loop exited (fast-lane
+        // hits intentionally keep serving off the published entry)
+        assert!(h.stats().is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::util::hist::Histogram;
-use crate::util::json::{n, Value};
+use crate::util::json::{n, s, Value};
 
 /// Counters for one kernel family.
 #[derive(Debug, Clone)]
@@ -17,6 +17,8 @@ pub struct KernelStats {
     pub tuned: u64,
     /// Variant failures observed (compile or execute).
     pub failures: u64,
+    /// Retunes triggered automatically by the drift policy.
+    pub drift_retunes: u64,
     /// End-to-end latency of every call.
     pub latency: Histogram,
     /// Latency of steady-state calls only (the post-tuning service level).
@@ -30,6 +32,7 @@ impl KernelStats {
             finalized: 0,
             tuned: 0,
             failures: 0,
+            drift_retunes: 0,
             latency: Histogram::latency(),
             tuned_latency: Histogram::latency(),
         }
@@ -41,6 +44,19 @@ impl KernelStats {
     }
 }
 
+/// One automatic drift-triggered retune, for the event log exposed in
+/// `stats_json()`.
+#[derive(Debug, Clone)]
+pub struct DriftEvent {
+    /// Kernel whose published winner drifted.
+    pub kernel: String,
+    /// Observed window-mean / baseline ratio that tripped the policy.
+    pub ratio: f64,
+}
+
+/// Cap on the retained drift-event log (oldest evicted first).
+const MAX_DRIFT_EVENTS: usize = 64;
+
 /// All coordinator statistics.
 #[derive(Debug, Clone)]
 pub struct CoordStats {
@@ -48,12 +64,14 @@ pub struct CoordStats {
     /// Scheduling-round sizes observed by the leader loop (queue depth
     /// at drain time) → occurrence count.
     rounds: BTreeMap<usize, u64>,
+    /// Most recent drift-triggered retunes, newest last.
+    drift_events: Vec<DriftEvent>,
 }
 
 impl CoordStats {
     /// Empty stats.
     pub fn new() -> CoordStats {
-        CoordStats { kernels: BTreeMap::new(), rounds: BTreeMap::new() }
+        CoordStats { kernels: BTreeMap::new(), rounds: BTreeMap::new(), drift_events: Vec::new() }
     }
 
     /// Record the queue depth of one leader scheduling round.
@@ -102,6 +120,41 @@ impl CoordStats {
         self.entry(kernel).failures += 1;
     }
 
+    /// Record an automatic drift-triggered retune.
+    pub fn drift_retune(&mut self, kernel: &str, ratio: f64) {
+        self.entry(kernel).drift_retunes += 1;
+        if self.drift_events.len() == MAX_DRIFT_EVENTS {
+            self.drift_events.remove(0);
+        }
+        self.drift_events.push(DriftEvent { kernel: kernel.to_string(), ratio });
+    }
+
+    /// Retained drift-retune events, oldest first.
+    pub fn drift_events(&self) -> &[DriftEvent] {
+        &self.drift_events
+    }
+
+    /// Total drift-triggered retunes across kernels.
+    pub fn total_drift_retunes(&self) -> u64 {
+        self.kernels.values().map(|k| k.drift_retunes).sum()
+    }
+
+    /// Drift-event log as JSON (the `drift_events` array in
+    /// `stats_json()`).
+    pub fn drift_events_json(&self) -> Value {
+        Value::Arr(
+            self.drift_events
+                .iter()
+                .map(|e| {
+                    Value::Obj(vec![
+                        ("kernel".into(), s(e.kernel.clone())),
+                        ("ratio".into(), n(e.ratio)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
     /// Stats for one kernel.
     pub fn kernel(&self, kernel: &str) -> Option<&KernelStats> {
         self.kernels.get(kernel)
@@ -130,6 +183,7 @@ impl CoordStats {
                             ("finalized".into(), n(s.finalized as f64)),
                             ("tuned".into(), n(s.tuned as f64)),
                             ("failures".into(), n(s.failures as f64)),
+                            ("drift_retunes".into(), n(s.drift_retunes as f64)),
                             ("mean_latency_s".into(), n(s.latency.mean())),
                             ("p95_latency_s".into(), n(s.latency.percentile(95.0))),
                             ("tuned_mean_latency_s".into(), n(s.tuned_latency.mean())),
@@ -152,14 +206,25 @@ impl CoordStats {
                 self.max_queue_depth()
             ));
         }
+        if !self.drift_events.is_empty() {
+            let last = &self.drift_events[self.drift_events.len() - 1];
+            out.push_str(&format!(
+                "drift retunes: {} (last: {} at {:.2}x baseline)\n",
+                self.total_drift_retunes(),
+                last.kernel,
+                last.ratio
+            ));
+        }
         for (k, s) in &self.kernels {
             out.push_str(&format!(
-                "{k}: calls={} (explore={} finalize={} tuned={} failures={})\n  all   {}\n  tuned {}\n",
+                "{k}: calls={} (explore={} finalize={} tuned={} failures={} \
+                 drift_retunes={})\n  all   {}\n  tuned {}\n",
                 s.calls(),
                 s.explored,
                 s.finalized,
                 s.tuned,
                 s.failures,
+                s.drift_retunes,
                 s.latency.render_ms(),
                 s.tuned_latency.render_ms(),
             ));
@@ -211,6 +276,27 @@ mod tests {
         let mut s = CoordStats::new();
         s.explored("matmul", Duration::from_millis(1));
         assert!(s.render().contains("matmul"));
+    }
+
+    #[test]
+    fn drift_events_capped_and_exported() {
+        let mut s = CoordStats::new();
+        for i in 0..70 {
+            s.drift_retune("k", 2.0 + i as f64 * 0.01);
+        }
+        assert_eq!(s.total_drift_retunes(), 70);
+        assert_eq!(s.drift_events().len(), 64, "event log is capped");
+        // oldest evicted: the first retained event is the 7th recorded
+        assert!((s.drift_events()[0].ratio - 2.06).abs() < 1e-9);
+        let json = s.drift_events_json();
+        assert_eq!(json.as_arr().unwrap().len(), 64);
+        assert_eq!(s.kernel("k").unwrap().drift_retunes, 70);
+        assert!(s.render().contains("drift retunes: 70"), "{}", s.render());
+        let per_kernel = s.to_json();
+        assert_eq!(
+            per_kernel.get("k").unwrap().get("drift_retunes").unwrap().as_i64(),
+            Some(70)
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! the output alone.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -16,6 +17,56 @@ use crate::manifest::Variant;
 use crate::runtime::engine::{CompiledKernel, Engine, SharedKernel};
 use crate::tensor::HostTensor;
 use crate::util::prng::Rng;
+
+/// Shared latency-shift injection handle: scale any variant's execution
+/// cost *while the engine is running*. Clone the handle out of a
+/// [`MockSpec`] before moving the spec into an engine/coordinator, then
+/// flip scales mid-run — drift tests and benches use this to degrade a
+/// published winner without restarting anything.
+///
+/// Hot-path cost: with no shifts installed (the default), every
+/// execution pays one relaxed atomic load — the shared mutex is touched
+/// only once a fault has actually been injected, so the lock-free
+/// fast-lane scaling the throughput bench measures stays lock-free.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyFault {
+    inner: Arc<FaultInner>,
+}
+
+#[derive(Debug, Default)]
+struct FaultInner {
+    /// Fast-path gate: false until the first injection.
+    armed: AtomicBool,
+    scales: Mutex<HashMap<String, f64>>,
+}
+
+impl LatencyFault {
+    /// A handle with no shifts installed (every variant at scale 1.0).
+    pub fn new() -> LatencyFault {
+        LatencyFault::default()
+    }
+
+    /// Multiply `variant_id`'s execution cost by `scale` from now on
+    /// (1.0 restores health).
+    pub fn set_scale(&self, variant_id: &str, scale: f64) {
+        self.inner.scales.lock().unwrap().insert(variant_id.to_string(), scale);
+        self.inner.armed.store(true, Ordering::Release);
+    }
+
+    /// Remove every injected shift.
+    pub fn clear(&self) {
+        let mut scales = self.inner.scales.lock().unwrap();
+        scales.clear();
+        self.inner.armed.store(false, Ordering::Release);
+    }
+
+    fn scale_for(&self, variant_id: &str) -> f64 {
+        if !self.inner.armed.load(Ordering::Acquire) {
+            return 1.0;
+        }
+        self.inner.scales.lock().unwrap().get(variant_id).copied().unwrap_or(1.0)
+    }
+}
 
 /// Configuration for the mock engine.
 #[derive(Debug, Clone)]
@@ -39,6 +90,9 @@ pub struct MockSpec {
     /// to an accelerator — which is what the throughput-scaling bench
     /// needs to show lane scaling independent of host core count.
     pub exec_sleep: bool,
+    /// Run-time latency-shift injection: clone this handle before moving
+    /// the spec, then `set_scale` to degrade a variant mid-run.
+    pub latency_fault: LatencyFault,
 }
 
 impl Default for MockSpec {
@@ -52,6 +106,7 @@ impl Default for MockSpec {
             fail_execute: HashSet::new(),
             seed: 0x6a69_7475,
             exec_sleep: false,
+            latency_fault: LatencyFault::new(),
         }
     }
 }
@@ -131,6 +186,7 @@ impl Engine for MockEngine {
                 jitter_frac: self.spec.jitter_frac,
                 fail: self.spec.fail_execute.contains(&variant.id),
                 sleep: self.spec.exec_sleep,
+                fault: self.spec.latency_fault.clone(),
                 rng: Mutex::new(self.rng.lock().unwrap().split()),
             }),
         }))
@@ -152,6 +208,7 @@ struct MockKernelState {
     jitter_frac: f64,
     fail: bool,
     sleep: bool,
+    fault: LatencyFault,
     rng: Mutex<Rng>,
 }
 
@@ -160,7 +217,7 @@ impl SharedKernel for MockKernelState {
         if self.fail {
             return Err(Error::Xla(format!("injected execute failure for {}", self.variant_id)));
         }
-        let mut cost = self.base.as_secs_f64();
+        let mut cost = self.base.as_secs_f64() * self.fault.scale_for(&self.variant_id);
         if self.jitter_frac > 0.0 {
             let z = self.rng.lock().unwrap().normal();
             cost *= (1.0 + self.jitter_frac * z).max(0.1);
@@ -270,9 +327,40 @@ mod tests {
     }
 
     #[test]
+    fn latency_fault_scales_execution_mid_run() {
+        let m = manifest();
+        let spec = MockSpec::default().with_cost("k.a.n8", Duration::from_micros(100));
+        let fault = spec.latency_fault.clone();
+        let engine = MockEngine::new(spec);
+        let kernel = engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+
+        let time_one = |k: &dyn CompiledKernel| {
+            let t0 = Instant::now();
+            k.execute(&[]).unwrap();
+            t0.elapsed()
+        };
+        let healthy = time_one(kernel.as_ref());
+        // degrade 10x without recompiling — the already-compiled kernel
+        // sees the shift on its next execution
+        fault.set_scale("k.a.n8", 10.0);
+        let degraded = time_one(kernel.as_ref());
+        assert!(
+            degraded > healthy * 4,
+            "healthy={healthy:?} degraded={degraded:?}"
+        );
+        fault.clear();
+        let recovered = time_one(kernel.as_ref());
+        assert!(recovered < degraded / 2, "clear() restores health: {recovered:?}");
+    }
+
+    #[test]
     fn jitter_produces_spread_but_stays_positive() {
         let m = manifest();
-        let spec = MockSpec { jitter_frac: 0.3, default_exec_cost: Duration::from_micros(100), ..MockSpec::default() };
+        let spec = MockSpec {
+            jitter_frac: 0.3,
+            default_exec_cost: Duration::from_micros(100),
+            ..MockSpec::default()
+        };
         let engine = MockEngine::new(spec);
         let kernel = engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
         let mut times = Vec::new();

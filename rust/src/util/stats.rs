@@ -88,10 +88,21 @@ impl Summary {
     /// Compute a summary over the samples. Empty input yields all-zero.
     pub fn of(samples: &[f64]) -> Summary {
         if samples.is_empty() {
-            return Summary { n: 0, mean: 0.0, stddev: 0.0, min: 0.0, median: 0.0, p95: 0.0, p99: 0.0, max: 0.0 };
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                stddev: 0.0,
+                min: 0.0,
+                median: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
         }
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: NaN samples sort to the top instead of panicking the
+        // stats path (they surface in max/p99 rather than killing a run).
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let mut w = Welford::new();
         for &x in samples {
             w.push(x);
@@ -111,8 +122,9 @@ impl Summary {
     /// One-line human-readable rendering with a unit suffix.
     pub fn render(&self, unit: &str) -> String {
         format!(
-            "n={} mean={:.3}{u} sd={:.3}{u} min={:.3}{u} p50={:.3}{u} p95={:.3}{u} max={:.3}{u}",
-            self.n, self.mean, self.stddev, self.min, self.median, self.p95, self.max,
+            "n={} mean={:.3}{u} sd={:.3}{u} min={:.3}{u} p50={:.3}{u} p95={:.3}{u} \
+             p99={:.3}{u} max={:.3}{u}",
+            self.n, self.mean, self.stddev, self.min, self.median, self.p95, self.p99, self.max,
             u = unit
         )
     }
@@ -133,10 +145,11 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
-/// Percentile over an unsorted slice.
+/// Percentile over an unsorted slice. NaN-tolerant: NaN samples sort to
+/// the top via `total_cmp` instead of panicking.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&sorted, p)
 }
 
@@ -210,5 +223,17 @@ mod tests {
         let r = s.render("ms");
         assert!(r.contains("n=3"));
         assert!(r.contains("mean=2.000ms"));
+        assert!(r.contains("p99="), "p99 must be rendered: {r}");
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic() {
+        let xs = [1.0, f64::NAN, 2.0, 3.0];
+        let s = Summary::of(&xs);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0, "NaN sorts to the top, not the bottom");
+        assert!(s.max.is_nan(), "NaN surfaces in max instead of killing the run");
+        assert!(percentile(&xs, 50.0).is_finite());
+        let _ = mad(&xs); // must not panic either
     }
 }

@@ -23,7 +23,7 @@ fn run_sweep(costs: &[f64]) -> (Vec<Decision>, TuningState) {
         match d {
             Decision::Explore(i) => st.report(i, costs[i]),
             Decision::Finalize(i) => st.confirm_finalized(i),
-            Decision::Use(_) => break,
+            Decision::Use(_) | Decision::Failed => break,
         }
     }
     (decisions, st)
@@ -96,7 +96,7 @@ fn prop_random_failures_never_break_convergence() {
                     }
                 }
                 Decision::Finalize(i) => st.confirm_finalized(i),
-                Decision::Use(_) => break,
+                Decision::Use(_) | Decision::Failed => break,
             }
         }
         let alive_argmin = costs

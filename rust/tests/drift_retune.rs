@@ -1,0 +1,183 @@
+//! End-to-end drift-detection tests: a mock workload whose published
+//! winner is degraded mid-run must be retuned automatically — and must
+//! NOT be retuned when the policy says the evidence is insufficient
+//! (min_samples, cooldown), or when drift monitoring is off entirely.
+
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, DriftPolicy, KernelRegistry, ServerOptions,
+};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+
+/// v0 at 500us, v1 at 300us: v1 wins tuning; a 3x shift on v1 (900us)
+/// makes v0 the rightful winner of a rematch by a wide margin.
+fn drifting_spec() -> MockSpec {
+    MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(500))
+        .with_cost("kern.v1.n8", Duration::from_micros(300))
+}
+
+fn fast_policy() -> DriftPolicy {
+    DriftPolicy {
+        window: Duration::from_millis(40),
+        min_samples: 5,
+        ratio_threshold: 2.0,
+        cooldown: Duration::ZERO,
+        consecutive_windows: 2,
+        ewma_alpha: 0.3,
+    }
+}
+
+fn spawn(spec: MockSpec, drift: Option<DriftPolicy>) -> Coordinator {
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        },
+        ServerOptions { drift, ..ServerOptions::default() },
+    )
+    .expect("spawn coordinator")
+}
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+/// Drive calls until tuning completes; the winner must be v1 (value 1).
+fn tune(coord: &Coordinator) {
+    let h = coord.handle();
+    loop {
+        if h.call("kern", inputs()).unwrap().route == CallRoute::Finalized {
+            break;
+        }
+    }
+    assert_eq!(h.tuned_value("kern", 8).unwrap(), Some(1));
+}
+
+#[test]
+fn injected_latency_shift_triggers_automatic_retune() {
+    let spec = drifting_spec();
+    let fault = spec.latency_fault.clone();
+    let coord = spawn(spec, Some(fast_policy()));
+    let h = coord.handle();
+    tune(&coord);
+
+    // degrade the published winner 3x: 900us, now far slower than v0's 500us
+    fault.set_scale("kern.v1.n8", 3.0);
+
+    // keep calling — NO manual retune(); the drift policy must notice,
+    // re-open tuning, and converge to the other variant
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut saw_explore = false;
+    loop {
+        let o = h.call("kern", inputs()).unwrap();
+        if o.route == CallRoute::Explored {
+            saw_explore = true;
+        }
+        if saw_explore && h.tuned_value("kern", 8).unwrap() == Some(0) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "drift-triggered retune did not converge within 30s"
+        );
+    }
+
+    // the drift event is visible in machine-readable stats
+    let json = h.stats_json().unwrap();
+    let events = json.get("drift_events").expect("drift_events exported");
+    assert!(!events.as_arr().unwrap().is_empty());
+    let kern = json.get("kernels").unwrap().get("kern").unwrap();
+    assert!(kern.get("drift_retunes").unwrap().as_i64().unwrap() >= 1);
+    // per-entry monitor state rides under fast_lane.drift
+    let lane = json.get("fast_lane").unwrap();
+    assert!(lane.get("drift").is_some(), "monitor state exported");
+    // and the human rendering mentions it
+    let (rendered, _) = h.stats().unwrap();
+    assert!(rendered.contains("drift retunes:"), "{rendered}");
+}
+
+#[test]
+fn no_retune_below_min_samples() {
+    let spec = drifting_spec();
+    let fault = spec.latency_fault.clone();
+    let mut policy = fast_policy();
+    policy.min_samples = 1_000_000; // unreachable: every window is "sparse"
+    let coord = spawn(spec, Some(policy));
+    let h = coord.handle();
+    tune(&coord);
+
+    fault.set_scale("kern.v1.n8", 3.0);
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(400) {
+        let o = h.call("kern", inputs()).unwrap();
+        assert_eq!(o.route, CallRoute::Tuned, "degraded winner keeps serving");
+    }
+    assert_eq!(
+        h.tuned_value("kern", 8).unwrap(),
+        Some(1),
+        "no drift retune below min_samples"
+    );
+    assert!(h.stats_json().unwrap().get("drift_events").is_none());
+}
+
+#[test]
+fn no_retune_within_cooldown() {
+    let spec = drifting_spec();
+    let fault = spec.latency_fault.clone();
+    let mut policy = fast_policy();
+    policy.cooldown = Duration::from_secs(3600); // never expires in-test
+    let coord = spawn(spec, Some(policy));
+    let h = coord.handle();
+    tune(&coord);
+
+    fault.set_scale("kern.v1.n8", 3.0);
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(400) {
+        let o = h.call("kern", inputs()).unwrap();
+        assert_eq!(o.route, CallRoute::Tuned, "cooldown suppresses the retune");
+    }
+    assert_eq!(h.tuned_value("kern", 8).unwrap(), Some(1));
+    assert!(h.stats_json().unwrap().get("drift_events").is_none());
+}
+
+#[test]
+fn drift_none_preserves_the_manual_flow() {
+    let spec = drifting_spec();
+    let fault = spec.latency_fault.clone();
+    let coord = spawn(spec, None);
+    let h = coord.handle();
+    tune(&coord);
+
+    fault.set_scale("kern.v1.n8", 3.0);
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_millis(300) {
+        let o = h.call("kern", inputs()).unwrap();
+        assert_eq!(o.route, CallRoute::Tuned, "no automatic retune without a policy");
+    }
+    assert_eq!(h.tuned_value("kern", 8).unwrap(), Some(1));
+    let json = h.stats_json().unwrap();
+    assert!(json.get("drift_events").is_none());
+    assert!(
+        json.get("fast_lane").unwrap().get("drift").is_none(),
+        "no monitor state without a policy"
+    );
+
+    // manual retune still works exactly as before
+    assert!(h.retune("kern", 8).unwrap());
+    loop {
+        let o = h.call("kern", inputs()).unwrap();
+        if o.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    assert_eq!(
+        h.tuned_value("kern", 8).unwrap(),
+        Some(0),
+        "manual rematch sees the degraded variant and flips the winner"
+    );
+}
