@@ -1,0 +1,143 @@
+//! Fleet warm-start through the tuned-state hub — self-contained demo
+//! on the mock engine (no artifacts or PJRT needed, runs anywhere).
+//!
+//! An in-process broker ([`HubServer`]) stands in for
+//! `jitune hub serve --socket <path>`; two coordinators stand in for two
+//! serving processes. Process A tunes a kernel online and publishes the
+//! winner at finalization; process B spawns with
+//! `ServerOptions { hub: Some(..) }` and warm-starts off the broker —
+//! its very first call pays only the winner's final compilation, with
+//! **zero explore iterations**. A retune in process A (here: manual,
+//! after a latency fault on the winner — a drift policy triggers the
+//! same path automatically) publishes a new version, and process B
+//! adopts it on its next pull. (The fault is 20x so the degraded winner
+//! is decisively slower than the alternative and the rematch flips.)
+//!
+//! Run with: `cargo run --example hub_fleet [-- --smoke]`
+//! (`--smoke` skips the serving pauses for CI; the assertions are
+//! identical and a broken warm-start path fails the run.)
+
+use std::path::Path;
+use std::time::Duration;
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, CoordinatorHandle, Dispatcher, KernelRegistry, ServerOptions,
+};
+use jitune::hub::{HubOptions, HubServer};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+
+fn call(h: &CoordinatorHandle) -> jitune::coordinator::CallOutcome {
+    h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("call")
+}
+
+/// Spawn one "serving process": a mock-backed coordinator joined to the
+/// broker at `socket`.
+fn spawn_member(name: &'static str, socket: &Path, spec: MockSpec) -> Coordinator {
+    let hub = HubOptions { peer: name.into(), ..HubOptions::at(socket) };
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        },
+        ServerOptions { hub: Some(hub), ..ServerOptions::default() },
+    )
+    .expect("spawn coordinator")
+}
+
+fn explored_count(h: &CoordinatorHandle) -> i64 {
+    h.stats_json()
+        .expect("stats_json")
+        .get("kernels")
+        .and_then(|k| k.get("kern"))
+        .and_then(|k| k.get("explored"))
+        .and_then(jitune::util::json::Value::as_i64)
+        .unwrap_or(0)
+}
+
+fn fail(msg: &str) -> ! {
+    eprintln!("ERROR: {msg}");
+    std::process::exit(1);
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    let socket = jitune::testutil::temp_path("hub-fleet", "sock");
+    HubServer::bind(&socket).expect("bind hub").spawn();
+    println!("hub broker listening on {}\n", socket.display());
+
+    // v1 wins the first tune; the fault handle lets us degrade it later
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(600))
+        .with_cost("kern.v1.n8", Duration::from_micros(60));
+    let fault = spec.latency_fault.clone();
+
+    println!("process A: tuning from scratch...");
+    let a = spawn_member("process-a", &socket, spec.clone());
+    let ha = a.handle();
+    loop {
+        let o = call(&ha);
+        println!("  {:?} variant={} value={}", o.route, o.variant_id, o.value);
+        if o.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    println!(
+        "process A tuned value: {:?} ({} explore iterations) — winner published to hub\n",
+        ha.tuned_value("kern", 8).expect("tuned_value"),
+        explored_count(&ha)
+    );
+
+    println!("process B: cold start against a warm hub...");
+    let b = spawn_member("process-b", &socket, spec);
+    let hb = b.handle();
+    let first = call(&hb);
+    println!("  first call: {:?} value={}", first.route, first.value);
+    if first.route != CallRoute::Finalized || explored_count(&hb) != 0 {
+        fail("warm start must skip exploration entirely");
+    }
+    println!("process B warm-started with ZERO explore iterations\n");
+
+    if !smoke {
+        // a little steady-state serving on both members
+        for _ in 0..200 {
+            call(&ha);
+            call(&hb);
+        }
+    }
+
+    println!("injecting 20x latency shift into the winner, retuning in process A...");
+    fault.set_scale("kern.v1.n8", 20.0);
+    ha.retune("kern", 8).expect("retune");
+    loop {
+        if call(&ha).route == CallRoute::Finalized {
+            break;
+        }
+    }
+    let new_winner = ha.tuned_value("kern", 8).expect("tuned_value");
+    println!("process A retuned value: {new_winner:?} — published at the next version\n");
+    if new_winner != Some(0) {
+        fail("rematch under the fault must flip the winner");
+    }
+
+    println!("process B: pulling the hub to adopt the retuned winner...");
+    let (adopted, _skipped) = hb.hub_pull().expect("hub_pull");
+    let o = call(&hb);
+    println!("  adopted {adopted} entr(ies); next call: {:?} value={}", o.route, o.value);
+    if adopted != 1 || o.value != 0 {
+        fail("process B must adopt the retuned winner on its next pull");
+    }
+
+    for (name, h) in [("A", &ha), ("B", &hb)] {
+        let json = h.stats_json().expect("stats_json");
+        if let Some(hub) = json.get("hub") {
+            println!("process {name} hub stats: {}", hub.to_json());
+        }
+    }
+    println!("\nfleet warm-start demo complete");
+    let _ = std::fs::remove_file(&socket);
+}

@@ -1,0 +1,177 @@
+//! **Hub warm-start** — time-to-first-tuned-call and explore-iteration
+//! count for a cold process vs a process warm-started from the
+//! tuned-state hub: the fleet-scale version of the paper's Fig. 3-5
+//! amortization claim. Online tuning amortizes its overhead over one
+//! process's calls; the hub amortizes it over the *fleet* — every member
+//! after the first skips exploration entirely.
+//!
+//! Runs on the mock engine with sleep-based execution (each explore
+//! iteration really costs wall time, as a JIT compile + measurement
+//! would). An in-process broker stands in for `jitune hub serve`.
+//!
+//! Output: stdout chart + `target/figures/hub_warm_start.{csv,txt,json}`.
+//!
+//! Env knobs: `JITUNE_BENCH_VARIANTS` (candidate count, default 8),
+//! `JITUNE_BENCH_EXEC_US` (per-iteration execution sleep, default 300),
+//! `JITUNE_BENCH_FLEET` (warm processes measured, default 4).
+
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{CallRoute, Coordinator, Dispatcher, KernelRegistry, ServerOptions};
+use jitune::hub::{HubOptions, HubServer};
+use jitune::report::Figure;
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+use jitune::util::chart::Series;
+use jitune::util::json::{n, s, Value};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn spawn_member(socket: &std::path::Path, variants: usize, exec_us: u64) -> Coordinator {
+    // variant i costs (i+1) * exec_us: a real spread for the sweep to
+    // rank; v0 is the eventual winner
+    let mut spec = MockSpec::default().with_sleep_exec();
+    for i in 0..variants {
+        spec = spec.with_cost(
+            &format!("kern.v{i}.n8"),
+            Duration::from_micros((i as u64 + 1) * exec_us),
+        );
+    }
+    let hub = HubOptions::at(socket);
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", variants, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+        },
+        ServerOptions { hub: Some(hub), ..ServerOptions::default() },
+    )
+    .expect("spawn coordinator")
+}
+
+/// Drive one member to its first steady-state call; returns
+/// (time-to-tuned seconds, explore iterations, calls made).
+fn time_to_tuned(coord: &Coordinator) -> (f64, i64, usize) {
+    let h = coord.handle();
+    let t0 = Instant::now();
+    let mut calls = 0usize;
+    loop {
+        let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("call");
+        calls += 1;
+        if o.route == CallRoute::Tuned {
+            break;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let explored = h
+        .stats_json()
+        .expect("stats_json")
+        .get("kernels")
+        .and_then(|k| k.get("kern"))
+        .and_then(|k| k.get("explored"))
+        .and_then(Value::as_i64)
+        .unwrap_or(-1);
+    (dt, explored, calls)
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let variants = env_usize("JITUNE_BENCH_VARIANTS", 8);
+    let exec_us = env_usize("JITUNE_BENCH_EXEC_US", 300) as u64;
+    let fleet = env_usize("JITUNE_BENCH_FLEET", 4);
+    println!(
+        "== hub warm-start: time to first tuned call, cold vs hub-warmed \
+         ({variants} variants, {exec_us}us exec, fleet of {fleet}) =="
+    );
+
+    let socket = jitune::testutil::temp_path("hub-bench", "sock");
+    HubServer::bind(&socket).expect("bind hub").spawn();
+
+    // member 0 is cold: it pays the full sweep and seeds the hub
+    let cold = spawn_member(&socket, variants, exec_us);
+    let (cold_s, cold_explored, cold_calls) = time_to_tuned(&cold);
+    println!(
+        "  cold   explores={cold_explored:<3} calls={cold_calls:<3} \
+         time_to_tuned={:.1}ms",
+        cold_s * 1e3
+    );
+    assert_eq!(cold_explored, variants as i64, "cold start sweeps every candidate");
+
+    // members 1..=fleet warm-start off the hub: zero explores each
+    let mut rows = vec![vec![
+        "cold".to_string(),
+        cold_explored.to_string(),
+        format!("{:.3}", cold_s * 1e3),
+    ]];
+    let mut results = vec![Value::Obj(vec![
+        ("mode".into(), s("cold")),
+        ("explores".into(), n(cold_explored as f64)),
+        ("time_to_tuned_ms".into(), n(cold_s * 1e3)),
+    ])];
+    let mut warm_points = Vec::new();
+    let mut warm_total_s = 0.0;
+    for i in 1..=fleet {
+        let member = spawn_member(&socket, variants, exec_us);
+        let (warm_s, warm_explored, warm_calls) = time_to_tuned(&member);
+        println!(
+            "  warm#{i} explores={warm_explored:<3} calls={warm_calls:<3} \
+             time_to_tuned={:.1}ms",
+            warm_s * 1e3
+        );
+        assert_eq!(warm_explored, 0, "a warm-started process skips exploration entirely");
+        warm_total_s += warm_s;
+        warm_points.push((i as f64, warm_s * 1e3));
+        rows.push(vec![
+            format!("warm{i}"),
+            warm_explored.to_string(),
+            format!("{:.3}", warm_s * 1e3),
+        ]);
+        results.push(Value::Obj(vec![
+            ("mode".into(), s(format!("warm{i}"))),
+            ("explores".into(), n(warm_explored as f64)),
+            ("time_to_tuned_ms".into(), n(warm_s * 1e3)),
+        ]));
+    }
+
+    let warm_mean_s = warm_total_s / fleet as f64;
+    let speedup = if warm_mean_s > 0.0 { cold_s / warm_mean_s } else { 0.0 };
+    println!(
+        "\n  fleet amortization: {} explore iterations total for {} processes \
+         (one cold sweep); warm mean {:.1}ms vs cold {:.1}ms = {speedup:.1}x faster to tuned",
+        cold_explored,
+        fleet + 1,
+        warm_mean_s * 1e3,
+        cold_s * 1e3,
+    );
+
+    let fig = Figure {
+        stem: "hub_warm_start".into(),
+        title: "time to first tuned call (ms): cold sweep vs hub warm-start".into(),
+        header: vec!["mode".into(), "explores".into(), "time_to_tuned_ms".into()],
+        rows,
+        series: vec![
+            Series::new("cold", vec![(0.0, cold_s * 1e3)]),
+            Series::new("warm", warm_points),
+        ],
+        log_y: false,
+    };
+    let rendered = fig.emit().expect("emit");
+    println!("{rendered}");
+
+    let report = Value::Obj(vec![
+        ("bench".into(), s("hub_warm_start")),
+        ("engine".into(), s("mock(sleep)")),
+        ("variants".into(), n(variants as f64)),
+        ("exec_us".into(), n(exec_us as f64)),
+        ("fleet".into(), n(fleet as f64)),
+        ("speedup_to_tuned".into(), n(speedup)),
+        ("results".into(), Value::Arr(results)),
+    ]);
+    jitune::report::write_figure_file("hub_warm_start.json", &report.to_json_pretty())
+        .expect("json");
+    println!("wrote target/figures/hub_warm_start.{{csv,txt,json}}");
+    let _ = std::fs::remove_file(&socket);
+}

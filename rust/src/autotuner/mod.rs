@@ -158,6 +158,22 @@ impl Autotuner {
         )
     }
 
+    /// Warm-start a single problem at a known winner (hub adoption).
+    /// The state lands in `Finalizing`: the winner is trusted but still
+    /// pays its one JIT compilation on first use, exactly like a
+    /// file-based import. Replaces any existing state for the key.
+    pub fn warm_start(
+        &mut self,
+        key: ProblemKey,
+        values: Vec<i64>,
+        winner_idx: usize,
+    ) -> crate::Result<()> {
+        let strategy = (self.factory)(&values);
+        let state = TuningState::pre_tuned(values, winner_idx, strategy)?;
+        self.states.insert(key, state);
+        Ok(())
+    }
+
     /// Import previously exported state; returns how many problems were
     /// warm-started. Entries whose candidate values no longer match the
     /// current manifest are rejected (the artifact set changed — stale

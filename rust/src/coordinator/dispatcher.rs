@@ -6,6 +6,7 @@ use std::time::{Duration, Instant};
 
 use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, WallClock};
 use crate::error::{Error, Result};
+use crate::hub::{HubClient, HubEntry};
 use crate::manifest::Variant;
 use crate::runtime::{CacheStats, CompileCache, Engine};
 use crate::tensor::HostTensor;
@@ -87,6 +88,32 @@ pub struct Dispatcher {
     stats: CoordStats,
     plans: HashMap<u64, Vec<CallPlan>>,
     fast_lane: Option<Arc<FastLane>>,
+    hub: Option<HubClient>,
+    /// Per-problem hub knowledge: the last version this process pulled
+    /// or had acknowledged, plus that version's winner. Gates publishes
+    /// (a warm-started winner is not re-published) and pulls (only
+    /// strictly newer versions are adopted).
+    hub_known: HashMap<ProblemKey, HubSeen>,
+    /// Client connection generation this knowledge was built against; a
+    /// bump means the client redialed and the (in-memory) broker may
+    /// have restarted empty — `hub_known` is dropped and resynced.
+    hub_generation: u64,
+    /// Highest version warned about per unadoptable hub entry, so
+    /// periodic pulls in a heterogeneous fleet warn once per version
+    /// instead of forever.
+    hub_skipped: HashMap<ProblemKey, u64>,
+}
+
+/// What this process last knew the hub to hold for one problem.
+#[derive(Debug, Clone, Copy)]
+struct HubSeen {
+    version: u64,
+    /// The winner stored at that version — `None` right after a publish
+    /// conflict, where the broker kept *some* entry at `version` but
+    /// the ack does not say whose. Unknown winners keep the version
+    /// usable for publishing while letting the next pull re-adopt
+    /// broker truth.
+    winner_value: Option<i64>,
 }
 
 impl Dispatcher {
@@ -111,6 +138,10 @@ impl Dispatcher {
             stats: CoordStats::new(),
             plans: HashMap::new(),
             fast_lane: None,
+            hub: None,
+            hub_known: HashMap::new(),
+            hub_generation: 0,
+            hub_skipped: HashMap::new(),
         }
     }
 
@@ -124,6 +155,193 @@ impl Dispatcher {
     /// The attached fast lane, if any.
     pub fn fast_lane(&self) -> Option<&Arc<FastLane>> {
         self.fast_lane.as_ref()
+    }
+
+    /// Attach a tuned-state hub connection. Call [`Dispatcher::hub_pull`]
+    /// afterwards for the initial warm-start (the coordinator does both
+    /// at spawn).
+    pub fn attach_hub(&mut self, client: HubClient) {
+        self.hub = Some(client);
+    }
+
+    /// Whether a hub connection is attached.
+    pub fn hub_active(&self) -> bool {
+        self.hub.is_some()
+    }
+
+    /// Pull the hub's full tuned map and adopt every entry that is newer
+    /// than what this process already knows. Adopted problems warm-start
+    /// in `Finalizing` (zero explore iterations; the winner pays one JIT
+    /// compile on first use) and their published fast-lane entries are
+    /// invalidated so callers pick up the new winner. Entries that no
+    /// longer match the live manifest are skipped, exactly like
+    /// [`Dispatcher::load_state`]. Returns (adopted, skipped).
+    pub fn hub_pull(&mut self) -> Result<(usize, usize)> {
+        let Some(hub) = self.hub.as_mut() else { return Ok((0, 0)) };
+        let entries = hub.pull_all()?;
+        let generation = hub.generation();
+        self.hub_resync(generation);
+        let mut skipped = 0;
+        // Stage adoptions first: registry lookups and version gating
+        // borrow immutably, the tuner import below borrows mutably.
+        // Items are (entry, winner_idx, kernel, input shapes).
+        let mut staged = Vec::new();
+        for entry in entries {
+            let key = entry.problem_key();
+            if let Some(seen) = self.hub_known.get(&key) {
+                // skip what we already know; an unknown winner at the
+                // same version (post-conflict) must fall through so the
+                // pull resolves it to broker truth
+                if entry.version < seen.version
+                    || (entry.version == seen.version && seen.winner_value.is_some())
+                {
+                    continue;
+                }
+            }
+            // resolve into owned data eagerly so the registry borrow
+            // never overlaps the skip-log bookkeeping below
+            let resolved = self
+                .matching_problem(&entry.kernel, &entry.param, &entry.signature, &entry.values)
+                .map(|p| (p.kernel.clone(), p.variants[0].input_shapes()));
+            let Some((kernel, shapes)) = resolved else {
+                self.hub_skip_warn(&key, entry.version, "manifest mismatch");
+                skipped += 1;
+                continue;
+            };
+            // a locally-unparsable signature skips this entry only —
+            // it must not abort adoption of every other kernel's winner
+            let Ok(shapes) = shapes else {
+                self.hub_skip_warn(&key, entry.version, "unparsable input signature");
+                skipped += 1;
+                continue;
+            };
+            let Some(winner_idx) = entry.values.iter().position(|&v| v == entry.winner_value)
+            else {
+                self.hub_skip_warn(&key, entry.version, "winner not a candidate");
+                skipped += 1;
+                continue;
+            };
+            staged.push((entry, winner_idx, kernel, shapes));
+        }
+        let mut adopted = 0;
+        for (entry, winner_idx, kernel, shapes) in staged {
+            let key = entry.problem_key();
+            self.hub_known.insert(
+                key.clone(),
+                HubSeen { version: entry.version, winner_value: Some(entry.winner_value) },
+            );
+            // Already tuned to the same winner locally: record the
+            // version but keep serving — no refinalization needed.
+            let local_same = self
+                .tuner
+                .peek(&key)
+                .is_some_and(|s| s.tuned_value() == Some(entry.winner_value));
+            if local_same {
+                continue;
+            }
+            self.tuner.warm_start(key.clone(), entry.values.clone(), winner_idx)?;
+            if let Some(lane) = &self.fast_lane {
+                lane.invalidate(&kernel, &shapes);
+            }
+            log::info!("hub: adopted {key} = {} (v{})", entry.winner_value, entry.version);
+            adopted += 1;
+        }
+        self.stats.hub_pull(adopted as u64);
+        Ok((adopted, skipped))
+    }
+
+    /// Publish the problem's confirmed winner to the hub. A winner the
+    /// hub already holds is *re-asserted at its known version* rather
+    /// than skipped: on a healthy broker that merges as `Stale` (no
+    /// version burn), and on a broker that restarted empty it re-seeds
+    /// the map — skipping would leave the fleet's warm-start silently
+    /// dead with no request ever detecting the restart. Hub failures
+    /// degrade to a warning: serving must not depend on broker
+    /// liveness.
+    fn hub_publish(&mut self, hash: u64, slot: usize) {
+        let Some(hub) = self.hub.as_ref() else { return };
+        let generation = hub.generation();
+        self.hub_resync(generation);
+        let (key, values, winner_value) = {
+            let plan = &self.plans[&hash][slot];
+            let Some(state) = self.tuner.peek(&plan.key) else { return };
+            let Some(win) = state.winner_snapshot() else { return };
+            (plan.key.clone(), plan.values.clone(), win.value)
+        };
+        let version = match self.hub_known.get(&key) {
+            Some(seen) if seen.winner_value == Some(winner_value) => seen.version,
+            Some(seen) => seen.version + 1,
+            None => 1,
+        };
+        let entry = HubEntry {
+            kernel: key.kernel.clone(),
+            param: key.param.clone(),
+            signature: key.signature.clone(),
+            values,
+            winner_value,
+            version,
+        };
+        let result = self.hub.as_mut().expect("checked above").publish(&entry);
+        match result {
+            Ok(ack) if ack.conflict => {
+                // The broker resolved a race (or rejected our publish as
+                // outdated): an entry exists at ack.version but the ack
+                // does not say whose. Record the version with the winner
+                // unknown — the next pull adopts broker truth, whichever
+                // writer it favoured.
+                self.stats.hub_push(true);
+                self.hub_known.insert(key, HubSeen { version: ack.version, winner_value: None });
+            }
+            Ok(ack) => {
+                self.stats.hub_push(false);
+                let seen = HubSeen { version: ack.version, winner_value: Some(winner_value) };
+                self.hub_known.insert(key, seen);
+            }
+            Err(e) => log::warn!("hub: publish of {key} failed: {e}"),
+        }
+    }
+
+    /// Drop per-entry hub knowledge when the client's connection
+    /// generation changed: the in-memory broker may have restarted
+    /// empty, so cached versions (and skip-warn history) are no longer
+    /// grounded — the next pull/publish rebuilds them from broker truth.
+    fn hub_resync(&mut self, generation: u64) {
+        if generation != self.hub_generation {
+            log::info!("hub: reconnected (generation {generation}); resyncing entry versions");
+            self.hub_generation = generation;
+            self.hub_known.clear();
+            self.hub_skipped.clear();
+        }
+    }
+
+    /// Warn once per (problem, version) about a hub entry this process
+    /// cannot adopt — a heterogeneous fleet with periodic pulls must
+    /// not repeat the same warning every interval.
+    fn hub_skip_warn(&mut self, key: &ProblemKey, version: u64, why: &str) {
+        let seen = self.hub_skipped.get(key).copied().unwrap_or(0);
+        if version > seen {
+            log::warn!("hub: skipping entry {key} v{version} ({why})");
+            self.hub_skipped.insert(key.clone(), version);
+        }
+    }
+
+    /// The manifest problem matching (kernel, param, signature,
+    /// candidate values) exactly — the shared trust test for imported
+    /// tuning state (`load_state`) and hub adoption: an entry whose
+    /// candidates changed since it was recorded must not be trusted.
+    fn matching_problem(
+        &self,
+        kernel: &str,
+        param: &str,
+        signature: &str,
+        values: &[i64],
+    ) -> Option<&crate::manifest::Problem> {
+        self.registry.manifest().problems.iter().find(|p| {
+            p.kernel == kernel
+                && p.param == param
+                && p.variants[0].inputs.join(",") == signature
+                && p.variants.iter().map(|v| v.value).eq(values.iter().copied())
+        })
     }
 
     /// Resolve the cached call plan for (kernel, inputs), building it on
@@ -219,8 +437,13 @@ impl Dispatcher {
                                 self.tuner.state(&plan.key, &plan.values).confirm_finalized(i);
                             }
                             // The winner is compiled and confirmed: hand a
-                            // shareable executable to caller threads.
+                            // shareable executable to caller threads and
+                            // share it with the fleet. Every finalization
+                            // flows through here — first tune, manual
+                            // retune, drift-triggered retune — so the hub
+                            // sees every new winner.
                             self.publish_winner(hash, slot);
+                            self.hub_publish(hash, slot);
                             self.stats.finalized(kernel, outcome.total);
                             outcome.route = CallRoute::Finalized;
                             log::info!(
@@ -511,12 +734,13 @@ impl Dispatcher {
     }
 
     /// Persist tuned results to a JSON file (see
-    /// [`crate::autotuner::Autotuner::export_state`]).
+    /// [`crate::autotuner::Autotuner::export_state`]). The write is
+    /// atomic (`.tmp` sibling + rename) so a crash mid-write can never
+    /// leave a torn file for `load_state` or a hub import to choke on.
     pub fn save_state(&self, path: &std::path::Path) -> Result<usize> {
         let state = self.tuner.export_state();
         let n = state.as_arr().map(<[_]>::len).unwrap_or(0);
-        std::fs::write(path, state.to_json_pretty())
-            .map_err(|e| Error::io(path.display().to_string(), e))?;
+        crate::util::atomic_write(path, &state.to_json_pretty())?;
         Ok(n)
     }
 
@@ -543,12 +767,7 @@ impl Dispatcher {
                 .iter()
                 .filter_map(crate::util::json::Value::as_i64)
                 .collect();
-            let matches = self.registry.manifest().problems.iter().any(|p| {
-                p.kernel == kernel
-                    && p.param == param
-                    && p.variants[0].inputs.join(",") == signature
-                    && p.variants.iter().map(|v| v.value).collect::<Vec<_>>() == values
-            });
+            let matches = self.matching_problem(kernel, param, signature, &values).is_some();
             if matches {
                 valid.push(entry.clone());
             } else {
@@ -921,6 +1140,49 @@ mod tests {
         assert_eq!(d.stats().kernel("k").unwrap().drift_retunes, 1);
         assert_eq!(d.stats().drift_events().len(), 1);
         assert!(d.stats().drift_events()[0].ratio > 2.0);
+    }
+
+    #[test]
+    fn hub_publish_and_warm_start_roundtrip() {
+        use crate::hub::{HubClient, HubOptions, HubServer};
+        let path = crate::testutil::temp_path("disp-hub", "sock");
+        HubServer::bind(&path).unwrap().spawn();
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+
+        // process A tunes from scratch; finalization publishes to the hub
+        let mut a = dispatcher(spec.clone());
+        a.attach_hub(HubClient::connect(HubOptions::at(&path)).unwrap());
+        for _ in 0..3 {
+            a.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(a.tuned_value("k", 8), Some(2));
+        assert_eq!(a.stats().hub().pushes, 1, "finalize pushed the winner");
+
+        // process B warm-starts off the hub: zero explore iterations
+        let mut b = dispatcher(spec);
+        b.attach_hub(HubClient::connect(HubOptions::at(&path)).unwrap());
+        assert_eq!(b.hub_pull().unwrap(), (1, 0));
+        let first = b.call("k", &inputs8()).unwrap();
+        assert_eq!(first.route, CallRoute::Finalized, "only the final compile remains");
+        assert_eq!(first.value, 2);
+        assert_eq!(b.stats().kernel("k").unwrap().explored, 0);
+        // a re-pull with nothing new adopts nothing; refinalizing a
+        // hub-adopted winner re-asserts it at its known version —
+        // idempotent on the broker (no version burn, no conflict), and
+        // the re-seed path should the in-memory broker ever restart
+        assert_eq!(b.hub_pull().unwrap(), (0, 0));
+        assert_eq!(b.stats().hub().pushes, 1, "re-assert, not a silent skip");
+        assert_eq!(b.stats().hub().conflicts, 0, "re-assert merges as Stale");
+        assert_eq!(b.stats().hub().pulls, 2);
+        assert_eq!(b.stats().hub().adopted, 1);
+        // the broker's entry is untouched by the re-assert
+        let mut probe = HubClient::connect(HubOptions::at(&path)).unwrap();
+        let held = probe.pull_all().unwrap();
+        assert_eq!(held.len(), 1);
+        assert_eq!((held[0].winner_value, held[0].version), (2, 1));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

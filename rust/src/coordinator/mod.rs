@@ -72,6 +72,38 @@
 //! With `drift: None` (the default) none of this machinery is even
 //! allocated: the leader loop blocks exactly as before and published
 //! entries carry no monitor.
+//!
+//! # Fleet warm-start (the tuned-state hub)
+//!
+//! Tuning knowledge normally dies with the process. With
+//! `ServerOptions { hub: Some(HubOptions::at(socket)) }` the coordinator
+//! joins a fleet around a [`crate::hub::HubServer`] broker
+//! (`jitune hub serve --socket <path>`):
+//!
+//! * **At spawn** the leader connects (with retry), pulls the broker's
+//!   full tuned map and warm-starts every entry that matches the local
+//!   manifest — the problem lands in `Phase::Finalizing`, so its first
+//!   call pays one JIT compile and *zero* explore iterations, exactly
+//!   like a `load_state` import. Warm-start completes before `spawn`
+//!   returns.
+//! * **At finalize** — first tune, manual retune or drift-triggered
+//!   retune — the leader publishes the confirmed winner back to the
+//!   broker with a per-problem monotonic version. The broker merges
+//!   last-writer-wins-by-version and reports conflicts (two processes
+//!   tuning the same problem concurrently).
+//! * **While serving**, `HubOptions::pull_interval` makes the leader
+//!   periodically re-pull and adopt strictly-newer winners (their
+//!   fast-lane entries are invalidated so callers switch); a retune in
+//!   one process therefore propagates to the whole fleet. Explicit
+//!   pulls are available via `CoordinatorHandle::hub_pull`.
+//!
+//! The hub is strictly an accelerant: an unreachable broker degrades to
+//! a log warning and local-only behaviour, never a serving failure.
+//! Traffic is accounted in [`CoordStats`] and exported under `"hub"` in
+//! `stats_json()` (pushes / pulls / adopted / conflicts). See
+//! `rust/tests/hub_fleet.rs` for the multi-process contract and
+//! `examples/hub_fleet.rs` + `benches/hub_warm_start.rs` for the
+//! fleet-scale amortization story.
 
 pub mod drift;
 pub mod fastlane;
@@ -86,7 +118,7 @@ pub use drift::{DriftHit, DriftMonitor, DriftPolicy, WindowSummary};
 pub use fastlane::{FastLane, Publication};
 pub use registry::KernelRegistry;
 pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
-pub use stats::{CoordStats, DriftEvent, KernelStats};
+pub use stats::{CoordStats, DriftEvent, HubStats, KernelStats};
 
 /// Poison-tolerant mutex lock shared by the coordinator's modules: a
 /// panicked recorder must not take the stats/monitor state down with it.

@@ -22,6 +22,7 @@ use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
 use crate::coordinator::drift::DriftPolicy;
 use crate::coordinator::fastlane::FastLane;
 use crate::error::{Error, Result};
+use crate::hub::{HubClient, HubOptions};
 use crate::tensor::HostTensor;
 use crate::util::json::Value;
 
@@ -46,6 +47,9 @@ enum Request {
     },
     StatsJson {
         reply: mpsc::SyncSender<Value>,
+    },
+    HubPull {
+        reply: mpsc::SyncSender<Result<(usize, usize)>>,
     },
     Shutdown,
 }
@@ -134,6 +138,19 @@ impl CoordinatorHandle {
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
     }
 
+    /// Pull the tuned-state hub's full map now and adopt newer winners
+    /// (see [`Dispatcher::hub_pull`]). Returns (adopted, skipped);
+    /// (0, 0) when no hub is attached. Periodic pulls happen on their
+    /// own when `HubOptions::pull_interval` is set — this is the
+    /// explicit, deterministic variant for operators and tests.
+    pub fn hub_pull(&self) -> Result<(usize, usize)> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::HubPull { reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
+    }
+
     /// Number of published fast-lane entries (0 when the lane is
     /// disabled). Reads the shared map directly — no leader round-trip.
     pub fn fast_lane_published(&self) -> usize {
@@ -163,7 +180,7 @@ impl Default for BatchOptions {
 }
 
 /// Full server configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ServerOptions {
     /// Leader-loop batching.
     pub batch: BatchOptions,
@@ -179,11 +196,26 @@ pub struct ServerOptions {
     /// warning otherwise). `None` preserves the manual-retune-only
     /// behaviour exactly.
     pub drift: Option<DriftPolicy>,
+    /// Tuned-state hub connection. `Some(opts)` makes the leader connect
+    /// at spawn, pull the fleet's tuned map for a warm start, publish
+    /// every finalized winner back, and (with
+    /// [`HubOptions::pull_interval`]) keep adopting newer winners while
+    /// serving. An unreachable broker degrades to a warning — serving
+    /// never depends on hub liveness — and, when `pull_interval` is
+    /// set, the connection is re-attempted on pull ticks so a broker
+    /// that starts late still gets joined. `None` keeps the
+    /// process-local behaviour exactly.
+    pub hub: Option<HubOptions>,
 }
 
 impl Default for ServerOptions {
     fn default() -> Self {
-        ServerOptions { batch: BatchOptions::default(), fast_lane: true, drift: None }
+        ServerOptions {
+            batch: BatchOptions::default(),
+            fast_lane: true,
+            drift: None,
+            hub: None,
+        }
     }
 }
 
@@ -239,23 +271,58 @@ impl Coordinator {
             }
             None
         };
-        // Leader wake-up cadence for drift evaluation; None keeps the
-        // plain blocking recv loop (no behaviour change without drift).
+        // Leader wake-up cadences; None for both keeps the plain
+        // blocking recv loop (no behaviour change without drift/hub).
         let drift_every = if opts.fast_lane {
             opts.drift.map(|p| p.window.max(Duration::from_millis(1)))
         } else {
             None
         };
+        let hub_opts = opts.hub.clone();
+        let pull_every = hub_opts
+            .as_ref()
+            .and_then(|h| h.pull_interval)
+            .map(|every| every.max(Duration::from_millis(1)));
         let leader_lane = lane.clone();
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let join = std::thread::Builder::new()
             .name("jitune-leader".into())
             .spawn(move || {
+                // Set when the initial hub connect failed: periodic pull
+                // ticks re-attempt the connection (single try, no sleep
+                // loop) so a broker that starts late still gets joined.
+                let mut hub_retry: Option<HubOptions> = None;
                 let mut dispatcher = match factory() {
                     Ok(mut d) => {
                         if let Some(lane) = leader_lane {
                             d.set_fast_lane(lane);
+                        }
+                        // Hub warm-start happens before readiness is
+                        // signalled: when spawn() returns, the tuned map
+                        // has already been adopted (deterministic for
+                        // callers). An unreachable broker only warns.
+                        if let Some(hub_opts) = hub_opts {
+                            match HubClient::connect(hub_opts.clone()) {
+                                Ok(client) => {
+                                    d.attach_hub(client);
+                                    match d.hub_pull() {
+                                        Ok((adopted, skipped)) => log::info!(
+                                            "hub: warm-started {adopted} problem(s), \
+                                             skipped {skipped} stale"
+                                        ),
+                                        Err(e) => {
+                                            log::warn!("hub: initial pull failed: {e}")
+                                        }
+                                    }
+                                }
+                                Err(e) => {
+                                    log::warn!(
+                                        "hub: unreachable ({e}); serving without warm-start"
+                                    );
+                                    hub_retry = Some(hub_opts);
+                                }
+                            }
                         }
                         let _ = ready_tx.send(Ok(()));
                         d
@@ -265,11 +332,16 @@ impl Coordinator {
                         return;
                     }
                 };
-                let mut next_tick = drift_every.map(|every| Instant::now() + every);
+                let mut next_drift = drift_every.map(|every| Instant::now() + every);
+                let mut next_pull = pull_every.map(|every| Instant::now() + every);
                 'serve: loop {
                     // Block for the head request — with a deadline when a
-                    // drift policy needs periodic evaluation even while
-                    // the queue is idle.
+                    // drift policy or a periodic hub pull needs the loop
+                    // to wake even while the queue is idle.
+                    let next_tick = match (next_drift, next_pull) {
+                        (Some(a), Some(b)) => Some(a.min(b)),
+                        (a, b) => a.or(b),
+                    };
                     let first = match next_tick {
                         Some(deadline) => {
                             let timeout = deadline.saturating_duration_since(Instant::now());
@@ -284,11 +356,35 @@ impl Coordinator {
                             Err(_) => break 'serve,
                         },
                     };
-                    if let (Some(deadline), Some(every)) = (next_tick, drift_every) {
-                        let now = Instant::now();
+                    let now = Instant::now();
+                    if let (Some(deadline), Some(every)) = (next_drift, drift_every) {
                         if now >= deadline {
                             dispatcher.drift_tick();
-                            next_tick = Some(now + every);
+                            next_drift = Some(now + every);
+                        }
+                    }
+                    if let (Some(deadline), Some(every)) = (next_pull, pull_every) {
+                        if now >= deadline {
+                            if let Some(opts) = hub_retry.as_ref() {
+                                // one immediate attempt — a still-down
+                                // broker must not stall queued calls
+                                let once =
+                                    HubOptions { connect_retries: 0, ..opts.clone() };
+                                match HubClient::connect(once) {
+                                    Ok(client) => {
+                                        dispatcher.attach_hub(client);
+                                        hub_retry = None;
+                                        log::info!("hub: connected after retry");
+                                    }
+                                    Err(e) => log::debug!("hub: still unreachable: {e}"),
+                                }
+                            }
+                            if dispatcher.hub_active() {
+                                if let Err(e) = dispatcher.hub_pull() {
+                                    log::warn!("hub: periodic pull failed: {e}");
+                                }
+                            }
+                            next_pull = Some(now + every);
                         }
                     }
                     let Some(first) = first else { continue 'serve };
@@ -338,7 +434,13 @@ impl Coordinator {
                                         dispatcher.stats().drift_events_json(),
                                     ));
                                 }
+                                if dispatcher.hub_active() {
+                                    obj.push(("hub".to_string(), dispatcher.stats().hub_json()));
+                                }
                                 let _ = reply.send(Value::Obj(obj));
+                            }
+                            Request::HubPull { reply } => {
+                                let _ = reply.send(dispatcher.hub_pull());
                             }
                             Request::Shutdown => break 'serve,
                         }

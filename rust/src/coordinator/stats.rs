@@ -57,6 +57,20 @@ pub struct DriftEvent {
 /// Cap on the retained drift-event log (oldest evicted first).
 const MAX_DRIFT_EVENTS: usize = 64;
 
+/// Tuned-state hub traffic counters (process-wide, not per kernel).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HubStats {
+    /// Winners published to the hub.
+    pub pushes: u64,
+    /// Full-map pulls performed (startup warm-start + periodic/explicit).
+    pub pulls: u64,
+    /// Entries adopted from pulls (warm-started or winner-switched).
+    pub adopted: u64,
+    /// Publishes the broker resolved as version conflicts (another
+    /// process published the same problem concurrently).
+    pub conflicts: u64,
+}
+
 /// All coordinator statistics.
 #[derive(Debug, Clone)]
 pub struct CoordStats {
@@ -66,12 +80,19 @@ pub struct CoordStats {
     rounds: BTreeMap<usize, u64>,
     /// Most recent drift-triggered retunes, newest last.
     drift_events: Vec<DriftEvent>,
+    /// Hub traffic, when a hub is attached.
+    hub: HubStats,
 }
 
 impl CoordStats {
     /// Empty stats.
     pub fn new() -> CoordStats {
-        CoordStats { kernels: BTreeMap::new(), rounds: BTreeMap::new(), drift_events: Vec::new() }
+        CoordStats {
+            kernels: BTreeMap::new(),
+            rounds: BTreeMap::new(),
+            drift_events: Vec::new(),
+            hub: HubStats::default(),
+        }
     }
 
     /// Record the queue depth of one leader scheduling round.
@@ -155,6 +176,36 @@ impl CoordStats {
         )
     }
 
+    /// Record one hub publish (and whether the broker reported a merge
+    /// conflict for it).
+    pub fn hub_push(&mut self, conflict: bool) {
+        self.hub.pushes += 1;
+        if conflict {
+            self.hub.conflicts += 1;
+        }
+    }
+
+    /// Record one hub pull and how many entries it adopted.
+    pub fn hub_pull(&mut self, adopted: u64) {
+        self.hub.pulls += 1;
+        self.hub.adopted += adopted;
+    }
+
+    /// Hub traffic counters.
+    pub fn hub(&self) -> HubStats {
+        self.hub
+    }
+
+    /// Hub counters as JSON (the `hub` object in `stats_json()`).
+    pub fn hub_json(&self) -> Value {
+        Value::Obj(vec![
+            ("pushes".into(), n(self.hub.pushes as f64)),
+            ("pulls".into(), n(self.hub.pulls as f64)),
+            ("adopted".into(), n(self.hub.adopted as f64)),
+            ("conflicts".into(), n(self.hub.conflicts as f64)),
+        ])
+    }
+
     /// Stats for one kernel.
     pub fn kernel(&self, kernel: &str) -> Option<&KernelStats> {
         self.kernels.get(kernel)
@@ -213,6 +264,12 @@ impl CoordStats {
                 self.total_drift_retunes(),
                 last.kernel,
                 last.ratio
+            ));
+        }
+        if self.hub.pushes + self.hub.pulls > 0 {
+            out.push_str(&format!(
+                "hub: pushes={} pulls={} adopted={} conflicts={}\n",
+                self.hub.pushes, self.hub.pulls, self.hub.adopted, self.hub.conflicts
             ));
         }
         for (k, s) in &self.kernels {
@@ -297,6 +354,23 @@ mod tests {
             per_kernel.get("k").unwrap().get("drift_retunes").unwrap().as_i64(),
             Some(70)
         );
+    }
+
+    #[test]
+    fn hub_counters_tracked_and_rendered() {
+        let mut s = CoordStats::new();
+        assert!(!s.render().contains("hub:"), "no hub line without traffic");
+        s.hub_push(false);
+        s.hub_push(true);
+        s.hub_pull(3);
+        s.hub_pull(0);
+        let h = s.hub();
+        assert_eq!((h.pushes, h.pulls, h.adopted, h.conflicts), (2, 2, 3, 1));
+        let json = s.hub_json();
+        assert_eq!(json.get("pushes").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("adopted").unwrap().as_i64(), Some(3));
+        assert_eq!(json.get("conflicts").unwrap().as_i64(), Some(1));
+        assert!(s.render().contains("hub: pushes=2 pulls=2 adopted=3 conflicts=1"));
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Hub client: connect-with-retry plus a tiny request/reply layer with
+//! one transparent reconnect per request.
+
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::protocol::{proto_err, read_frame, write_frame, Frame, HubEntry, PROTOCOL_VERSION};
+
+/// Hub connection configuration (`ServerOptions { hub: Some(..) }`).
+#[derive(Debug, Clone)]
+pub struct HubOptions {
+    /// Unix-domain socket the broker listens on.
+    pub socket: PathBuf,
+    /// Connection attempts before giving up (covers the race of a fleet
+    /// starting alongside its broker).
+    pub connect_retries: u32,
+    /// Delay between connection attempts.
+    pub retry_delay: Duration,
+    /// Per-request read/write timeout — a wedged broker must not hang
+    /// the leader thread.
+    pub io_timeout: Duration,
+    /// Periodically pull the tuned map and adopt newer winners while
+    /// serving. `None` pulls only at startup (plus explicit
+    /// `hub_pull` calls).
+    pub pull_interval: Option<Duration>,
+    /// Peer name sent in `Hello` (diagnostics only).
+    pub peer: String,
+}
+
+impl HubOptions {
+    /// Defaults for a broker at `socket`: 40 × 25ms connect budget
+    /// (~1s), 5s io timeout, no periodic pull.
+    pub fn at(socket: impl AsRef<Path>) -> HubOptions {
+        HubOptions {
+            socket: socket.as_ref().to_path_buf(),
+            connect_retries: 40,
+            retry_delay: Duration::from_millis(25),
+            io_timeout: Duration::from_secs(5),
+            pull_interval: None,
+            peer: format!("jitune-{}", std::process::id()),
+        }
+    }
+}
+
+/// Publish outcome as acknowledged by the broker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PublishAck {
+    /// Version the entry is stored under.
+    pub version: u64,
+    /// Whether the broker resolved a version conflict (another process
+    /// published the same problem concurrently).
+    pub conflict: bool,
+}
+
+/// A connected hub client.
+pub struct HubClient {
+    opts: HubOptions,
+    stream: UnixStream,
+    generation: u64,
+}
+
+impl HubClient {
+    /// Connect (with retry) and complete the `Hello` handshake.
+    pub fn connect(opts: HubOptions) -> Result<HubClient> {
+        let stream = dial(&opts, opts.connect_retries)?;
+        Ok(HubClient { opts, stream, generation: 0 })
+    }
+
+    /// Options this client was built with.
+    pub fn options(&self) -> &HubOptions {
+        &self.opts
+    }
+
+    /// Connection generation: bumped every time the client had to redial
+    /// after a dead stream. A change signals the broker may have
+    /// restarted (and, being in-memory, lost its map) — callers caching
+    /// per-entry versions must drop that cache and resynchronize.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Fetch the broker's full tuned map.
+    pub fn pull_all(&mut self) -> Result<Vec<HubEntry>> {
+        match self.request(&Frame::PullAll)? {
+            Frame::Update { entries } => Ok(entries),
+            other => Err(proto_err(format!("expected update, got {other:?}"))),
+        }
+    }
+
+    /// Publish one winner; returns the broker's merge acknowledgement.
+    pub fn publish(&mut self, entry: &HubEntry) -> Result<PublishAck> {
+        match self.request(&Frame::Publish { entry: entry.clone() })? {
+            Frame::Ack { version, conflict } => Ok(PublishAck { version, conflict }),
+            other => Err(proto_err(format!("expected ack, got {other:?}"))),
+        }
+    }
+
+    /// One request/reply round-trip. A dead stream (broker restarted,
+    /// socket dropped) gets one transparent redial before the error
+    /// surfaces — a *single* immediate attempt, not the full startup
+    /// retry budget: requests run on the coordinator's leader thread,
+    /// and a down broker must degrade serving to a warning, not stall
+    /// every queued call behind a retry sleep loop. A *timeout* is not
+    /// redialed at all: the broker is wedged, not gone, and a redial
+    /// would both double the stall (another `io_timeout` on the
+    /// handshake) and re-send a request that may already have applied.
+    fn request(&mut self, frame: &Frame) -> Result<Frame> {
+        match round_trip(&mut self.stream, frame) {
+            Ok(reply) => Ok(reply),
+            Err(e) if is_timeout(&e) => {
+                // the reply may still arrive late and would desynchronize
+                // the stream (the next request would read *this* one's
+                // answer): kill the stream so the next request starts
+                // from a clean redial instead of a stale frame
+                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                Err(e)
+            }
+            Err(first) => {
+                log::debug!("hub: request failed ({first}); redialing");
+                self.stream = dial(&self.opts, 0)?;
+                self.generation = self.generation.wrapping_add(1);
+                round_trip(&mut self.stream, frame)
+            }
+        }
+    }
+
+    /// Test hook: kill the live stream to exercise the redial path.
+    #[cfg(test)]
+    pub(crate) fn shutdown_stream_for_test(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+fn round_trip(stream: &mut UnixStream, frame: &Frame) -> Result<Frame> {
+    write_frame(stream, frame)?;
+    read_frame(stream)
+}
+
+/// Whether a request failure was the io-timeout set on the stream
+/// (`SO_RCVTIMEO`/`SO_SNDTIMEO` surface as `WouldBlock` or `TimedOut`).
+fn is_timeout(e: &crate::Error) -> bool {
+    use std::io::ErrorKind;
+    matches!(e, crate::Error::Io { source, .. }
+        if matches!(source.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut))
+}
+
+/// Connect (with up to `retries` re-attempts) and shake hands.
+fn dial(opts: &HubOptions, retries: u32) -> Result<UnixStream> {
+    let mut last: Option<std::io::Error> = None;
+    for attempt in 0..=retries {
+        if attempt > 0 {
+            std::thread::sleep(opts.retry_delay);
+        }
+        match UnixStream::connect(&opts.socket) {
+            Ok(mut stream) => {
+                stream
+                    .set_read_timeout(Some(opts.io_timeout))
+                    .and_then(|()| stream.set_write_timeout(Some(opts.io_timeout)))
+                    .map_err(|e| proto_err(format!("set timeout: {e}")))?;
+                let hello = Frame::Hello { protocol: PROTOCOL_VERSION, peer: opts.peer.clone() };
+                match round_trip(&mut stream, &hello)? {
+                    Frame::HelloAck { protocol, entries } => {
+                        if protocol != PROTOCOL_VERSION {
+                            return Err(proto_err(format!(
+                                "protocol mismatch: broker v{protocol}, client v{PROTOCOL_VERSION}"
+                            )));
+                        }
+                        log::debug!(
+                            "hub: connected to {} ({entries} entries held)",
+                            opts.socket.display()
+                        );
+                        return Ok(stream);
+                    }
+                    other => return Err(proto_err(format!("expected hello_ack, got {other:?}"))),
+                }
+            }
+            Err(e) => last = Some(e),
+        }
+    }
+    Err(proto_err(format!(
+        "cannot reach broker at {} after {} attempt(s): {}",
+        opts.socket.display(),
+        retries + 1,
+        last.map(|e| e.to_string()).unwrap_or_else(|| "no attempt made".into()),
+    )))
+}

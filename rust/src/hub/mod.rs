@@ -1,0 +1,49 @@
+//! Tuned-state hub: a fleet-wide warm-start service.
+//!
+//! The paper's payoff is that "the programmer can obtain the optimal
+//! parameters to use them for other kernels" — but without help that
+//! knowledge dies with the process. `save_state`/`load_state` bridges
+//! runs through files; the hub bridges *processes*: a tiny std-only
+//! broker holding the fleet's tuned map, so any number of serving
+//! processes warm-start from whichever process tuned first and adopt
+//! retuned winners as they happen.
+//!
+//! # Pieces
+//!
+//! * [`protocol`] — the wire format: length-prefixed JSON frames
+//!   ([`Frame`]: `Hello`/`HelloAck`/`PullAll`/`Update`/`Publish`/`Ack`)
+//!   over any byte stream, carrying [`HubEntry`] records (the same
+//!   kernel/param/signature/values/winner_value shape `save_state`
+//!   writes, plus a per-entry monotonic `version`). The merge rule is
+//!   last-writer-wins-by-version ([`merge_entry`]), shared by the broker
+//!   and the `jitune state merge` CLI.
+//! * [`server`] — [`HubServer`]: a Unix-domain-socket broker, one thread
+//!   per connection, state under a mutex. Run it with
+//!   `jitune hub serve --socket <path>` (or in-process via
+//!   [`HubServer::spawn`] for examples/tests).
+//! * [`client`] — [`HubClient`]: connect-with-retry, one reconnect per
+//!   request, `pull_all` + `publish`. Configured by [`HubOptions`]
+//!   (socket path, retry budget, optional periodic pull interval).
+//!
+//! # How the coordinator uses it
+//!
+//! With `ServerOptions { hub: Some(HubOptions::at(path)) }` the leader
+//! connects at spawn, pulls the full tuned map and warm-starts every
+//! matching problem (zero explore iterations — only the winner's final
+//! compilation remains, as with `load_state`). Every finalization —
+//! first tune, manual retune, drift-triggered retune — publishes the
+//! winner back; other processes adopt it on their next pull (periodic
+//! via `HubOptions::pull_interval`, or explicit via
+//! `CoordinatorHandle::hub_pull`). `stats_json()` reports pushes, pulls,
+//! adoptions and merge conflicts under `"hub"`.
+//!
+//! Everything is `std`-only: `std::os::unix::net` sockets and
+//! [`crate::util::json`] for the frames — no new dependencies.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{HubClient, HubOptions, PublishAck};
+pub use protocol::{merge_entry, read_frame, write_frame, EntryKey, Frame, HubEntry, Merge};
+pub use server::HubServer;

@@ -1,0 +1,440 @@
+//! Hub wire protocol: length-prefixed JSON frames + the tuned-entry
+//! merge rule.
+//!
+//! A frame on the wire is a 4-byte big-endian length followed by that
+//! many bytes of UTF-8 JSON (one object with a `"type"` tag). JSON keeps
+//! the protocol debuggable (`socat` a hub and read it) and reuses
+//! [`crate::util::json`] — the hub adds no dependencies.
+//!
+//! Entries carry a **per-entry monotonic version**. Merging is
+//! last-writer-wins-by-version: a newer version replaces, an identical
+//! payload at any version is a no-op, an *equal*-version race between
+//! two writers is tie-broken by arrival (the later writer is promoted
+//! one version up, so every accepted write remains monotonic and
+//! pullers can detect it), and a strictly *older* version with a
+//! different payload is rejected as stale knowledge.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+
+use crate::autotuner::ProblemKey;
+use crate::error::{Error, Result};
+use crate::util::json::{n, s, Value};
+
+/// Protocol version spoken by this build; bumped on incompatible frame
+/// changes. Exchanged in `Hello`/`HelloAck`.
+pub const PROTOCOL_VERSION: i64 = 1;
+
+/// Upper bound on one frame's body — a tuned map is a few KB per entry,
+/// so anything near this is a corrupt length prefix, not a real frame.
+pub const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// One tuned winner as shared through the hub (and written by
+/// `save_state` / read by `state merge`, minus the version which state
+/// files may omit — it defaults to 0 and is normalized to 1 on merge).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HubEntry {
+    /// Kernel family name.
+    pub kernel: String,
+    /// Autotune-parameter name.
+    pub param: String,
+    /// Argument signature, e.g. `f32[128,128],f32[128,128]`.
+    pub signature: String,
+    /// Candidate parameter values in declaration order (adoption is
+    /// refused when these no longer match the local manifest).
+    pub values: Vec<i64>,
+    /// The winning parameter value.
+    pub winner_value: i64,
+    /// Monotonic per-entry version; higher wins a merge.
+    pub version: u64,
+}
+
+/// Merge identity: the tuning problem *plus* its candidate-value set.
+/// Two binary flavors that disagree on the candidate grid for the same
+/// problem are distinct entries — they version independently instead of
+/// clobbering each other's slot (the hub serves heterogeneous fleets).
+pub type EntryKey = (ProblemKey, Vec<i64>);
+
+impl HubEntry {
+    /// Tuning-problem identity of this entry (display / adoption).
+    pub fn problem_key(&self) -> ProblemKey {
+        ProblemKey::new(&self.kernel, &self.param, &self.signature)
+    }
+
+    /// Merge identity of this entry (problem + candidate grid).
+    pub fn entry_key(&self) -> EntryKey {
+        (self.problem_key(), self.values.clone())
+    }
+
+    /// Whether two entries describe the same tuning result (version
+    /// excluded — it orders writes, it is not part of the payload).
+    pub fn same_payload(&self, other: &HubEntry) -> bool {
+        self.winner_value == other.winner_value && self.values == other.values
+    }
+
+    /// Serialize to the state-file/wire object shape.
+    pub fn to_json(&self) -> Value {
+        Value::Obj(vec![
+            ("kernel".into(), s(self.kernel.clone())),
+            ("param".into(), s(self.param.clone())),
+            ("signature".into(), s(self.signature.clone())),
+            ("values".into(), Value::Arr(self.values.iter().map(|&v| n(v as f64)).collect())),
+            ("winner_value".into(), n(self.winner_value as f64)),
+            ("version".into(), n(self.version as f64)),
+        ])
+    }
+
+    /// Parse from the state-file/wire object shape. `version` is
+    /// optional (plain `save_state` files carry none) and defaults to 0.
+    pub fn from_json(v: &Value) -> Result<HubEntry> {
+        let values: Vec<i64> = v
+            .req_arr("values")?
+            .iter()
+            .map(|x| {
+                x.as_i64().ok_or_else(|| {
+                    Error::Autotune("hub entry: non-integer candidate value".into())
+                })
+            })
+            .collect::<Result<_>>()?;
+        let version = v.get("version").and_then(Value::as_i64).unwrap_or(0).max(0) as u64;
+        Ok(HubEntry {
+            kernel: v.req_str("kernel")?.to_string(),
+            param: v.req_str("param")?.to_string(),
+            signature: v.req_str("signature")?.to_string(),
+            values,
+            winner_value: v.req_i64("winner_value")?,
+            version,
+        })
+    }
+}
+
+/// Outcome of merging one incoming entry into a tuned map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Merge {
+    /// First entry for this problem.
+    Inserted,
+    /// Strictly newer version replaced the stored entry.
+    Replaced,
+    /// Older/equal version, identical payload — idempotent republish.
+    Stale,
+    /// *Equal* version with a different payload — two writers raced the
+    /// same version: the later arrival won and was re-versioned to
+    /// `assigned`.
+    Conflict {
+        /// Version the incoming entry was promoted to.
+        assigned: u64,
+    },
+    /// Strictly *older* version with a different payload: the incoming
+    /// entry is stale knowledge and was rejected — the stored, newer
+    /// entry stands.
+    Outdated,
+}
+
+/// Merge `entry` into `map` under last-writer-wins-by-version: a higher
+/// version always wins, a strictly lower version always loses, and an
+/// equal-version race is tie-broken by arrival (the later writer is
+/// promoted one version up). `Stale`/`Outdated` leave the map
+/// untouched; every other outcome stores `entry` with a version
+/// strictly above whatever it replaced. A version of 0 (an unversioned
+/// state file) is normalized to 1.
+pub fn merge_entry(map: &mut BTreeMap<EntryKey, HubEntry>, mut entry: HubEntry) -> Merge {
+    if entry.version == 0 {
+        entry.version = 1;
+    }
+    let key = entry.entry_key();
+    match map.get(&key) {
+        None => {
+            map.insert(key, entry);
+            Merge::Inserted
+        }
+        Some(cur) if entry.version > cur.version => {
+            map.insert(key, entry);
+            Merge::Replaced
+        }
+        Some(cur) if cur.same_payload(&entry) => Merge::Stale,
+        Some(cur) if entry.version == cur.version => {
+            let assigned = cur.version + 1;
+            entry.version = assigned;
+            map.insert(key, entry);
+            Merge::Conflict { assigned }
+        }
+        Some(_) => Merge::Outdated,
+    }
+}
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server greeting.
+    Hello {
+        /// Speaker's protocol version.
+        protocol: i64,
+        /// Human-readable peer name (diagnostics only).
+        peer: String,
+    },
+    /// Server → client greeting reply.
+    HelloAck {
+        /// Server's protocol version.
+        protocol: i64,
+        /// Entries currently held.
+        entries: i64,
+    },
+    /// Client → server: send me the full tuned map.
+    PullAll,
+    /// Server → client: the full tuned map.
+    Update {
+        /// Every entry the hub holds.
+        entries: Vec<HubEntry>,
+    },
+    /// Client → server: merge this winner.
+    Publish {
+        /// The entry to merge.
+        entry: HubEntry,
+    },
+    /// Server → client: publish outcome.
+    Ack {
+        /// Version the entry is stored under (echoes the published
+        /// version, or the re-assigned one on conflict).
+        version: u64,
+        /// Whether the merge was a version conflict.
+        conflict: bool,
+    },
+}
+
+impl Frame {
+    fn to_json(&self) -> Value {
+        match self {
+            Frame::Hello { protocol, peer } => Value::Obj(vec![
+                ("type".into(), s("hello")),
+                ("protocol".into(), n(*protocol as f64)),
+                ("peer".into(), s(peer.clone())),
+            ]),
+            Frame::HelloAck { protocol, entries } => Value::Obj(vec![
+                ("type".into(), s("hello_ack")),
+                ("protocol".into(), n(*protocol as f64)),
+                ("entries".into(), n(*entries as f64)),
+            ]),
+            Frame::PullAll => Value::Obj(vec![("type".into(), s("pull_all"))]),
+            Frame::Update { entries } => Value::Obj(vec![
+                ("type".into(), s("update")),
+                ("entries".into(), Value::Arr(entries.iter().map(HubEntry::to_json).collect())),
+            ]),
+            Frame::Publish { entry } => Value::Obj(vec![
+                ("type".into(), s("publish")),
+                ("entry".into(), entry.to_json()),
+            ]),
+            Frame::Ack { version, conflict } => Value::Obj(vec![
+                ("type".into(), s("ack")),
+                ("version".into(), n(*version as f64)),
+                ("conflict".into(), Value::Bool(*conflict)),
+            ]),
+        }
+    }
+
+    fn from_json(v: &Value) -> Result<Frame> {
+        let kind = v.req_str("type").map_err(|_| proto_err("frame without `type`"))?;
+        match kind {
+            "hello" => Ok(Frame::Hello {
+                protocol: v.req_i64("protocol")?,
+                peer: v.req_str("peer")?.to_string(),
+            }),
+            "hello_ack" => Ok(Frame::HelloAck {
+                protocol: v.req_i64("protocol")?,
+                entries: v.req_i64("entries")?,
+            }),
+            "pull_all" => Ok(Frame::PullAll),
+            "update" => Ok(Frame::Update {
+                entries: v
+                    .req_arr("entries")?
+                    .iter()
+                    .map(HubEntry::from_json)
+                    .collect::<Result<_>>()?,
+            }),
+            "publish" => Ok(Frame::Publish {
+                entry: HubEntry::from_json(
+                    v.get("entry").ok_or_else(|| proto_err("publish without `entry`"))?,
+                )?,
+            }),
+            "ack" => Ok(Frame::Ack {
+                version: v.req_i64("version")?.max(0) as u64,
+                conflict: v.get("conflict").and_then(Value::as_bool).unwrap_or(false),
+            }),
+            other => Err(proto_err(format!("unknown frame type `{other}`"))),
+        }
+    }
+}
+
+/// Protocol-level error (framing, unexpected frame).
+pub(crate) fn proto_err(msg: impl Into<String>) -> Error {
+    Error::Coordinator(format!("hub: {}", msg.into()))
+}
+
+/// Socket io failure — kept as [`Error::Io`] so callers can inspect the
+/// [`std::io::ErrorKind`] (the client treats timeouts differently from
+/// dead connections).
+fn io_err(op: &str, e: std::io::Error) -> Error {
+    Error::io(format!("hub socket ({op})"), e)
+}
+
+/// Write one frame: 4-byte big-endian length prefix + JSON body.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<()> {
+    let body = frame.to_json().to_json();
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME_BYTES {
+        return Err(proto_err(format!("frame too large ({} bytes)", bytes.len())));
+    }
+    let len = (bytes.len() as u32).to_be_bytes();
+    w.write_all(&len).map_err(|e| io_err("write", e))?;
+    w.write_all(bytes).map_err(|e| io_err("write", e))?;
+    w.flush().map_err(|e| io_err("flush", e))?;
+    Ok(())
+}
+
+/// Read one frame (blocking). An EOF before the length prefix surfaces
+/// as an error — servers treat it as a clean disconnect.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len).map_err(|e| io_err("read", e))?;
+    let len = u32::from_be_bytes(len) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(proto_err(format!("bad frame length {len}")));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).map_err(|e| io_err("read", e))?;
+    let text = std::str::from_utf8(&body).map_err(|_| proto_err("frame body is not UTF-8"))?;
+    Frame::from_json(&crate::util::json::parse(text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(kernel: &str, winner: i64, version: u64) -> HubEntry {
+        HubEntry {
+            kernel: kernel.into(),
+            param: "p".into(),
+            signature: "f32[8,8]".into(),
+            values: vec![0, 1],
+            winner_value: winner,
+            version,
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip_through_a_byte_stream() {
+        let frames = vec![
+            Frame::Hello { protocol: PROTOCOL_VERSION, peer: "worker-1".into() },
+            Frame::HelloAck { protocol: PROTOCOL_VERSION, entries: 2 },
+            Frame::PullAll,
+            Frame::Update { entries: vec![entry("a", 1, 3), entry("b", 0, 1)] },
+            Frame::Publish { entry: entry("c", 1, 7) },
+            Frame::Ack { version: 7, conflict: true },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap(), f);
+        }
+        // stream fully consumed; another read is a clean EOF error
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn entry_roundtrips_and_tolerates_missing_version() {
+        let e = entry("k", 1, 5);
+        assert_eq!(HubEntry::from_json(&e.to_json()).unwrap(), e);
+        // a plain save_state entry has no version field → 0
+        let text = r#"{"kernel":"k","param":"p","signature":"f32[8,8]",
+                       "values":[0,1],"winner_value":1}"#;
+        let parsed = HubEntry::from_json(&crate::util::json::parse(text).unwrap()).unwrap();
+        assert_eq!(parsed.version, 0);
+        assert!(parsed.same_payload(&e));
+    }
+
+    #[test]
+    fn entry_with_tricky_key_strings_survives_the_wire() {
+        // problem keys are arbitrary strings: escapes must round-trip
+        let e = HubEntry {
+            kernel: "kern \"q\" \\ \n\t中😀".into(),
+            param: "p\u{01}".into(),
+            signature: "f32[8,8],f32[8,8]".into(),
+            values: vec![1, 2, 3],
+            winner_value: 2,
+            version: 1,
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Publish { entry: e.clone() }).unwrap();
+        match read_frame(&mut &buf[..]).unwrap() {
+            Frame::Publish { entry } => assert_eq!(entry, e),
+            f => panic!("unexpected {f:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        // garbage length prefix
+        let mut r: &[u8] = &[0xFF, 0xFF, 0xFF, 0xFF, 0x00];
+        assert!(read_frame(&mut r).is_err());
+        // zero length
+        let mut r: &[u8] = &[0, 0, 0, 0];
+        assert!(read_frame(&mut r).is_err());
+        // valid prefix, invalid JSON
+        let mut buf = 3u32.to_be_bytes().to_vec();
+        buf.extend_from_slice(b"{{{");
+        assert!(read_frame(&mut &buf[..]).is_err());
+        // valid JSON, unknown type
+        let body = br#"{"type":"nope"}"#;
+        let mut buf = (body.len() as u32).to_be_bytes().to_vec();
+        buf.extend_from_slice(body);
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn merge_is_last_writer_wins_by_version() {
+        let mut map = BTreeMap::new();
+        assert_eq!(merge_entry(&mut map, entry("k", 0, 1)), Merge::Inserted);
+        // newer version replaces
+        assert_eq!(merge_entry(&mut map, entry("k", 1, 2)), Merge::Replaced);
+        assert_eq!(map.values().next().unwrap().winner_value, 1);
+        // idempotent republish of the same payload at an old version
+        assert_eq!(merge_entry(&mut map, entry("k", 1, 1)), Merge::Stale);
+        assert_eq!(map.values().next().unwrap().version, 2);
+        // same version, different payload: later writer wins, re-versioned
+        assert_eq!(merge_entry(&mut map, entry("k", 0, 2)), Merge::Conflict { assigned: 3 });
+        let stored = map.values().next().unwrap();
+        assert_eq!((stored.winner_value, stored.version), (0, 3));
+        // strictly older version, different payload: stale knowledge
+        // loses — a peer re-asserting a superseded winner cannot
+        // clobber the newer one
+        assert_eq!(merge_entry(&mut map, entry("k", 1, 2)), Merge::Outdated);
+        let stored = map.values().next().unwrap();
+        assert_eq!((stored.winner_value, stored.version), (0, 3));
+    }
+
+    #[test]
+    fn different_candidate_sets_are_distinct_entries() {
+        // heterogeneous fleet: two binary flavors with different
+        // candidate grids for the same problem must not clobber each
+        // other's slot
+        let mut map = BTreeMap::new();
+        let a = entry("k", 0, 1); // values [0, 1]
+        let mut b = entry("k", 2, 1);
+        b.values = vec![0, 1, 2];
+        assert_eq!(merge_entry(&mut map, a), Merge::Inserted);
+        assert_eq!(merge_entry(&mut map, b), Merge::Inserted, "different grid, no conflict");
+        assert_eq!(map.len(), 2);
+    }
+
+    #[test]
+    fn merge_normalizes_unversioned_entries() {
+        let mut map = BTreeMap::new();
+        assert_eq!(merge_entry(&mut map, entry("k", 0, 0)), Merge::Inserted);
+        assert_eq!(map.values().next().unwrap().version, 1);
+        // distinct problems coexist
+        assert_eq!(merge_entry(&mut map, entry("other", 1, 0)), Merge::Inserted);
+        assert_eq!(map.len(), 2);
+    }
+}

@@ -1,0 +1,296 @@
+//! The hub broker: a Unix-domain-socket server holding the fleet's
+//! tuned map.
+//!
+//! Deliberately boring: one accept loop, one thread per connection
+//! (fleets are tens of processes, not thousands), state behind a mutex.
+//! The broker is manifest-agnostic — it stores whatever entries clients
+//! publish and lets *pullers* validate against their own manifest, so
+//! one hub can serve heterogeneous binaries.
+
+use std::collections::BTreeMap;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+
+use super::protocol::{
+    merge_entry, proto_err, read_frame, write_frame, EntryKey, Frame, HubEntry, Merge,
+    PROTOCOL_VERSION,
+};
+
+/// Broker state shared across connection threads.
+struct Shared {
+    entries: Mutex<BTreeMap<EntryKey, HubEntry>>,
+    publishes: AtomicU64,
+    pulls: AtomicU64,
+    conflicts: AtomicU64,
+}
+
+/// The tuned-state hub broker.
+pub struct HubServer {
+    listener: UnixListener,
+    path: PathBuf,
+    shared: Arc<Shared>,
+}
+
+impl HubServer {
+    /// Bind the broker socket, replacing a stale socket file from a
+    /// previous run. A path where a broker is still *answering* is
+    /// refused — unlinking a live broker's socket would silently split
+    /// the fleet across two inconsistent in-memory maps. Bind is
+    /// attempted *first* (no probe-then-unlink window for a racing
+    /// broker to fall into): only an `AddrInUse` failure probes the
+    /// existing socket, and only a socket nobody answers is removed.
+    pub fn bind(path: impl AsRef<Path>) -> Result<HubServer> {
+        let path = path.as_ref().to_path_buf();
+        let bind_once = |path: &Path| UnixListener::bind(path);
+        let listener = match bind_once(&path) {
+            Ok(l) => l,
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                if UnixStream::connect(&path).is_ok() {
+                    return Err(proto_err(format!(
+                        "a broker is already serving on {}",
+                        path.display()
+                    )));
+                }
+                std::fs::remove_file(&path).map_err(|e| {
+                    proto_err(format!("remove stale socket {}: {e}", path.display()))
+                })?;
+                // a concurrent bind in this window surfaces as an error
+                // here — never a silent hijack
+                bind_once(&path)
+                    .map_err(|e| proto_err(format!("bind {}: {e}", path.display())))?
+            }
+            Err(e) => return Err(proto_err(format!("bind {}: {e}", path.display()))),
+        };
+        let shared = Arc::new(Shared {
+            entries: Mutex::new(BTreeMap::new()),
+            publishes: AtomicU64::new(0),
+            pulls: AtomicU64::new(0),
+            conflicts: AtomicU64::new(0),
+        });
+        Ok(HubServer { listener, path, shared })
+    }
+
+    /// Socket path this broker listens on.
+    pub fn socket_path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Number of entries currently held.
+    pub fn entries(&self) -> usize {
+        crate::coordinator::mutex_lock(&self.shared.entries).len()
+    }
+
+    /// (publishes, pulls, merge conflicts) counters.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.shared.publishes.load(Ordering::Relaxed),
+            self.shared.pulls.load(Ordering::Relaxed),
+            self.shared.conflicts.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Serve until the process exits: accept connections and spawn one
+    /// handler thread each. Accept errors are logged and survived.
+    pub fn serve_forever(&self) -> Result<()> {
+        log::info!("hub: listening on {}", self.path.display());
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(stream) => {
+                    let shared = Arc::clone(&self.shared);
+                    // a failed handler spawn (thread exhaustion at peak
+                    // fleet size) drops one connection, never the broker
+                    if let Err(e) = std::thread::Builder::new()
+                        .name("jitune-hub-conn".into())
+                        .spawn(move || handle_conn(stream, &shared))
+                    {
+                        log::warn!("hub: could not spawn handler: {e}");
+                    }
+                }
+                Err(e) => log::warn!("hub: accept failed: {e}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the broker on a background thread (examples and tests; the
+    /// thread serves until process exit).
+    pub fn spawn(self) -> std::thread::JoinHandle<()> {
+        std::thread::Builder::new()
+            .name("jitune-hub".into())
+            .spawn(move || {
+                if let Err(e) = self.serve_forever() {
+                    log::warn!("hub: server stopped: {e}");
+                }
+            })
+            .expect("spawn hub server thread")
+    }
+}
+
+/// Serve one client connection until it disconnects.
+fn handle_conn(mut stream: UnixStream, shared: &Shared) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return, // EOF or a broken peer: drop the connection
+        };
+        let reply = match frame {
+            Frame::Hello { protocol, peer } => {
+                if protocol != PROTOCOL_VERSION {
+                    log::warn!("hub: peer {peer} speaks v{protocol}, want v{PROTOCOL_VERSION}");
+                }
+                let entries = crate::coordinator::mutex_lock(&shared.entries).len() as i64;
+                Frame::HelloAck { protocol: PROTOCOL_VERSION, entries }
+            }
+            Frame::PullAll => {
+                shared.pulls.fetch_add(1, Ordering::Relaxed);
+                let entries: Vec<HubEntry> =
+                    crate::coordinator::mutex_lock(&shared.entries).values().cloned().collect();
+                Frame::Update { entries }
+            }
+            Frame::Publish { entry } => {
+                shared.publishes.fetch_add(1, Ordering::Relaxed);
+                let label = entry.problem_key();
+                let key = entry.entry_key();
+                let proposed = entry.version;
+                let mut map = crate::coordinator::mutex_lock(&shared.entries);
+                let merge = merge_entry(&mut map, entry);
+                let stored = map.get(&key).expect("merged entry present").version;
+                drop(map);
+                let conflict = matches!(merge, Merge::Conflict { .. } | Merge::Outdated);
+                if conflict {
+                    shared.conflicts.fetch_add(1, Ordering::Relaxed);
+                    log::warn!("hub: conflict on {label} (proposed v{proposed}, stored v{stored})");
+                } else {
+                    log::debug!("hub: publish {label} → v{stored} ({merge:?})");
+                }
+                Frame::Ack { version: stored, conflict }
+            }
+            other => {
+                // a server-bound stream must never carry server frames
+                log::warn!("hub: unexpected frame from client: {other:?}");
+                return;
+            }
+        };
+        if write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hub::client::{HubClient, HubOptions};
+
+    fn temp_socket(tag: &str) -> PathBuf {
+        crate::testutil::temp_path(&format!("hub-test-{tag}"), "sock")
+    }
+
+    fn entry(kernel: &str, winner: i64, version: u64) -> HubEntry {
+        HubEntry {
+            kernel: kernel.into(),
+            param: "p".into(),
+            signature: "f32[8,8]".into(),
+            values: vec![0, 1],
+            winner_value: winner,
+            version,
+        }
+    }
+
+    #[test]
+    fn publish_pull_roundtrip_across_clients() {
+        let path = temp_socket("roundtrip");
+        let server = HubServer::bind(&path).unwrap();
+        server.spawn();
+
+        let mut a = HubClient::connect(HubOptions::at(&path)).unwrap();
+        let mut b = HubClient::connect(HubOptions::at(&path)).unwrap();
+        assert!(a.pull_all().unwrap().is_empty());
+
+        let ack = a.publish(&entry("k", 1, 1)).unwrap();
+        assert_eq!((ack.version, ack.conflict), (1, false));
+        let pulled = b.pull_all().unwrap();
+        assert_eq!(pulled.len(), 1);
+        assert_eq!(pulled[0].winner_value, 1);
+
+        // a retune publishes a newer version; the other client sees it
+        let ack = a.publish(&entry("k", 0, 2)).unwrap();
+        assert_eq!((ack.version, ack.conflict), (2, false));
+        let pulled = b.pull_all().unwrap();
+        assert_eq!((pulled[0].winner_value, pulled[0].version), (0, 2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn concurrent_publishers_conflict_is_last_writer_wins() {
+        let path = temp_socket("conflict");
+        HubServer::bind(&path).unwrap().spawn();
+        let mut a = HubClient::connect(HubOptions::at(&path)).unwrap();
+        let mut b = HubClient::connect(HubOptions::at(&path)).unwrap();
+
+        // both processes tuned from scratch and propose version 1
+        let ack_a = a.publish(&entry("k", 0, 1)).unwrap();
+        assert!(!ack_a.conflict);
+        let ack_b = b.publish(&entry("k", 1, 1)).unwrap();
+        assert!(ack_b.conflict, "same version, different winner");
+        assert_eq!(ack_b.version, 2, "conflict re-versions above the stored entry");
+
+        // the later writer's entry is what the fleet now pulls
+        let pulled = a.pull_all().unwrap();
+        assert_eq!((pulled[0].winner_value, pulled[0].version), (1, 2));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bind_replaces_stale_socket_file() {
+        let path = temp_socket("stale");
+        std::fs::write(&path, b"stale").unwrap();
+        let server = HubServer::bind(&path).unwrap();
+        assert_eq!(server.entries(), 0);
+        assert_eq!(server.socket_path(), path.as_path());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bind_refuses_to_hijack_a_live_broker() {
+        let path = temp_socket("hijack");
+        let server = HubServer::bind(&path).unwrap();
+        // keep the first broker accepting, then try to bind again
+        server.spawn();
+        let err = HubServer::bind(&path).err().expect("second bind must fail");
+        assert!(err.to_string().contains("already serving"), "{err}");
+        // the live broker is untouched: clients still reach it
+        let mut c = HubClient::connect(HubOptions::at(&path)).unwrap();
+        assert!(c.pull_all().unwrap().is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn client_reconnects_after_a_dropped_stream() {
+        let path = temp_socket("reconnect");
+        HubServer::bind(&path).unwrap().spawn();
+        let mut c = HubClient::connect(HubOptions::at(&path)).unwrap();
+        c.publish(&entry("k", 1, 1)).unwrap();
+        // sabotage the live stream: the next request must transparently
+        // redial instead of failing
+        c.shutdown_stream_for_test();
+        let pulled = c.pull_all().unwrap();
+        assert_eq!(pulled.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn connect_fails_fast_without_a_server() {
+        let path = temp_socket("nobody");
+        let opts = HubOptions {
+            connect_retries: 2,
+            retry_delay: std::time::Duration::from_millis(1),
+            ..HubOptions::at(&path)
+        };
+        assert!(HubClient::connect(opts).is_err());
+    }
+}

@@ -26,6 +26,7 @@ pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod hub;
 pub mod manifest;
 pub mod report;
 pub mod runtime;

@@ -5,8 +5,10 @@ use jitune::autotuner::Autotuner;
 use jitune::cli::{self, FlagSpec};
 use jitune::config::{Config, RunSettings};
 use jitune::coordinator::{CallRoute, Dispatcher, KernelRegistry};
+use jitune::hub::{merge_entry, HubClient, HubEntry, HubOptions, HubServer, Merge};
 use jitune::manifest::Manifest;
 use jitune::runtime::PjrtEngine;
+use jitune::util::json::Value;
 use jitune::workload::{inputs_for, CallTrace};
 use jitune::{Error, Result};
 
@@ -15,6 +17,8 @@ const COMMANDS: &[(&str, &str)] = &[
     ("tune", "tune one kernel at one size and print the tuning report"),
     ("run", "replay a call trace (kernel:size:iters[,...]) through the dispatcher"),
     ("stats", "tune then print coordinator + cache statistics"),
+    ("hub", "tuned-state hub broker: `hub serve --socket <p>` | `hub dump --socket <p>`"),
+    ("state", "tuning-state files: `state show <file>` | `state merge <out> <in>...`"),
     ("help", "show this message"),
 ];
 
@@ -34,6 +38,11 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "state-file",
             takes_value: true,
             help: "persisted tuning state: warm-start from it, save back after",
+        },
+        FlagSpec {
+            name: "socket",
+            takes_value: true,
+            help: "hub broker Unix socket path (hub serve / hub dump)",
         },
     ]
 }
@@ -95,6 +104,8 @@ fn run(args: &[String]) -> Result<()> {
             parsed.i64_or("size", 128)?,
             parsed.i64_or("iters", 20)? as usize,
         ),
+        "hub" => hub_cmd(&parsed),
+        "state" => state_cmd(&parsed),
         "help" | "" => {
             println!("{}", cli::usage("jitune", COMMANDS, &specs));
             Ok(())
@@ -240,6 +251,116 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
     print!("{}", dispatcher.stats().render());
     println!("cache: {:?}", dispatcher.cache_stats());
     save_state_flag(&dispatcher, &state_path)?;
+    Ok(())
+}
+
+/// `jitune hub serve --socket <p>` / `jitune hub dump --socket <p>`:
+/// run the fleet's tuned-state broker, or print its current map.
+fn hub_cmd(parsed: &cli::Parsed) -> Result<()> {
+    let socket = |parsed: &cli::Parsed| {
+        parsed
+            .get("socket")
+            .map(std::path::PathBuf::from)
+            .ok_or_else(|| Error::Config("hub requires --socket <path>".into()))
+    };
+    match parsed.positionals.first().map(String::as_str) {
+        Some("serve") => {
+            let path = socket(parsed)?;
+            let server = HubServer::bind(&path)?;
+            println!("hub: listening on {}", path.display());
+            server.serve_forever()
+        }
+        Some("dump") => {
+            let path = socket(parsed)?;
+            let mut client = HubClient::connect(HubOptions::at(&path))?;
+            let entries = client.pull_all()?;
+            let arr = Value::Arr(entries.iter().map(HubEntry::to_json).collect());
+            println!("{}", arr.to_json_pretty());
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "hub requires a subcommand `serve` or `dump`, got `{}`",
+            other.unwrap_or("")
+        ))),
+    }
+}
+
+/// `jitune state show <file>` / `jitune state merge <out> <in>...`:
+/// operator tooling for persisted tuning-state files — no hub needed.
+fn state_cmd(parsed: &cli::Parsed) -> Result<()> {
+    match parsed.positionals.split_first() {
+        Some((sub, rest)) if sub == "show" => match rest {
+            [file] => state_show(std::path::Path::new(file)),
+            _ => Err(Error::Config("state show requires exactly one <file>".into())),
+        },
+        Some((sub, rest)) if sub == "merge" => match rest.split_first() {
+            Some((out, inputs)) if !inputs.is_empty() => {
+                state_merge(std::path::Path::new(out), inputs)
+            }
+            _ => Err(Error::Config("state merge requires <out> and at least one <in>".into())),
+        },
+        _ => Err(Error::Config(
+            "state requires a subcommand: `show <file>` or `merge <out> <in>...`".into(),
+        )),
+    }
+}
+
+/// Parse a tuning-state file (an array of tuned entries; `version` is
+/// optional, as written by `save_state`).
+fn load_state_entries(path: &std::path::Path) -> Result<Vec<HubEntry>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(path.display().to_string(), e))?;
+    let parsed = jitune::util::json::parse(&text)?;
+    let arr = parsed.as_arr().ok_or_else(|| {
+        Error::Autotune(format!("{}: expected a JSON array of tuned entries", path.display()))
+    })?;
+    arr.iter().map(HubEntry::from_json).collect()
+}
+
+fn state_show(path: &std::path::Path) -> Result<()> {
+    let entries = load_state_entries(path)?;
+    println!("{}: {} tuned problem(s)", path.display(), entries.len());
+    for e in &entries {
+        let candidates: Vec<String> = e.values.iter().map(i64::to_string).collect();
+        // pad the key as a string: width flags don't reach a custom Display
+        let key = e.problem_key().to_string();
+        println!(
+            "  {key:<48} winner={:<8} v{:<4} candidates=[{}]",
+            e.winner_value,
+            e.version,
+            candidates.join(" ")
+        );
+    }
+    Ok(())
+}
+
+fn state_merge(out: &std::path::Path, inputs: &[String]) -> Result<()> {
+    let mut map = std::collections::BTreeMap::new();
+    let (mut total, mut conflicts, mut outdated) = (0usize, 0usize, 0usize);
+    for input in inputs {
+        let entries = load_state_entries(std::path::Path::new(input))?;
+        total += entries.len();
+        for entry in entries {
+            match merge_entry(&mut map, entry) {
+                // same version, different winner: the later file wins
+                Merge::Conflict { .. } => conflicts += 1,
+                // strictly older version, different winner: dropped —
+                // the already-merged newer entry stands
+                Merge::Outdated => outdated += 1,
+                Merge::Inserted | Merge::Replaced | Merge::Stale => {}
+            }
+        }
+    }
+    let merged = Value::Arr(map.values().map(HubEntry::to_json).collect());
+    jitune::util::atomic_write(out, &merged.to_json_pretty())?;
+    println!(
+        "state: merged {total} entr(ies) from {} file(s) into {} problem(s) \
+         ({conflicts} same-version conflict(s) resolved later-file-wins, \
+         {outdated} older-version entr(ies) dropped) -> {}",
+        inputs.len(),
+        map.len(),
+        out.display()
+    );
     Ok(())
 }
 

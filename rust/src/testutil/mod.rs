@@ -8,6 +8,27 @@
 use crate::manifest::Manifest;
 use crate::util::prng::Rng;
 
+/// Process-wide uniquifier for temp artifacts (sockets, state files,
+/// synthetic-manifest dirs): pid gives cross-process uniqueness, the
+/// counter intra-process uniqueness.
+fn next_uniq() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    COUNTER.fetch_add(1, Ordering::Relaxed)
+}
+
+/// A unique scratch path under the system temp dir:
+/// `jitune-<tag>-<pid>-<seq>.<ext>`. Shared by every test/bench/example
+/// that needs a hub socket or scratch file, so naming (and its
+/// collision-avoidance) lives in one place.
+pub fn temp_path(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "jitune-{tag}-{}-{}.{ext}",
+        std::process::id(),
+        next_uniq()
+    ))
+}
+
 /// A synthetic manifest: `variants` interchangeable variants of one
 /// kernel at each of `sizes`, backed by dummy HLO files in a unique temp
 /// directory (the mock engine never parses them). Variant `i` carries
@@ -15,12 +36,10 @@ use crate::util::prng::Rng;
 /// fast-lane stress tests, the throughput-scaling bench and the
 /// mock-backed serving example.
 pub fn synthetic_manifest(kernel: &str, variants: usize, sizes: &[i64]) -> crate::Result<Manifest> {
-    use std::sync::atomic::{AtomicU64, Ordering};
-    static COUNTER: AtomicU64 = AtomicU64::new(0);
     let dir = std::env::temp_dir().join(format!(
         "jitune-synth-{}-{}",
         std::process::id(),
-        COUNTER.fetch_add(1, Ordering::Relaxed)
+        next_uniq()
     ));
     std::fs::create_dir_all(&dir).map_err(|e| crate::Error::io(dir.display().to_string(), e))?;
     let mut entries = Vec::new();

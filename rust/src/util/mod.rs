@@ -11,3 +11,72 @@ pub mod json;
 pub mod logging;
 pub mod prng;
 pub mod stats;
+
+/// Crash-safe file write: the contents land in a per-write `.tmp`
+/// sibling first (concurrent writers — across processes or within one
+/// — cannot interleave into one scratch file), are `fsync`ed so
+/// journaled filesystems cannot
+/// surface an empty renamed file after power loss, and are then
+/// `rename`d into place — readers (and `load_state`/the hub) can never
+/// observe a torn file. The rename is atomic because the sibling lives
+/// in the same directory.
+pub fn atomic_write(path: &std::path::Path, contents: &str) -> crate::Result<()> {
+    use std::io::Write as _;
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| {
+            crate::Error::io(
+                path.display().to_string(),
+                std::io::Error::new(std::io::ErrorKind::InvalidInput, "path has no file name"),
+            )
+        })?
+        .to_string_lossy();
+    // pid + process-wide counter: concurrent writers in other processes
+    // *and* in this one each get their own scratch file
+    let seq = {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNTER: AtomicU64 = AtomicU64::new(0);
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    };
+    let tmp = path.with_file_name(format!("{file_name}.{}.{seq}.tmp", std::process::id()));
+    let write = |tmp: &std::path::Path| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()
+    };
+    write(&tmp).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        crate::Error::io(tmp.display().to_string(), e)
+    })?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        crate::Error::io(path.display().to_string(), e)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_tmp() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("jitune-atomic-{}.json", std::process::id()));
+        super::atomic_write(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        super::atomic_write(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        let prefix = format!("jitune-atomic-{}.json.", std::process::id());
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(&prefix) && n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp siblings must not survive: {leftovers:?}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn atomic_write_rejects_pathless_target() {
+        assert!(super::atomic_write(std::path::Path::new("/"), "x").is_err());
+    }
+}

@@ -1,0 +1,235 @@
+//! Multi-process fleet integration for the tuned-state hub.
+//!
+//! The broker runs as a *real spawned process* (`jitune hub serve`), so
+//! these tests exercise the actual wire path: Unix socket, length-prefixed
+//! frames, version merge. "Process A" / "process B" are in-test
+//! dispatchers with their own manifests and engines — each the moral
+//! equivalent of one serving process — and `jitune hub dump` is run as a
+//! third process to check operator visibility.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use jitune::autotuner::Phase;
+use jitune::coordinator::{CallRoute, Coordinator, Dispatcher, KernelRegistry, ServerOptions};
+use jitune::hub::{HubClient, HubOptions};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+
+fn socket_path(tag: &str) -> PathBuf {
+    jitune::testutil::temp_path(&format!("fleet-{tag}"), "sock")
+}
+
+/// The broker child process; killed (and its socket removed) on drop so
+/// a failing test never leaks it.
+struct HubProc {
+    child: Child,
+    socket: PathBuf,
+}
+
+impl HubProc {
+    fn spawn(tag: &str) -> HubProc {
+        let socket = socket_path(tag);
+        let _ = std::fs::remove_file(&socket);
+        let child = Command::new(env!("CARGO_BIN_EXE_jitune"))
+            .args(["hub", "serve", "--socket"])
+            .arg(&socket)
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn `jitune hub serve`");
+        HubProc { child, socket }
+    }
+
+    /// Client options with a generous connect budget (the broker process
+    /// may still be starting).
+    fn client_opts(&self) -> HubOptions {
+        HubOptions { connect_retries: 400, ..HubOptions::at(&self.socket) }
+    }
+}
+
+impl Drop for HubProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        let _ = std::fs::remove_file(&self.socket);
+    }
+}
+
+/// One "serving process": a dispatcher over the shared synthetic
+/// manifest layout, connected to the broker.
+fn fleet_member(spec: MockSpec, hub: &HubProc) -> Dispatcher {
+    let manifest = synthetic_manifest("kern", 2, &[8]).expect("manifest");
+    let registry = KernelRegistry::new(manifest);
+    let mut d = Dispatcher::new(registry, Box::new(MockEngine::new(spec)));
+    d.attach_hub(HubClient::connect(hub.client_opts()).expect("connect hub"));
+    d
+}
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+/// v1 wins tuning (60us vs 600us).
+fn base_spec() -> MockSpec {
+    MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(600))
+        .with_cost("kern.v1.n8", Duration::from_micros(60))
+}
+
+#[test]
+fn cold_process_warm_starts_with_zero_explores() {
+    let hub = HubProc::spawn("warm");
+
+    // process A tunes from scratch; finalization publishes the winner
+    let mut a = fleet_member(base_spec(), &hub);
+    assert_eq!(a.hub_pull().expect("pull"), (0, 0), "hub starts empty");
+    for _ in 0..3 {
+        a.call("kern", &inputs()).expect("tune");
+    }
+    assert_eq!(a.tuned_value("kern", 8), Some(1));
+    assert_eq!(a.stats().hub().pushes, 1);
+
+    // process B is cold: one pull reaches Phase::Tuned after the final
+    // compile, with zero explore iterations — the acceptance criterion
+    let mut b = fleet_member(base_spec(), &hub);
+    assert_eq!(b.hub_pull().expect("pull"), (1, 0));
+    let first = b.call("kern", &inputs()).expect("warm call");
+    assert_eq!(first.route, CallRoute::Finalized, "only the final compile remains");
+    assert_eq!(first.value, 1);
+    assert_eq!(b.phase("kern", 8), Some(Phase::Tuned));
+    assert_eq!(b.stats().kernel("kern").unwrap().explored, 0, "zero explore iterations");
+    let second = b.call("kern", &inputs()).expect("steady call");
+    assert_eq!(second.route, CallRoute::Tuned);
+}
+
+#[test]
+fn retuned_winner_is_dumpable_and_adopted_on_next_pull() {
+    let hub = HubProc::spawn("retune");
+    let spec = base_spec();
+    let fault = spec.latency_fault.clone();
+
+    // A tunes (v1 wins) and B adopts it
+    let mut a = fleet_member(spec.clone(), &hub);
+    for _ in 0..3 {
+        a.call("kern", &inputs()).expect("tune");
+    }
+    assert_eq!(a.tuned_value("kern", 8), Some(1));
+    let mut b = fleet_member(spec, &hub);
+    assert_eq!(b.hub_pull().expect("pull"), (1, 0));
+    b.call("kern", &inputs()).expect("finalize adopted winner");
+    assert_eq!(b.tuned_value("kern", 8), Some(1));
+
+    // the winner degrades 20x in A; a retune rematch flips it and the
+    // new winner is published at the next version
+    fault.set_scale("kern.v1.n8", 20.0);
+    assert!(a.retune("kern", 8).expect("retune"));
+    for _ in 0..3 {
+        a.call("kern", &inputs()).expect("rematch");
+    }
+    assert_eq!(a.tuned_value("kern", 8), Some(0), "rematch flips the winner");
+    assert_eq!(a.stats().hub().pushes, 2);
+
+    // operator visibility: `jitune hub dump` (a third process) shows the
+    // retuned winner at version 2
+    let out = Command::new(env!("CARGO_BIN_EXE_jitune"))
+        .args(["hub", "dump", "--socket"])
+        .arg(&hub.socket)
+        .output()
+        .expect("run `jitune hub dump`");
+    assert!(out.status.success(), "dump failed: {}", String::from_utf8_lossy(&out.stderr));
+    let dumped = jitune::util::json::parse(&String::from_utf8_lossy(&out.stdout))
+        .expect("dump emits JSON");
+    let arr = dumped.as_arr().expect("dump is an array");
+    assert_eq!(arr.len(), 1);
+    assert_eq!(arr[0].get("kernel").unwrap().as_str(), Some("kern"));
+    assert_eq!(arr[0].get("winner_value").unwrap().as_i64(), Some(0));
+    assert_eq!(arr[0].get("version").unwrap().as_i64(), Some(2));
+
+    // B's next pull adopts the retuned winner
+    assert_eq!(b.hub_pull().expect("pull"), (1, 0));
+    let o = b.call("kern", &inputs()).expect("refinalize");
+    assert_eq!(o.route, CallRoute::Finalized, "adoption refinalizes the new winner");
+    assert_eq!(o.value, 0);
+    assert_eq!(b.tuned_value("kern", 8), Some(0));
+    assert_eq!(b.stats().hub().adopted, 2);
+}
+
+#[test]
+fn coordinator_warm_starts_through_server_options() {
+    let hub = HubProc::spawn("coord");
+    let server_opts = |hub: &HubProc| ServerOptions {
+        hub: Some(hub.client_opts()),
+        ..ServerOptions::default()
+    };
+    let spawn = |spec: MockSpec, opts: ServerOptions| {
+        Coordinator::spawn_with_options(
+            move || {
+                let manifest = synthetic_manifest("kern", 2, &[8])?;
+                let registry = KernelRegistry::new(manifest);
+                Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+            },
+            opts,
+        )
+        .expect("spawn coordinator")
+    };
+
+    // fleet member A tunes and publishes
+    let a = spawn(base_spec(), server_opts(&hub));
+    let ha = a.handle();
+    for _ in 0..3 {
+        ha.call("kern", inputs()).expect("tune");
+    }
+    assert_eq!(ha.tuned_value("kern", 8).expect("tuned_value"), Some(1));
+
+    // fleet member B: the warm-start pull completed before spawn
+    // returned, so its very first call pays only the final compile
+    let b = spawn(base_spec(), server_opts(&hub));
+    let hb = b.handle();
+    let first = hb.call("kern", inputs()).expect("warm call");
+    assert_eq!(first.route, CallRoute::Finalized);
+    assert_eq!(first.value, 1);
+    let json = hb.stats_json().expect("stats_json");
+    let hub_stats = json.get("hub").expect("hub section present when a hub is attached");
+    assert_eq!(hub_stats.get("pulls").unwrap().as_i64(), Some(1));
+    assert_eq!(hub_stats.get("adopted").unwrap().as_i64(), Some(1));
+    assert_eq!(
+        json.get("kernels").unwrap().get("kern").unwrap().get("explored").unwrap().as_i64(),
+        Some(0),
+        "warm-started process never explored"
+    );
+    // explicit pull through the handle: nothing new to adopt, but the
+    // request path works end to end
+    assert_eq!(hb.hub_pull().expect("hub_pull"), (0, 0));
+}
+
+#[test]
+fn hub_free_dispatcher_is_unchanged() {
+    // no hub attached: hub_pull is a no-op and nothing is published
+    let manifest = synthetic_manifest("kern", 2, &[8]).expect("manifest");
+    let mut d = Dispatcher::new(
+        KernelRegistry::new(manifest),
+        Box::new(MockEngine::new(base_spec())),
+    );
+    assert_eq!(d.hub_pull().expect("no-op"), (0, 0));
+    for _ in 0..3 {
+        d.call("kern", &inputs()).expect("tune");
+    }
+    let h = d.stats().hub();
+    assert_eq!((h.pushes, h.pulls, h.adopted, h.conflicts), (0, 0, 0, 0));
+}
+
+#[test]
+fn dump_against_missing_socket_fails_cleanly() {
+    let missing = socket_path("missing");
+    let out = Command::new(env!("CARGO_BIN_EXE_jitune"))
+        .args(["hub", "dump", "--socket"])
+        .arg(&missing)
+        .output()
+        .expect("run `jitune hub dump`");
+    assert!(!out.status.success(), "dump must fail without a broker");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("hub"), "actionable error, got: {err}");
+}

@@ -1,0 +1,95 @@
+//! Property-style round-trip coverage for `util::json` string escaping.
+//!
+//! Hub frames carry arbitrary problem keys (kernel / param / signature
+//! strings) over the wire, so serialize → parse must be the identity for
+//! *any* string: control characters, quotes, backslashes, and multi-byte
+//! UTF-8 up to the last scalar value. Uses the repo's seeded `testutil`
+//! property framework — fully deterministic.
+
+use jitune::testutil::{forall, PropConfig};
+use jitune::util::json::{parse, Value};
+use jitune::util::prng::Rng;
+
+/// Characters chosen to stress every escaping path: the whole
+/// backslash-escape table, raw control chars, ASCII, 2/3/4-byte UTF-8,
+/// and the scalar-value boundaries around the surrogate range.
+const POOL: &[char] = &[
+    '\u{00}', '\u{01}', '\u{08}', '\u{09}', '\u{0A}', '\u{0B}', '\u{0C}', '\u{0D}', '\u{1F}',
+    '"', '\\', '/', ' ', 'a', 'Z', '0', '~', '\u{7F}', 'é', 'ß', '¿', 'Ω', '\u{7FF}',
+    '\u{800}', '中', '日', '\u{D7FF}', '\u{E000}', '\u{FFFD}', '😀', '🦀', '\u{10000}',
+    '\u{10FFFF}',
+];
+
+fn tricky_string(rng: &mut Rng) -> String {
+    let len = rng.below(24);
+    (0..len).map(|_| *rng.choose(POOL)).collect()
+}
+
+fn roundtrips(v: &Value) -> bool {
+    parse(&v.to_json()).is_ok_and(|p| &p == v)
+        && parse(&v.to_json_pretty()).is_ok_and(|p| &p == v)
+}
+
+#[test]
+fn string_values_roundtrip() {
+    forall(&PropConfig { cases: 400, ..PropConfig::default() }, tricky_string, |s: &String| {
+        roundtrips(&Value::Str(s.clone()))
+    });
+}
+
+#[test]
+fn object_keys_roundtrip() {
+    // problem keys travel as object *keys* too (tuning reports) — the
+    // key path uses the same escaper but a separate parse site
+    forall(&PropConfig { cases: 400, seed: 0xA11CE }, tricky_string, |s: &String| {
+        let v = Value::Obj(vec![(s.clone(), Value::Num(1.0))]);
+        roundtrips(&v) && parse(&v.to_json()).is_ok_and(|p| p.get(s).is_some())
+    });
+}
+
+#[test]
+fn nested_arrays_of_tricky_strings_roundtrip() {
+    forall(&PropConfig { cases: 200, seed: 7 }, tricky_string, |s: &String| {
+        let v = Value::Arr(vec![
+            Value::Str(s.clone()),
+            Value::Obj(vec![("k".into(), Value::Str(s.clone()))]),
+            Value::Arr(vec![Value::Str(s.clone()), Value::Null]),
+        ]);
+        roundtrips(&v)
+    });
+}
+
+#[test]
+fn every_control_char_roundtrips_exhaustively() {
+    // the property test samples; this nails each of the 33 escape-worthy
+    // code points individually so a regression names the culprit
+    for cp in (0u32..0x20).chain([0x7F]) {
+        let c = char::from_u32(cp).unwrap();
+        let s = format!("a{c}b");
+        let v = Value::Str(s.clone());
+        let text = v.to_json();
+        assert_eq!(parse(&text).unwrap(), v, "code point U+{cp:04X} via {text}");
+    }
+}
+
+#[test]
+fn utf8_boundary_scalars_roundtrip() {
+    // first/last scalar of each UTF-8 encoding length + surrogate edges
+    for c in ['\u{7F}', '\u{80}', '\u{7FF}', '\u{800}', '\u{D7FF}', '\u{E000}', '\u{FFFF}',
+        '\u{10000}', '\u{10FFFF}']
+    {
+        let v = Value::Str(c.to_string());
+        assert_eq!(parse(&v.to_json()).unwrap(), v, "scalar U+{:04X}", c as u32);
+    }
+}
+
+#[test]
+fn escaped_and_raw_forms_parse_to_the_same_string() {
+    // the writer emits raw UTF-8 for non-control chars; a peer may send
+    // \uXXXX escapes (including surrogate pairs) instead — both must
+    // decode to the same string
+    assert_eq!(parse(r#""\u00e9""#).unwrap(), Value::Str("é".into()));
+    assert_eq!(parse(r#""\u4e2d""#).unwrap(), Value::Str("中".into()));
+    assert_eq!(parse(r#""\ud83d\ude00""#).unwrap(), Value::Str("😀".into()));
+    assert_eq!(parse(r#""A\n\t\"\\""#).unwrap(), Value::Str("A\n\t\"\\".into()));
+}
