@@ -1,0 +1,106 @@
+//! Multi-threaded serving on the worker pool — self-contained demo on
+//! the mock engine *forced thread-pinned* (every kernel refuses
+//! `shared()`, the PJRT shape), so tuned calls cannot take the shared
+//! fast lane. Instead, a pool of workers — each owning its own engine —
+//! replays the finalized winner from private caches and serves tuned
+//! calls from a sharded queue. Compare with `fast_lane_serving`, where
+//! the engine shares executables and callers run them in-place.
+//!
+//! The coordinator tunes the kernel online (exploration serialized on
+//! the leader thread), broadcasts the winner to every worker (replicated
+//! finalization: one compile per worker), and then N application threads
+//! hammer the tuned kernel through the pool.
+//!
+//! Run with: `cargo run --example pool_serving [threads] [--smoke]`
+//! (`--smoke` shortens the run for CI.)
+
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{CallRoute, ServerOptions};
+use jitune::runtime::mock::MockSpec;
+use jitune::tensor::HostTensor;
+use jitune::testutil::spawn_pooled_mock;
+
+fn main() {
+    jitune::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let threads: usize = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(4);
+    let calls_per_thread: usize = if smoke { 50 } else { 400 };
+
+    // Three candidate variants; v1 is 10x faster. Sleep-based execution
+    // models a kernel offloaded to an accelerator.
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(2000))
+        .with_cost("kern.v1.n8", Duration::from_micros(200))
+        .with_cost("kern.v2.n8", Duration::from_micros(1500))
+        .with_sleep_exec();
+    let workers = threads;
+    let coordinator = spawn_pooled_mock("kern", 3, &[8], spec, workers, ServerOptions::default())
+        .expect("spawn pooled coordinator");
+
+    // Phase 1: online tuning (leader lane, serialized).
+    let h = coordinator.handle();
+    println!("tuning...");
+    loop {
+        let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("call");
+        println!("  {:?} variant={} value={}", o.route, o.variant_id, o.value);
+        if o.route == CallRoute::Finalized {
+            break;
+        }
+    }
+    println!(
+        "tuned value: {:?}; fast-lane entries: {} (pool-routed; kernels are thread-pinned)",
+        h.tuned_value("kern", 8).expect("tuned_value"),
+        h.fast_lane_published()
+    );
+    assert_eq!(h.fast_lane_published(), 1, "winner replicated onto the pool");
+
+    // Phase 2: steady-state serving from many threads via the pool.
+    println!("\nserving from {threads} thread(s) on {workers} pool worker(s), \
+              {calls_per_thread} calls each...");
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for t in 0..threads {
+        let h = coordinator.handle();
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..calls_per_thread {
+                let o = h.call("kern", vec![HostTensor::zeros(&[8, 8])]).expect("steady call");
+                assert_eq!(o.route, CallRoute::Tuned);
+                assert_eq!(o.value, 1);
+            }
+            t
+        }));
+    }
+    for j in joins {
+        j.join().expect("worker");
+    }
+    let dt = t0.elapsed();
+    let total = threads * calls_per_thread;
+    println!(
+        "served {total} calls in {:.3}s -> {:.0} calls/s across {threads} thread(s)",
+        dt.as_secs_f64(),
+        total as f64 / dt.as_secs_f64()
+    );
+
+    let snap = h.pool_snapshot().expect("pool attached");
+    for (idx, w) in snap.workers.iter().enumerate() {
+        println!(
+            "pool worker {idx}: executed={} compiles={} mean={:.3}ms",
+            w.executed,
+            w.compiles,
+            w.mean_exec_s * 1e3
+        );
+    }
+    // CI runs this example in smoke mode as a regression check: every
+    // tuned call above was served by a pool worker, none by the leader.
+    assert_eq!(
+        snap.total_executed(),
+        total as u64,
+        "all steady-state calls ran on pool workers"
+    );
+    let (rendered, _report) = h.stats().expect("stats");
+    println!("\n{rendered}");
+}

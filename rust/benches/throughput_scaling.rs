@@ -1,18 +1,23 @@
 //! **Throughput scaling** — steady-state tuned-call throughput at
-//! 1/2/4/8 application threads, single-lane baseline (every call through
-//! the leader channel) vs the published-winner fast lane (tuned calls
-//! execute on the caller's thread).
+//! 1/2/4/8 application threads, across the coordinator's three lanes:
+//! single-lane baseline (every call through the leader channel), the
+//! published-winner fast lane (tuned calls execute on the caller's
+//! thread), and the worker pool (kernels refuse `shared()` — the PJRT
+//! shape — so tuned calls route to N thread-pinned worker engines; the
+//! pool runs with as many workers as application threads).
 //!
 //! Runs on the mock engine with sleep-based execution, modelling a kernel
 //! offloaded to an accelerator: the host CPU is free during execution, so
 //! the measurement isolates the *coordination* bottleneck rather than
 //! host core count. The single lane serializes every call behind one
 //! leader (throughput flat as threads grow); the fast lane scales with
-//! the callers.
+//! the callers; the pool scales with its workers even though no
+//! executable ever crosses a thread.
 //!
 //! Output: stdout chart + `target/figures/throughput_scaling.csv` (same
 //! Figure pipeline as the fig* benches) + a machine-readable JSON report
-//! `target/figures/throughput_scaling.json`.
+//! `target/figures/throughput_scaling.json` including the headline
+//! `pool_scaling_1_to_4` ratio (the ROADMAP claim, measured).
 //!
 //! Env knobs: `JITUNE_BENCH_CALLS` (calls per thread, default 300),
 //! `JITUNE_BENCH_EXEC_US` (per-call execution sleep, default 200).
@@ -25,7 +30,7 @@ use jitune::coordinator::{
 use jitune::report::Figure;
 use jitune::runtime::mock::{MockEngine, MockSpec};
 use jitune::tensor::HostTensor;
-use jitune::testutil::synthetic_manifest;
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
 use jitune::util::chart::Series;
 use jitune::util::json::{n, s, Value};
 
@@ -35,20 +40,36 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn spawn(fast_lane: bool, exec_us: u64) -> Coordinator {
-    let spec = MockSpec::default()
+fn sleepy_spec(exec_us: u64) -> MockSpec {
+    MockSpec::default()
         .with_cost("kern.v0.n8", Duration::from_micros(4 * exec_us))
         .with_cost("kern.v1.n8", Duration::from_micros(exec_us))
-        .with_sleep_exec();
-    Coordinator::spawn_with_options(
-        move || {
-            let manifest = synthetic_manifest("kern", 2, &[8])?;
-            let registry = KernelRegistry::new(manifest);
-            Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
-        },
-        ServerOptions { fast_lane, ..ServerOptions::default() },
-    )
-    .expect("spawn coordinator")
+        .with_sleep_exec()
+}
+
+/// Spawn one coordinator per (mode, thread-count) cell. `worker_pool`
+/// scales its worker count with the thread count — that is the axis the
+/// pool claims to scale along.
+fn spawn(mode: &str, threads: usize, exec_us: u64) -> Coordinator {
+    let spec = sleepy_spec(exec_us);
+    match mode {
+        "worker_pool" => {
+            spawn_pooled_mock("kern", 2, &[8], spec, threads, ServerOptions::default())
+                .expect("spawn pooled coordinator")
+        }
+        _ => {
+            let fast_lane = mode == "fast_lane";
+            Coordinator::spawn_with_options(
+                move || {
+                    let manifest = synthetic_manifest("kern", 2, &[8])?;
+                    let registry = KernelRegistry::new(manifest);
+                    Ok(Dispatcher::new(registry, Box::new(MockEngine::new(spec))))
+                },
+                ServerOptions { fast_lane, ..ServerOptions::default() },
+            )
+            .expect("spawn coordinator")
+        }
+    }
 }
 
 /// Tune to steady state, then hammer from `threads` threads; returns
@@ -87,15 +108,15 @@ fn main() {
          {exec_us}us exec) =="
     );
 
-    let modes: &[(&str, bool)] = &[("single_lane", false), ("fast_lane", true)];
+    let modes: &[&str] = &["single_lane", "fast_lane", "worker_pool"];
     let mut rows = Vec::new();
     let mut series = Vec::new();
     let mut results = Vec::new();
-    for &(mode, fast) in modes {
+    for &mode in modes {
         let mut points = Vec::new();
         for &threads in THREADS {
             // fresh coordinator per cell: clean tuner, clean stats
-            let coord = spawn(fast, exec_us);
+            let coord = spawn(mode, threads, exec_us);
             let cps = measure(&coord, threads, calls);
             println!("  {mode:<12} threads={threads}  {cps:10.0} calls/s");
             rows.push(vec![
@@ -113,7 +134,6 @@ fn main() {
         series.push(Series::new(mode, points));
     }
 
-    // headline ratio: fast lane vs single lane at each thread count
     let cps_of = |mode: &str, threads: usize| {
         results
             .iter()
@@ -124,21 +144,34 @@ fn main() {
             .and_then(|r| r.get("calls_per_sec").and_then(Value::as_f64))
             .unwrap_or(0.0)
     };
+    // headline ratios: fast lane / pool vs single lane at each thread count
     let mut speedups = Vec::new();
     for &threads in THREADS {
         let single = cps_of("single_lane", threads);
         let fast = cps_of("fast_lane", threads);
-        let ratio = if single > 0.0 { fast / single } else { 0.0 };
-        println!("  speedup at {threads} thread(s): {ratio:.2}x");
+        let pool = cps_of("worker_pool", threads);
+        let fast_ratio = if single > 0.0 { fast / single } else { 0.0 };
+        let pool_ratio = if single > 0.0 { pool / single } else { 0.0 };
+        println!(
+            "  speedup at {threads} thread(s): fast lane {fast_ratio:.2}x, \
+             worker pool {pool_ratio:.2}x"
+        );
         speedups.push(Value::Obj(vec![
             ("threads".into(), n(threads as f64)),
-            ("fast_over_single".into(), n(ratio)),
+            ("fast_over_single".into(), n(fast_ratio)),
+            ("pool_over_single".into(), n(pool_ratio)),
         ]));
     }
+    // the ROADMAP scaling claim, measured: pool throughput 1 → 4 workers
+    let pool_1 = cps_of("worker_pool", 1);
+    let pool_4 = cps_of("worker_pool", 4);
+    let pool_scaling = if pool_1 > 0.0 { pool_4 / pool_1 } else { 0.0 };
+    println!("  pool scaling 1 -> 4 workers: {pool_scaling:.2}x");
 
     let fig = Figure {
         stem: "throughput_scaling".into(),
-        title: "tuned calls/sec vs application threads (single lane vs fast lane)".into(),
+        title: "tuned calls/sec vs application threads (single lane vs fast lane vs pool)"
+            .into(),
         header: vec!["mode".into(), "threads".into(), "calls_per_sec".into()],
         rows,
         series,
@@ -154,6 +187,7 @@ fn main() {
         ("calls_per_thread".into(), n(calls as f64)),
         ("results".into(), Value::Arr(results)),
         ("speedups".into(), Value::Arr(speedups)),
+        ("pool_scaling_1_to_4".into(), n(pool_scaling)),
     ]);
     jitune::report::write_figure_file("throughput_scaling.json", &report.to_json_pretty())
         .expect("json");

@@ -8,10 +8,11 @@ use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, WallClock
 use crate::error::{Error, Result};
 use crate::hub::{HubClient, HubEntry};
 use crate::manifest::Variant;
-use crate::runtime::{CacheStats, CompileCache, Engine};
+use crate::runtime::{CacheStats, CompileCache, Engine, SharedKernel};
 use crate::tensor::HostTensor;
 
 use super::fastlane::{self, FastLane};
+use super::pool::WorkerPool;
 use super::registry::KernelRegistry;
 use super::stats::CoordStats;
 
@@ -88,6 +89,10 @@ pub struct Dispatcher {
     stats: CoordStats,
     plans: HashMap<u64, Vec<CallPlan>>,
     fast_lane: Option<Arc<FastLane>>,
+    /// Worker pool of thread-pinned engines: when the leader's engine
+    /// cannot hand out a shared executable, finalized winners are
+    /// replicated onto the pool and published as pool-routed entries.
+    pool: Option<Arc<WorkerPool>>,
     hub: Option<HubClient>,
     /// Per-problem hub knowledge: the last version this process pulled
     /// or had acknowledged, plus that version's winner. Gates publishes
@@ -138,6 +143,7 @@ impl Dispatcher {
             stats: CoordStats::new(),
             plans: HashMap::new(),
             fast_lane: None,
+            pool: None,
             hub: None,
             hub_known: HashMap::new(),
             hub_generation: 0,
@@ -155,6 +161,19 @@ impl Dispatcher {
     /// The attached fast lane, if any.
     pub fn fast_lane(&self) -> Option<&Arc<FastLane>> {
         self.fast_lane.as_ref()
+    }
+
+    /// Attach a worker pool of thread-pinned engines. With both a fast
+    /// lane and a pool attached, finalized winners that cannot provide a
+    /// shared executable are replicated onto the pool and published as
+    /// pool-routed fast-lane entries instead of staying leader-pinned.
+    pub fn attach_pool(&mut self, pool: Arc<WorkerPool>) {
+        self.pool = Some(pool);
+    }
+
+    /// The attached worker pool, if any.
+    pub fn pool(&self) -> Option<&Arc<WorkerPool>> {
+        self.pool.as_ref()
     }
 
     /// Attach a tuned-state hub connection. Call [`Dispatcher::hub_pull`]
@@ -507,18 +526,29 @@ impl Dispatcher {
     }
 
     /// Report a candidate failure to the tuner and unpublish any fast-lane
-    /// entry for the problem (a demoted winner must not keep serving).
+    /// entry for the problem (a demoted winner must not keep serving);
+    /// the worker pool drops its replicated copies too.
     fn candidate_failed(&mut self, hash: u64, slot: usize, idx: usize) {
         let plan = &self.plans[&hash][slot];
         self.tuner.state(&plan.key, &plan.values).report_failure(idx);
         if let Some(lane) = &self.fast_lane {
             lane.invalidate(&plan.kernel, &plan.input_shapes);
         }
+        if let Some(pool) = &self.pool {
+            let plan = &self.plans[&hash][slot];
+            let failed_id = self.registry.manifest().problems[plan.problem_idx].variants[idx]
+                .id
+                .clone();
+            pool.evict(std::slice::from_ref(&failed_id));
+        }
     }
 
-    /// Publish the tuned winner's shareable executable into the fast
-    /// lane. No-op when no lane is attached, the problem is not `Tuned`,
-    /// or the engine's executables are thread-pinned (PJRT).
+    /// Publish the tuned winner into the fast lane: directly (the
+    /// engine hands out a shared executable), or routed through the
+    /// worker pool (thread-pinned engines with a pool attached —
+    /// replicated finalization compiles the winner on every worker
+    /// first). No-op when no lane is attached, the problem is not
+    /// `Tuned`, or the winner has no off-leader execution path.
     ///
     /// The winner's *mean* measured tuning cost rides along as the
     /// entry's drift baseline (steadier than the selection-time minimum
@@ -530,46 +560,90 @@ impl Dispatcher {
     /// fresh baseline, which self-corrects.
     fn publish_winner(&mut self, hash: u64, slot: usize) {
         let Some(lane) = self.fast_lane.clone() else { return };
-        let (kernel, shapes, variant_id, value, size, baseline) = {
+        let (kernel, shapes, variant, size, baseline) = {
             let plan = &self.plans[&hash][slot];
             let Some(state) = self.tuner.peek(&plan.key) else { return };
             let Some(win) = state.winner_snapshot() else { return };
             let problem = &self.registry.manifest().problems[plan.problem_idx];
-            let variant = &problem.variants[win.index];
-            debug_assert_eq!(variant.value, win.value);
+            let winner = &problem.variants[win.index];
+            debug_assert_eq!(winner.value, win.value);
+            // Cheap gate for the steady-state self-heal: with a pool
+            // attached, `unshareable` is never set (a retune may succeed
+            // where the last install failed), so an uncompilable winner
+            // re-enters here on every tuned leader call. Bail before
+            // the clones — a dead install must cost lookups, not
+            // allocations.
+            if let Some(pool) = &self.pool {
+                if pool.install_failed(&winner.id)
+                    && self.cache.shared_handle(&winner.id).is_none()
+                {
+                    return;
+                }
+            }
             let baseline = state.history().mean_of(win.index).unwrap_or(0.0);
-            (
-                plan.kernel.clone(),
-                plan.input_shapes.clone(),
-                variant.id.clone(),
-                variant.value,
-                problem.size,
-                baseline,
-            )
+            (plan.kernel.clone(), plan.input_shapes.clone(), winner.clone(), problem.size, baseline)
         };
-        match self.cache.shared_handle(&variant_id) {
+        let exe = match self.cache.shared_handle(&variant.id) {
+            Some(exe) => Some(exe),
+            None => self.pool_handle(&variant),
+        };
+        match exe {
             Some(exe) => {
-                log::debug!("fast lane: published {variant_id} for {kernel}");
+                log::debug!("fast lane: published {} for {kernel}", variant.id);
                 lane.publish(fastlane::Publication {
                     kernel,
                     input_shapes: shapes,
-                    variant_id,
-                    value,
+                    variant_id: variant.id.clone(),
+                    value: variant.value,
                     size,
                     baseline_s: baseline,
                     exe,
                 });
             }
-            None => {
+            None if self.pool.is_none() => {
                 // Shareability is an engine property and never changes
                 // at run time: remember the miss so the steady-state
                 // leader path stops re-attempting publication.
                 if let Some(bucket) = self.plans.get_mut(&hash) {
                     bucket[slot].unshareable = true;
                 }
-                log::debug!("fast lane: {variant_id} is thread-pinned; leader keeps serving");
+                log::debug!("fast lane: {} is thread-pinned; leader keeps serving", variant.id);
+            }
+            None => {
+                // Pool attached but the install failed: the pool memoized
+                // the failure, so re-attempts (the lazy self-heal on
+                // leader tuned calls) cost one map lookup. A retune
+                // clears the memo and retries the broadcast.
+                log::debug!("fast lane: {} has no pool route; leader keeps serving", variant.id);
             }
         }
+    }
+
+    /// Replicated finalization: broadcast the winner (variant + HLO
+    /// text) to the worker pool so every thread-pinned engine compiles a
+    /// private copy, then wrap the pool in the `SharedKernel` the fast
+    /// lane publishes. `None` when no pool is attached, the HLO cannot
+    /// be read, or no worker could compile the winner.
+    fn pool_handle(&mut self, variant: &Variant) -> Option<Arc<dyn SharedKernel>> {
+        let pool = self.pool.clone()?;
+        // Probe the failure memo before touching the HLO cache: the
+        // steady-state self-heal retries this on every tuned leader
+        // call, and a dead install must cost a lookup, not a text copy.
+        if pool.install_failed(&variant.id) {
+            return None;
+        }
+        let hlo = match self.cache.hlo_for(self.registry.manifest(), variant) {
+            Ok(text) => text,
+            Err(e) => {
+                log::warn!("pool: cannot read HLO for {}: {e}", variant.id);
+                pool.mark_failed(&variant.id);
+                return None;
+            }
+        };
+        if pool.install(variant.clone(), hlo) == 0 {
+            return None;
+        }
+        Some(pool.handle_for(variant.id.clone()))
     }
 
     /// One tuning iteration: compile (uncached — the paper keeps only
@@ -685,6 +759,11 @@ impl Dispatcher {
         if let Some(lane) = &self.fast_lane {
             lane.invalidate(&kernel_name, &shapes);
         }
+        if let Some(pool) = &self.pool {
+            // Workers drop their replicated copies and the failed-install
+            // memo resets, so the rematch's winner re-broadcasts fresh.
+            pool.evict(&variant_ids);
+        }
         if existed {
             log::info!("retune: {key} reset to exploring; published entry invalidated");
         }
@@ -780,6 +859,9 @@ impl Dispatcher {
         // leader republishes lazily after each import's finalization.
         if let Some(lane) = &self.fast_lane {
             lane.clear();
+        }
+        if let Some(pool) = &self.pool {
+            pool.clear();
         }
         let imported = self.tuner.import_state(&crate::util::json::Value::Arr(valid))?;
         Ok((imported, skipped))

@@ -28,10 +28,10 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::{BTreeMap, HashMap};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
-use super::mutex_lock;
+use super::{mutex_lock, read_lock, write_lock};
 
 use crate::coordinator::dispatcher::{CallOutcome, CallRoute};
 use crate::coordinator::drift::{DriftHit, DriftMonitor, DriftPolicy};
@@ -204,9 +204,7 @@ impl TunedEntry {
     /// with the leader lane's. Stats are recorded only on success — a
     /// failing call falls back to the leader and is counted there.
     pub fn call(&self, inputs: &[HostTensor], t0: Instant) -> Result<CallOutcome> {
-        let e0 = Instant::now();
-        let output = self.exe.execute(inputs)?;
-        let exec = e0.elapsed();
+        let (output, exec) = self.exe.execute_measured(inputs)?;
         let total = t0.elapsed();
         self.counters.record(total);
         if let Some(monitor) = &self.monitor {
@@ -214,7 +212,9 @@ impl TunedEntry {
             // around `execute` alone during tuning, so feeding the same
             // quantity keeps the drift ratio apples-to-apples — fixed
             // lane overhead on a microsecond kernel must not read as
-            // drift.
+            // drift. Pool-routed entries return the *worker-measured*
+            // time here, so queue wait under caller contention cannot
+            // trip the policy either.
             monitor.record(exec);
         }
         Ok(CallOutcome {
@@ -227,14 +227,6 @@ impl TunedEntry {
             total,
         })
     }
-}
-
-fn read_lock<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
-    lock.read().unwrap_or_else(|e| e.into_inner())
-}
-
-fn write_lock<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
-    lock.write().unwrap_or_else(|e| e.into_inner())
 }
 
 /// The published-winner map shared between the leader (writer) and every

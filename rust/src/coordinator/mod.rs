@@ -8,9 +8,10 @@
 //! measures tuning iterations, finalizes the winner into the
 //! instantiation cache, and routes steady-state calls to it.
 //!
-//! # Two-lane architecture
+//! # Three-lane architecture
 //!
-//! [`server::Coordinator`] serves application threads through two lanes:
+//! [`server::Coordinator`] serves application threads through three
+//! lanes, selected per problem by what the backend can offer:
 //!
 //! * **Leader lane** — a dedicated leader thread owns the dispatcher
 //!   (PJRT clients are thread-pinned) and drains an mpsc request queue.
@@ -20,25 +21,40 @@
 //!   by a mutex" guarantee, enforced at the channel boundary, with the
 //!   tuner observing executions under real cross-request contention.
 //!
-//! * **Tuned fast lane** — when a problem reaches `Phase::Tuned`, the
-//!   leader publishes an immutable [`fastlane::TunedEntry`] (winning
-//!   variant + an `Arc`'d `Send + Sync` executable handle) into the
-//!   shared [`FastLane`] map. [`server::CoordinatorHandle::call`]
-//!   consults that map *before* touching the channel; hits execute right
-//!   on the calling thread and record latency into sharded atomic
-//!   counters, so steady-state throughput scales with application
-//!   threads instead of being capped at one leader-serialized call at a
-//!   time.
+//! * **Shared fast lane** — when a problem reaches `Phase::Tuned` *and*
+//!   the engine hands out a `Send + Sync` executable handle, the leader
+//!   publishes an immutable [`fastlane::TunedEntry`] (winning variant +
+//!   the `Arc`'d handle) into the shared [`FastLane`] map.
+//!   [`server::CoordinatorHandle::call`] consults that map *before*
+//!   touching the channel; hits execute right on the calling thread and
+//!   record latency into sharded atomic counters, so steady-state
+//!   throughput scales with application threads instead of being capped
+//!   at one leader-serialized call at a time.
+//!
+//! * **Worker pool** — when the engine's executables are thread-pinned
+//!   (`shared()` is `None`, the PJRT shape) and `ServerOptions { pool:
+//!   Some(opts) }` is set, finalized winners take the [`pool::WorkerPool`]
+//!   instead: N worker threads each own a *private* engine (built by an
+//!   [`crate::runtime::EngineFactory`] on the worker's own thread) and a
+//!   private compiled copy of every winner (**replicated finalization**:
+//!   the leader broadcasts the variant + HLO at publish; each worker
+//!   compiles it once). The published entry's executable handle routes
+//!   through a sharded MPMC queue to a ready worker, so tuned throughput
+//!   scales with workers even though no executable ever crosses a
+//!   thread. Lane selection is per entry: shared handle if the engine
+//!   offers one, pool route otherwise, leader if neither.
 //!
 //! **Publication protocol.** Publish happens on `confirm_finalized`
 //! (plus a lazy self-heal on leader-lane tuned calls, covering warm
 //! starts and lanes attached late). Invalidation happens on retune, on a
 //! candidate failure that demotes the winner, on tuning-state import,
 //! and on a fast-lane execution failure (the failing call then retries
-//! through the leader, so no call is ever lost). Backends whose
-//! executables cannot leave the leader thread (PJRT) simply never
-//! publish — their steady-state calls keep flowing through the leader,
-//! preserving exact pre-fast-lane behaviour.
+//! through the leader, so no call is ever lost — this also covers a pool
+//! worker dying mid-call). Thread-pinned backends without a pool simply
+//! never publish — their steady-state calls keep flowing through the
+//! leader, preserving exact pre-fast-lane behaviour. With a pool, a
+//! winner no worker could compile stays on the leader too (the failed
+//! install is memoized until the next retune).
 //!
 //! # Drift monitoring
 //!
@@ -54,6 +70,8 @@
 //!   quantity the baseline measured — into a [`drift::DriftMonitor`]:
 //!   sharded atomic window counters (count, summed nanos, log₂ buckets
 //!   for an approximate p95), still contention-free on the hot path.
+//!   Pool-routed entries record through the same monitor, so drift
+//!   evidence aggregates across every worker, not just the shared lane.
 //! * The leader loop wakes at least every [`drift::DriftPolicy::window`]
 //!   (an idle-capable `recv_timeout` instead of the plain blocking
 //!   `recv`) and runs [`Dispatcher::drift_tick`]: windows with enough
@@ -107,6 +125,7 @@
 
 pub mod drift;
 pub mod fastlane;
+pub mod pool;
 
 mod dispatcher;
 mod registry;
@@ -116,6 +135,7 @@ mod stats;
 pub use dispatcher::{CallOutcome, CallRoute, Dispatcher};
 pub use drift::{DriftHit, DriftMonitor, DriftPolicy, WindowSummary};
 pub use fastlane::{FastLane, Publication};
+pub use pool::{PoolOptions, PoolSnapshot, WorkerPool, WorkerSnapshot};
 pub use registry::KernelRegistry;
 pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
 pub use stats::{CoordStats, DriftEvent, HubStats, KernelStats};
@@ -124,4 +144,14 @@ pub use stats::{CoordStats, DriftEvent, HubStats, KernelStats};
 /// panicked recorder must not take the stats/monitor state down with it.
 pub(crate) fn mutex_lock<T>(lock: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     lock.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant RwLock read lock (fast lane + worker pool maps).
+pub(crate) fn read_lock<T>(lock: &std::sync::RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant RwLock write lock (fast lane + worker pool maps).
+pub(crate) fn write_lock<T>(lock: &std::sync::RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(|e| e.into_inner())
 }

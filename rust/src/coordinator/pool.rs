@@ -1,0 +1,1027 @@
+//! Worker pool for thread-pinned engines: the third lane.
+//!
+//! The shared fast lane needs a `Send + Sync` executable handle, which
+//! backends like PJRT cannot provide — their executables are `Rc`-based
+//! and thread-pinned, so before this module every tuned PJRT call
+//! funnelled through the single leader thread. The [`WorkerPool`]
+//! removes that cap without ever moving an executable across threads:
+//!
+//! * **One engine per worker.** Each worker thread builds its *own*
+//!   engine via an [`EngineFactory`] — `create` runs on the worker
+//!   thread, so a thread-pinned client is born on the thread that will
+//!   own it forever.
+//! * **Replicated finalization.** When the leader finalizes a winner it
+//!   broadcasts the variant (plus its HLO text) to every worker; each
+//!   compiles its own copy once into a private cache and acks. The
+//!   winners' *compilation* therefore happens N times — the price of
+//!   thread pinning — but exploration and measurement stay exclusively
+//!   on the leader, preserving the paper's "compilation protected by a
+//!   mutex" guarantee for everything that *tunes*.
+//! * **Sharded MPMC queue.** Tuned calls are pushed onto per-worker
+//!   shards (round-robin, bounded by `queue_depth`, blocking for
+//!   backpressure when every ready shard is full) and each worker drains
+//!   its own shard — callers contend only on one shard mutex per call,
+//!   never on a global queue.
+//! * **Fault containment.** A worker whose compile fails at replicated
+//!   finalization is excluded from that variant's routing; if *no*
+//!   worker can compile, the install is memoized as failed and the
+//!   leader keeps serving (no deadlock, no republish storm). A worker
+//!   that panics mid-job drops the job's reply (the caller falls back to
+//!   the leader — no call is lost) and is respawned with a fresh engine;
+//!   its private cache re-fills lazily from the pool's install specs,
+//!   and a worker whose lazy recompile fails deregisters itself from
+//!   that variant's routing (the last one out memoizes the failure). A
+//!   worker whose engine cannot even be re-created marks itself dead and
+//!   drains its shard with errors — pushes re-check liveness under the
+//!   shard lock, so callers are never left hanging.
+//!
+//! The pool publishes into the existing [`super::FastLane`] through
+//! [`WorkerPool::handle_for`] — a `SharedKernel` whose `execute` submits
+//! to the queue and waits. Lane stats, drift windows and invalidation
+//! therefore work identically for pool-backed entries; the pool adds
+//! per-worker atomic counters on top (executed/errors/compiles, exported
+//! under `"pool"` in `stats_json()`).
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::manifest::Variant;
+use crate::runtime::{CompiledKernel, Engine, EngineFactory, SharedKernel};
+use crate::tensor::HostTensor;
+use crate::util::json::{n, s, Value};
+
+use super::{mutex_lock, read_lock, write_lock};
+
+/// Worker-pool configuration, carried in
+/// [`super::ServerOptions`]`::pool`.
+#[derive(Clone)]
+pub struct PoolOptions {
+    /// Worker threads (each with its own engine). Clamped to ≥ 1.
+    pub workers: usize,
+    /// Per-worker queue bound; a caller finding every ready shard full
+    /// blocks for backpressure instead of dropping the call. Clamped
+    /// to ≥ 1.
+    pub queue_depth: usize,
+    /// Builds each worker's private engine, on the worker's own thread.
+    pub factory: Arc<dyn EngineFactory>,
+}
+
+impl PoolOptions {
+    /// Defaults: 4 workers, queue depth 64.
+    pub fn new(factory: Arc<dyn EngineFactory>) -> PoolOptions {
+        PoolOptions { workers: 4, queue_depth: 64, factory }
+    }
+
+    /// Builder helper: set the worker count.
+    pub fn with_workers(mut self, workers: usize) -> PoolOptions {
+        self.workers = workers;
+        self
+    }
+
+    /// Builder helper: set the per-worker queue bound.
+    pub fn with_queue_depth(mut self, depth: usize) -> PoolOptions {
+        self.queue_depth = depth;
+        self
+    }
+}
+
+impl std::fmt::Debug for PoolOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PoolOptions")
+            .field("workers", &self.workers)
+            .field("queue_depth", &self.queue_depth)
+            .field("factory", &self.factory.name())
+            .finish()
+    }
+}
+
+/// Everything a worker needs to compile a finalized winner locally.
+struct InstallSpec {
+    variant: Variant,
+    hlo_text: String,
+}
+
+/// Routing state for one installed variant: the spec (for lazy recompiles
+/// after a respawn) plus the workers whose install compile succeeded.
+struct VariantRoute {
+    spec: Arc<InstallSpec>,
+    ready: Vec<usize>,
+}
+
+enum Job {
+    /// Execute an installed variant and reply with the output plus the
+    /// worker-measured execution duration (what drift monitors consume —
+    /// queue wait must not read as kernel drift).
+    Exec {
+        variant_id: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::SyncSender<Result<(HostTensor, Duration)>>,
+    },
+    /// Replicated finalization: compile the spec into the worker's cache.
+    Install {
+        spec: Arc<InstallSpec>,
+        reply: mpsc::SyncSender<Result<()>>,
+    },
+    /// Drop cached executables (retune / state import).
+    Evict { variant_ids: Vec<String> },
+}
+
+/// One per-worker queue shard.
+struct Shard {
+    queue: Mutex<VecDeque<Job>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            queue: Mutex::new(VecDeque::new()),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+}
+
+/// Per-worker atomic counters (updated by the worker, read by stats),
+/// each alone on its cache line so neighbouring workers do not
+/// false-share.
+#[repr(align(64))]
+struct WorkerSlot {
+    executed: AtomicU64,
+    exec_nanos: AtomicU64,
+    errors: AtomicU64,
+    compiles: AtomicU64,
+    alive: AtomicBool,
+}
+
+impl WorkerSlot {
+    fn new() -> WorkerSlot {
+        WorkerSlot {
+            executed: AtomicU64::new(0),
+            exec_nanos: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            compiles: AtomicU64::new(0),
+            alive: AtomicBool::new(true),
+        }
+    }
+}
+
+/// Snapshot of one worker's counters.
+#[derive(Debug, Clone)]
+pub struct WorkerSnapshot {
+    /// Successful executions served.
+    pub executed: u64,
+    /// Execution errors replied (compile-on-demand or execute failures).
+    pub errors: u64,
+    /// Compilations performed (install broadcasts + lazy recompiles).
+    pub compiles: u64,
+    /// Mean execution latency in seconds (0 when idle so far).
+    pub mean_exec_s: f64,
+    /// Whether the worker thread is still serving.
+    pub alive: bool,
+}
+
+/// Snapshot of the whole pool.
+#[derive(Debug, Clone)]
+pub struct PoolSnapshot {
+    /// Per-worker counters, indexed by worker.
+    pub workers: Vec<WorkerSnapshot>,
+    /// Variants currently installed (routable).
+    pub installed: usize,
+    /// Worker respawns after a panic.
+    pub respawns: u64,
+    /// Engine name reported by the factory.
+    pub engine: String,
+    /// Configured per-worker queue bound.
+    pub queue_depth: usize,
+}
+
+impl PoolSnapshot {
+    /// Total successful executions across workers.
+    pub fn total_executed(&self) -> u64 {
+        self.workers.iter().map(|w| w.executed).sum()
+    }
+}
+
+/// A pool of worker threads, each owning a private (possibly `!Send`)
+/// engine, serving tuned calls for backends whose executables cannot be
+/// shared across threads. See the module docs for the full contract.
+pub struct WorkerPool {
+    shards: Vec<Shard>,
+    workers: Vec<WorkerSlot>,
+    joins: Mutex<Vec<JoinHandle<()>>>,
+    shutdown: AtomicBool,
+    queue_depth: usize,
+    rr: AtomicUsize,
+    /// variant id → install spec + ready workers.
+    routes: RwLock<HashMap<String, VariantRoute>>,
+    /// Variants no worker could compile — memoized so the leader's lazy
+    /// republish probe costs one lookup instead of a re-broadcast per
+    /// tuned call. Cleared by [`WorkerPool::evict`] (retune) so a fresh
+    /// finalization retries.
+    failed_installs: Mutex<HashSet<String>>,
+    respawns: AtomicU64,
+    engine_name: String,
+}
+
+impl WorkerPool {
+    /// Spawn `opts.workers` worker threads, each creating its own engine
+    /// via the factory *on its own thread*. Fails (and reaps the threads
+    /// already started) if any worker's engine cannot be created.
+    pub fn spawn(opts: PoolOptions) -> Result<Arc<WorkerPool>> {
+        let workers = opts.workers.max(1);
+        let queue_depth = opts.queue_depth.max(1);
+        let pool = Arc::new(WorkerPool {
+            shards: (0..workers).map(|_| Shard::new()).collect(),
+            workers: (0..workers).map(|_| WorkerSlot::new()).collect(),
+            joins: Mutex::new(Vec::new()),
+            shutdown: AtomicBool::new(false),
+            queue_depth,
+            rr: AtomicUsize::new(0),
+            routes: RwLock::new(HashMap::new()),
+            failed_installs: Mutex::new(HashSet::new()),
+            respawns: AtomicU64::new(0),
+            engine_name: opts.factory.name().to_string(),
+        });
+        let mut inits = Vec::new();
+        for idx in 0..workers {
+            let shared = pool.clone();
+            let factory = opts.factory.clone();
+            let (init_tx, init_rx) = mpsc::sync_channel::<Result<()>>(1);
+            let join = match std::thread::Builder::new()
+                .name(format!("jitune-pool-{idx}"))
+                .spawn(move || worker_main(shared, factory, idx, init_tx))
+            {
+                Ok(join) => join,
+                Err(e) => {
+                    // reap the workers already started before bailing
+                    pool.stop();
+                    return Err(Error::Coordinator(format!("pool worker spawn: {e}")));
+                }
+            };
+            mutex_lock(&pool.joins).push(join);
+            inits.push(init_rx);
+        }
+        for (idx, rx) in inits.into_iter().enumerate() {
+            match rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    pool.stop();
+                    return Err(Error::Coordinator(format!(
+                        "pool worker {idx}: engine creation failed: {e}"
+                    )));
+                }
+                Err(_) => {
+                    pool.stop();
+                    return Err(Error::Coordinator(format!(
+                        "pool worker {idx} died during init"
+                    )));
+                }
+            }
+        }
+        log::info!("pool: {workers} worker(s) up ({})", pool.engine_name);
+        Ok(pool)
+    }
+
+    /// Number of worker threads.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Worker respawns after a panic so far.
+    pub fn respawns(&self) -> u64 {
+        self.respawns.load(Ordering::Relaxed)
+    }
+
+    /// Replicated finalization: broadcast `variant` (with its HLO text)
+    /// so every live worker compiles a private copy, and record the
+    /// routing. Returns the number of workers ready to serve it — 0
+    /// means the variant cannot take the pool lane (the failure is
+    /// memoized; a later [`WorkerPool::evict`] clears the memo).
+    ///
+    /// Idempotent: re-installing an already-routed variant skips the
+    /// broadcast and reports the current live-ready count.
+    pub fn install(&self, variant: Variant, hlo_text: String) -> usize {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return 0;
+        }
+        let id = variant.id.clone();
+        if let Some(route) = read_lock(&self.routes).get(&id) {
+            return route
+                .ready
+                .iter()
+                .filter(|&&i| self.workers[i].alive.load(Ordering::SeqCst))
+                .count();
+        }
+        if mutex_lock(&self.failed_installs).contains(&id) {
+            return 0;
+        }
+        let spec = Arc::new(InstallSpec { variant, hlo_text });
+        let mut pending = Vec::new();
+        for idx in 0..self.workers.len() {
+            if !self.workers[idx].alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let (reply, rx) = mpsc::sync_channel::<Result<()>>(1);
+            if self.push_ctrl(idx, Job::Install { spec: spec.clone(), reply }).is_ok() {
+                pending.push((idx, rx));
+            }
+        }
+        let mut ready = Vec::new();
+        for (idx, rx) in pending {
+            match rx.recv() {
+                Ok(Ok(())) => ready.push(idx),
+                Ok(Err(e)) => log::warn!("pool worker {idx}: compile of {id} failed: {e}"),
+                Err(_) => log::warn!("pool worker {idx}: died during install of {id}"),
+            }
+        }
+        let count = ready.len();
+        if count == 0 {
+            log::warn!("pool: no worker could compile {id}; leader keeps serving it");
+            mutex_lock(&self.failed_installs).insert(id);
+        } else {
+            log::debug!("pool: {id} replicated on {count} worker(s)");
+            write_lock(&self.routes).insert(id, VariantRoute { spec, ready });
+        }
+        count
+    }
+
+    /// Drop the given variants from routing and every worker's cache
+    /// (retune / demotion / state import), and clear their failed-install
+    /// memos so a fresh finalization retries the broadcast.
+    pub fn evict(&self, variant_ids: &[String]) {
+        if variant_ids.is_empty() {
+            return;
+        }
+        {
+            let mut routes = write_lock(&self.routes);
+            for id in variant_ids {
+                routes.remove(id);
+            }
+        }
+        {
+            let mut failed = mutex_lock(&self.failed_installs);
+            for id in variant_ids {
+                failed.remove(id);
+            }
+        }
+        for idx in 0..self.workers.len() {
+            if !self.workers[idx].alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            let _ = self.push_ctrl(idx, Job::Evict { variant_ids: variant_ids.to_vec() });
+        }
+    }
+
+    /// Drop every installed variant (bulk reset on state import).
+    pub fn clear(&self) {
+        let ids: Vec<String> = read_lock(&self.routes).keys().cloned().collect();
+        mutex_lock(&self.failed_installs).clear();
+        self.evict(&ids);
+    }
+
+    /// Number of installed (routable) variants.
+    pub fn installed(&self) -> usize {
+        read_lock(&self.routes).len()
+    }
+
+    /// Whether this variant's install is memoized as failed. The
+    /// leader's lazy republish probe checks this *before* cloning the
+    /// variant's HLO text, so a dead install costs one lookup per
+    /// tuned call, not a broadcast or a text copy.
+    pub fn install_failed(&self, variant_id: &str) -> bool {
+        mutex_lock(&self.failed_installs).contains(variant_id)
+    }
+
+    /// Memoize a publish-side failure that happened before the
+    /// broadcast (e.g. the winner's HLO text could not be read), so the
+    /// republish probe goes quiet. Cleared by [`WorkerPool::evict`]
+    /// exactly like a failed install.
+    pub fn mark_failed(&self, variant_id: &str) {
+        mutex_lock(&self.failed_installs).insert(variant_id.to_string());
+    }
+
+    /// A `Send + Sync` handle executing `variant_id` on the pool — what
+    /// the leader publishes into the fast lane for thread-pinned
+    /// backends. Call after a successful [`WorkerPool::install`].
+    pub fn handle_for(self: &Arc<Self>, variant_id: String) -> Arc<dyn SharedKernel> {
+        Arc::new(PoolKernel { pool: self.clone(), variant_id })
+    }
+
+    /// Execute one call on the pool: route to a ready worker's shard and
+    /// wait for the reply — the output plus the worker-measured
+    /// execution duration. Errors (not installed, pool stopped, worker
+    /// died mid-call) surface to the caller, whose fast-lane fallback
+    /// retries through the leader — a call can fail over, never hang.
+    pub fn submit(&self, variant_id: &str, inputs: &[HostTensor]) -> Result<(HostTensor, Duration)> {
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Coordinator("worker pool stopped".into()));
+        }
+        let ready: Vec<usize> = {
+            let routes = read_lock(&self.routes);
+            let Some(route) = routes.get(variant_id) else {
+                return Err(Error::Coordinator(format!(
+                    "pool: {variant_id} is not installed"
+                )));
+            };
+            route
+                .ready
+                .iter()
+                .copied()
+                .filter(|&i| self.workers[i].alive.load(Ordering::SeqCst))
+                .collect()
+        };
+        if ready.is_empty() {
+            return Err(Error::Coordinator(format!(
+                "pool: no live worker holds {variant_id}"
+            )));
+        }
+        let (reply, rx) = mpsc::sync_channel::<Result<(HostTensor, Duration)>>(1);
+        self.push_exec(
+            Job::Exec { variant_id: variant_id.to_string(), inputs: inputs.to_vec(), reply },
+            &ready,
+        )?;
+        rx.recv()
+            .map_err(|_| Error::Coordinator("pool worker died mid-call".into()))?
+    }
+
+    /// Per-worker counter snapshot plus pool-level gauges.
+    pub fn snapshot(&self) -> PoolSnapshot {
+        let workers = self
+            .workers
+            .iter()
+            .map(|w| {
+                let executed = w.executed.load(Ordering::Relaxed);
+                let nanos = w.exec_nanos.load(Ordering::Relaxed);
+                WorkerSnapshot {
+                    executed,
+                    errors: w.errors.load(Ordering::Relaxed),
+                    compiles: w.compiles.load(Ordering::Relaxed),
+                    mean_exec_s: if executed > 0 {
+                        nanos as f64 / 1e9 / executed as f64
+                    } else {
+                        0.0
+                    },
+                    alive: w.alive.load(Ordering::SeqCst),
+                }
+            })
+            .collect();
+        PoolSnapshot {
+            workers,
+            installed: self.installed(),
+            respawns: self.respawns(),
+            engine: self.engine_name.clone(),
+            queue_depth: self.queue_depth,
+        }
+    }
+
+    /// JSON export for `stats_json()` (the `"pool"` object).
+    pub fn to_json(&self) -> Value {
+        let snap = self.snapshot();
+        let per_worker = snap
+            .workers
+            .iter()
+            .map(|w| {
+                Value::Obj(vec![
+                    ("executed".into(), n(w.executed as f64)),
+                    ("errors".into(), n(w.errors as f64)),
+                    ("compiles".into(), n(w.compiles as f64)),
+                    ("mean_exec_s".into(), n(w.mean_exec_s)),
+                    ("alive".into(), Value::Bool(w.alive)),
+                ])
+            })
+            .collect();
+        Value::Obj(vec![
+            ("workers".into(), n(snap.workers.len() as f64)),
+            ("queue_depth".into(), n(snap.queue_depth as f64)),
+            ("installed".into(), n(snap.installed as f64)),
+            ("respawns".into(), n(snap.respawns as f64)),
+            ("executed".into(), n(snap.total_executed() as f64)),
+            ("engine".into(), s(snap.engine.clone())),
+            ("per_worker".into(), Value::Arr(per_worker)),
+        ])
+    }
+
+    /// Human-readable rendering for the coordinator's stats output.
+    pub fn render(&self) -> String {
+        let snap = self.snapshot();
+        let mut out = format!(
+            "worker pool ({}): {} worker(s), {} installed, {} respawn(s)\n",
+            snap.engine,
+            snap.workers.len(),
+            snap.installed,
+            snap.respawns
+        );
+        for (idx, w) in snap.workers.iter().enumerate() {
+            out.push_str(&format!(
+                "  worker {idx}: executed={} errors={} compiles={} mean={:.3}ms{}\n",
+                w.executed,
+                w.errors,
+                w.compiles,
+                w.mean_exec_s * 1e3,
+                if w.alive { "" } else { " (dead)" }
+            ));
+        }
+        out
+    }
+
+    /// Stop serving: reject new submissions, let workers drain queued
+    /// jobs, join the threads. Idempotent; also invoked by the
+    /// coordinator's shutdown.
+    pub fn stop(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        for shard in &self.shards {
+            // lock-step with push/pop so no waiter can miss the wake-up
+            let _q = mutex_lock(&shard.queue);
+            shard.not_empty.notify_all();
+            shard.not_full.notify_all();
+        }
+        let joins: Vec<JoinHandle<()>> = mutex_lock(&self.joins).drain(..).collect();
+        for join in joins {
+            let _ = join.join();
+        }
+    }
+
+    /// Install spec for a variant (workers use it for lazy recompiles
+    /// after a respawn emptied their cache).
+    fn route_spec(&self, variant_id: &str) -> Option<Arc<InstallSpec>> {
+        read_lock(&self.routes).get(variant_id).map(|r| r.spec.clone())
+    }
+
+    /// Remove one worker from a variant's routing — its lazy recompile
+    /// failed, so keeping it routed would retry (and fail) on every
+    /// call. A variant that loses its last ready worker is dropped and
+    /// memoized as failed, so the leader's republish probe goes quiet
+    /// instead of churning; the next retune clears the memo.
+    fn deregister(&self, variant_id: &str, idx: usize) {
+        let mut routes = write_lock(&self.routes);
+        let Some(route) = routes.get_mut(variant_id) else { return };
+        route.ready.retain(|&i| i != idx);
+        if route.ready.is_empty() {
+            routes.remove(variant_id);
+            mutex_lock(&self.failed_installs).insert(variant_id.to_string());
+            log::warn!("pool: {variant_id} lost its last ready worker; leader keeps serving it");
+        }
+    }
+
+    /// Push an exec job to one of `ready`'s shards: one non-blocking
+    /// round-robin pass, then a backpressure block on the first choice.
+    ///
+    /// Liveness is re-checked *under each shard lock*: a worker's death
+    /// path stores `alive = false` before draining its shard, so a push
+    /// that acquires the lock after the drain observes the flag and
+    /// skips — a job can never be parked on a shard nobody will pop.
+    /// (A push that lands just *before* the drain is cleared by it, and
+    /// the dropped reply unblocks the caller into the leader fallback.)
+    fn push_exec(&self, job: Job, ready: &[usize]) -> Result<()> {
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % ready.len();
+        let mut job = Some(job);
+        for k in 0..ready.len() {
+            let idx = ready[(start + k) % ready.len()];
+            let shard = &self.shards[idx];
+            let mut q = mutex_lock(&shard.queue);
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(Error::Coordinator("worker pool stopped".into()));
+            }
+            if !self.workers[idx].alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            if q.len() < self.queue_depth {
+                q.push_back(job.take().expect("job unconsumed"));
+                shard.not_empty.notify_one();
+                return Ok(());
+            }
+        }
+        // Every live ready shard is full: block on the first live
+        // choice for backpressure. A dying worker's drain notifies
+        // `not_full`, so the wait re-checks liveness and bails out.
+        let Some(idx) = (0..ready.len())
+            .map(|k| ready[(start + k) % ready.len()])
+            .find(|&i| self.workers[i].alive.load(Ordering::SeqCst))
+        else {
+            return Err(Error::Coordinator("pool: no live worker for this variant".into()));
+        };
+        let shard = &self.shards[idx];
+        let mut q = mutex_lock(&shard.queue);
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(Error::Coordinator("worker pool stopped".into()));
+            }
+            if !self.workers[idx].alive.load(Ordering::SeqCst) {
+                return Err(Error::Coordinator(format!("pool worker {idx} died")));
+            }
+            if q.len() < self.queue_depth {
+                q.push_back(job.take().expect("job unconsumed"));
+                shard.not_empty.notify_one();
+                return Ok(());
+            }
+            q = shard.not_full.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Push a control job (install/evict) to a specific worker's shard,
+    /// exempt from the depth bound so control never deadlocks against
+    /// backpressure. Liveness is checked under the shard lock, exactly
+    /// like [`WorkerPool::push_exec`]: an install parked on a dead
+    /// worker's drained shard would otherwise block the leader forever
+    /// on its ack.
+    fn push_ctrl(&self, idx: usize, job: Job) -> Result<()> {
+        let shard = &self.shards[idx];
+        let mut q = mutex_lock(&shard.queue);
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(Error::Coordinator("worker pool stopped".into()));
+        }
+        if !self.workers[idx].alive.load(Ordering::SeqCst) {
+            return Err(Error::Coordinator(format!("pool worker {idx} died")));
+        }
+        q.push_back(job);
+        shard.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Worker-side blocking pop: drains the shard even after shutdown
+    /// (graceful stop serves queued work), returns `None` once the shard
+    /// is empty *and* shutdown was requested.
+    fn pop(&self, idx: usize) -> Option<Job> {
+        let shard = &self.shards[idx];
+        let mut q = mutex_lock(&shard.queue);
+        loop {
+            if let Some(job) = q.pop_front() {
+                shard.not_full.notify_one();
+                return Some(job);
+            }
+            if self.shutdown.load(Ordering::SeqCst) {
+                return None;
+            }
+            q = shard.not_empty.wait(q).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Death path: drop every queued job in the worker's shard so their
+    /// reply senders close and no caller is left waiting forever.
+    fn drain_shard(&self, idx: usize) {
+        let shard = &self.shards[idx];
+        let mut q = mutex_lock(&shard.queue);
+        q.clear();
+        shard.not_full.notify_all();
+    }
+}
+
+/// The `SharedKernel` face of the pool: `execute` routes through the
+/// sharded queue to a worker that owns a compiled copy of the variant.
+struct PoolKernel {
+    pool: Arc<WorkerPool>,
+    variant_id: String,
+}
+
+impl SharedKernel for PoolKernel {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
+        self.pool.submit(&self.variant_id, inputs).map(|(output, _)| output)
+    }
+
+    fn execute_measured(&self, inputs: &[HostTensor]) -> Result<(HostTensor, Duration)> {
+        // The worker times the execution itself: queue wait and
+        // cross-thread dispatch never reach the drift monitor.
+        self.pool.submit(&self.variant_id, inputs)
+    }
+
+    fn variant_id(&self) -> &str {
+        &self.variant_id
+    }
+}
+
+/// Worker thread body: create an engine, serve until shutdown; on a
+/// panic, respawn with a fresh engine (the private cache re-fills lazily
+/// from install specs). If the engine cannot be (re)created, the worker
+/// marks itself dead and drains its shard so nothing hangs.
+fn worker_main(
+    pool: Arc<WorkerPool>,
+    factory: Arc<dyn EngineFactory>,
+    idx: usize,
+    init_tx: mpsc::SyncSender<Result<()>>,
+) {
+    let mut init_tx = Some(init_tx);
+    // Consecutive quick deaths back off exponentially: a kernel that
+    // panics deterministically must not thrash engine creation (a PJRT
+    // client init can take seconds). A serve stint that survived a
+    // while resets the streak.
+    let mut panic_streak: u32 = 0;
+    loop {
+        let engine = match factory.create() {
+            Ok(engine) => engine,
+            Err(e) => {
+                log::error!("pool worker {idx}: engine creation failed: {e}");
+                if let Some(tx) = init_tx.take() {
+                    let _ = tx.send(Err(e));
+                }
+                break;
+            }
+        };
+        if let Some(tx) = init_tx.take() {
+            let _ = tx.send(Ok(()));
+        }
+        let stint = Instant::now();
+        let serve = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            worker_serve(&pool, idx, engine.as_ref());
+        }));
+        match serve {
+            Ok(()) => break, // graceful shutdown, shard drained
+            Err(_) => {
+                // The in-flight job's reply sender was dropped by the
+                // unwind, so its caller already failed over to the
+                // leader. Queued jobs are still in the shard; the
+                // respawned loop picks them up.
+                pool.respawns.fetch_add(1, Ordering::Relaxed);
+                if stint.elapsed() > Duration::from_secs(1) {
+                    panic_streak = 0;
+                } else {
+                    panic_streak = panic_streak.saturating_add(1);
+                }
+                // first respawn is immediate; streaks wait 50ms..3.2s
+                let backoff = match panic_streak {
+                    0 | 1 => Duration::ZERO,
+                    n => Duration::from_millis(50) * (1u32 << (n - 2).min(6)),
+                };
+                log::warn!(
+                    "pool worker {idx}: panicked; respawning with a fresh engine \
+                     (streak {panic_streak}, backoff {backoff:?})"
+                );
+                // shutdown-aware backoff: sleep in slices so stop()
+                // never waits on a parked respawn loop
+                let until = Instant::now() + backoff;
+                while Instant::now() < until && !pool.shutdown.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                if pool.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+            }
+        }
+    }
+    pool.workers[idx].alive.store(false, Ordering::SeqCst);
+    pool.drain_shard(idx);
+}
+
+/// One worker's serve loop over its shard.
+fn worker_serve(pool: &WorkerPool, idx: usize, engine: &dyn Engine) {
+    let mut cache: HashMap<String, Box<dyn CompiledKernel>> = HashMap::new();
+    let slot = &pool.workers[idx];
+    while let Some(job) = pool.pop(idx) {
+        match job {
+            Job::Install { spec, reply } => {
+                let result = compile_into(&mut cache, engine, &spec, slot);
+                let _ = reply.send(result);
+            }
+            Job::Evict { variant_ids } => {
+                for id in &variant_ids {
+                    cache.remove(id);
+                }
+            }
+            Job::Exec { variant_id, inputs, reply } => {
+                let result = execute_local(&mut cache, engine, pool, idx, &variant_id, &inputs, slot);
+                if result.is_err() {
+                    slot.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn compile_into(
+    cache: &mut HashMap<String, Box<dyn CompiledKernel>>,
+    engine: &dyn Engine,
+    spec: &InstallSpec,
+    slot: &WorkerSlot,
+) -> Result<()> {
+    if cache.contains_key(&spec.variant.id) {
+        return Ok(());
+    }
+    let exe = engine.compile(&spec.variant, &spec.hlo_text)?;
+    slot.compiles.fetch_add(1, Ordering::Relaxed);
+    cache.insert(spec.variant.id.clone(), exe);
+    Ok(())
+}
+
+fn execute_local(
+    cache: &mut HashMap<String, Box<dyn CompiledKernel>>,
+    engine: &dyn Engine,
+    pool: &WorkerPool,
+    idx: usize,
+    variant_id: &str,
+    inputs: &[HostTensor],
+    slot: &WorkerSlot,
+) -> Result<(HostTensor, Duration)> {
+    if !cache.contains_key(variant_id) {
+        // Lazy recompile: a respawned worker lost its cache, but the
+        // install spec is still routed — rebuild the executable here.
+        let Some(spec) = pool.route_spec(variant_id) else {
+            return Err(Error::Coordinator(format!(
+                "pool: {variant_id} is no longer installed"
+            )));
+        };
+        let exe = match engine.compile(&spec.variant, &spec.hlo_text) {
+            Ok(exe) => exe,
+            Err(e) => {
+                // A worker that cannot rebuild the variant must stop
+                // being routed to, or every call would retry and fail.
+                pool.deregister(variant_id, idx);
+                return Err(e);
+            }
+        };
+        slot.compiles.fetch_add(1, Ordering::Relaxed);
+        cache.insert(variant_id.to_string(), exe);
+    }
+    let t0 = Instant::now();
+    let output = cache[variant_id].execute(inputs)?;
+    let exec = t0.elapsed();
+    slot.executed.fetch_add(1, Ordering::Relaxed);
+    slot.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
+    Ok((output, exec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::mock::{MockEngineFactory, MockSpec};
+    use std::time::Duration;
+
+    fn sample_variant(id: &str) -> Variant {
+        crate::manifest::tests::sample_manifest()
+            .unwrap()
+            .variant(id)
+            .unwrap()
+            .clone()
+    }
+
+    fn spawn_mock_pool(spec: MockSpec, workers: usize) -> Arc<WorkerPool> {
+        WorkerPool::spawn(
+            PoolOptions::new(Arc::new(MockEngineFactory::new(spec)))
+                .with_workers(workers)
+                .with_queue_depth(8),
+        )
+        .unwrap()
+    }
+
+    fn inputs8() -> Vec<HostTensor> {
+        vec![HostTensor::zeros(&[8, 8])]
+    }
+
+    #[test]
+    fn install_execute_and_per_worker_stats() {
+        let pool = spawn_mock_pool(MockSpec::default(), 2);
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 2, "both workers compile");
+        assert_eq!(pool.installed(), 1);
+        // idempotent re-install skips the broadcast
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 2);
+        let exe = pool.handle_for(v.id.clone());
+        assert_eq!(exe.variant_id(), "k.b.n8");
+        for _ in 0..10 {
+            let out = exe.execute(&inputs8()).unwrap();
+            assert!(out.data().iter().all(|&x| x == 2.0));
+        }
+        let snap = pool.snapshot();
+        assert_eq!(snap.total_executed(), 10, "every call counted on some worker");
+        assert!(snap.workers.iter().all(|w| w.alive));
+        assert_eq!(snap.respawns, 0);
+        let json = pool.to_json();
+        assert_eq!(json.get("workers").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("executed").unwrap().as_i64(), Some(10));
+        assert!(pool.render().contains("worker 0:"), "{}", pool.render());
+        pool.stop();
+    }
+
+    #[test]
+    fn submit_unknown_variant_errors_fast() {
+        let pool = spawn_mock_pool(MockSpec::default(), 1);
+        let err = pool.submit("nope", &inputs8()).expect_err("not installed");
+        assert!(err.to_string().contains("not installed"), "{err}");
+        pool.stop();
+    }
+
+    #[test]
+    fn stopped_pool_errors_instead_of_hanging() {
+        let pool = spawn_mock_pool(MockSpec::default(), 2);
+        let v = sample_variant("k.a.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 2);
+        let exe = pool.handle_for(v.id.clone());
+        pool.stop();
+        assert!(exe.execute(&inputs8()).is_err(), "submit after stop errors");
+        assert_eq!(pool.install(sample_variant("k.b.n8"), "hlo".into()), 0);
+        pool.stop(); // idempotent
+    }
+
+    #[test]
+    fn failed_install_is_memoized_until_evicted() {
+        let mut spec = MockSpec::default();
+        spec.fail_compile.insert("k.a.n8".into());
+        let pool = spawn_mock_pool(spec, 2);
+        let v = sample_variant("k.a.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 0, "every worker fails");
+        assert_eq!(pool.installed(), 0);
+        // memoized: the retry is a lookup, not a broadcast
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 0);
+        // evict clears the memo so a fresh finalization retries (and
+        // fails again here — the engine still rejects the variant)
+        pool.evict(std::slice::from_ref(&v.id));
+        assert_eq!(pool.install(v, "hlo".into()), 0);
+        pool.stop();
+    }
+
+    #[test]
+    fn evicted_variant_stops_routing() {
+        let pool = spawn_mock_pool(MockSpec::default(), 1);
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 1);
+        let exe = pool.handle_for(v.id.clone());
+        exe.execute(&inputs8()).unwrap();
+        pool.evict(std::slice::from_ref(&v.id));
+        assert_eq!(pool.installed(), 0);
+        let err = exe.execute(&inputs8()).expect_err("route dropped");
+        assert!(err.to_string().contains("not installed"), "{err}");
+        pool.stop();
+    }
+
+    #[test]
+    fn concurrent_submits_spread_across_workers() {
+        let spec = MockSpec {
+            default_exec_cost: Duration::from_micros(200),
+            exec_sleep: true,
+            ..MockSpec::default()
+        };
+        let pool = spawn_mock_pool(spec, 4);
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 4);
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let exe = pool.handle_for(v.id.clone());
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let out = exe.execute(&[HostTensor::zeros(&[8, 8])]).unwrap();
+                    assert!(out.data().iter().all(|&x| x == 2.0));
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let snap = pool.snapshot();
+        assert_eq!(snap.total_executed(), 200, "no call lost or double-counted");
+        let busy = snap.workers.iter().filter(|w| w.executed > 0).count();
+        assert!(busy >= 2, "round-robin spreads load: {snap:?}");
+        pool.stop();
+    }
+
+    #[test]
+    fn deregister_last_worker_memoizes_failure() {
+        let pool = spawn_mock_pool(MockSpec::default(), 2);
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 2);
+        // worker 0 can no longer serve the variant (failed recompile)
+        pool.deregister(&v.id, 0);
+        let exe = pool.handle_for(v.id.clone());
+        exe.execute(&inputs8()).unwrap();
+        assert_eq!(pool.snapshot().workers[1].executed, 1, "routing shrank to worker 1");
+        // the last worker deregistering memoizes the failure: the
+        // republish probe goes quiet instead of churning
+        pool.deregister(&v.id, 1);
+        assert_eq!(pool.installed(), 0);
+        assert!(pool.install_failed(&v.id));
+        assert!(exe.execute(&inputs8()).is_err());
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 0, "memo gates re-install");
+        // a retune's evict clears the memo and the re-broadcast succeeds
+        pool.evict(std::slice::from_ref(&v.id));
+        assert_eq!(pool.install(v, "hlo".into()), 2);
+        pool.stop();
+    }
+
+    #[test]
+    fn panicked_worker_respawns_and_recovers() {
+        let spec = MockSpec::default();
+        let fault = spec.latency_fault.clone();
+        let pool = spawn_mock_pool(spec, 1);
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 1);
+        let exe = pool.handle_for(v.id.clone());
+        exe.execute(&inputs8()).unwrap();
+
+        fault.panic_once("k.b.n8");
+        let err = exe.execute(&inputs8()).expect_err("worker died mid-call");
+        assert!(err.to_string().contains("died"), "{err}");
+
+        // the respawned worker lazily recompiles from the install spec
+        let out = exe.execute(&inputs8()).unwrap();
+        assert!(out.data().iter().all(|&x| x == 2.0));
+        assert_eq!(pool.respawns(), 1);
+        let snap = pool.snapshot();
+        assert!(snap.workers[0].alive);
+        assert!(snap.workers[0].compiles >= 2, "install + lazy recompile: {snap:?}");
+        pool.stop();
+    }
+}

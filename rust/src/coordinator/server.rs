@@ -21,6 +21,7 @@ use std::time::{Duration, Instant};
 use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
 use crate::coordinator::drift::DriftPolicy;
 use crate::coordinator::fastlane::FastLane;
+use crate::coordinator::pool::{PoolOptions, PoolSnapshot, WorkerPool};
 use crate::error::{Error, Result};
 use crate::hub::{HubClient, HubOptions};
 use crate::tensor::HostTensor;
@@ -51,6 +52,10 @@ enum Request {
     HubPull {
         reply: mpsc::SyncSender<Result<(usize, usize)>>,
     },
+    SaveState {
+        path: std::path::PathBuf,
+        reply: mpsc::SyncSender<Result<usize>>,
+    },
     Shutdown,
 }
 
@@ -61,6 +66,7 @@ enum Request {
 pub struct CoordinatorHandle {
     tx: mpsc::Sender<Request>,
     fast_lane: Option<Arc<FastLane>>,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl CoordinatorHandle {
@@ -151,6 +157,17 @@ impl CoordinatorHandle {
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
     }
 
+    /// Persist tuned results to a JSON file (the leader runs
+    /// [`Dispatcher::save_state`]). Returns the number of tuned
+    /// problems written.
+    pub fn save_state(&self, path: &std::path::Path) -> Result<usize> {
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::SaveState { path: path.to_path_buf(), reply })
+            .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
+    }
+
     /// Number of published fast-lane entries (0 when the lane is
     /// disabled). Reads the shared map directly — no leader round-trip.
     pub fn fast_lane_published(&self) -> usize {
@@ -161,6 +178,13 @@ impl CoordinatorHandle {
     /// snapshot. Empty when the lane is disabled.
     pub fn fast_lane_stats(&self) -> Vec<(String, u64, f64)> {
         self.fast_lane.as_ref().map(|l| l.snapshot()).unwrap_or_default()
+    }
+
+    /// Worker-pool counter snapshot (per-worker executed/errors/compiles,
+    /// respawns). `None` when no pool is attached. Reads the shared pool
+    /// state directly — no leader round-trip.
+    pub fn pool_snapshot(&self) -> Option<PoolSnapshot> {
+        self.pool.as_ref().map(|p| p.snapshot())
     }
 }
 
@@ -189,6 +213,16 @@ pub struct ServerOptions {
     /// behaviour — the baseline the throughput-scaling bench compares
     /// against).
     pub fast_lane: bool,
+    /// Worker pool of thread-pinned engines. `Some(opts)` spawns
+    /// `opts.workers` threads, each creating its own engine via
+    /// `opts.factory` on its own thread; finalized winners that cannot
+    /// provide a shared executable are replicated onto the pool
+    /// (compiled once per worker) and published as pool-routed fast-lane
+    /// entries, so steady-state throughput scales with workers even when
+    /// kernels are `!Send` (PJRT). Requires `fast_lane` (ignored with a
+    /// warning otherwise). `None` keeps thread-pinned winners on the
+    /// leader exactly as before.
+    pub pool: Option<PoolOptions>,
     /// Drift-detection retune policy. `Some(policy)` makes the leader
     /// periodically compare each published winner's windowed fast-lane
     /// latency against its tuning-time baseline and retune automatically
@@ -213,6 +247,7 @@ impl Default for ServerOptions {
         ServerOptions {
             batch: BatchOptions::default(),
             fast_lane: true,
+            pool: None,
             drift: None,
             hub: None,
         }
@@ -224,6 +259,7 @@ pub struct Coordinator {
     tx: mpsc::Sender<Request>,
     join: Option<JoinHandle<()>>,
     fast_lane: Option<Arc<FastLane>>,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Coordinator {
@@ -271,6 +307,18 @@ impl Coordinator {
             }
             None
         };
+        // The pool publishes through the fast lane, so it needs one.
+        let pool = match &opts.pool {
+            Some(pool_opts) if lane.is_some() => Some(WorkerPool::spawn(pool_opts.clone())?),
+            Some(_) => {
+                log::warn!(
+                    "worker pool ignored: the fast lane is disabled, so pooled \
+                     winners have nowhere to publish"
+                );
+                None
+            }
+            None => None,
+        };
         // Leader wake-up cadences; None for both keeps the plain
         // blocking recv loop (no behaviour change without drift/hub).
         let drift_every = if opts.fast_lane {
@@ -284,6 +332,7 @@ impl Coordinator {
             .and_then(|h| h.pull_interval)
             .map(|every| every.max(Duration::from_millis(1)));
         let leader_lane = lane.clone();
+        let leader_pool = pool.clone();
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let join = std::thread::Builder::new()
@@ -297,6 +346,9 @@ impl Coordinator {
                     Ok(mut d) => {
                         if let Some(lane) = leader_lane {
                             d.set_fast_lane(lane);
+                        }
+                        if let Some(pool) = leader_pool {
+                            d.attach_pool(pool);
                         }
                         // Hub warm-start happens before readiness is
                         // signalled: when spawn() returns, the tuned map
@@ -414,11 +466,14 @@ impl Coordinator {
                             Request::Stats { reply } => {
                                 let lane_render =
                                     dispatcher.fast_lane().map(|l| l.render()).unwrap_or_default();
+                                let pool_render =
+                                    dispatcher.pool().map(|p| p.render()).unwrap_or_default();
                                 let rendered = format!(
-                                    "{}cache: {:?}\n{}",
+                                    "{}cache: {:?}\n{}{}",
                                     dispatcher.stats().render(),
                                     dispatcher.cache_stats(),
-                                    lane_render
+                                    lane_render,
+                                    pool_render
                                 );
                                 let _ = reply.send((rendered, dispatcher.tuning_report()));
                             }
@@ -427,6 +482,9 @@ impl Coordinator {
                                     vec![("kernels".to_string(), dispatcher.stats().to_json())];
                                 if let Some(lane) = dispatcher.fast_lane() {
                                     obj.push(("fast_lane".to_string(), lane.to_json()));
+                                }
+                                if let Some(pool) = dispatcher.pool() {
+                                    obj.push(("pool".to_string(), pool.to_json()));
                                 }
                                 if !dispatcher.stats().drift_events().is_empty() {
                                     obj.push((
@@ -442,28 +500,53 @@ impl Coordinator {
                             Request::HubPull { reply } => {
                                 let _ = reply.send(dispatcher.hub_pull());
                             }
+                            Request::SaveState { path, reply } => {
+                                let _ = reply.send(dispatcher.save_state(&path));
+                            }
                             Request::Shutdown => break 'serve,
                         }
                     }
                 }
             })
-            .map_err(|e| Error::Coordinator(format!("spawn: {e}")))?;
-        ready_rx
+            .map_err(|e| {
+                if let Some(pool) = &pool {
+                    pool.stop();
+                }
+                Error::Coordinator(format!("spawn: {e}"))
+            })?;
+        let ready = ready_rx
             .recv()
-            .map_err(|_| Error::Coordinator("leader died during init".into()))??;
-        Ok(Coordinator { tx, join: Some(join), fast_lane: lane })
+            .map_err(|_| Error::Coordinator("leader died during init".into()))
+            .and_then(|r| r);
+        if let Err(e) = ready {
+            // the leader is exiting (or gone); reap it and the workers
+            let _ = join.join();
+            if let Some(pool) = &pool {
+                pool.stop();
+            }
+            return Err(e);
+        }
+        Ok(Coordinator { tx, join: Some(join), fast_lane: lane, pool })
     }
 
     /// A new handle for this coordinator.
     pub fn handle(&self) -> CoordinatorHandle {
-        CoordinatorHandle { tx: self.tx.clone(), fast_lane: self.fast_lane.clone() }
+        CoordinatorHandle {
+            tx: self.tx.clone(),
+            fast_lane: self.fast_lane.clone(),
+            pool: self.pool.clone(),
+        }
     }
 
-    /// Graceful shutdown (also triggered by Drop).
+    /// Graceful shutdown (also triggered by Drop): stop the leader, then
+    /// the worker pool — queued pool jobs drain before the threads join.
     pub fn shutdown(&mut self) {
         let _ = self.tx.send(Request::Shutdown);
         if let Some(join) = self.join.take() {
             let _ = join.join();
+        }
+        if let Some(pool) = &self.pool {
+            pool.stop();
         }
     }
 }
@@ -540,6 +623,18 @@ mod tests {
         assert!(rendered.contains("k:"), "{rendered}");
         assert!(rendered.contains("fast lane:"), "{rendered}");
         assert!(report.as_obj().is_some());
+    }
+
+    #[test]
+    fn save_state_through_handle() {
+        let coord = spawn_mock(MockSpec::default());
+        let h = coord.handle();
+        for _ in 0..4 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        let path = crate::testutil::temp_path("srv-state", "json");
+        assert_eq!(h.save_state(&path).unwrap(), 1, "tuned problem persisted");
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]
@@ -685,6 +780,68 @@ mod tests {
         // leader-lane operations fail once the loop exited (fast-lane
         // hits intentionally keep serving off the published entry)
         assert!(h.stats().is_err());
+    }
+
+    #[test]
+    fn pool_without_fast_lane_is_ignored() {
+        use crate::coordinator::pool::PoolOptions;
+        use crate::runtime::mock::MockEngineFactory;
+        let spec = MockSpec::default();
+        let factory = Arc::new(MockEngineFactory::pinned(spec.clone()));
+        let opts = ServerOptions {
+            fast_lane: false,
+            pool: Some(PoolOptions::new(factory).with_workers(2)),
+            ..ServerOptions::default()
+        };
+        let coord = spawn_mock_with(spec, opts);
+        let h = coord.handle();
+        for _ in 0..5 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert!(h.pool_snapshot().is_none(), "pool not spawned without a lane");
+        assert!(h.stats_json().unwrap().get("pool").is_none());
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned, "leader keeps serving");
+    }
+
+    #[test]
+    fn pooled_spawn_serves_thread_pinned_engines_off_leader() {
+        use crate::coordinator::pool::PoolOptions;
+        use crate::runtime::mock::MockEngineFactory;
+        use crate::runtime::EngineFactory;
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(400))
+            .with_cost("k.b.n8", Duration::from_micros(40));
+        let factory = Arc::new(MockEngineFactory::pinned(spec));
+        let leader_factory: Arc<dyn EngineFactory> = factory.clone();
+        let mut coord = Coordinator::spawn_with_options(
+            move || {
+                let manifest = crate::manifest::tests::sample_manifest()?;
+                let registry = KernelRegistry::new(manifest);
+                Ok(Dispatcher::new(registry, leader_factory.create()?))
+            },
+            ServerOptions {
+                pool: Some(PoolOptions::new(factory).with_workers(2)),
+                ..ServerOptions::default()
+            },
+        )
+        .unwrap();
+        let h = coord.handle();
+        for _ in 0..3 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert_eq!(h.fast_lane_published(), 1, "pool-routed entry published");
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.route, CallRoute::Tuned);
+        assert_eq!(out.value, 2);
+        let snap = h.pool_snapshot().expect("pool attached");
+        assert_eq!(snap.workers.len(), 2);
+        assert_eq!(snap.total_executed(), 1, "the tuned call ran on a worker");
+        let json = h.stats_json().unwrap();
+        assert_eq!(json.get("pool").unwrap().get("workers").unwrap().as_i64(), Some(2));
+        let (rendered, _) = h.stats().unwrap();
+        assert!(rendered.contains("worker pool"), "{rendered}");
+        coord.shutdown(); // joins leader + workers; no leaked threads
     }
 
     #[test]

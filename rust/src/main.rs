@@ -1,13 +1,17 @@
 //! `jitune` launcher: inspect artifacts, tune kernels, replay traces,
 //! run the serving demo — all through the public library API.
 
+use std::sync::Arc;
+
 use jitune::autotuner::Autotuner;
 use jitune::cli::{self, FlagSpec};
 use jitune::config::{Config, RunSettings};
-use jitune::coordinator::{CallRoute, Dispatcher, KernelRegistry};
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions,
+};
 use jitune::hub::{merge_entry, HubClient, HubEntry, HubOptions, HubServer, Merge};
 use jitune::manifest::Manifest;
-use jitune::runtime::PjrtEngine;
+use jitune::runtime::{PjrtEngine, PjrtEngineFactory};
 use jitune::util::json::Value;
 use jitune::workload::{inputs_for, CallTrace};
 use jitune::{Error, Result};
@@ -43,6 +47,12 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "socket",
             takes_value: true,
             help: "hub broker Unix socket path (hub serve / hub dump)",
+        },
+        FlagSpec {
+            name: "pool",
+            takes_value: true,
+            help: "run: serve the trace through a worker pool of N PJRT engines \
+                   (thread-pinned fast lane)",
         },
     ]
 }
@@ -96,7 +106,13 @@ fn run(args: &[String]) -> Result<()> {
                 .get("trace")
                 .ok_or_else(|| Error::Config("run requires --trace".into()))?
                 .to_string();
-            run_trace(&settings, &spec, parsed.get("state-file"))
+            match parsed.i64_or("pool", 0)? {
+                0 => run_trace(&settings, &spec, parsed.get("state-file")),
+                workers if workers > 0 => {
+                    run_trace_pooled(&settings, &spec, workers as usize, parsed.get("state-file"))
+                }
+                bad => Err(Error::Config(format!("--pool `{bad}` must be positive"))),
+            }
         }
         "stats" => tune_with_stats(
             &settings,
@@ -218,9 +234,8 @@ fn tune_with_state(
     Ok(())
 }
 
-fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Result<()> {
-    let mut dispatcher = build_dispatcher(settings)?;
-    let state_path = load_state_flag(&mut dispatcher, state_file)?;
+/// Parse a `kernel:size:iters[,...]` trace spec.
+fn parse_trace(spec: &str) -> Result<CallTrace> {
     let mut trace = CallTrace::default();
     for part in spec.split(',') {
         let fields: Vec<&str> = part.split(':').collect();
@@ -235,6 +250,13 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
             fields[2].parse().map_err(|_| Error::Config(format!("bad iters in `{part}`")))?;
         trace.calls.extend(CallTrace::uniform(fields[0], size, iters).calls);
     }
+    Ok(trace)
+}
+
+fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Result<()> {
+    let mut dispatcher = build_dispatcher(settings)?;
+    let state_path = load_state_flag(&mut dispatcher, state_file)?;
+    let trace = parse_trace(spec)?;
     println!("replaying {} calls...", trace.len());
     let t0 = std::time::Instant::now();
     for call in &trace.calls {
@@ -251,6 +273,61 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
     print!("{}", dispatcher.stats().render());
     println!("cache: {:?}", dispatcher.cache_stats());
     save_state_flag(&dispatcher, &state_path)?;
+    Ok(())
+}
+
+/// `jitune run --trace .. --pool N`: replay the trace through a pooled
+/// coordinator — one PJRT engine per worker, finalized winners
+/// replicated onto every worker, steady-state calls served off-leader
+/// even though PJRT executables are thread-pinned. The printed stats
+/// include the per-worker pool counters.
+fn run_trace_pooled(
+    settings: &RunSettings,
+    spec: &str,
+    workers: usize,
+    state_file: Option<&str>,
+) -> Result<()> {
+    let trace = parse_trace(spec)?;
+    let leader_settings = settings.clone();
+    let state_path = state_file.map(std::path::PathBuf::from);
+    let warm_start = state_path.clone();
+    let opts = ServerOptions {
+        pool: Some(PoolOptions::new(Arc::new(PjrtEngineFactory)).with_workers(workers)),
+        ..ServerOptions::default()
+    };
+    let coordinator = Coordinator::spawn_with_options(
+        move || {
+            let mut dispatcher = build_dispatcher(&leader_settings)?;
+            if let Some(path) = warm_start.filter(|p| p.exists()) {
+                let (imported, skipped) = dispatcher.load_state(&path)?;
+                println!("state: warm-started {imported} problem(s), skipped {skipped} stale");
+            }
+            Ok(dispatcher)
+        },
+        opts,
+    )?;
+    let h = coordinator.handle();
+    let manifest = Manifest::load(&settings.artifacts)?;
+    println!("replaying {} calls through {workers} pool worker(s)...", trace.len());
+    let t0 = std::time::Instant::now();
+    for call in &trace.calls {
+        // inputs resolved per problem, exactly like the single-lane path
+        let problem = manifest.problem(&call.kernel, call.size)?;
+        let inputs = inputs_for(problem, settings.seed);
+        h.call(&call.kernel, inputs)?;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done in {:.3}s ({:.1} calls/s)\n",
+        dt.as_secs_f64(),
+        trace.len() as f64 / dt.as_secs_f64()
+    );
+    let (rendered, _) = h.stats()?;
+    print!("{rendered}");
+    if let Some(path) = state_path {
+        let saved = h.save_state(&path)?;
+        println!("state: saved {saved} tuned problem(s) to {}", path.display());
+    }
     Ok(())
 }
 

@@ -131,6 +131,13 @@ impl CompileCache {
         self.cache.get(variant_id).and_then(|k| k.shared())
     }
 
+    /// The variant's HLO text (memoized), without compiling. The worker
+    /// pool's replicated finalization broadcasts this so each
+    /// thread-pinned engine compiles its own copy of the winner.
+    pub fn hlo_for(&mut self, manifest: &Manifest, variant: &Variant) -> Result<String> {
+        self.load_hlo(manifest, variant)
+    }
+
     /// Number of resident executables.
     pub fn resident(&self) -> usize {
         self.cache.len()

@@ -4,7 +4,7 @@
 //! latencies + failure injection for tests and ablations).
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::Result;
 use crate::manifest::Variant;
@@ -21,6 +21,18 @@ use crate::tensor::HostTensor;
 pub trait SharedKernel: Send + Sync {
     /// Execute with host inputs, producing the kernel's (single) output.
     fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor>;
+
+    /// Execute and report the *execution* duration — the quantity drift
+    /// baselines are measured in. The default times `execute` on the
+    /// calling thread (right for kernels that run in-place); handles
+    /// that dispatch elsewhere (the worker pool) override it to return
+    /// the backend-measured time, so queueing and cross-thread overhead
+    /// cannot masquerade as kernel drift.
+    fn execute_measured(&self, inputs: &[HostTensor]) -> Result<(HostTensor, Duration)> {
+        let t0 = Instant::now();
+        let output = self.execute(inputs)?;
+        Ok((output, t0.elapsed()))
+    }
 
     /// Variant id this executable was compiled from.
     fn variant_id(&self) -> &str;
@@ -62,6 +74,24 @@ pub trait Engine {
     fn compile(&self, variant: &Variant, hlo_text: &str) -> Result<Box<dyn CompiledKernel>>;
 
     /// Backend name for logs/reports.
+    fn name(&self) -> &str;
+}
+
+/// Builds engine instances on demand — one per worker thread of the
+/// coordinator's worker pool ([`crate::coordinator::WorkerPool`]).
+///
+/// The factory itself crosses thread boundaries (`Send + Sync`), but the
+/// engines it creates may be `!Send` (PJRT clients are thread-pinned):
+/// `create` is therefore always invoked *on the thread that will own the
+/// engine*, and the engine never leaves it. This is what lets a pool of
+/// workers scale the tuned lane on backends whose executables cannot be
+/// shared across threads — each worker owns a private engine and a
+/// private compiled-kernel cache.
+pub trait EngineFactory: Send + Sync {
+    /// Create a fresh engine on the calling thread.
+    fn create(&self) -> Result<Box<dyn Engine>>;
+
+    /// Backend name for logs/stats.
     fn name(&self) -> &str;
 }
 

@@ -14,15 +14,19 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
-use crate::runtime::engine::{CompiledKernel, Engine, SharedKernel};
+use crate::runtime::engine::{CompiledKernel, Engine, EngineFactory, SharedKernel};
 use crate::tensor::HostTensor;
 use crate::util::prng::Rng;
 
-/// Shared latency-shift injection handle: scale any variant's execution
-/// cost *while the engine is running*. Clone the handle out of a
-/// [`MockSpec`] before moving the spec into an engine/coordinator, then
-/// flip scales mid-run — drift tests and benches use this to degrade a
-/// published winner without restarting anything.
+/// Shared run-time fault-injection handle: scale any variant's execution
+/// cost — or make its next execution panic — *while the engine is
+/// running*. Clone the handle out of a [`MockSpec`] before moving the
+/// spec into an engine/coordinator, then flip scales mid-run — drift
+/// tests and benches use this to degrade a published winner without
+/// restarting anything, and the pool fault tests use [`panic_once`]
+/// (one-shot) to kill a worker mid-job deterministically.
+///
+/// [`panic_once`]: LatencyFault::panic_once
 ///
 /// Hot-path cost: with no shifts installed (the default), every
 /// execution pays one relaxed atomic load — the shared mutex is touched
@@ -38,6 +42,9 @@ struct FaultInner {
     /// Fast-path gate: false until the first injection.
     armed: AtomicBool,
     scales: Mutex<HashMap<String, f64>>,
+    /// Variant ids whose *next* execution panics (one-shot: consumed by
+    /// the execution that fires it).
+    panics: Mutex<HashSet<String>>,
 }
 
 impl LatencyFault {
@@ -53,10 +60,20 @@ impl LatencyFault {
         self.inner.armed.store(true, Ordering::Release);
     }
 
-    /// Remove every injected shift.
+    /// Make the *next* execution of `variant_id` panic — once. The
+    /// injection clears itself when it fires, so the recovery path
+    /// (fallback + worker respawn) can be observed deterministically
+    /// without the retried call panicking again.
+    pub fn panic_once(&self, variant_id: &str) {
+        self.inner.panics.lock().unwrap().insert(variant_id.to_string());
+        self.inner.armed.store(true, Ordering::Release);
+    }
+
+    /// Remove every injected shift and pending panic.
     pub fn clear(&self) {
         let mut scales = self.inner.scales.lock().unwrap();
         scales.clear();
+        self.inner.panics.lock().unwrap().clear();
         self.inner.armed.store(false, Ordering::Release);
     }
 
@@ -65,6 +82,14 @@ impl LatencyFault {
             return 1.0;
         }
         self.inner.scales.lock().unwrap().get(variant_id).copied().unwrap_or(1.0)
+    }
+
+    /// Consume a pending panic injection for `variant_id`, if any.
+    fn take_panic(&self, variant_id: &str) -> bool {
+        if !self.inner.armed.load(Ordering::Acquire) {
+            return false;
+        }
+        self.inner.panics.lock().unwrap().remove(variant_id)
     }
 }
 
@@ -214,6 +239,9 @@ struct MockKernelState {
 
 impl SharedKernel for MockKernelState {
     fn execute(&self, _inputs: &[HostTensor]) -> Result<HostTensor> {
+        if self.fault.take_panic(&self.variant_id) {
+            panic!("injected panic for {}", self.variant_id);
+        }
         if self.fail {
             return Err(Error::Xla(format!("injected execute failure for {}", self.variant_id)));
         }
@@ -252,6 +280,92 @@ impl CompiledKernel for MockKernel {
 
     fn shared(&self) -> Option<Arc<dyn SharedKernel>> {
         Some(self.inner.clone())
+    }
+}
+
+/// Wrapper that hides an engine's shareable handles: compiled kernels
+/// delegate execution but always report `shared() -> None`, modelling a
+/// thread-pinned backend (the PJRT shape) on top of any engine. Pool
+/// tests and benches use it to force the coordinator off the shared
+/// fast lane and onto the worker-pool path.
+pub struct PinnedEngine {
+    inner: Box<dyn Engine>,
+    name: String,
+}
+
+impl PinnedEngine {
+    /// Wrap `inner`, suppressing its kernels' shared handles.
+    pub fn new(inner: Box<dyn Engine>) -> PinnedEngine {
+        let name = format!("pinned({})", inner.name());
+        PinnedEngine { inner, name }
+    }
+}
+
+impl Engine for PinnedEngine {
+    fn compile(&self, variant: &Variant, hlo_text: &str) -> Result<Box<dyn CompiledKernel>> {
+        Ok(Box::new(PinnedKernel { inner: self.inner.compile(variant, hlo_text)? }))
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+struct PinnedKernel {
+    inner: Box<dyn CompiledKernel>,
+}
+
+impl CompiledKernel for PinnedKernel {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
+        self.inner.execute(inputs)
+    }
+
+    fn variant_id(&self) -> &str {
+        self.inner.variant_id()
+    }
+
+    // shared() keeps the default `None`: that is the whole point.
+}
+
+/// [`EngineFactory`] for mock engines: every `create` builds a fresh
+/// [`MockEngine`] from a clone of the same spec, so all instances share
+/// one [`LatencyFault`] handle (run-time injection reaches every pool
+/// worker) while keeping independent RNGs and compile logs.
+pub struct MockEngineFactory {
+    spec: MockSpec,
+    pinned: bool,
+}
+
+impl MockEngineFactory {
+    /// Factory for plain mock engines (kernels are shareable).
+    pub fn new(spec: MockSpec) -> MockEngineFactory {
+        MockEngineFactory { spec, pinned: false }
+    }
+
+    /// Factory whose engines refuse `shared()` (wrapped in
+    /// [`PinnedEngine`]): tuned calls cannot take the shared fast lane
+    /// and must flow through the worker pool or the leader.
+    pub fn pinned(spec: MockSpec) -> MockEngineFactory {
+        MockEngineFactory { spec, pinned: true }
+    }
+}
+
+impl EngineFactory for MockEngineFactory {
+    fn create(&self) -> Result<Box<dyn Engine>> {
+        let engine = MockEngine::new(self.spec.clone());
+        Ok(if self.pinned {
+            Box::new(PinnedEngine::new(Box::new(engine)))
+        } else {
+            Box::new(engine)
+        })
+    }
+
+    fn name(&self) -> &str {
+        if self.pinned {
+            "mock-pinned"
+        } else {
+            "mock"
+        }
     }
 }
 
@@ -351,6 +465,61 @@ mod tests {
         fault.clear();
         let recovered = time_one(kernel.as_ref());
         assert!(recovered < degraded / 2, "clear() restores health: {recovered:?}");
+    }
+
+    #[test]
+    fn pinned_factory_suppresses_shared_handles() {
+        let m = manifest();
+        let factory = MockEngineFactory::pinned(MockSpec::default());
+        assert_eq!(factory.name(), "mock-pinned");
+        let engine = factory.create().unwrap();
+        assert!(engine.name().starts_with("pinned("), "{}", engine.name());
+        let kernel = engine.compile(m.variant("k.b.n8").unwrap(), "").unwrap();
+        assert!(kernel.shared().is_none(), "pinned kernels must refuse shared()");
+        // execution still delegates to the wrapped mock
+        let out = kernel.execute(&[]).unwrap();
+        assert!(out.data().iter().all(|&x| x == 2.0));
+
+        let plain = MockEngineFactory::new(MockSpec::default());
+        let kernel = plain.create().unwrap().compile(m.variant("k.b.n8").unwrap(), "").unwrap();
+        assert!(kernel.shared().is_some(), "plain factory keeps shareability");
+    }
+
+    #[test]
+    fn factory_instances_share_the_fault_handle() {
+        let m = manifest();
+        let spec = MockSpec::default().with_cost("k.a.n8", Duration::from_micros(100));
+        let fault = spec.latency_fault.clone();
+        let factory = MockEngineFactory::new(spec);
+        let a = factory.create().unwrap();
+        let b = factory.create().unwrap();
+        let ka = a.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        let kb = b.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        fault.set_scale("k.a.n8", 10.0);
+        // both engine instances observe the injection
+        for k in [ka.as_ref(), kb.as_ref()] {
+            let t0 = Instant::now();
+            k.execute(&[]).unwrap();
+            assert!(t0.elapsed() > Duration::from_micros(500), "fault reaches {}", k.variant_id());
+        }
+    }
+
+    #[test]
+    fn panic_once_fires_exactly_once() {
+        let m = manifest();
+        let spec = MockSpec::default();
+        let fault = spec.latency_fault.clone();
+        let engine = MockEngine::new(spec);
+        let kernel = engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        kernel.execute(&[]).unwrap();
+        fault.panic_once("k.a.n8");
+        let shared = kernel.shared().unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = shared.execute(&[]);
+        }));
+        assert!(caught.is_err(), "injected panic fires");
+        // one-shot: the next execution is healthy again
+        kernel.execute(&[]).unwrap();
     }
 
     #[test]

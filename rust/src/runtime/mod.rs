@@ -12,8 +12,12 @@
 //! [`SharedKernel`] handles (`Send + Sync`) for individual compiled
 //! executables, which the coordinator's tuned fast lane publishes so
 //! steady-state calls can execute on application threads. The mock
-//! engine supports this; PJRT does not (its executables are `Rc`-based),
-//! so PJRT steady-state calls keep flowing through the leader.
+//! engine supports this; PJRT does not (its executables are `Rc`-based).
+//! For backends like PJRT the [`EngineFactory`] trait closes the gap:
+//! the coordinator's worker pool builds one engine per worker thread
+//! (each client born on — and pinned to — its own worker) and replicates
+//! finalized winners onto all of them, so tuned throughput scales with
+//! workers without any executable crossing a thread.
 
 mod compile;
 mod engine;
@@ -21,5 +25,5 @@ pub mod mock;
 mod pjrt;
 
 pub use compile::{CacheStats, CompileCache};
-pub use engine::{CompiledKernel, Engine, ExecOutcome, SharedKernel};
-pub use pjrt::PjrtEngine;
+pub use engine::{CompiledKernel, Engine, EngineFactory, ExecOutcome, SharedKernel};
+pub use pjrt::{PjrtEngine, PjrtEngineFactory};

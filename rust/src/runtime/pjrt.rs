@@ -8,8 +8,25 @@ use std::time::Instant;
 
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
-use crate::runtime::engine::{CompiledKernel, Engine};
+use crate::runtime::engine::{CompiledKernel, Engine, EngineFactory};
 use crate::tensor::HostTensor;
+
+/// [`EngineFactory`] for per-worker PJRT engines: each pool worker calls
+/// `create` on its own thread and gets a private client there (PJRT
+/// clients are thread-pinned), which is exactly what extends tuned-lane
+/// scaling to the real backend — one client per worker, replicated
+/// finalization, no executable ever crossing a thread.
+pub struct PjrtEngineFactory;
+
+impl EngineFactory for PjrtEngineFactory {
+    fn create(&self) -> Result<Box<dyn Engine>> {
+        Ok(Box::new(PjrtEngine::cpu()?))
+    }
+
+    fn name(&self) -> &str {
+        "pjrt-cpu"
+    }
+}
 
 /// PJRT CPU backend.
 pub struct PjrtEngine {

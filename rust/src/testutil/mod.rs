@@ -5,7 +5,12 @@
 //! repo's invariant suites (`rust/tests/autotuner_props.rs`), fully
 //! deterministic, zero dependencies.
 
+use std::sync::Arc;
+
+use crate::coordinator::{Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions};
 use crate::manifest::Manifest;
+use crate::runtime::mock::{MockEngineFactory, MockSpec};
+use crate::runtime::EngineFactory;
 use crate::util::prng::Rng;
 
 /// Process-wide uniquifier for temp artifacts (sockets, state files,
@@ -56,6 +61,39 @@ pub fn synthetic_manifest(kernel: &str, variants: usize, sizes: &[i64]) -> crate
     let text =
         format!(r#"{{"schema":1,"jax_version":"synthetic","entries":[{}]}}"#, entries.join(","));
     Manifest::from_json_str(&text, dir)
+}
+
+/// Spawn a coordinator over a synthetic manifest whose engines all come
+/// from a *pinned* mock factory (kernels refuse `shared()`), with a
+/// worker pool of `workers` attached — the standard fixture for forcing
+/// tuned calls onto the pool path in tests and benches. The leader's
+/// dispatcher engine comes from the same factory, so the shared fast
+/// lane can never serve and every tuned call is pool-or-leader.
+///
+/// `opts.pool` is overwritten; customize other fields (drift, batching)
+/// freely. Spawn manually for a custom queue depth or a non-pinned
+/// factory.
+pub fn spawn_pooled_mock(
+    kernel: &str,
+    variants: usize,
+    sizes: &[i64],
+    spec: MockSpec,
+    workers: usize,
+    mut opts: ServerOptions,
+) -> crate::Result<Coordinator> {
+    let factory = Arc::new(MockEngineFactory::pinned(spec));
+    let leader_factory: Arc<dyn EngineFactory> = factory.clone();
+    opts.pool = Some(PoolOptions::new(factory).with_workers(workers));
+    let kernel = kernel.to_string();
+    let sizes = sizes.to_vec();
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest(&kernel, variants, &sizes)?;
+            let registry = KernelRegistry::new(manifest);
+            Ok(Dispatcher::new(registry, leader_factory.create()?))
+        },
+        opts,
+    )
 }
 
 /// A generator of random values of `T`.

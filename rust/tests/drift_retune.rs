@@ -10,7 +10,7 @@ use jitune::coordinator::{
 };
 use jitune::runtime::mock::{MockEngine, MockSpec};
 use jitune::tensor::HostTensor;
-use jitune::testutil::synthetic_manifest;
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
 
 /// v0 at 500us, v1 at 300us: v1 wins tuning; a 3x shift on v1 (900us)
 /// makes v0 the rightful winner of a rematch by a wide margin.
@@ -99,6 +99,55 @@ fn injected_latency_shift_triggers_automatic_retune() {
     // and the human rendering mentions it
     let (rendered, _) = h.stats().unwrap();
     assert!(rendered.contains("drift retunes:"), "{rendered}");
+}
+
+#[test]
+fn pool_path_latency_shift_trips_drift_policy() {
+    // Same drift story, but the tuned lane is the worker pool (pinned
+    // factory: kernels refuse `shared()`): the entry's drift monitor is
+    // fed from entry.call on the caller threads, so latency evidence
+    // aggregates across every pool worker — the policy must trip exactly
+    // as it does on the shared-kernel lane.
+    let spec = drifting_spec();
+    let fault = spec.latency_fault.clone();
+    let coord = spawn_pooled_mock(
+        "kern",
+        2,
+        &[8],
+        spec,
+        2,
+        ServerOptions { drift: Some(fast_policy()), ..ServerOptions::default() },
+    )
+    .unwrap();
+    let h = coord.handle();
+    tune(&coord);
+    assert_eq!(h.fast_lane_published(), 1, "winner published via the pool route");
+
+    // degrade the winner 3x on every pool worker (the fault handle is
+    // shared by all engines the factory created)
+    fault.set_scale("kern.v1.n8", 3.0);
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut saw_explore = false;
+    loop {
+        let o = h.call("kern", inputs()).unwrap();
+        if o.route == CallRoute::Explored {
+            saw_explore = true;
+        }
+        if saw_explore && h.tuned_value("kern", 8).unwrap() == Some(0) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "pool-path drift retune did not converge within 30s"
+        );
+    }
+
+    let json = h.stats_json().unwrap();
+    let kern = json.get("kernels").unwrap().get("kern").unwrap();
+    assert!(kern.get("drift_retunes").unwrap().as_i64().unwrap() >= 1);
+    let snap = h.pool_snapshot().expect("pool attached");
+    assert!(snap.total_executed() > 0, "drift evidence came from pool workers: {snap:?}");
 }
 
 #[test]

@@ -1,0 +1,144 @@
+//! Worker-pool fault injection: replicated-finalization compile failures
+//! must fall back to the leader without deadlock, and a panicking worker
+//! must be respawned — a call may fail over to the leader, but it must
+//! never hang and never be lost.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions,
+};
+use jitune::runtime::mock::{MockEngine, MockEngineFactory, MockSpec, PinnedEngine};
+use jitune::tensor::HostTensor;
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
+
+fn spec() -> MockSpec {
+    MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(400))
+        .with_cost("kern.v1.n8", Duration::from_micros(40))
+}
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+#[test]
+fn worker_compile_failure_falls_back_to_leader_without_deadlock() {
+    // The leader's engine is healthy, but every pool worker's engine
+    // rejects the winning variant at compile: replicated finalization
+    // fails on all workers, so nothing is published and the leader keeps
+    // serving — bounded time, no deadlock, no lost call.
+    let leader_spec = spec();
+    let mut worker_spec = spec();
+    worker_spec.fail_compile.insert("kern.v1.n8".into());
+    let factory = Arc::new(MockEngineFactory::pinned(worker_spec));
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            let engine = PinnedEngine::new(Box::new(MockEngine::new(leader_spec)));
+            Ok(Dispatcher::new(registry, Box::new(engine)))
+        },
+        ServerOptions {
+            pool: Some(PoolOptions::new(factory).with_workers(2)),
+            ..ServerOptions::default()
+        },
+    )
+    .unwrap();
+    let h = coord.handle();
+    for _ in 0..3 {
+        h.call("kern", inputs()).unwrap();
+    }
+    assert_eq!(h.tuned_value("kern", 8).unwrap(), Some(1), "tuning completed on the leader");
+    assert_eq!(h.fast_lane_published(), 0, "no worker compiled the winner: nothing published");
+
+    // steady state keeps flowing through the leader, promptly
+    let t0 = Instant::now();
+    for _ in 0..20 {
+        let o = h.call("kern", inputs()).unwrap();
+        assert_eq!(o.route, CallRoute::Tuned);
+        assert_eq!(o.value, 1);
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "leader fallback must not stall");
+    let snap = h.pool_snapshot().expect("pool attached");
+    assert_eq!(snap.total_executed(), 0, "workers never served the failed variant");
+    assert!(snap.workers.iter().all(|w| w.alive), "compile failure does not kill workers");
+}
+
+#[test]
+fn panicking_worker_is_respawned_and_no_call_is_lost() {
+    let spec = spec();
+    let fault = spec.latency_fault.clone();
+    let coord = spawn_pooled_mock("kern", 2, &[8], spec, 2, ServerOptions::default()).unwrap();
+    let h = coord.handle();
+    for _ in 0..3 {
+        h.call("kern", inputs()).unwrap();
+    }
+    assert_eq!(h.fast_lane_published(), 1);
+    let o = h.call("kern", inputs()).unwrap();
+    assert_eq!(o.route, CallRoute::Tuned, "pool path serving");
+    let served_before = h.pool_snapshot().unwrap().total_executed();
+
+    // kill the next execution of the winner: the worker that picks the
+    // job up panics mid-call; the caller must get the call served via
+    // the leader fallback — an answer, not an error, not a hang
+    fault.panic_once("kern.v1.n8");
+    let o = h.call("kern", inputs()).unwrap();
+    assert_eq!(o.value, 1, "failed-over call still serves the winner");
+
+    // the pool recovers: the entry republishes (lazy self-heal) and the
+    // respawned worker serves again — detected via the respawn counter
+    // and pool executions resuming past their pre-panic count
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let o = h.call("kern", inputs()).unwrap();
+        assert_eq!(o.value, 1);
+        let snap = h.pool_snapshot().unwrap();
+        if h.fast_lane_published() == 1
+            && snap.respawns >= 1
+            && snap.total_executed() > served_before
+        {
+            assert!(snap.workers.iter().all(|w| w.alive), "respawned, not dead: {snap:?}");
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "pool did not recover after a worker panic: {snap:?}"
+        );
+    }
+}
+
+#[test]
+fn drained_shutdown_leaves_no_hung_callers() {
+    // Shut down while worker threads are mid-traffic: every in-flight
+    // call either completes or fails over; nothing hangs, and shutdown
+    // joins every thread (the test would wedge otherwise).
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(400))
+        .with_cost("kern.v1.n8", Duration::from_micros(100))
+        .with_sleep_exec();
+    let mut coord = spawn_pooled_mock("kern", 2, &[8], spec, 2, ServerOptions::default()).unwrap();
+    let h = coord.handle();
+    loop {
+        if h.call("kern", inputs()).unwrap().route == CallRoute::Tuned {
+            break;
+        }
+    }
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let h = coord.handle();
+        joins.push(std::thread::spawn(move || {
+            // calls may start failing once the coordinator stops; they
+            // must return (Ok or Err), never block forever
+            for _ in 0..200 {
+                let _ = h.call("kern", inputs());
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(5));
+    coord.shutdown();
+    for j in joins {
+        j.join().unwrap();
+    }
+}
