@@ -7,15 +7,25 @@
 //! winner, and the rest run the cached winner. Compile cost dominates
 //! small sizes and becomes relatively negligible on larger ones.
 //!
+//! A **fused** series rides along: the same problem tuned through
+//! `Dispatcher::call_batch` with 3 co-scheduled callers per leader
+//! round — all tuning iterations land in round 0 (plus the in-round
+//! finalize), so the compile spike collapses from iterations 0..3 into
+//! a single round.
+//!
 //! Output: stdout chart (log y) + `target/figures/fig2.csv`.
 
 use jitune::coordinator::CallRoute;
-use jitune::report::bench::{artifacts_or_skip, autotuned_run, fresh_dispatcher};
+use jitune::report::bench::{
+    artifacts_or_skip, autotuned_run, fresh_dispatcher, fused_autotuned_run,
+};
 use jitune::report::Figure;
 use jitune::util::chart::Series;
 
 const ITERS: usize = 15;
 const SIZES: &[i64] = &[64, 128, 256];
+const FUSED_WIDTH: usize = 3;
+const FUSED_SIZE: i64 = 128;
 
 fn main() {
     jitune::util::logging::init();
@@ -58,6 +68,42 @@ fn main() {
         }
         println!();
         series.push(Series::new(format!("n={size}"), points));
+    }
+
+    // Fused series: per-round leader time with 3 co-scheduled callers —
+    // every tuning iteration fuses into round 0 and the winner finalizes
+    // in-round, so round 1+ is already steady state.
+    {
+        let mut d = fresh_dispatcher(&manifest).expect("dispatcher");
+        let rounds = fused_autotuned_run(&mut d, "matmul_order", FUSED_SIZE, ITERS, FUSED_WIDTH, 42)
+            .expect("fused run");
+        println!("n={FUSED_SIZE} fused (width {FUSED_WIDTH}):");
+        let mut points = Vec::new();
+        for (r, (round_wall, outcomes)) in rounds.iter().enumerate() {
+            let ok: Vec<_> = outcomes.iter().filter_map(|o| o.as_ref().ok()).collect();
+            // Wall time of the whole round: includes the caller-less
+            // in-round finalize compile, which no CallOutcome carries.
+            let round_s: f64 = round_wall.as_secs_f64();
+            let phase = match ok.first().map(|o| o.route) {
+                Some(CallRoute::Explored) => "explore",
+                Some(CallRoute::Finalized) => "finalize",
+                _ => "tuned",
+            };
+            println!("  round {r:2} {phase:<9} {:9.3}ms ({} calls)", round_s * 1e3, ok.len());
+            points.push((r as f64, round_s.max(1e-9)));
+            rows.push(vec![
+                FUSED_SIZE.to_string(),
+                r.to_string(),
+                format!("{round_s:.6}"),
+                format!("fused-{phase}"),
+                ok.first().map(|o| o.variant_id.clone()).unwrap_or_default(),
+            ]);
+        }
+        println!();
+        series.push(Series::new(
+            format!("n={FUSED_SIZE} fused w{FUSED_WIDTH}"),
+            points,
+        ));
     }
 
     let fig = Figure {

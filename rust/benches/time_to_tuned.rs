@@ -1,0 +1,181 @@
+//! **Time-to-tuned** — serial vs fused exploration rounds.
+//!
+//! The paper's trade: compilation overhead on the first iterations is
+//! amortized by the tuned steady state — so shrinking the explore phase
+//! directly shrinks the overhead being amortized. With B co-scheduled
+//! callers, a fused round measures up to B candidates at once, so a
+//! sweep over V variants reaches `Phase::Tuned` in ~V/B leader rounds
+//! instead of V.
+//!
+//! Two series over a synthetic manifest + mock engine (no artifacts
+//! needed — this bench runs anywhere, including CI `--smoke`):
+//!
+//! 1. **Deterministic rounds**: leader rounds until `Phase::Tuned`,
+//!    serial dispatch vs `Dispatcher::call_batch` at width 4 — the
+//!    acceptance series (target ≥2x fewer rounds).
+//! 2. **Wall clock through the coordinator**: a live leader hammered by
+//!    4 caller threads in lock-step waves vs a single caller, with the
+//!    `fused` counters from `stats_json()` printed as proof.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use jitune::autotuner::Phase;
+use jitune::coordinator::{
+    BatchOptions, Coordinator, Dispatcher, FusedStats, KernelRegistry, ServerOptions,
+};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::synthetic_manifest;
+
+const KERNEL: &str = "kern";
+const SIZE: i64 = 8;
+const VARIANTS: usize = 8;
+const WIDTH: usize = 4;
+
+/// V-shaped, well-separated costs: the winner sits mid-grid, exactly
+/// like a block-size axis.
+fn spec() -> MockSpec {
+    let mut spec = MockSpec::default().with_compile_cost(Duration::from_micros(300));
+    for i in 0..VARIANTS {
+        let dist = (i as i64 - (VARIANTS / 2) as i64).unsigned_abs();
+        spec = spec.with_cost(
+            &format!("{KERNEL}.v{i}.n{SIZE}"),
+            Duration::from_micros(80 + 120 * dist),
+        );
+    }
+    spec
+}
+
+fn dispatcher() -> Dispatcher {
+    let manifest = synthetic_manifest(KERNEL, VARIANTS, &[SIZE]).expect("synthetic manifest");
+    Dispatcher::new(KernelRegistry::new(manifest), Box::new(MockEngine::new(spec())))
+}
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+fn rounds_to_tuned_serial() -> usize {
+    let mut d = dispatcher();
+    let mut rounds = 0;
+    while d.phase(KERNEL, SIZE) != Some(Phase::Tuned) {
+        d.call(KERNEL, &inputs()).expect("serial call");
+        rounds += 1;
+        assert!(rounds < 10_000, "serial tuning never converged");
+    }
+    rounds
+}
+
+fn rounds_to_tuned_fused(width: usize) -> (usize, FusedStats) {
+    let mut d = dispatcher();
+    let mut rounds = 0;
+    while d.phase(KERNEL, SIZE) != Some(Phase::Tuned) {
+        let batch: Vec<_> = (0..width).map(|_| inputs()).collect();
+        for result in d.call_batch(KERNEL, batch) {
+            result.expect("fused call");
+        }
+        rounds += 1;
+        assert!(rounds < 10_000, "fused tuning never converged");
+    }
+    (rounds, d.stats().fused())
+}
+
+fn coordinator(max_batch: usize) -> Coordinator {
+    let engine_spec = spec();
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest(KERNEL, VARIANTS, &[SIZE])?;
+            Ok(Dispatcher::new(
+                KernelRegistry::new(manifest),
+                Box::new(MockEngine::new(engine_spec)),
+            ))
+        },
+        ServerOptions { batch: BatchOptions { max_batch }, ..ServerOptions::default() },
+    )
+    .expect("coordinator")
+}
+
+/// Lock-step waves of `threads` concurrent callers until tuning
+/// completes; returns (wall time, waves).
+fn time_to_tuned(coord: &Coordinator, threads: usize) -> (Duration, usize) {
+    let t0 = Instant::now();
+    let mut waves = 0;
+    loop {
+        waves += 1;
+        let barrier = Arc::new(Barrier::new(threads));
+        let joins: Vec<_> = (0..threads)
+            .map(|_| {
+                let h = coord.handle();
+                let b = barrier.clone();
+                std::thread::spawn(move || {
+                    b.wait();
+                    h.call(KERNEL, inputs()).expect("wave call");
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().expect("wave thread");
+        }
+        if coord.handle().tuned_value(KERNEL, SIZE).expect("tuned_value").is_some() {
+            return (t0.elapsed(), waves);
+        }
+        assert!(waves < 1_000, "coordinator tuning never converged");
+    }
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "== time-to-tuned: serial vs fused exploration rounds \
+         ({VARIANTS} variants, width {WIDTH}{}) ==\n",
+        if smoke { ", smoke" } else { "" }
+    );
+
+    // Series 1: deterministic leader rounds until Phase::Tuned.
+    let serial = rounds_to_tuned_serial();
+    let (fused, counters) = rounds_to_tuned_fused(WIDTH);
+    let ratio = serial as f64 / fused as f64;
+    println!("leader rounds to Phase::Tuned:");
+    println!("  serial dispatch        {serial:4} rounds");
+    println!("  fused  (width {WIDTH})       {fused:4} rounds   ({ratio:.1}x fewer)");
+    println!(
+        "  fused counters: rounds={} calls={} replicated={} rounds_saved={}\n",
+        counters.fused_rounds,
+        counters.fused_calls,
+        counters.replicated_measurements,
+        counters.explore_rounds_saved
+    );
+    assert!(
+        ratio >= 2.0,
+        "fused exploration must reach Tuned in >=2x fewer rounds \
+         (serial {serial}, fused {fused})"
+    );
+
+    // Series 2: wall clock through the live coordinator.
+    let serial_coord = coordinator(1);
+    let (serial_wall, serial_waves) = time_to_tuned(&serial_coord, 1);
+    let fused_coord = coordinator(16);
+    let (fused_wall, fused_waves) = time_to_tuned(&fused_coord, WIDTH);
+    println!("wall time to tuned through the coordinator:");
+    println!(
+        "  1 caller,  max_batch 1   {:8.3}ms  ({serial_waves} waves)",
+        serial_wall.as_secs_f64() * 1e3
+    );
+    println!(
+        "  {WIDTH} callers, max_batch 16  {:8.3}ms  ({fused_waves} waves)",
+        fused_wall.as_secs_f64() * 1e3
+    );
+    let json = fused_coord.handle().stats_json().expect("stats_json");
+    match json.get("fused") {
+        Some(fused) => println!("  stats_json fused counters: {}", fused.to_json()),
+        None => println!("  (no rounds fused through the coordinator this run)"),
+    }
+    if !smoke {
+        // a second fused width for the curve: the saving scales with B
+        let (fused8, _) = rounds_to_tuned_fused(8);
+        println!("\n  fused (width 8)        {fused8:4} rounds");
+    }
+    println!("\ntime_to_tuned done.");
+}

@@ -32,7 +32,7 @@ pub use key::ProblemKey;
 pub use measurement::{EnergyModel, Metric, Rdtsc, WallClock};
 pub use record::{History, TuningReport, VariantRecord};
 pub use search::{Anneal, HillClimb, RandomSearch, SearchStrategy, Sweep};
-pub use state::{Decision, Phase, TuningState, WinnerSnapshot};
+pub use state::{BatchDecision, Decision, Phase, TuningState, WinnerSnapshot};
 
 use crate::util::json::Value;
 

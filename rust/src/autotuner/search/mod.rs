@@ -29,6 +29,23 @@ pub trait SearchStrategy: Send {
     /// Index of the next candidate to measure, or `None` when done.
     /// Must never return a failed candidate's index.
     fn next(&mut self, history: &History) -> Option<usize>;
+
+    /// Up to `max` *distinct* pending candidates for one fused
+    /// exploration round — the measurements come back together via a
+    /// single batch report, so every proposed candidate must be valid
+    /// without seeing the others' costs first. Returning an empty vector
+    /// ends exploration, exactly like `next` returning `None`.
+    ///
+    /// The default is the serial behaviour (at most one candidate), which
+    /// keeps inherently sequential strategies — hill climbing and
+    /// annealing consult the previous measurement before moving — exactly
+    /// correct under fused rounds: their single candidate is replicated
+    /// across the round's co-scheduled calls and the median is reported.
+    /// Order-free strategies (sweep, random) override this to fill the
+    /// round with distinct candidates.
+    fn propose_batch(&mut self, history: &History, _max: usize) -> Vec<usize> {
+        self.next(history).into_iter().collect()
+    }
 }
 
 /// Parse a strategy spec string (CLI/config): `sweep`, `random:K`,

@@ -49,6 +49,26 @@ impl SearchStrategy for RandomSearch {
         }
         Some(alive[self.rng.below(alive.len())])
     }
+
+    fn propose_batch(&mut self, history: &History, max: usize) -> Vec<usize> {
+        // Sampling never consults costs, so a fused round can draw
+        // several distinct candidates at once. A duplicate draw in the
+        // re-measurement phase ends the batch (its budget is returned);
+        // the duplicate's extra samples come from round replication
+        // instead.
+        let mut batch: Vec<usize> = Vec::new();
+        while batch.len() < max.max(1) {
+            match self.next(history) {
+                Some(idx) if !batch.contains(&idx) => batch.push(idx),
+                Some(_duplicate) => {
+                    self.used -= 1;
+                    break;
+                }
+                None => break,
+            }
+        }
+        batch
+    }
 }
 
 #[cfg(test)]

@@ -26,6 +26,14 @@ impl SearchStrategy for Sweep {
         // First untried, non-failed candidate in declaration order.
         history.untried().into_iter().next()
     }
+
+    fn propose_batch(&mut self, history: &History, max: usize) -> Vec<usize> {
+        debug_assert_eq!(history.len(), self.n);
+        // The sweep visits candidates in declaration order and never
+        // consults costs, so a fused round can draw the next `max`
+        // untried candidates in one shot.
+        history.untried().into_iter().take(max.max(1)).collect()
+    }
 }
 
 #[cfg(test)]

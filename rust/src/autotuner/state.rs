@@ -39,6 +39,23 @@ pub enum Decision {
     Failed,
 }
 
+/// What a fused scheduling round should do for a group of co-scheduled
+/// calls of the same problem — the multi-candidate face of [`Decision`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatchDecision {
+    /// Run each listed candidate once (distinct indices, declaration
+    /// order per strategy); report the whole round back through
+    /// [`TuningState::report_batch`]. Surplus co-scheduled calls
+    /// replicate candidates and their median denoises the measurement.
+    Explore(Vec<usize>),
+    /// Tuning finished: recompile winner `i`, then `confirm_finalized`.
+    Finalize(usize),
+    /// Steady state: use tuned winner `i`.
+    Use(usize),
+    /// Every candidate failed; nothing can run.
+    Failed,
+}
+
 /// Publishable snapshot of a tuned problem's winner — what the
 /// coordinator's fast lane needs to publish an immutable `TunedEntry`
 /// without reaching back into mutable tuner state.
@@ -70,8 +87,10 @@ pub struct TuningState {
     strategy: Box<dyn SearchStrategy>,
     phase: Phase,
     winner: Option<usize>,
-    /// Candidate currently awaiting a report (catches protocol misuse).
-    outstanding: Option<usize>,
+    /// Candidates awaiting a report (catches protocol misuse, and lets a
+    /// dropped fused round re-issue its whole batch). Serial callers
+    /// keep at most one entry here.
+    outstanding: Vec<usize>,
 }
 
 impl TuningState {
@@ -79,7 +98,7 @@ impl TuningState {
     pub fn new(values: Vec<i64>, strategy: Box<dyn SearchStrategy>) -> TuningState {
         let history = History::new(&values);
         let phase = if values.is_empty() { Phase::Failed } else { Phase::Exploring };
-        TuningState { values, history, strategy, phase, winner: None, outstanding: None }
+        TuningState { values, history, strategy, phase, winner: None, outstanding: Vec::new() }
     }
 
     /// A state pre-tuned to `winner_idx` — used when importing persisted
@@ -108,60 +127,106 @@ impl TuningState {
             strategy,
             phase: Phase::Finalizing,
             winner: Some(winner_idx),
-            outstanding: None,
+            outstanding: Vec::new(),
         })
     }
 
-    /// Decide what the next call should run.
+    /// Decide what the next call should run (the serial face of
+    /// [`TuningState::decide_batch`] — one candidate per round).
     pub fn decide(&mut self) -> Decision {
+        match self.decide_batch(1) {
+            BatchDecision::Explore(batch) => {
+                Decision::Explore(*batch.first().expect("non-empty explore batch"))
+            }
+            BatchDecision::Finalize(i) => Decision::Finalize(i),
+            BatchDecision::Use(i) => Decision::Use(i),
+            BatchDecision::Failed => Decision::Failed,
+        }
+    }
+
+    /// Decide what one fused scheduling round of up to `max` co-scheduled
+    /// calls should run. While exploring, draws up to `max` distinct
+    /// pending candidates from the strategy in one shot and marks them
+    /// all outstanding; the round reports them back together via
+    /// [`TuningState::report_batch`]. A round that was dropped before
+    /// reporting is re-issued wholesale on the next decision.
+    pub fn decide_batch(&mut self, max: usize) -> BatchDecision {
         match self.phase {
             Phase::Exploring => {
-                if let Some(idx) = self.outstanding {
-                    // A previous Explore was never reported (e.g. the
-                    // caller dropped the call). Re-issue it.
-                    return Decision::Explore(idx);
+                if !self.outstanding.is_empty() {
+                    // A previous round was never reported (e.g. the
+                    // caller dropped the calls). Re-issue it.
+                    return BatchDecision::Explore(self.outstanding.clone());
                 }
-                match self.strategy.next(&self.history) {
-                    Some(idx) => {
-                        debug_assert!(idx < self.values.len(), "strategy oob");
-                        self.outstanding = Some(idx);
-                        Decision::Explore(idx)
+                let mut batch = self.strategy.propose_batch(&self.history, max.max(1));
+                batch.truncate(max.max(1));
+                // Defensive dedup: a duplicate would leave a phantom
+                // outstanding entry after its single report.
+                let mut seen = Vec::with_capacity(batch.len());
+                batch.retain(|&i| {
+                    let fresh = !seen.contains(&i);
+                    if fresh {
+                        seen.push(i);
                     }
-                    None => match self.history.best_index() {
+                    fresh
+                });
+                debug_assert!(
+                    batch.iter().all(|&i| i < self.values.len()),
+                    "strategy oob"
+                );
+                if batch.is_empty() {
+                    match self.history.best_index() {
                         Some(best) => {
                             self.phase = Phase::Finalizing;
                             self.winner = Some(best);
-                            Decision::Finalize(best)
+                            BatchDecision::Finalize(best)
                         }
                         None => {
                             // Nothing runnable: strategy exhausted with no
                             // surviving measurement.
                             self.phase = Phase::Failed;
-                            Decision::Failed
+                            BatchDecision::Failed
                         }
-                    },
+                    }
+                } else {
+                    self.outstanding = batch.clone();
+                    BatchDecision::Explore(batch)
                 }
             }
-            Phase::Finalizing => Decision::Finalize(self.winner.expect("finalizing has winner")),
-            Phase::Tuned => Decision::Use(self.winner.expect("tuned has winner")),
-            Phase::Failed => Decision::Failed,
+            Phase::Finalizing => {
+                BatchDecision::Finalize(self.winner.expect("finalizing has winner"))
+            }
+            Phase::Tuned => BatchDecision::Use(self.winner.expect("tuned has winner")),
+            Phase::Failed => BatchDecision::Failed,
         }
     }
 
     /// Report a successful measurement for an explored candidate.
     pub fn report(&mut self, idx: usize, cost: f64) {
-        debug_assert_eq!(self.outstanding, Some(idx), "report for unexpected candidate");
-        self.outstanding = None;
+        debug_assert!(self.outstanding.contains(&idx), "report for unexpected candidate");
+        self.outstanding.retain(|&i| i != idx);
         self.history.record(idx, cost);
+    }
+
+    /// Report one fused round's results in a single batch: `Some(cost)`
+    /// records a (replica-denoised) measurement, `None` marks the
+    /// candidate failed. Candidates of the round that got no attempt
+    /// (more proposals than co-scheduled calls) stay outstanding and are
+    /// re-issued by the next decision.
+    pub fn report_batch(&mut self, results: &[(usize, Option<f64>)]) {
+        for &(idx, cost) in results {
+            match cost {
+                Some(cost) => self.report(idx, cost),
+                None => self.report_failure(idx),
+            }
+        }
     }
 
     /// Report that a candidate failed to compile or execute; it is
     /// excluded and tuning continues with the rest (failure injection
     /// tests drive this path).
     pub fn report_failure(&mut self, idx: usize) {
-        if self.outstanding == Some(idx) {
-            self.outstanding = None;
-        }
+        self.outstanding.retain(|&i| i != idx);
         self.history.mark_failed(idx);
         // A winner that fails its final compilation is demoted and the
         // tuner re-selects among the remaining candidates.
@@ -381,6 +446,65 @@ mod tests {
         drive(&mut st, &[3.0, 1.0, 2.0], 4); // 3 explores + finalize
         assert_eq!(st.winner_snapshot(), Some(WinnerSnapshot { index: 1, value: 4 }));
         assert_eq!(st.values(), &[2, 4, 8]);
+    }
+
+    #[test]
+    fn batch_sweep_explores_all_candidates_in_one_round() {
+        let mut st = sweep_state(&[2, 4, 8]);
+        match st.decide_batch(4) {
+            BatchDecision::Explore(batch) => {
+                assert_eq!(batch, vec![0, 1, 2]);
+                st.report_batch(&[(0, Some(3.0)), (1, Some(1.0)), (2, Some(2.0))]);
+            }
+            d => panic!("{d:?}"),
+        }
+        // strategy exhausted: the very next decision finalizes
+        assert_eq!(st.decide_batch(4), BatchDecision::Finalize(1));
+        st.confirm_finalized(1);
+        assert_eq!(st.tuned_value(), Some(4));
+    }
+
+    #[test]
+    fn dropped_batch_round_is_reissued() {
+        let mut st = sweep_state(&[1, 2, 3, 4]);
+        let first = st.decide_batch(3);
+        let second = st.decide_batch(3); // round dropped before reporting
+        assert_eq!(first, second);
+        // a serial decision after a dropped batch re-issues its head
+        match (first, st.decide()) {
+            (BatchDecision::Explore(batch), Decision::Explore(i)) => assert_eq!(i, batch[0]),
+            (a, b) => panic!("{a:?} / {b:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_failure_reports_exclude_candidates() {
+        let mut st = sweep_state(&[1, 2, 3]);
+        match st.decide_batch(3) {
+            BatchDecision::Explore(batch) => {
+                assert_eq!(batch.len(), 3);
+                st.report_batch(&[(0, Some(2.0)), (1, None), (2, Some(1.0))]);
+            }
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(st.decide_batch(3), BatchDecision::Finalize(2));
+        st.confirm_finalized(2);
+        assert_eq!(st.tuned_value(), Some(3), "failed candidate cannot win");
+    }
+
+    #[test]
+    fn partial_batch_report_keeps_rest_outstanding() {
+        // 4 proposals, but only 2 measured (fewer co-scheduled calls than
+        // candidates): the unreported pair must be re-issued.
+        let mut st = sweep_state(&[1, 2, 3, 4]);
+        match st.decide_batch(4) {
+            BatchDecision::Explore(batch) => {
+                assert_eq!(batch, vec![0, 1, 2, 3]);
+                st.report_batch(&[(0, Some(2.0)), (1, Some(1.0))]);
+            }
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(st.decide_batch(4), BatchDecision::Explore(vec![2, 3]));
     }
 
     #[test]

@@ -4,7 +4,9 @@ use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::autotuner::{Autotuner, Decision, Metric, Phase, ProblemKey, WallClock};
+use crate::autotuner::{
+    Autotuner, BatchDecision, Decision, Metric, Phase, ProblemKey, WallClock,
+};
 use crate::error::{Error, Result};
 use crate::hub::{HubClient, HubEntry};
 use crate::manifest::Variant;
@@ -520,6 +522,259 @@ impl Dispatcher {
                         self.publish_winner(hash, slot);
                     }
                     return Ok(outcome);
+                }
+            }
+        }
+    }
+
+    /// Dispatch one scheduling round of co-scheduled calls for `kernel`
+    /// in a single batch, returning one result per call in input order.
+    ///
+    /// Calls are partitioned by tuning problem (same kernel name, but the
+    /// argument signature still separates problems). For a problem in
+    /// `Phase::Exploring`, the group becomes a **fused exploration
+    /// round**: multiple pending candidates are drawn from the search
+    /// strategy in one shot (`propose_batch`), the group's calls execute
+    /// back-to-back on the warmed engine — one call per candidate, each
+    /// candidate compiled once; surplus calls replicate a candidate and
+    /// the replicas' *median* is what the tuner records, denoising the
+    /// measurement — and the whole round reports to the tuning state as
+    /// one batch. When the strategy converges mid-round, the winner is
+    /// finalized *within the round*, so the next caller already hits the
+    /// fast lane. With B co-scheduled callers, a sweep over V variants
+    /// therefore reaches `Phase::Tuned` in ~V/B leader rounds instead of
+    /// V (see `benches/time_to_tuned.rs`).
+    ///
+    /// **Failure isolation.** A candidate that fails mid-round is
+    /// excluded from tuning (exactly like the serial path) and only the
+    /// call(s) assigned to it observe the error — round-mates' calls
+    /// succeed untouched. Serial single-call groups keep the serial
+    /// retry-next-candidate contract byte-for-byte: they route through
+    /// [`Dispatcher::call`].
+    pub fn call_batch(
+        &mut self,
+        kernel: &str,
+        batch: Vec<Vec<HostTensor>>,
+    ) -> Vec<Result<CallOutcome>> {
+        let mut results: Vec<Option<Result<CallOutcome>>> =
+            (0..batch.len()).map(|_| None).collect();
+        // Partition by tuning problem (plan identity): same-kernel calls
+        // with different signatures are different problems.
+        let mut groups: Vec<((u64, usize), Vec<usize>)> = Vec::new();
+        for (i, inputs) in batch.iter().enumerate() {
+            match self.plan_slot(kernel, inputs) {
+                Ok(id) => match groups.iter_mut().find(|(g, _)| *g == id) {
+                    Some((_, members)) => members.push(i),
+                    None => groups.push((id, vec![i])),
+                },
+                Err(e) => results[i] = Some(Err(e)),
+            }
+        }
+        for ((hash, slot), members) in groups {
+            if members.len() == 1 {
+                // Lone call: the serial path, unchanged (incl. its
+                // retry-on-candidate-failure loop).
+                let i = members[0];
+                results[i] = Some(self.call(kernel, &batch[i]));
+                continue;
+            }
+            let decision = {
+                let plan = &self.plans[&hash][slot];
+                self.tuner.state(&plan.key, &plan.values).decide_batch(members.len())
+            };
+            match decision {
+                BatchDecision::Explore(candidates) => {
+                    self.fused_explore(
+                        kernel,
+                        hash,
+                        slot,
+                        &members,
+                        &candidates,
+                        &batch,
+                        &mut results,
+                    );
+                }
+                // Finalize/Use/Failed: each call takes the serial path —
+                // finalization happens once, the rest ride the cache.
+                _ => {
+                    for i in members {
+                        results[i] = Some(self.call(kernel, &batch[i]));
+                    }
+                }
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every call in the round resolved"))
+            .collect()
+    }
+
+    /// One fused exploration round: execute `candidates` across the
+    /// group's calls (candidate-major, compile once per candidate, evict
+    /// after — tuning iterations never populate the instantiation
+    /// cache), then report every measurement to the tuning state in a
+    /// single batch and finalize in-round if the strategy converged.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_explore(
+        &mut self,
+        kernel: &str,
+        hash: u64,
+        slot: usize,
+        members: &[usize],
+        candidates: &[usize],
+        batch: &[Vec<HostTensor>],
+        results: &mut [Option<Result<CallOutcome>>],
+    ) {
+        let (key, problem_idx) = {
+            let plan = &self.plans[&hash][slot];
+            (plan.key.clone(), plan.problem_idx)
+        };
+        let group = members.len();
+        // More proposals than calls: the tail stays outstanding and is
+        // re-issued next round (report_batch never hears about it).
+        let active = candidates.len().min(group);
+        let mut reports: Vec<(usize, Option<f64>)> = Vec::with_capacity(active);
+        let mut failed_ids: Vec<String> = Vec::new();
+        for (pos, &cand) in candidates[..active].iter().enumerate() {
+            let variant =
+                self.registry.manifest().problems[problem_idx].variants[cand].clone();
+            // Calls assigned to this candidate: one "owner" plus any
+            // surplus replicas (round-robin by position in the group).
+            let assigned: Vec<usize> = members
+                .iter()
+                .enumerate()
+                .filter(|(j, _)| j % active == pos)
+                .map(|(_, &i)| i)
+                .collect();
+            let mut samples: Vec<f64> = Vec::with_capacity(assigned.len());
+            let mut fail: Option<String> = None;
+            for &i in &assigned {
+                let call_t0 = Instant::now();
+                if let Some(msg) = &fail {
+                    // The candidate already failed this round: its
+                    // replicas fail fast with the same cause instead of
+                    // re-running a known-dead variant.
+                    results[i] = Some(Err(Error::Autotune(format!(
+                        "fused round: candidate {} failed: {msg}",
+                        variant.id
+                    ))));
+                    continue;
+                }
+                let executed = {
+                    let manifest = self.registry.manifest();
+                    match self.cache.get_or_compile(manifest, &variant) {
+                        Ok((exe, compiled)) => {
+                            let begin = self.metric.begin();
+                            match exe.execute(&batch[i]) {
+                                Ok(output) => {
+                                    let cost = self.metric.end(begin);
+                                    Ok((output, cost, compiled))
+                                }
+                                Err(e) => Err(e),
+                            }
+                        }
+                        Err(e) => Err(e),
+                    }
+                };
+                match executed {
+                    Ok((output, cost, compiled)) => {
+                        samples.push(cost);
+                        self.stats.explored(kernel, call_t0.elapsed());
+                        results[i] = Some(Ok(CallOutcome {
+                            output,
+                            variant_id: variant.id.clone(),
+                            value: variant.value,
+                            route: CallRoute::Explored,
+                            compiled,
+                            exec_cost: cost,
+                            total: call_t0.elapsed(),
+                        }));
+                    }
+                    Err(e) => {
+                        log::warn!(
+                            "variant {} failed during fused tuning: {e}",
+                            variant.id
+                        );
+                        self.stats.failure(kernel);
+                        fail = Some(e.to_string());
+                        results[i] = Some(Err(e));
+                    }
+                }
+            }
+            self.cache.evict(&variant.id);
+            // Any execution failure excludes the candidate — exactly the
+            // serial contract, and independent of whether a successful
+            // replica happened to run before the failing one.
+            if fail.is_some() || samples.is_empty() {
+                failed_ids.push(variant.id.clone());
+                reports.push((cand, None));
+            } else {
+                // Replicas collapse to their median (NaN-safe linear-
+                // interpolation percentile, shared with the bench stats).
+                reports.push((cand, Some(crate::util::stats::percentile(&samples, 50.0))));
+            }
+        }
+        // One batch report for the whole round.
+        self.tuner.state(&key, &[]).report_batch(&reports);
+        if !failed_ids.is_empty() {
+            // Parity with the serial candidate-failure path: unpublish
+            // anything the dead variants might still be serving.
+            let plan = &self.plans[&hash][slot];
+            if let Some(lane) = &self.fast_lane {
+                lane.invalidate(&plan.kernel, &plan.input_shapes);
+            }
+            if let Some(pool) = &self.pool {
+                pool.evict(&failed_ids);
+            }
+        }
+        // Rounds saved vs serial dispatch: `active` distinct candidates
+        // measured in one round instead of `active` serial explore
+        // rounds. Replicas save nothing (serially they would have been
+        // steady-state calls, not extra explores); the in-round finalize
+        // below accounts for its own saved round.
+        self.stats.fused_round(
+            group as u64,
+            group.saturating_sub(active) as u64,
+            active.saturating_sub(1) as u64,
+        );
+        // In-round finalization: the batch report may have exhausted the
+        // strategy — finish tuning now so the *next* caller already hits
+        // the published winner instead of paying a finalize round. The
+        // probe is batch-width: when the strategy has candidates left it
+        // pre-draws the next round's full batch (marked outstanding and
+        // re-issued wholesale), never throttling the next round to one
+        // candidate.
+        let probe = self.tuner.state(&key, &[]).decide_batch(group);
+        if let BatchDecision::Finalize(winner) = probe {
+            let (variant, all_ids) = {
+                let problem = &self.registry.manifest().problems[problem_idx];
+                let all_ids: Vec<String> =
+                    problem.variants.iter().map(|v| v.id.clone()).collect();
+                (problem.variants[winner].clone(), all_ids)
+            };
+            let inputs = &batch[*members.last().expect("non-empty group")];
+            match self.finalize(&variant, &all_ids, inputs, Instant::now()) {
+                Ok(outcome) => {
+                    self.tuner.state(&key, &[]).confirm_finalized(winner);
+                    self.publish_winner(hash, slot);
+                    self.hub_publish(hash, slot);
+                    // Accounted in the fused counters only: per-kernel
+                    // explored/finalized/tuned counters stay one-tick ==
+                    // one-served-call, so lane accounting (leader calls +
+                    // lane hits == calls submitted) keeps holding.
+                    self.stats.fused_inround_finalize();
+                    log::info!(
+                        "{key} tuned in-round: value={} ({})",
+                        outcome.value,
+                        outcome.variant_id
+                    );
+                }
+                Err(e) => {
+                    // Demote and let the next caller drive the rematch —
+                    // exactly the serial finalize-failure contract.
+                    log::warn!("winner {} failed in-round finalization: {e}", variant.id);
+                    self.stats.failure(kernel);
+                    self.candidate_failed(hash, slot, winner);
                 }
             }
         }
@@ -1265,6 +1520,99 @@ mod tests {
         assert_eq!(held.len(), 1);
         assert_eq!((held[0].winner_value, held[0].version), (2, 1));
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fused_batch_explores_finalizes_in_round_and_counts() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        let mut d = dispatcher(spec);
+        let lane = Arc::new(FastLane::new());
+        d.set_fast_lane(lane.clone());
+        // 4 co-scheduled calls, 2 candidates: both explored in one round,
+        // each with one surplus replica; the sweep converges and the
+        // winner finalizes *within* the round.
+        let round: Vec<Vec<HostTensor>> = (0..4).map(|_| inputs8()).collect();
+        let results = d.call_batch("k", round);
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            let o = r.as_ref().expect("fused explores succeed");
+            assert_eq!(o.route, CallRoute::Explored);
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(2), "finalized in-round");
+        assert!(lane.lookup("k", &inputs8()).is_some(), "winner published in-round");
+        let f = d.stats().fused();
+        assert_eq!(f.fused_rounds, 1);
+        assert_eq!(f.fused_calls, 4);
+        assert_eq!(f.replicated_measurements, 2);
+        // serial dispatch reaches Tuned in 3 rounds (explore, explore,
+        // finalize); the fused round does it in 1 — 2 rounds saved
+        assert_eq!(f.explore_rounds_saved, 2);
+        // each candidate compiled exactly once despite the replicas, and
+        // the tuner saw exactly one (median) sample per candidate
+        assert_eq!(d.cache_stats().misses, 3, "2 explores + 1 finalize compile");
+        let st = d.stats().kernel("k").unwrap();
+        // the in-round finalize has no caller: per-kernel counters stay
+        // call-aligned (explored only), the fused counters carry the save
+        assert_eq!((st.explored, st.finalized), (4, 0));
+        // the next round is pure steady state
+        let next = d.call_batch("k", vec![inputs8(), inputs8()]);
+        for r in next {
+            assert_eq!(r.unwrap().route, CallRoute::Tuned);
+        }
+    }
+
+    #[test]
+    fn fused_candidate_failure_only_fails_its_callers() {
+        // b fails at execution: in a fused round of 4 (2 candidates × 2
+        // replicas) exactly the two calls assigned to b error; a's calls
+        // succeed, and the round still converges to a as the winner.
+        let mut spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(600))
+            .with_cost("k.b.n8", Duration::from_micros(60));
+        spec.fail_execute.insert("k.b.n8".into());
+        let mut d = dispatcher(spec);
+        let round: Vec<Vec<HostTensor>> = (0..4).map(|_| inputs8()).collect();
+        let results = d.call_batch("k", round);
+        let (ok, err): (Vec<_>, Vec<_>) = results.iter().partition(|r| r.is_ok());
+        assert_eq!(ok.len(), 2, "round-mates unaffected");
+        assert_eq!(err.len(), 2, "only the failed candidate's callers error");
+        for r in ok {
+            assert_eq!(r.as_ref().unwrap().variant_id, "k.a.n8");
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(1), "failed variant excluded in-round");
+        assert_eq!(d.stats().total_failures(), 1, "replicas fail fast, counted once");
+    }
+
+    #[test]
+    fn fused_batch_median_denoises_replicas() {
+        // single-variant problem at n16: a fused round of 3 replicates
+        // one candidate three times and reports exactly one sample (the
+        // median) to the tuning state.
+        let spec = MockSpec::default().with_cost("k.a.n16", Duration::from_micros(200));
+        let mut d = dispatcher(spec);
+        let round: Vec<Vec<HostTensor>> =
+            (0..3).map(|_| vec![HostTensor::zeros(&[16, 16])]).collect();
+        let results = d.call_batch("k", round);
+        assert!(results.iter().all(Result::is_ok));
+        assert_eq!(d.tuned_value("k", 16), Some(1));
+        let report = d.tuning_report();
+        let (_, problem) = report
+            .as_obj()
+            .unwrap()
+            .iter()
+            .find(|(k, _)| k.contains("16"))
+            .expect("n16 problem reported")
+            .clone();
+        let variants = problem.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(
+            variants[0].get("samples").unwrap().as_i64(),
+            Some(1),
+            "3 replicas collapse to one denoised sample"
+        );
+        let f = d.stats().fused();
+        assert_eq!(f.replicated_measurements, 2);
     }
 
     #[test]

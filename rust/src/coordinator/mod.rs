@@ -44,6 +44,45 @@
 //!   thread. Lane selection is per entry: shared handle if the engine
 //!   offers one, pool route otherwise, leader if neither.
 //!
+//! # Fused exploration rounds
+//!
+//! The leader drains its queue in *scheduling rounds* of up to
+//! [`server::BatchOptions::max_batch`] requests. Rounds used to be
+//! merely observed (queue-depth stats); now they are exploited:
+//!
+//! * Cheap control requests (tuned-value probes, stats, hub pulls,
+//!   state saves) are answered **before** any kernel call in the round,
+//!   so a slow explore measurement never delays introspection replies
+//!   queued behind it.
+//! * Same-problem calls dispatch as one batch
+//!   ([`Dispatcher::call_batch`]). For a problem still in
+//!   `Phase::Exploring`, the search strategy proposes *multiple*
+//!   pending candidates in one shot
+//!   (`SearchStrategy::propose_batch` — the paper's in-order sweep and
+//!   random search fill the round; sequential heuristics like hill
+//!   climbing and annealing keep proposing one), the candidates execute
+//!   back-to-back on the warmed engine (compiled once each), and the
+//!   whole round reports to the tuning state as a single batch. When
+//!   the strategy converges mid-round, the winner is finalized *within
+//!   the round* — the next caller already hits the fast lane.
+//! * **Replicate-median denoising:** surplus co-scheduled calls (more
+//!   callers than pending candidates) re-run a round-mate's candidate,
+//!   and the tuner records the replicas' *median* — repeated
+//!   observations amortize measurement noise exactly where the
+//!   measurement matters, at selection time.
+//! * **Failure isolation:** a candidate failing mid-round is excluded
+//!   from tuning (as in serial mode) and only its assigned caller(s)
+//!   observe the error; round-mates' calls succeed. Lone calls keep the
+//!   serial retry-next-candidate contract unchanged.
+//!
+//! With B co-scheduled callers a sweep over V variants reaches
+//! `Phase::Tuned` in ~V/B leader rounds instead of V, so `max_batch`
+//! directly bounds time-to-tuned under concurrency — the
+//! `benches/time_to_tuned.rs` headline. The saving is accounted in
+//! [`CoordStats`] (`fused_rounds`, `fused_calls`,
+//! `replicated_measurements`, `explore_rounds_saved`, exported under
+//! `"fused"` in `stats_json()`).
+//!
 //! **Publication protocol.** Publish happens on `confirm_finalized`
 //! (plus a lazy self-heal on leader-lane tuned calls, covering warm
 //! starts and lanes attached late). Invalidation happens on retune, on a
@@ -138,7 +177,7 @@ pub use fastlane::{FastLane, Publication};
 pub use pool::{PoolOptions, PoolSnapshot, WorkerPool, WorkerSnapshot};
 pub use registry::KernelRegistry;
 pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
-pub use stats::{CoordStats, DriftEvent, HubStats, KernelStats};
+pub use stats::{CoordStats, DriftEvent, FusedStats, HubStats, KernelStats};
 
 /// Poison-tolerant mutex lock shared by the coordinator's modules: a
 /// panicked recorder must not take the stats/monitor state down with it.

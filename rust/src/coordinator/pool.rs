@@ -17,11 +17,18 @@
 //!   thread pinning — but exploration and measurement stay exclusively
 //!   on the leader, preserving the paper's "compilation protected by a
 //!   mutex" guarantee for everything that *tunes*.
-//! * **Sharded MPMC queue.** Tuned calls are pushed onto per-worker
-//!   shards (round-robin, bounded by `queue_depth`, blocking for
-//!   backpressure when every ready shard is full) and each worker drains
-//!   its own shard — callers contend only on one shard mutex per call,
-//!   never on a global queue.
+//! * **Sharded MPMC queue with work stealing.** Tuned calls are pushed
+//!   onto per-worker shards (round-robin, bounded by `queue_depth`,
+//!   blocking for backpressure when every ready shard is full) and each
+//!   worker drains its own shard — callers contend only on one shard
+//!   mutex per call, never on a global queue. An idle worker steals one
+//!   exec job from a sibling's shard before parking on its own queue
+//!   (re-checking on a bounded poll while parked), so a slow job on one
+//!   worker cannot strand its queued followers while the rest of the
+//!   pool sits idle. Control jobs — installs, evicts — are owner-only
+//!   and never stolen, and a worker only steals variants it is routed
+//!   for (its own install compile succeeded); steals are counted per
+//!   worker in `stats_json()`.
 //! * **Fault containment.** A worker whose compile fails at replicated
 //!   finalization is excluded from that variant's routing; if *no*
 //!   worker can compile, the install is memoized as failed and the
@@ -156,6 +163,7 @@ struct WorkerSlot {
     exec_nanos: AtomicU64,
     errors: AtomicU64,
     compiles: AtomicU64,
+    steals: AtomicU64,
     alive: AtomicBool,
 }
 
@@ -166,6 +174,7 @@ impl WorkerSlot {
             exec_nanos: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             compiles: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
             alive: AtomicBool::new(true),
         }
     }
@@ -180,6 +189,8 @@ pub struct WorkerSnapshot {
     pub errors: u64,
     /// Compilations performed (install broadcasts + lazy recompiles).
     pub compiles: u64,
+    /// Jobs this worker stole from a sibling's shard while idle.
+    pub steals: u64,
     /// Mean execution latency in seconds (0 when idle so far).
     pub mean_exec_s: f64,
     /// Whether the worker thread is still serving.
@@ -462,6 +473,7 @@ impl WorkerPool {
                     executed,
                     errors: w.errors.load(Ordering::Relaxed),
                     compiles: w.compiles.load(Ordering::Relaxed),
+                    steals: w.steals.load(Ordering::Relaxed),
                     mean_exec_s: if executed > 0 {
                         nanos as f64 / 1e9 / executed as f64
                     } else {
@@ -491,6 +503,7 @@ impl WorkerPool {
                     ("executed".into(), n(w.executed as f64)),
                     ("errors".into(), n(w.errors as f64)),
                     ("compiles".into(), n(w.compiles as f64)),
+                    ("steals".into(), n(w.steals as f64)),
                     ("mean_exec_s".into(), n(w.mean_exec_s)),
                     ("alive".into(), Value::Bool(w.alive)),
                 ])
@@ -519,10 +532,11 @@ impl WorkerPool {
         );
         for (idx, w) in snap.workers.iter().enumerate() {
             out.push_str(&format!(
-                "  worker {idx}: executed={} errors={} compiles={} mean={:.3}ms{}\n",
+                "  worker {idx}: executed={} errors={} compiles={} steals={} mean={:.3}ms{}\n",
                 w.executed,
                 w.errors,
                 w.compiles,
+                w.steals,
                 w.mean_exec_s * 1e3,
                 if w.alive { "" } else { " (dead)" }
             ));
@@ -647,19 +661,90 @@ impl WorkerPool {
     /// Worker-side blocking pop: drains the shard even after shutdown
     /// (graceful stop serves queued work), returns `None` once the shard
     /// is empty *and* shutdown was requested.
+    ///
+    /// Work stealing: a worker whose own shard is empty steals one exec
+    /// job from a sibling's shard *before* parking on its own queue —
+    /// an idle worker must not sit parked while a slow sibling's shard
+    /// backs up. Only [`Job::Exec`] is stealable (installs compile into a
+    /// specific worker's private cache and evicts clear it — both are
+    /// owner-only), only from the shard's front (a sibling's control
+    /// ordering is never overtaken), and only for variants this worker is
+    /// *routed* for — a worker outside the variant's ready set would just
+    /// error a job a capable sibling could serve. A stolen variant
+    /// missing from the stealer's cache lazily recompiles from the
+    /// install spec, exactly like a post-respawn cache miss.
+    ///
+    /// A job landing on a busy sibling's shard signals only that shard's
+    /// condvar, so a multi-worker park uses a bounded wait and re-runs
+    /// the steal pass on timeout: a stranded job waits at most one poll
+    /// interval, never the sibling's whole in-flight job. The poll backs
+    /// off exponentially (1ms → 50ms) while nothing turns up, so a
+    /// hot-idle pool wakes each worker ~20x/s instead of 1000x/s; a push
+    /// to the worker's own shard still wakes it immediately.
     fn pop(&self, idx: usize) -> Option<Job> {
-        let shard = &self.shards[idx];
-        let mut q = mutex_lock(&shard.queue);
+        let mut poll = Duration::from_millis(1);
         loop {
-            if let Some(job) = q.pop_front() {
-                shard.not_full.notify_one();
+            {
+                let shard = &self.shards[idx];
+                let mut q = mutex_lock(&shard.queue);
+                if let Some(job) = q.pop_front() {
+                    shard.not_full.notify_one();
+                    return Some(job);
+                }
+                if self.shutdown.load(Ordering::SeqCst) {
+                    return None;
+                }
+            }
+            // Own shard empty: one steal pass over the siblings before
+            // parking. (After shutdown the stop protocol has every
+            // worker drain only its own shard; the loop above exits.)
+            if let Some(job) = self.steal_from_sibling(idx) {
+                self.workers[idx].steals.fetch_add(1, Ordering::Relaxed);
                 return Some(job);
             }
-            if self.shutdown.load(Ordering::SeqCst) {
-                return None;
+            let shard = &self.shards[idx];
+            let q = mutex_lock(&shard.queue);
+            if !q.is_empty() || self.shutdown.load(Ordering::SeqCst) {
+                continue; // re-check holding nothing stale
             }
-            q = shard.not_empty.wait(q).unwrap_or_else(|e| e.into_inner());
+            if self.shards.len() > 1 {
+                let _ = shard
+                    .not_empty
+                    .wait_timeout(q, poll)
+                    .unwrap_or_else(|e| e.into_inner());
+                poll = (poll * 2).min(Duration::from_millis(50));
+            } else {
+                // single worker: nothing to steal, park indefinitely
+                let _ = shard.not_empty.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
         }
+    }
+
+    /// Try to steal one queued exec job from a sibling's shard (front
+    /// only; control jobs are never stolen; the variant must route to
+    /// this worker). Unblocks the victim's backpressure waiters on
+    /// success. Lock order: shard lock, then a `routes` read — safe
+    /// because no path holds the `routes` write lock while acquiring a
+    /// shard lock.
+    fn steal_from_sibling(&self, idx: usize) -> Option<Job> {
+        let n = self.shards.len();
+        for offset in 1..n {
+            let victim = (idx + offset) % n;
+            let shard = &self.shards[victim];
+            let mut q = mutex_lock(&shard.queue);
+            let stealable = match q.front() {
+                Some(Job::Exec { variant_id, .. }) => read_lock(&self.routes)
+                    .get(variant_id)
+                    .is_some_and(|route| route.ready.contains(&idx)),
+                _ => false,
+            };
+            if stealable {
+                let job = q.pop_front();
+                shard.not_full.notify_one();
+                return job;
+            }
+        }
+        None
     }
 
     /// Death path: drop every queued job in the worker's shard so their

@@ -59,6 +59,51 @@ enum Request {
     Shutdown,
 }
 
+/// One deferred kernel call awaiting fused dispatch: (kernel, inputs,
+/// reply).
+type CallItem = (String, Vec<HostTensor>, mpsc::SyncSender<Result<CallOutcome>>);
+
+/// Round requests that must keep their arrival order relative to each
+/// other: kernel calls, and retunes (which mutate tuner state, so they
+/// must not overtake a call queued before them — unlike the cheap
+/// control requests, which answer first).
+enum Deferred {
+    Call(String, Vec<HostTensor>, mpsc::SyncSender<Result<CallOutcome>>),
+    Retune {
+        kernel: String,
+        size: i64,
+        reply: mpsc::SyncSender<Result<bool>>,
+    },
+}
+
+/// Dispatch a run of deferred calls as fused same-kernel batches and
+/// route each reply to its caller; clears the run.
+fn flush_call_run(dispatcher: &mut Dispatcher, depth: usize, run: &mut Vec<CallItem>) {
+    if run.is_empty() {
+        return;
+    }
+    let mut groups: Vec<(
+        String,
+        Vec<(Vec<HostTensor>, mpsc::SyncSender<Result<CallOutcome>>)>,
+    )> = Vec::new();
+    for (kernel, inputs, reply) in run.drain(..) {
+        match groups.iter_mut().find(|(k, _)| *k == kernel) {
+            Some((_, members)) => members.push((inputs, reply)),
+            None => groups.push((kernel, vec![(inputs, reply)])),
+        }
+    }
+    for (kernel, members) in groups {
+        let (inputs, replies): (Vec<_>, Vec<_>) = members.into_iter().unzip();
+        for _ in 0..inputs.len() {
+            dispatcher.stats_mut().enqueue_round(depth);
+        }
+        let results = dispatcher.call_batch(&kernel, inputs);
+        for (result, reply) in results.into_iter().zip(replies) {
+            let _ = reply.send(result);
+        }
+    }
+}
+
 /// Cloneable, `Send` handle for submitting kernel calls to the leader —
 /// or executing them directly when the tuned fast lane has a published
 /// winner for the problem.
@@ -192,8 +237,12 @@ impl CoordinatorHandle {
 #[derive(Debug, Clone, Copy)]
 pub struct BatchOptions {
     /// Maximum requests drained from the queue per scheduling round.
-    /// Draining lets the leader observe queue depth (admission stats)
-    /// and keeps reply latency fair under burst load.
+    /// Draining lets the leader observe queue depth (admission stats),
+    /// keeps reply latency fair under burst load, and — since rounds
+    /// dispatch as fused batches — bounds how many co-scheduled
+    /// exploration candidates one round can measure: with B callers
+    /// co-scheduled (`max_batch ≥ B`), a sweep over V variants reaches
+    /// `Phase::Tuned` in ~V/B leader rounds instead of V.
     pub max_batch: usize,
 }
 
@@ -450,18 +499,27 @@ impl Coordinator {
                         }
                     }
                     let depth = round.len();
+                    // Reorder within the round: cheap read-ish control
+                    // requests (tuned-value probes, stats, hub pulls,
+                    // state saves) answer *before* any kernel call, so a
+                    // slow explore measurement queued ahead of them never
+                    // delays introspection replies. Calls — and Retunes,
+                    // which mutate tuner state and must not overtake a
+                    // call queued before them — keep their arrival order:
+                    // runs of same-kernel calls dispatch as fused
+                    // batches, flushed around each Retune.
+                    let mut calls: Vec<Deferred> = Vec::new();
+                    let mut shutdown = false;
                     for req in round {
                         match req {
                             Request::Call { kernel, inputs, reply } => {
-                                dispatcher.stats_mut().enqueue_round(depth);
-                                let result = dispatcher.call(&kernel, &inputs);
-                                let _ = reply.send(result);
+                                calls.push(Deferred::Call(kernel, inputs, reply));
                             }
                             Request::TunedValue { kernel, size, reply } => {
                                 let _ = reply.send(dispatcher.tuned_value(&kernel, size));
                             }
                             Request::Retune { kernel, size, reply } => {
-                                let _ = reply.send(dispatcher.retune(&kernel, size));
+                                calls.push(Deferred::Retune { kernel, size, reply });
                             }
                             Request::Stats { reply } => {
                                 let lane_render =
@@ -495,6 +553,12 @@ impl Coordinator {
                                 if dispatcher.hub_active() {
                                     obj.push(("hub".to_string(), dispatcher.stats().hub_json()));
                                 }
+                                if dispatcher.stats().fused().fused_rounds > 0 {
+                                    obj.push((
+                                        "fused".to_string(),
+                                        dispatcher.stats().fused_json(),
+                                    ));
+                                }
                                 let _ = reply.send(Value::Obj(obj));
                             }
                             Request::HubPull { reply } => {
@@ -503,8 +567,30 @@ impl Coordinator {
                             Request::SaveState { path, reply } => {
                                 let _ = reply.send(dispatcher.save_state(&path));
                             }
-                            Request::Shutdown => break 'serve,
+                            Request::Shutdown => shutdown = true,
                         }
+                    }
+                    // Fused dispatch: runs of same-kernel calls go down
+                    // as single batches — co-scheduled exploration
+                    // candidates execute back-to-back and report together
+                    // (see `Dispatcher::call_batch`). Reply routing stays
+                    // per caller; a Retune flushes the calls queued
+                    // before it, then applies.
+                    let mut run: Vec<CallItem> = Vec::new();
+                    for item in calls {
+                        match item {
+                            Deferred::Call(kernel, inputs, reply) => {
+                                run.push((kernel, inputs, reply));
+                            }
+                            Deferred::Retune { kernel, size, reply } => {
+                                flush_call_run(&mut dispatcher, depth, &mut run);
+                                let _ = reply.send(dispatcher.retune(&kernel, size));
+                            }
+                        }
+                    }
+                    flush_call_run(&mut dispatcher, depth, &mut run);
+                    if shutdown {
+                        break 'serve;
                     }
                 }
             })

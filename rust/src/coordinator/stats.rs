@@ -57,6 +57,25 @@ pub struct DriftEvent {
 /// Cap on the retained drift-event log (oldest evicted first).
 const MAX_DRIFT_EVENTS: usize = 64;
 
+/// Fused-exploration-round counters (process-wide): how much tuning-time
+/// work the leader's round batching absorbed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FusedStats {
+    /// Scheduling rounds where ≥2 co-scheduled calls of one exploring
+    /// problem were fused into a single batched exploration.
+    pub fused_rounds: u64,
+    /// Calls executed through the fused path.
+    pub fused_calls: u64,
+    /// Surplus co-scheduled calls that replicated a round-mate's
+    /// candidate (their median denoises the measurement).
+    pub replicated_measurements: u64,
+    /// Leader rounds-to-tuned saved versus serial dispatch: per fused
+    /// round, the distinct candidates measured minus one (replicas save
+    /// nothing — serially they would have been steady-state calls), plus
+    /// one for each finalization performed in-round.
+    pub explore_rounds_saved: u64,
+}
+
 /// Tuned-state hub traffic counters (process-wide, not per kernel).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HubStats {
@@ -82,6 +101,8 @@ pub struct CoordStats {
     drift_events: Vec<DriftEvent>,
     /// Hub traffic, when a hub is attached.
     hub: HubStats,
+    /// Fused exploration rounds, when co-scheduled calls got batched.
+    fused: FusedStats,
 }
 
 impl CoordStats {
@@ -92,6 +113,7 @@ impl CoordStats {
             rounds: BTreeMap::new(),
             drift_events: Vec::new(),
             hub: HubStats::default(),
+            fused: FusedStats::default(),
         }
     }
 
@@ -174,6 +196,41 @@ impl CoordStats {
                 })
                 .collect(),
         )
+    }
+
+    /// Record one fused exploration round: `calls` co-scheduled calls
+    /// batched, of which `replicated` were surplus replicas, saving
+    /// `saved` serial leader rounds.
+    pub fn fused_round(&mut self, calls: u64, replicated: u64, saved: u64) {
+        self.fused.fused_rounds += 1;
+        self.fused.fused_calls += calls;
+        self.fused.replicated_measurements += replicated;
+        self.fused.explore_rounds_saved += saved;
+    }
+
+    /// Record a finalization performed *inside* a fused round (the
+    /// strategy converged mid-round): one more serial round saved.
+    pub fn fused_inround_finalize(&mut self) {
+        self.fused.explore_rounds_saved += 1;
+    }
+
+    /// Fused-round counters.
+    pub fn fused(&self) -> FusedStats {
+        self.fused
+    }
+
+    /// Fused-round counters as JSON (the `fused` object in
+    /// `stats_json()`).
+    pub fn fused_json(&self) -> Value {
+        Value::Obj(vec![
+            ("fused_rounds".into(), n(self.fused.fused_rounds as f64)),
+            ("fused_calls".into(), n(self.fused.fused_calls as f64)),
+            (
+                "replicated_measurements".into(),
+                n(self.fused.replicated_measurements as f64),
+            ),
+            ("explore_rounds_saved".into(), n(self.fused.explore_rounds_saved as f64)),
+        ])
     }
 
     /// Record one hub publish (and whether the broker reported a merge
@@ -270,6 +327,15 @@ impl CoordStats {
             out.push_str(&format!(
                 "hub: pushes={} pulls={} adopted={} conflicts={}\n",
                 self.hub.pushes, self.hub.pulls, self.hub.adopted, self.hub.conflicts
+            ));
+        }
+        if self.fused.fused_rounds > 0 {
+            out.push_str(&format!(
+                "fused rounds: {} ({} calls, {} replicated, {} round(s) saved)\n",
+                self.fused.fused_rounds,
+                self.fused.fused_calls,
+                self.fused.replicated_measurements,
+                self.fused.explore_rounds_saved
             ));
         }
         for (k, s) in &self.kernels {
@@ -371,6 +437,26 @@ mod tests {
         assert_eq!(json.get("adopted").unwrap().as_i64(), Some(3));
         assert_eq!(json.get("conflicts").unwrap().as_i64(), Some(1));
         assert!(s.render().contains("hub: pushes=2 pulls=2 adopted=3 conflicts=1"));
+    }
+
+    #[test]
+    fn fused_counters_tracked_and_rendered() {
+        let mut s = CoordStats::new();
+        assert!(!s.render().contains("fused rounds"), "no fused line before any round");
+        s.fused_round(4, 1, 3);
+        s.fused_inround_finalize();
+        s.fused_round(2, 0, 1);
+        let f = s.fused();
+        assert_eq!(
+            (f.fused_rounds, f.fused_calls, f.replicated_measurements, f.explore_rounds_saved),
+            (2, 6, 1, 5)
+        );
+        let json = s.fused_json();
+        assert_eq!(json.get("fused_rounds").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("fused_calls").unwrap().as_i64(), Some(6));
+        assert_eq!(json.get("replicated_measurements").unwrap().as_i64(), Some(1));
+        assert_eq!(json.get("explore_rounds_saved").unwrap().as_i64(), Some(5));
+        assert!(s.render().contains("fused rounds: 2"), "{}", s.render());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use jitune::autotuner::Autotuner;
 use jitune::cli::{self, FlagSpec};
 use jitune::config::{Config, RunSettings};
 use jitune::coordinator::{
-    CallRoute, Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions,
+    BatchOptions, CallRoute, Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions,
 };
 use jitune::hub::{merge_entry, HubClient, HubEntry, HubOptions, HubServer, Merge};
 use jitune::manifest::Manifest;
@@ -53,6 +53,13 @@ fn flag_specs() -> Vec<FlagSpec> {
             takes_value: true,
             help: "run: serve the trace through a worker pool of N PJRT engines \
                    (thread-pinned fast lane)",
+        },
+        FlagSpec {
+            name: "max-batch",
+            takes_value: true,
+            help: "run: serve the trace through a coordinator whose leader drains \
+                   up to N requests per scheduling round (co-scheduled same-problem \
+                   calls fuse into one exploration round)",
         },
     ]
 }
@@ -106,11 +113,24 @@ fn run(args: &[String]) -> Result<()> {
                 .get("trace")
                 .ok_or_else(|| Error::Config("run requires --trace".into()))?
                 .to_string();
+            let max_batch = match parsed.i64_or("max-batch", 0)? {
+                0 => None,
+                n if n > 0 => Some(n as usize),
+                bad => return Err(Error::Config(format!("--max-batch `{bad}` must be positive"))),
+            };
             match parsed.i64_or("pool", 0)? {
-                0 => run_trace(&settings, &spec, parsed.get("state-file")),
-                workers if workers > 0 => {
-                    run_trace_pooled(&settings, &spec, workers as usize, parsed.get("state-file"))
+                // no pool, no explicit batching: the plain single-lane replay
+                0 if max_batch.is_none() => {
+                    run_trace(&settings, &spec, parsed.get("state-file"))
                 }
+                0 => run_trace_served(&settings, &spec, 0, max_batch, parsed.get("state-file")),
+                workers if workers > 0 => run_trace_served(
+                    &settings,
+                    &spec,
+                    workers as usize,
+                    max_batch,
+                    parsed.get("state-file"),
+                ),
                 bad => Err(Error::Config(format!("--pool `{bad}` must be positive"))),
             }
         }
@@ -276,25 +296,32 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
     Ok(())
 }
 
-/// `jitune run --trace .. --pool N`: replay the trace through a pooled
-/// coordinator — one PJRT engine per worker, finalized winners
-/// replicated onto every worker, steady-state calls served off-leader
-/// even though PJRT executables are thread-pinned. The printed stats
-/// include the per-worker pool counters.
-fn run_trace_pooled(
+/// `jitune run --trace .. [--pool N] [--max-batch B]`: replay the trace
+/// through a live coordinator. `--pool N` serves steady-state calls on a
+/// worker pool of N PJRT engines (finalized winners replicated onto
+/// every worker — thread-pinned executables scale off-leader);
+/// `--max-batch B` sizes the leader's scheduling rounds, so co-scheduled
+/// same-problem calls fuse into one exploration round. The printed stats
+/// include the per-worker pool and fused-round counters.
+fn run_trace_served(
     settings: &RunSettings,
     spec: &str,
     workers: usize,
+    max_batch: Option<usize>,
     state_file: Option<&str>,
 ) -> Result<()> {
     let trace = parse_trace(spec)?;
     let leader_settings = settings.clone();
     let state_path = state_file.map(std::path::PathBuf::from);
     let warm_start = state_path.clone();
-    let opts = ServerOptions {
-        pool: Some(PoolOptions::new(Arc::new(PjrtEngineFactory)).with_workers(workers)),
+    let mut opts = ServerOptions {
+        pool: (workers > 0)
+            .then(|| PoolOptions::new(Arc::new(PjrtEngineFactory)).with_workers(workers)),
         ..ServerOptions::default()
     };
+    if let Some(max_batch) = max_batch {
+        opts.batch = BatchOptions { max_batch };
+    }
     let coordinator = Coordinator::spawn_with_options(
         move || {
             let mut dispatcher = build_dispatcher(&leader_settings)?;
@@ -308,7 +335,12 @@ fn run_trace_pooled(
     )?;
     let h = coordinator.handle();
     let manifest = Manifest::load(&settings.artifacts)?;
-    println!("replaying {} calls through {workers} pool worker(s)...", trace.len());
+    println!(
+        "replaying {} calls through the coordinator ({} pool worker(s), max_batch {})...",
+        trace.len(),
+        workers,
+        max_batch.unwrap_or_else(|| BatchOptions::default().max_batch)
+    );
     let t0 = std::time::Instant::now();
     for call in &trace.calls {
         // inputs resolved per problem, exactly like the single-lane path

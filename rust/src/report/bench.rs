@@ -67,6 +67,34 @@ pub fn autotuned_run(
     (0..iters).map(|_| dispatcher.call(kernel, &inputs)).collect()
 }
 
+/// One instrumented *fused* autotuned run: `rounds` scheduling rounds of
+/// `width` co-scheduled calls each, dispatched through
+/// [`Dispatcher::call_batch`] — the deterministic stand-in for `width`
+/// application threads landing in the same leader round. Returns each
+/// round's *wall time* (which, unlike summing the callers' outcomes,
+/// includes the caller-less in-round finalize compile when the strategy
+/// converges) alongside its outcomes (failures surface as errors in
+/// place).
+pub fn fused_autotuned_run(
+    dispatcher: &mut Dispatcher,
+    kernel: &str,
+    size: i64,
+    rounds: usize,
+    width: usize,
+    seed: u64,
+) -> Result<Vec<(Duration, Vec<Result<CallOutcome>>)>> {
+    let problem = dispatcher.registry().problem(kernel, size)?.clone();
+    let inputs = inputs_for(&problem, seed);
+    Ok((0..rounds)
+        .map(|_| {
+            let batch: Vec<_> = (0..width.max(1)).map(|_| inputs.clone()).collect();
+            let t0 = std::time::Instant::now();
+            let outcomes = dispatcher.call_batch(kernel, batch);
+            (t0.elapsed(), outcomes)
+        })
+        .collect())
+}
+
 /// Cumulative per-call seconds from a run's outcomes.
 pub fn cumulative(outcomes: &[CallOutcome]) -> Vec<f64> {
     let mut acc = 0.0;

@@ -77,13 +77,33 @@ fn stress_no_lost_calls_and_reference_outputs() {
         }
     }
 
-    // Exploring/finalizing calls serialized through the leader: exactly
-    // one explore per candidate and one finalization despite 6 hammering
-    // threads.
+    // Exploring/finalizing stays serialized through the leader. Fused
+    // rounds may run surplus co-scheduled callers as *replicas* of a
+    // candidate (their median is what the tuner records), so the
+    // explored-call count is >= the candidate count but bounded by the
+    // co-scheduled rounds; the tuner itself must still see each
+    // candidate, and at most one caller ever observes the finalize (a
+    // round that converges finalizes leader-side, with no caller).
     let explored = all.iter().filter(|o| o.route == CallRoute::Explored).count();
     let finalized = all.iter().filter(|o| o.route == CallRoute::Finalized).count();
-    assert_eq!(explored, 3, "each candidate explored exactly once");
-    assert_eq!(finalized, 1, "winner finalized exactly once");
+    assert!(explored >= 3, "every candidate measured (got {explored} explored calls)");
+    assert!(
+        explored <= 3 * THREADS,
+        "explore phase bounded by co-scheduled rounds (got {explored})"
+    );
+    assert!(finalized <= 1, "winner finalized at most once caller-side");
+    // the tuning state saw every candidate, replicas collapsed to medians
+    let (_, report) = coord.handle().stats().unwrap();
+    let (_, problem) = &report.as_obj().unwrap()[0];
+    let variants = problem.get("variants").unwrap().as_arr().unwrap();
+    assert_eq!(variants.len(), 3);
+    for v in variants {
+        assert!(
+            v.get("samples").unwrap().as_i64().unwrap() >= 1,
+            "candidate measured: {}",
+            v.to_json()
+        );
+    }
 
     // Exact two-lane accounting: every call either hit the fast lane or
     // was processed by the leader — nothing double-counted, nothing lost.

@@ -4,12 +4,13 @@
 //! call may be lost across a concurrent retune, and the per-worker
 //! counters must sum to the lane's global hit count.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use jitune::coordinator::{CallRoute, Coordinator, ServerOptions};
-use jitune::runtime::mock::MockSpec;
+use jitune::coordinator::{CallRoute, Coordinator, PoolOptions, ServerOptions, WorkerPool};
+use jitune::runtime::mock::{MockEngineFactory, MockSpec};
 use jitune::tensor::HostTensor;
-use jitune::testutil::spawn_pooled_mock;
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
 
 /// v1 wins by a wide margin; sleep-based execution models an accelerator
 /// offload so throughput is capped by coordination, not host cores.
@@ -106,6 +107,72 @@ fn tuned_throughput_scales_with_workers() {
         four > one * 2.0,
         "pool scaling: 1 worker {one:.0} calls/s vs 4 workers {four:.0} calls/s"
     );
+}
+
+#[test]
+fn idle_worker_steals_from_busy_siblings_shard() {
+    // Worker A gets stuck on one long-running job; fast jobs keep
+    // round-robining onto A's shard meanwhile. Without stealing they
+    // would wait out the long job even though worker B sits idle; with
+    // stealing, B drains them — the queue spreads to whoever is free.
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_millis(300))
+        .with_cost("kern.v1.n8", Duration::from_micros(500))
+        .with_sleep_exec();
+    let manifest = synthetic_manifest("kern", 2, &[8]).unwrap();
+    let pool = WorkerPool::spawn(
+        PoolOptions::new(Arc::new(MockEngineFactory::new(spec)))
+            .with_workers(2)
+            .with_queue_depth(16),
+    )
+    .unwrap();
+    let slow = manifest.variant("kern.v0.n8").unwrap().clone();
+    let fast = manifest.variant("kern.v1.n8").unwrap().clone();
+    assert_eq!(pool.install(slow.clone(), "hlo".into()), 2);
+    assert_eq!(pool.install(fast.clone(), "hlo".into()), 2);
+
+    let slow_exe = pool.handle_for(slow.id.clone());
+    let slow_join = std::thread::spawn(move || slow_exe.execute(&[HostTensor::zeros(&[8, 8])]));
+    std::thread::sleep(Duration::from_millis(50)); // long job popped and running
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for _ in 0..4 {
+        let exe = pool.handle_for(fast.id.clone());
+        joins.push(std::thread::spawn(move || {
+            for _ in 0..25 {
+                let out = exe.execute(&[HostTensor::zeros(&[8, 8])]).unwrap();
+                assert!(out.data().iter().all(|&x| x == 1.0));
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let fast_elapsed = t0.elapsed();
+    slow_join.join().unwrap().unwrap();
+
+    let snap = pool.snapshot();
+    let steals: u64 = snap.workers.iter().map(|w| w.steals).sum();
+    assert!(steals >= 1, "idle worker stole from the busy sibling: {snap:?}");
+    // the idle worker absorbed well beyond its round-robin half of the
+    // 100 fast jobs (its own ~50 plus most of the busy worker's share)
+    let max_executed = snap.workers.iter().map(|w| w.executed).max().unwrap();
+    assert!(max_executed >= 60, "stolen jobs ran on the idle worker: {snap:?}");
+    // and the fast jobs did not serialize behind the 300ms job
+    assert!(
+        fast_elapsed < Duration::from_millis(1500),
+        "fast jobs finished without waiting out the slow one: {fast_elapsed:?}"
+    );
+    // stats surface the steals
+    let json = pool.to_json();
+    let per_worker = json.get("per_worker").unwrap().as_arr().unwrap();
+    let steals_json: i64 = per_worker
+        .iter()
+        .map(|w| w.get("steals").unwrap().as_i64().unwrap())
+        .sum();
+    assert_eq!(steals_json as u64, steals);
+    pool.stop();
 }
 
 #[test]
