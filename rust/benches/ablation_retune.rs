@@ -36,6 +36,7 @@ fn main() {
             CallRoute::Explored => "explore",
             CallRoute::Finalized => "finalize",
             CallRoute::Tuned => "tuned",
+            CallRoute::Default => "default",
         };
         if i >= 20 && retune_started.is_none() && out.route == CallRoute::Explored {
             retune_started = Some(i);

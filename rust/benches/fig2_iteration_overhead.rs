@@ -51,6 +51,7 @@ fn main() {
                 CallRoute::Explored => "explore",
                 CallRoute::Finalized => "finalize",
                 CallRoute::Tuned => "tuned",
+                CallRoute::Default => "default",
             };
             println!(
                 "  iter {i:2} {phase:<9} {:<6} {:9.3}ms{}",

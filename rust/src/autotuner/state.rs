@@ -201,6 +201,68 @@ impl TuningState {
         }
     }
 
+    /// Decide what a *background* explore scheduler should launch next —
+    /// the zero-inflight-callers face of [`TuningState::decide_batch`].
+    ///
+    /// Callers never arrive here: the scheduler polls on its own clock,
+    /// so candidates already in flight must not be re-issued (they are
+    /// still awaiting asynchronous reports). While exploring, this draws
+    /// proposals from the strategy, subtracts the in-flight set, and
+    /// returns up to `max` *fresh* candidates — which join `outstanding`
+    /// until their [`TuningState::report`] /
+    /// [`TuningState::report_failure`] lands. `Explore(vec![])` is a
+    /// first-class answer meaning "nothing new to launch; measurements
+    /// are in flight" — unlike `decide_batch`, which re-issues the
+    /// outstanding round wholesale.
+    ///
+    /// The phase transitions are identical to the caller-driven path:
+    /// when the strategy is exhausted and nothing is in flight, the best
+    /// measured candidate moves to `Finalizing` (or the problem fails).
+    pub fn decide_background(&mut self, max: usize) -> BatchDecision {
+        match self.phase {
+            Phase::Exploring => {
+                let want = self.outstanding.len() + max.max(1);
+                let mut batch = self.strategy.propose_batch(&self.history, want);
+                batch.retain(|i| !self.outstanding.contains(i));
+                let mut seen = Vec::with_capacity(batch.len());
+                batch.retain(|&i| {
+                    let fresh = !seen.contains(&i);
+                    if fresh {
+                        seen.push(i);
+                    }
+                    fresh
+                });
+                batch.truncate(max);
+                debug_assert!(batch.iter().all(|&i| i < self.values.len()), "strategy oob");
+                if batch.is_empty() {
+                    if !self.outstanding.is_empty() {
+                        // In-flight measurements must land before the
+                        // phase can advance.
+                        return BatchDecision::Explore(Vec::new());
+                    }
+                    return match self.history.best_index() {
+                        Some(best) => {
+                            self.phase = Phase::Finalizing;
+                            self.winner = Some(best);
+                            BatchDecision::Finalize(best)
+                        }
+                        None => {
+                            self.phase = Phase::Failed;
+                            BatchDecision::Failed
+                        }
+                    };
+                }
+                self.outstanding.extend(batch.iter().copied());
+                BatchDecision::Explore(batch)
+            }
+            Phase::Finalizing => {
+                BatchDecision::Finalize(self.winner.expect("finalizing has winner"))
+            }
+            Phase::Tuned => BatchDecision::Use(self.winner.expect("tuned has winner")),
+            Phase::Failed => BatchDecision::Failed,
+        }
+    }
+
     /// Report a successful measurement for an explored candidate.
     pub fn report(&mut self, idx: usize, cost: f64) {
         debug_assert!(self.outstanding.contains(&idx), "report for unexpected candidate");
@@ -260,6 +322,16 @@ impl TuningState {
     pub fn tuned_value(&self) -> Option<i64> {
         match self.phase {
             Phase::Tuned => self.winner.map(|i| self.values[i]),
+            _ => None,
+        }
+    }
+
+    /// Winner awaiting its final compilation (`Finalizing` only) — what
+    /// a serve-current-best path should execute while the caller-less
+    /// finalization is pending.
+    pub fn pending_winner(&self) -> Option<usize> {
+        match self.phase {
+            Phase::Finalizing => self.winner,
             _ => None,
         }
     }
@@ -505,6 +577,55 @@ mod tests {
             d => panic!("{d:?}"),
         }
         assert_eq!(st.decide_batch(4), BatchDecision::Explore(vec![2, 3]));
+    }
+
+    #[test]
+    fn background_decisions_never_reissue_inflight_candidates() {
+        let mut st = sweep_state(&[1, 2, 3]);
+        match st.decide_background(2) {
+            BatchDecision::Explore(batch) => assert_eq!(batch, vec![0, 1]),
+            d => panic!("{d:?}"),
+        }
+        // nothing reported yet: only the remaining candidate is fresh
+        match st.decide_background(2) {
+            BatchDecision::Explore(batch) => assert_eq!(batch, vec![2]),
+            d => panic!("{d:?}"),
+        }
+        // all candidates in flight: explicit "wait" answer
+        assert_eq!(st.decide_background(2), BatchDecision::Explore(Vec::new()));
+        st.report(0, 3.0);
+        st.report(1, 1.0);
+        // one measurement still in flight: cannot finalize yet
+        assert_eq!(st.decide_background(2), BatchDecision::Explore(Vec::new()));
+        st.report(2, 2.0);
+        assert_eq!(st.decide_background(2), BatchDecision::Finalize(1));
+        st.confirm_finalized(1);
+        assert_eq!(st.decide_background(2), BatchDecision::Use(1));
+        assert_eq!(st.tuned_value(), Some(2));
+    }
+
+    #[test]
+    fn background_failure_reports_advance_the_phase() {
+        let mut st = sweep_state(&[1, 2]);
+        match st.decide_background(4) {
+            BatchDecision::Explore(batch) => assert_eq!(batch, vec![0, 1]),
+            d => panic!("{d:?}"),
+        }
+        st.report_failure(0);
+        st.report(1, 1.0);
+        assert_eq!(st.decide_background(4), BatchDecision::Finalize(1));
+        // every candidate failing moves the problem to Failed
+        let mut dead = sweep_state(&[1, 2]);
+        match dead.decide_background(4) {
+            BatchDecision::Explore(batch) => {
+                for i in batch {
+                    dead.report_failure(i);
+                }
+            }
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(dead.decide_background(4), BatchDecision::Failed);
+        assert_eq!(dead.phase(), Phase::Failed);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Background shadow exploration: the scheduler that moves candidate
+//! compile+measure off the serving path.
+//!
+//! With `ServerOptions { explore_budget: Some(opts) }` the dispatcher
+//! stops running `Decision::Explore` on callers. Callers always execute
+//! the current-best variant (or the first runnable default while nothing
+//! is measured yet) and candidate exploration runs as background jobs on
+//! pool workers — or on a dedicated shadow worker when no pool is
+//! configured — under a strict duty-cycle budget.
+//!
+//! The scheduler is leader-owned bookkeeping, not a thread:
+//!
+//! * **Duty cycle** — each window of `ExploreOptions::window` may spend
+//!   at most `pct`% of the explore workers' combined time on candidate
+//!   compile+measure. Actual busy time is debited when results arrive;
+//!   issuance stops once the window's capacity is spent and resumes when
+//!   the window rolls. Because job cost is only known after the fact,
+//!   the overshoot is bounded by the in-flight cap (≈ one window).
+//! * **Pipelining** — up to `workers + 1` jobs may be in flight at once,
+//!   across problems: candidate N+1 compiles while candidate N is still
+//!   measuring, and a multi-problem workload keeps every explore worker
+//!   fed without waiting for round barriers.
+//! * **Adaptive rounds** — [`crate::autotuner::TuningState::decide_background`]
+//!   is asked for exactly as many fresh candidates as the budget allows
+//!   right now, so rounds widen while the budget is underspent and
+//!   shrink to nothing when it is exhausted.
+//! * **Hedging** — a job that misses `ExploreOptions::hedge` is written
+//!   off: the candidate is reported failed and its in-flight slot is
+//!   freed, so one wedged candidate cannot stall the round. A late
+//!   result for a hedged (or forgotten) job is dropped, but its busy
+//!   time is still debited — the duty cycle stays honest.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::autotuner::ProblemKey;
+use crate::coordinator::pool::WorkerPool;
+use crate::manifest::Variant;
+use crate::runtime::EngineFactory;
+use crate::tensor::HostTensor;
+
+/// Budget knobs for background exploration
+/// (`ServerOptions::explore_budget`).
+#[derive(Clone)]
+pub struct ExploreOptions {
+    /// Share of each explore worker's time that candidate compile+measure
+    /// may consume, in percent (`5.0` = 5%, the default). `0.0` disables
+    /// exploration entirely: callers are served the default variant
+    /// forever and no problem ever reaches `Phase::Tuned`.
+    pub pct: f64,
+    /// Duty-cycle enforcement window (default 100ms). Spending is
+    /// reconciled and the budget refilled once per window.
+    pub window: Duration,
+    /// Hedge deadline for one background job (default 2s): a candidate
+    /// whose compile+measure has not reported back within this long is
+    /// marked failed and its in-flight slot is handed to the next
+    /// candidate.
+    pub hedge: Duration,
+    /// Engine factory for the dedicated shadow worker used when no
+    /// worker pool is configured. Ignored when a pool is attached (its
+    /// workers run the explore jobs). With neither a pool nor a factory,
+    /// background mode is disabled with a warning and exploration stays
+    /// inline.
+    pub shadow_factory: Option<Arc<dyn EngineFactory>>,
+}
+
+impl ExploreOptions {
+    /// Options with the given duty-cycle percentage and default window
+    /// and hedge.
+    pub fn percent(pct: f64) -> ExploreOptions {
+        ExploreOptions {
+            pct,
+            window: Duration::from_millis(100),
+            hedge: Duration::from_secs(2),
+            shadow_factory: None,
+        }
+    }
+
+    /// Set the duty-cycle window.
+    pub fn with_window(mut self, window: Duration) -> ExploreOptions {
+        self.window = window;
+        self
+    }
+
+    /// Set the per-job hedge deadline.
+    pub fn with_hedge(mut self, hedge: Duration) -> ExploreOptions {
+        self.hedge = hedge;
+        self
+    }
+
+    /// Set the shadow-worker engine factory (used only when no pool is
+    /// configured).
+    pub fn with_shadow_factory(mut self, factory: Arc<dyn EngineFactory>) -> ExploreOptions {
+        self.shadow_factory = Some(factory);
+        self
+    }
+}
+
+impl fmt::Debug for ExploreOptions {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ExploreOptions")
+            .field("pct", &self.pct)
+            .field("window", &self.window)
+            .field("hedge", &self.hedge)
+            .field("shadow_factory", &self.shadow_factory.as_ref().map(|sf| sf.name()))
+            .finish()
+    }
+}
+
+/// One background compile+measure outcome, reported by an explore worker
+/// back to the leader.
+#[derive(Debug)]
+pub(crate) struct ExploreResult {
+    /// Problem the candidate belongs to.
+    pub key: ProblemKey,
+    /// Candidate index within the problem's parameter-value array.
+    pub candidate: usize,
+    /// Issuance sequence number — a result whose seq does not match the
+    /// in-flight entry is stale (hedged, retuned, or reloaded) and must
+    /// not report into tuner state.
+    pub seq: u64,
+    /// Measured execution cost in seconds, or the compile/execute error.
+    pub cost: crate::Result<f64>,
+    /// Worker time the job consumed (compile + measure), debited against
+    /// the duty-cycle window.
+    pub busy: Duration,
+}
+
+/// In-flight bookkeeping for one issued job.
+struct Inflight {
+    seq: u64,
+    issued_at: Instant,
+    /// Plan coordinates (`Dispatcher::plans` hash + slot) so hedge expiry
+    /// can reach the owning tuning state without guessing.
+    hash: u64,
+    slot: usize,
+}
+
+/// Leader-owned scheduler state for background exploration: duty-cycle
+/// window accounting, the in-flight job map, and the submission side of
+/// the explore job channel.
+pub(crate) struct BackgroundScheduler {
+    opts: ExploreOptions,
+    pool: Arc<WorkerPool>,
+    explore_workers: usize,
+    reply: mpsc::Sender<ExploreResult>,
+    seq: u64,
+    inflight: HashMap<(ProblemKey, usize), Inflight>,
+    window_start: Instant,
+    spent: Duration,
+}
+
+impl BackgroundScheduler {
+    /// Scheduler submitting explore jobs to `pool` (`explore_workers` of
+    /// its workers share the duty-cycle budget) and tagging them with the
+    /// reply sender.
+    pub fn new(
+        opts: ExploreOptions,
+        pool: Arc<WorkerPool>,
+        explore_workers: usize,
+        reply: mpsc::Sender<ExploreResult>,
+    ) -> BackgroundScheduler {
+        let opts = ExploreOptions {
+            window: opts.window.max(Duration::from_millis(1)),
+            hedge: opts.hedge.max(Duration::from_millis(1)),
+            ..opts
+        };
+        BackgroundScheduler {
+            opts,
+            pool,
+            explore_workers: explore_workers.max(1),
+            reply,
+            seq: 0,
+            inflight: HashMap::new(),
+            window_start: Instant::now(),
+            spent: Duration::ZERO,
+        }
+    }
+
+    /// Configured duty-cycle percentage.
+    pub fn pct(&self) -> f64 {
+        self.opts.pct
+    }
+
+    /// Busy-time capacity of one window across the explore workers.
+    fn capacity(&self) -> Duration {
+        self.opts.window.mul_f64((self.opts.pct / 100.0).max(0.0) * self.explore_workers as f64)
+    }
+
+    /// In-flight job cap: one job per explore worker plus one queued, so
+    /// the next candidate's compile overlaps the current measurement.
+    fn pipeline_cap(&self) -> usize {
+        self.explore_workers + 1
+    }
+
+    /// How many fresh jobs may be issued right now — 0 when the budget
+    /// is disabled, the window's capacity is spent, or the pipeline is
+    /// full.
+    pub fn issue_capacity(&self) -> usize {
+        if self.opts.pct <= 0.0 || self.spent >= self.capacity() {
+            return 0;
+        }
+        self.pipeline_cap().saturating_sub(self.inflight.len())
+    }
+
+    /// Roll the duty-cycle window if it elapsed; returns the finished
+    /// window's realized duty-cycle percentage (per explore worker).
+    pub fn roll_window(&mut self, now: Instant) -> Option<f64> {
+        let elapsed = now.saturating_duration_since(self.window_start);
+        if elapsed < self.opts.window {
+            return None;
+        }
+        let denom = elapsed.as_secs_f64() * self.explore_workers as f64;
+        let pct = if denom > 0.0 { self.spent.as_secs_f64() / denom * 100.0 } else { 0.0 };
+        self.spent = Duration::ZERO;
+        self.window_start = now;
+        Some(pct)
+    }
+
+    /// Issue one candidate's compile+measure as a background job.
+    /// Bookkeeping is only committed when the submission is accepted.
+    /// `inputs` are synthesized by the dispatcher (workers have no caller
+    /// tensors): zero-filled tensors of the problem's input shapes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit(
+        &mut self,
+        variant: Variant,
+        hlo_text: String,
+        inputs: Vec<HostTensor>,
+        key: ProblemKey,
+        candidate: usize,
+        hash: u64,
+        slot: usize,
+        now: Instant,
+    ) -> crate::Result<()> {
+        let seq = self.seq + 1;
+        self.pool.submit_explore(
+            variant,
+            hlo_text,
+            inputs,
+            key.clone(),
+            candidate,
+            seq,
+            self.reply.clone(),
+        )?;
+        self.seq = seq;
+        self.inflight.insert((key, candidate), Inflight { seq, issued_at: now, hash, slot });
+        Ok(())
+    }
+
+    /// Absorb a result: debit its busy time against the current window
+    /// and, when it matches the in-flight entry, clear the entry and
+    /// return the owning plan's `(hash, slot)`. A stale result (hedged,
+    /// forgotten, or reissued) returns `None` — its measurement must be
+    /// dropped, but the worker time it consumed still counts.
+    pub fn absorb(&mut self, result: &ExploreResult) -> Option<(u64, usize)> {
+        self.spent += result.busy;
+        let lookup = (result.key.clone(), result.candidate);
+        match self.inflight.get(&lookup) {
+            Some(inf) if inf.seq == result.seq => {
+                let inf = self.inflight.remove(&lookup).expect("entry just observed");
+                Some((inf.hash, inf.slot))
+            }
+            _ => None,
+        }
+    }
+
+    /// Remove and return every in-flight job past its hedge deadline as
+    /// `(key, candidate, hash, slot)` — the caller reports each candidate
+    /// failed so the round can move on without it.
+    pub fn expire_hedges(&mut self, now: Instant) -> Vec<(ProblemKey, usize, u64, usize)> {
+        let hedge = self.opts.hedge;
+        let expired: Vec<(ProblemKey, usize)> = self
+            .inflight
+            .iter()
+            .filter(|(_, inf)| now.saturating_duration_since(inf.issued_at) >= hedge)
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired
+            .into_iter()
+            .map(|k| {
+                let inf = self.inflight.remove(&k).expect("expired entry present");
+                (k.0, k.1, inf.hash, inf.slot)
+            })
+            .collect()
+    }
+
+    /// Earliest hedge deadline among in-flight jobs.
+    pub fn earliest_hedge(&self) -> Option<Instant> {
+        self.inflight.values().map(|inf| inf.issued_at + self.opts.hedge).min()
+    }
+
+    /// When the current duty-cycle window rolls (budget refill).
+    pub fn window_end(&self) -> Instant {
+        self.window_start + self.opts.window
+    }
+
+    /// Number of jobs in flight.
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Drop in-flight bookkeeping for one candidate — called when the
+    /// candidate is reported failed through another path while its job
+    /// is still running, so the late result cannot report into the
+    /// tuner.
+    pub fn forget_candidate(&mut self, key: &ProblemKey, candidate: usize) {
+        self.inflight.remove(&(key.clone(), candidate));
+    }
+
+    /// Drop in-flight bookkeeping for one problem — called when its
+    /// tuning state is replaced (retune, hub adoption), so late results
+    /// cannot report into the fresh state.
+    pub fn forget_key(&mut self, key: &ProblemKey) {
+        self.inflight.retain(|(k, _), _| k != key);
+    }
+
+    /// Drop all in-flight bookkeeping (tuning-state import).
+    pub fn forget_all(&mut self) {
+        self.inflight.clear();
+    }
+}

@@ -13,6 +13,7 @@ use crate::manifest::Variant;
 use crate::runtime::{CacheStats, CompileCache, Engine, SharedKernel};
 use crate::tensor::HostTensor;
 
+use super::background::{BackgroundScheduler, ExploreResult};
 use super::fastlane::{self, FastLane};
 use super::pool::WorkerPool;
 use super::registry::KernelRegistry;
@@ -27,6 +28,10 @@ pub enum CallRoute {
     Finalized,
     /// Steady state: cached winner.
     Tuned,
+    /// Background-explore mode: the call executed the current-best (or
+    /// safe default) variant while candidate tuning runs off the serving
+    /// path (see [`super::background`]).
+    Default,
 }
 
 /// Everything observable about one dispatched call (benches consume this
@@ -95,6 +100,11 @@ pub struct Dispatcher {
     /// cannot hand out a shared executable, finalized winners are
     /// replicated onto the pool and published as pool-routed entries.
     pool: Option<Arc<WorkerPool>>,
+    /// Background explore scheduler (leader-owned). `Some` switches the
+    /// dispatcher into serve/explore split mode: callers never run
+    /// `Decision::Explore` — candidates compile+measure as background
+    /// jobs instead (see [`super::background`]).
+    background: Option<BackgroundScheduler>,
     hub: Option<HubClient>,
     /// Per-problem hub knowledge: the last version this process pulled
     /// or had acknowledged, plus that version's winner. Gates publishes
@@ -146,6 +156,7 @@ impl Dispatcher {
             plans: HashMap::new(),
             fast_lane: None,
             pool: None,
+            background: None,
             hub: None,
             hub_known: HashMap::new(),
             hub_generation: 0,
@@ -261,6 +272,11 @@ impl Dispatcher {
                 continue;
             }
             self.tuner.warm_start(key.clone(), entry.values.clone(), winner_idx)?;
+            // the adopted state replaces local tuning wholesale; pending
+            // background results for the old state are now stale
+            if let Some(bg) = self.background.as_mut() {
+                bg.forget_key(&key);
+            }
             if let Some(lane) = &self.fast_lane {
                 lane.invalidate(&kernel, &shapes);
             }
@@ -410,6 +426,30 @@ impl Dispatcher {
     pub fn call(&mut self, kernel: &str, inputs: &[HostTensor]) -> Result<CallOutcome> {
         let t0 = Instant::now();
         let (hash, slot) = self.plan_slot(kernel, inputs)?;
+
+        // Serve/explore split: with a background scheduler attached,
+        // callers never run `Decision::Explore`. Anything not yet tuned
+        // is served the current-best (or default) variant while the
+        // scheduler advances tuning off the serving path.
+        if self.background.is_some() {
+            let phase = {
+                let plan = &self.plans[&hash][slot];
+                self.tuner.state(&plan.key, &plan.values).phase()
+            };
+            match phase {
+                Phase::Exploring | Phase::Finalizing => {
+                    return self.serve_default(kernel, hash, slot, inputs, t0);
+                }
+                Phase::Failed => {
+                    let plan = &self.plans[&hash][slot];
+                    return Err(Error::Autotune(format!(
+                        "every variant of {} failed; cannot execute",
+                        plan.key
+                    )));
+                }
+                Phase::Tuned => {}
+            }
+        }
 
         // Failure-retry loop: a failing variant is excluded and the next
         // decision is consulted, until the call succeeds or every
@@ -571,11 +611,14 @@ impl Dispatcher {
             }
         }
         for ((hash, slot), members) in groups {
-            if members.len() == 1 {
-                // Lone call: the serial path, unchanged (incl. its
-                // retry-on-candidate-failure loop).
-                let i = members[0];
-                results[i] = Some(self.call(kernel, &batch[i]));
+            if members.len() == 1 || self.background.is_some() {
+                // Lone call — or background-explore mode, where fused
+                // inline rounds are disabled: each call takes the serial
+                // path (incl. its retry-on-candidate-failure loop; under
+                // a background scheduler it serves the current best).
+                for i in members {
+                    results[i] = Some(self.call(kernel, &batch[i]));
+                }
                 continue;
             }
             let decision = {
@@ -786,6 +829,12 @@ impl Dispatcher {
     fn candidate_failed(&mut self, hash: u64, slot: usize, idx: usize) {
         let plan = &self.plans[&hash][slot];
         self.tuner.state(&plan.key, &plan.values).report_failure(idx);
+        // The candidate may still have a background job in flight: drop
+        // its bookkeeping so a late result cannot report into the tuner
+        // (its busy time is still debited when it arrives).
+        if let Some(bg) = self.background.as_mut() {
+            bg.forget_candidate(&plan.key, idx);
+        }
         if let Some(lane) = &self.fast_lane {
             lane.invalidate(&plan.kernel, &plan.input_shapes);
         }
@@ -795,6 +844,295 @@ impl Dispatcher {
                 .id
                 .clone();
             pool.evict(std::slice::from_ref(&failed_id));
+        }
+    }
+
+    /// Attach a background explore scheduler, switching the dispatcher
+    /// into serve/explore split mode (see [`super::background`]).
+    pub(crate) fn set_background(&mut self, scheduler: BackgroundScheduler) {
+        self.background = Some(scheduler);
+    }
+
+    /// Whether background exploration is active.
+    pub fn background_active(&self) -> bool {
+        self.background.is_some()
+    }
+
+    /// Serve one call without touching tuning decisions: execute the
+    /// problem's current best — the pending winner while finalizing, the
+    /// best measured candidate so far, or the first runnable variant
+    /// when nothing is measured yet (the "safe default"). That variant's
+    /// one-time bootstrap compile is the only JIT work a caller can
+    /// observe in background mode; tuning compiles happen on explore
+    /// workers.
+    fn serve_default(
+        &mut self,
+        kernel: &str,
+        hash: u64,
+        slot: usize,
+        inputs: &[HostTensor],
+        t0: Instant,
+    ) -> Result<CallOutcome> {
+        // Failure-retry loop, like `call`: a default that dies at compile
+        // or execute is excluded and the next-best candidate serves.
+        loop {
+            let (idx, pidx) = {
+                let plan = &self.plans[&hash][slot];
+                let state = self.tuner.peek(&plan.key).expect("serve gate created the state");
+                let history = state.history();
+                let idx = state
+                    .pending_winner()
+                    .or_else(|| history.best_index())
+                    .or_else(|| history.records.iter().position(|r| !r.failed));
+                let Some(idx) = idx else {
+                    return Err(Error::Autotune(format!(
+                        "every variant of {} failed; cannot execute",
+                        plan.key
+                    )));
+                };
+                (idx, plan.problem_idx)
+            };
+            let executed = {
+                let manifest = self.registry.manifest();
+                let variant = &manifest.problems[pidx].variants[idx];
+                match self.cache.get_or_compile(manifest, variant) {
+                    Ok((exe, compiled)) => {
+                        let begin = self.metric.begin();
+                        match exe.execute(inputs) {
+                            Ok(output) => {
+                                let cost = self.metric.end(begin);
+                                Ok((output, cost, compiled, variant.id.clone(), variant.value))
+                            }
+                            Err(e) => Err((e, variant.id.clone())),
+                        }
+                    }
+                    Err(e) => Err((e, variant.id.clone())),
+                }
+            };
+            match executed {
+                Ok((output, cost, compiled, variant_id, value)) => {
+                    self.stats.background_serve();
+                    return Ok(CallOutcome {
+                        output,
+                        variant_id,
+                        value,
+                        route: CallRoute::Default,
+                        compiled,
+                        exec_cost: cost,
+                        total: t0.elapsed(),
+                    });
+                }
+                Err((e, variant_id)) => {
+                    log::warn!("default variant {variant_id} failed while serving: {e}");
+                    self.stats.failure(kernel);
+                    self.cache.evict(&variant_id);
+                    self.candidate_failed(hash, slot, idx);
+                    continue;
+                }
+            }
+        }
+    }
+
+    /// One background-scheduler maintenance pass, run by the leader loop
+    /// every iteration (and after every explore result): expire hedges,
+    /// roll the duty-cycle window, then issue as many fresh candidate
+    /// jobs as budget and pipeline allow across all known problems.
+    /// Returns the next instant the scheduler needs waking — `None` when
+    /// nothing is in flight and no problem can make progress.
+    pub(crate) fn background_tick(&mut self, now: Instant) -> Option<Instant> {
+        self.background.as_ref()?;
+        let expired = self.background.as_mut().expect("checked above").expire_hedges(now);
+        for (key, candidate, hash, slot) in expired {
+            log::warn!("background: hedging wedged candidate {candidate} of {key}");
+            self.stats.background_hedge();
+            let kernel = self.plans[&hash][slot].kernel.clone();
+            self.stats.failure(&kernel);
+            self.candidate_failed(hash, slot, candidate);
+        }
+        if let Some(pct) = self.background.as_mut().expect("checked above").roll_window(now) {
+            self.stats.background_window(pct);
+        }
+        let plans: Vec<(u64, usize)> = self
+            .plans
+            .iter()
+            .flat_map(|(&hash, bucket)| (0..bucket.len()).map(move |slot| (hash, slot)))
+            .collect();
+        let mut exploring = false;
+        for (hash, slot) in plans {
+            exploring |= self.background_advance(hash, slot, now);
+        }
+        let bg = self.background.as_ref().expect("checked above");
+        let mut wake = bg.earliest_hedge();
+        if exploring && bg.pct() > 0.0 {
+            let refill = bg.window_end();
+            wake = Some(wake.map_or(refill, |w| w.min(refill)));
+        }
+        wake
+    }
+
+    /// Advance one problem's background tuning: issue fresh candidates
+    /// while the budget allows, or run the caller-less finalization once
+    /// the strategy converged. Returns whether the problem is still
+    /// exploring (and thus needs a budget-refill wake-up).
+    fn background_advance(&mut self, hash: u64, slot: usize, now: Instant) -> bool {
+        let (key, values, pidx) = {
+            let plan = &self.plans[&hash][slot];
+            (plan.key.clone(), plan.values.clone(), plan.problem_idx)
+        };
+        loop {
+            match self.tuner.state(&key, &values).phase() {
+                Phase::Tuned | Phase::Failed => return false,
+                Phase::Finalizing => {
+                    let decision = self.tuner.state(&key, &values).decide_background(1);
+                    let BatchDecision::Finalize(winner) = decision else { return false };
+                    self.background_finalize(hash, slot, winner);
+                    // A failed finalize demotes back to Exploring — loop
+                    // so the rematch starts this tick, not next window.
+                    if self.tuner.state(&key, &values).phase() != Phase::Exploring {
+                        return false;
+                    }
+                }
+                Phase::Exploring => {
+                    let cap =
+                        self.background.as_ref().expect("background active").issue_capacity();
+                    if cap == 0 {
+                        // Budget spent or pipeline full. Never consult
+                        // `decide_background(0)` here: an empty proposal
+                        // must mean "strategy exhausted", not "no budget".
+                        return true;
+                    }
+                    match self.tuner.state(&key, &values).decide_background(cap) {
+                        BatchDecision::Explore(fresh) => {
+                            // May be empty: in-flight results are still
+                            // outstanding and the strategy waits on them.
+                            for cand in fresh {
+                                self.background_issue(hash, slot, &key, pidx, cand, now);
+                            }
+                            return true;
+                        }
+                        BatchDecision::Finalize(winner) => {
+                            self.background_finalize(hash, slot, winner);
+                            if self.tuner.state(&key, &values).phase() != Phase::Exploring {
+                                return false;
+                            }
+                        }
+                        BatchDecision::Failed => return false,
+                        BatchDecision::Use(_) => return false,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Issue one candidate's compile+measure as a background job, with
+    /// inputs synthesized from the problem's declared shapes (explore
+    /// workers have no caller tensors; engines only need shape-correct
+    /// data for timing).
+    fn background_issue(
+        &mut self,
+        hash: u64,
+        slot: usize,
+        key: &ProblemKey,
+        pidx: usize,
+        cand: usize,
+        now: Instant,
+    ) {
+        let variant = self.registry.manifest().problems[pidx].variants[cand].clone();
+        let hlo = match self.cache.hlo_for(self.registry.manifest(), &variant) {
+            Ok(text) => text,
+            Err(e) => {
+                log::warn!("background: cannot read HLO for {}: {e}", variant.id);
+                self.stats.failure(&variant.kernel);
+                self.candidate_failed(hash, slot, cand);
+                return;
+            }
+        };
+        let inputs: Vec<HostTensor> =
+            self.plans[&hash][slot].input_shapes.iter().map(|s| HostTensor::zeros(s)).collect();
+        let submitted = self.background.as_mut().expect("background active").submit(
+            variant.clone(),
+            hlo,
+            inputs,
+            key.clone(),
+            cand,
+            hash,
+            slot,
+            now,
+        );
+        if let Err(e) = submitted {
+            log::warn!("background: cannot submit {}: {e}", variant.id);
+            self.stats.failure(&variant.kernel);
+            self.candidate_failed(hash, slot, cand);
+        }
+    }
+
+    /// The caller-less finalization of a background-tuned winner: losers
+    /// evicted, the winner compiled into the instantiation cache, state
+    /// confirmed, fast-lane + hub publication — no caller ever pays the
+    /// finalize compile. Per-kernel `finalized` stays call-aligned (like
+    /// the fused in-round finalize, and for the same reason: lane
+    /// accounting must keep holding); the work shows up in the
+    /// `background` stats block instead.
+    fn background_finalize(&mut self, hash: u64, slot: usize, winner: usize) {
+        let (key, variant, all_ids) = {
+            let plan = &self.plans[&hash][slot];
+            let problem = &self.registry.manifest().problems[plan.problem_idx];
+            let all_ids: Vec<String> = problem.variants.iter().map(|v| v.id.clone()).collect();
+            (plan.key.clone(), problem.variants[winner].clone(), all_ids)
+        };
+        self.cache.evict_losers(&all_ids, &variant.id);
+        let compiled = {
+            let manifest = self.registry.manifest();
+            self.cache.get_or_compile(manifest, &variant).map(|_| ())
+        };
+        match compiled {
+            Ok(()) => {
+                self.tuner.state(&key, &[]).confirm_finalized(winner);
+                self.publish_winner(hash, slot);
+                self.hub_publish(hash, slot);
+                log::info!("{key} tuned in background: value={} ({})", variant.value, variant.id);
+            }
+            Err(e) => {
+                log::warn!("winner {} failed background finalization: {e}", variant.id);
+                self.stats.failure(&variant.kernel);
+                self.candidate_failed(hash, slot, winner);
+            }
+        }
+    }
+
+    /// Absorb one explore-worker result into scheduler accounting and
+    /// tuner state. Stale results (hedged, retuned, reloaded) only debit
+    /// the duty cycle.
+    pub(crate) fn background_report(&mut self, result: ExploreResult) {
+        let Some(bg) = self.background.as_mut() else { return };
+        let matched = bg.absorb(&result);
+        self.stats.background_job(result.busy);
+        let Some((hash, slot)) = matched else {
+            log::debug!(
+                "background: dropped stale result for candidate {} of {}",
+                result.candidate,
+                result.key
+            );
+            return;
+        };
+        match result.cost {
+            Ok(cost) => {
+                let (key, values) = {
+                    let plan = &self.plans[&hash][slot];
+                    (plan.key.clone(), plan.values.clone())
+                };
+                self.tuner.state(&key, &values).report(result.candidate, cost);
+            }
+            Err(e) => {
+                log::warn!(
+                    "background: candidate {} of {} failed: {e}",
+                    result.candidate,
+                    result.key
+                );
+                let kernel = self.plans[&hash][slot].kernel.clone();
+                self.stats.failure(&kernel);
+                self.candidate_failed(hash, slot, result.candidate);
+            }
         }
     }
 
@@ -1008,6 +1346,12 @@ impl Dispatcher {
             (ProblemKey::for_problem(problem), problem.kernel.clone(), shapes, ids)
         };
         let existed = self.tuner.retune(&key);
+        // In-flight background results were measured against the old
+        // state: drop their bookkeeping so they cannot report into the
+        // fresh one.
+        if let Some(bg) = self.background.as_mut() {
+            bg.forget_key(&key);
+        }
         for id in &variant_ids {
             self.cache.evict(id);
         }
@@ -1117,6 +1461,9 @@ impl Dispatcher {
         }
         if let Some(pool) = &self.pool {
             pool.clear();
+        }
+        if let Some(bg) = self.background.as_mut() {
+            bg.forget_all();
         }
         let imported = self.tuner.import_state(&crate::util::json::Value::Arr(valid))?;
         Ok((imported, skipped))

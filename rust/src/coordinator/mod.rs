@@ -83,6 +83,56 @@
 //! `replicated_measurements`, `explore_rounds_saved`, exported under
 //! `"fused"` in `stats_json()`).
 //!
+//! # Serve/explore split (background shadow exploration)
+//!
+//! Fused rounds shrink how many rounds tuning takes, but callers in
+//! those rounds still *pay* for it: an exploring problem runs compile +
+//! measure inline on the caller's critical path, which lands as cold-
+//! start p99 spikes under a serving load. With `ServerOptions {
+//! explore_budget: Some(ExploreOptions), .. }` the dispatcher splits
+//! serving from exploring instead:
+//!
+//! * **Callers never explore.** Any call to a problem that is not yet
+//!   `Phase::Tuned` executes the problem's *current best* — the pending
+//!   winner while finalizing, the best measured candidate so far, or
+//!   the first runnable variant (the "safe default") when nothing has
+//!   been measured yet. The default's one-time bootstrap compile is the
+//!   only JIT work a caller can ever observe; such calls are routed
+//!   [`CallRoute::Default`] and counted as `serve_while_exploring`.
+//! * **Exploration runs as background jobs** on the worker pool's
+//!   background job lane (stolen like any job, but always behind
+//!   caller-facing work), or on a dedicated one-worker shadow pool
+//!   (`ExploreOptions::shadow_factory`) when no pool is configured.
+//!   Inputs are synthesized from the problem's declared shapes. Each
+//!   result reports asynchronously into the tuning state; the winner's
+//!   finalization also happens on the leader with no caller attached.
+//! * **A duty-cycle budget** caps explore work at `pct`% of the explore
+//!   workers' time per `window` (default 5% / 100ms). Budget interacts
+//!   with pool sizing multiplicatively: a 4-worker pool at 5% yields
+//!   20ms of explore time per 100ms window, so time-to-tuned shrinks as
+//!   the pool grows while the per-worker tax stays fixed. `pct = 0`
+//!   means serve-default-only: tuning never advances, by design.
+//! * **Adaptive rounds + pipelining.** The scheduler asks
+//!   [`crate::autotuner::TuningState::decide_background`] for exactly as
+//!   many fresh candidates as the remaining budget and in-flight cap
+//!   (`workers + 1`) allow — rounds widen while the budget is underspent
+//!   — and keeps candidate N+1 queued while N measures, across
+//!   problems.
+//! * **Hedging.** A job that misses `ExploreOptions::hedge` is written
+//!   off (candidate reported failed, slot freed) so one wedged candidate
+//!   cannot stall tuning; a late result is dropped but its worker time
+//!   is still debited.
+//!
+//! `explore_rounds_saved` semantics carry over from fused rounds: both
+//! count explore work that callers would have paid serially but did
+//! not. In background mode *every* explore job is such a saving, so the
+//! accounting moves wholesale into the `background` stats block
+//! (`jobs_run`, `busy_s`, `hedges_fired`, `serve_while_exploring`,
+//! realized `duty_cycle_pct`) rather than inflating per-kernel
+//! `explored`/`finalized` counters, which stay one-tick == one-served-
+//! call. See `rust/tests/background_explore.rs` for the contract and
+//! `benches/cold_start_p99.rs` for the cold-start p99 headline.
+//!
 //! **Publication protocol.** Publish happens on `confirm_finalized`
 //! (plus a lazy self-heal on leader-lane tuned calls, covering warm
 //! starts and lanes attached late). Invalidation happens on retune, on a
@@ -162,6 +212,7 @@
 //! `examples/hub_fleet.rs` + `benches/hub_warm_start.rs` for the
 //! fleet-scale amortization story.
 
+pub mod background;
 pub mod drift;
 pub mod fastlane;
 pub mod pool;
@@ -171,13 +222,14 @@ mod registry;
 pub mod server;
 mod stats;
 
+pub use background::ExploreOptions;
 pub use dispatcher::{CallOutcome, CallRoute, Dispatcher};
 pub use drift::{DriftHit, DriftMonitor, DriftPolicy, WindowSummary};
 pub use fastlane::{FastLane, Publication};
 pub use pool::{PoolOptions, PoolSnapshot, WorkerPool, WorkerSnapshot};
 pub use registry::KernelRegistry;
 pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
-pub use stats::{CoordStats, DriftEvent, FusedStats, HubStats, KernelStats};
+pub use stats::{BackgroundStats, CoordStats, DriftEvent, FusedStats, HubStats, KernelStats};
 
 /// Poison-tolerant mutex lock shared by the coordinator's modules: a
 /// panicked recorder must not take the stats/monitor state down with it.

@@ -55,12 +55,14 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::autotuner::ProblemKey;
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
 use crate::runtime::{CompiledKernel, Engine, EngineFactory, SharedKernel};
 use crate::tensor::HostTensor;
 use crate::util::json::{n, s, Value};
 
+use super::background::ExploreResult;
 use super::{mutex_lock, read_lock, write_lock};
 
 /// Worker-pool configuration, carried in
@@ -135,19 +137,50 @@ enum Job {
     },
     /// Drop cached executables (retune / state import).
     Evict { variant_ids: Vec<String> },
+    /// Background explore: scratch-compile the candidate, measure one
+    /// execution on synthetic inputs, report to the leader's background
+    /// scheduler, and drop the executable — the worker's serving cache
+    /// is never touched, so a losing candidate leaves nothing to evict.
+    Explore {
+        spec: Arc<InstallSpec>,
+        inputs: Vec<HostTensor>,
+        key: ProblemKey,
+        candidate: usize,
+        seq: u64,
+        reply: mpsc::Sender<ExploreResult>,
+    },
 }
 
-/// One per-worker queue shard.
+/// One per-worker queue shard: a main lane (exec + control, bounded by
+/// `queue_depth`) plus a background lane for explore jobs, drained only
+/// when the main lane is empty — serving traffic always overtakes
+/// candidate exploration.
 struct Shard {
-    queue: Mutex<VecDeque<Job>>,
+    queue: Mutex<ShardQueues>,
     not_empty: Condvar,
     not_full: Condvar,
+}
+
+/// The two priority classes of one shard.
+#[derive(Default)]
+struct ShardQueues {
+    /// Exec + control jobs, FIFO, bounded by `queue_depth`.
+    main: VecDeque<Job>,
+    /// Background explore jobs, FIFO, depth-exempt (the leader's
+    /// duty-cycle pipeline cap already bounds how many are in flight).
+    bg: VecDeque<Job>,
+}
+
+impl ShardQueues {
+    fn is_empty(&self) -> bool {
+        self.main.is_empty() && self.bg.is_empty()
+    }
 }
 
 impl Shard {
     fn new() -> Shard {
         Shard {
-            queue: Mutex::new(VecDeque::new()),
+            queue: Mutex::new(ShardQueues::default()),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
         }
@@ -605,8 +638,8 @@ impl WorkerPool {
             if !self.workers[idx].alive.load(Ordering::SeqCst) {
                 continue;
             }
-            if q.len() < self.queue_depth {
-                q.push_back(job.take().expect("job unconsumed"));
+            if q.main.len() < self.queue_depth {
+                q.main.push_back(job.take().expect("job unconsumed"));
                 shard.not_empty.notify_one();
                 return Ok(());
             }
@@ -629,8 +662,8 @@ impl WorkerPool {
             if !self.workers[idx].alive.load(Ordering::SeqCst) {
                 return Err(Error::Coordinator(format!("pool worker {idx} died")));
             }
-            if q.len() < self.queue_depth {
-                q.push_back(job.take().expect("job unconsumed"));
+            if q.main.len() < self.queue_depth {
+                q.main.push_back(job.take().expect("job unconsumed"));
                 shard.not_empty.notify_one();
                 return Ok(());
             }
@@ -653,9 +686,45 @@ impl WorkerPool {
         if !self.workers[idx].alive.load(Ordering::SeqCst) {
             return Err(Error::Coordinator(format!("pool worker {idx} died")));
         }
-        q.push_back(job);
+        q.main.push_back(job);
         shard.not_empty.notify_one();
         Ok(())
+    }
+
+    /// Push a background explore job: round-robin over live workers,
+    /// onto the shard's *background* lane (served only when the main
+    /// lane is empty, stealable by any idle worker). Depth-exempt — the
+    /// scheduler's duty-cycle pipeline cap already bounds issuance.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn submit_explore(
+        &self,
+        variant: Variant,
+        hlo_text: String,
+        inputs: Vec<HostTensor>,
+        key: ProblemKey,
+        candidate: usize,
+        seq: u64,
+        reply: mpsc::Sender<ExploreResult>,
+    ) -> Result<()> {
+        let spec = Arc::new(InstallSpec { variant, hlo_text });
+        let mut job = Some(Job::Explore { spec, inputs, key, candidate, seq, reply });
+        let n = self.shards.len();
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        for k in 0..n {
+            let idx = (start + k) % n;
+            let shard = &self.shards[idx];
+            let mut q = mutex_lock(&shard.queue);
+            if self.shutdown.load(Ordering::SeqCst) {
+                return Err(Error::Coordinator("worker pool stopped".into()));
+            }
+            if !self.workers[idx].alive.load(Ordering::SeqCst) {
+                continue;
+            }
+            q.bg.push_back(job.take().expect("job unconsumed"));
+            shard.not_empty.notify_one();
+            return Ok(());
+        }
+        Err(Error::Coordinator("pool: no live worker for background explore".into()))
     }
 
     /// Worker-side blocking pop: drains the shard even after shutdown
@@ -687,7 +756,7 @@ impl WorkerPool {
             {
                 let shard = &self.shards[idx];
                 let mut q = mutex_lock(&shard.queue);
-                if let Some(job) = q.pop_front() {
+                if let Some(job) = q.main.pop_front().or_else(|| q.bg.pop_front()) {
                     shard.not_full.notify_one();
                     return Some(job);
                 }
@@ -720,9 +789,12 @@ impl WorkerPool {
         }
     }
 
-    /// Try to steal one queued exec job from a sibling's shard (front
-    /// only; control jobs are never stolen; the variant must route to
-    /// this worker). Unblocks the victim's backpressure waiters on
+    /// Try to steal one queued job from a sibling's shard (front only;
+    /// control jobs are never stolen; an exec's variant must route to
+    /// this worker). Background explore jobs are stealable by *any*
+    /// worker — they scratch-compile and never touch the serving cache,
+    /// so a candidate queued behind a slow sibling migrates to whoever
+    /// idles first. Unblocks the victim's backpressure waiters on
     /// success. Lock order: shard lock, then a `routes` read — safe
     /// because no path holds the `routes` write lock while acquiring a
     /// shard lock.
@@ -732,16 +804,21 @@ impl WorkerPool {
             let victim = (idx + offset) % n;
             let shard = &self.shards[victim];
             let mut q = mutex_lock(&shard.queue);
-            let stealable = match q.front() {
+            let stealable = match q.main.front() {
                 Some(Job::Exec { variant_id, .. }) => read_lock(&self.routes)
                     .get(variant_id)
                     .is_some_and(|route| route.ready.contains(&idx)),
                 _ => false,
             };
             if stealable {
-                let job = q.pop_front();
+                let job = q.main.pop_front();
                 shard.not_full.notify_one();
                 return job;
+            }
+            if q.main.is_empty() {
+                if let Some(job) = q.bg.pop_front() {
+                    return Some(job);
+                }
             }
         }
         None
@@ -752,7 +829,8 @@ impl WorkerPool {
     fn drain_shard(&self, idx: usize) {
         let shard = &self.shards[idx];
         let mut q = mutex_lock(&shard.queue);
-        q.clear();
+        q.main.clear();
+        q.bg.clear();
         shard.not_full.notify_all();
     }
 }
@@ -874,8 +952,25 @@ fn worker_serve(pool: &WorkerPool, idx: usize, engine: &dyn Engine) {
                 }
                 let _ = reply.send(result);
             }
+            Job::Explore { spec, inputs, key, candidate, seq, reply } => {
+                let t0 = Instant::now();
+                let cost = explore_scratch(engine, &spec, &inputs);
+                let busy = t0.elapsed();
+                let _ = reply.send(ExploreResult { key, candidate, seq, cost, busy });
+            }
         }
     }
+}
+
+/// Background candidate measurement: compile into a scratch executable,
+/// time one execution, drop everything. The worker's serving cache and
+/// its exec counters are untouched — background work is accounted by the
+/// leader's `BackgroundStats`, not the pool's serving stats.
+fn explore_scratch(engine: &dyn Engine, spec: &InstallSpec, inputs: &[HostTensor]) -> Result<f64> {
+    let exe = engine.compile(&spec.variant, &spec.hlo_text)?;
+    let t0 = Instant::now();
+    exe.execute(inputs)?;
+    Ok(t0.elapsed().as_secs_f64())
 }
 
 fn compile_into(

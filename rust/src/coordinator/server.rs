@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::background::{BackgroundScheduler, ExploreOptions, ExploreResult};
 use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
 use crate::coordinator::drift::DriftPolicy;
 use crate::coordinator::fastlane::FastLane;
@@ -56,6 +57,9 @@ enum Request {
         path: std::path::PathBuf,
         reply: mpsc::SyncSender<Result<usize>>,
     },
+    /// Internal: one background explore job's outcome, forwarded from
+    /// the explore-worker reply channel onto the leader queue.
+    ExploreDone(ExploreResult),
     Shutdown,
 }
 
@@ -289,6 +293,17 @@ pub struct ServerOptions {
     /// that starts late still gets joined. `None` keeps the
     /// process-local behaviour exactly.
     pub hub: Option<HubOptions>,
+    /// Background shadow exploration (the serve/explore split — see
+    /// [`crate::coordinator::background`]). `Some(opts)` means callers
+    /// never pay exploration: anything not yet tuned serves the
+    /// current-best (or default) variant while candidate compile+measure
+    /// runs as background jobs on the worker pool — or on a dedicated
+    /// shadow worker built from `ExploreOptions::shadow_factory` when no
+    /// pool is configured — capped at `opts.pct`% of explore-worker time
+    /// per window. `pct = 0` serves the default forever and never tunes
+    /// (documented escape hatch: `jitune run --explore-budget 0`).
+    /// `None` keeps inline exploration exactly as before.
+    pub explore_budget: Option<ExploreOptions>,
 }
 
 impl Default for ServerOptions {
@@ -299,6 +314,7 @@ impl Default for ServerOptions {
             pool: None,
             drift: None,
             hub: None,
+            explore_budget: None,
         }
     }
 }
@@ -309,6 +325,13 @@ pub struct Coordinator {
     join: Option<JoinHandle<()>>,
     fast_lane: Option<Arc<FastLane>>,
     pool: Option<Arc<WorkerPool>>,
+    /// Dedicated explore worker when background mode runs without a
+    /// serving pool; stopped at shutdown.
+    shadow_pool: Option<Arc<WorkerPool>>,
+    /// Explore-result forwarder thread; exits once every reply sender
+    /// (the leader's scheduler + drained jobs) has dropped, joined at
+    /// shutdown.
+    forwarder: Option<JoinHandle<()>>,
 }
 
 impl Coordinator {
@@ -383,6 +406,78 @@ impl Coordinator {
         let leader_lane = lane.clone();
         let leader_pool = pool.clone();
         let (tx, rx) = mpsc::channel::<Request>();
+        // Background explore substrate: jobs run on the serving pool's
+        // background lane when one exists, else on a dedicated one-worker
+        // shadow pool built from `ExploreOptions::shadow_factory`. With
+        // neither, background mode is disabled and exploration stays
+        // inline. Results come back over a private channel; a tiny
+        // forwarder thread moves them onto the leader queue so the leader
+        // keeps a single receive loop.
+        let mut shadow_pool: Option<Arc<WorkerPool>> = None;
+        let mut scheduler: Option<BackgroundScheduler> = None;
+        let mut forwarder: Option<JoinHandle<()>> = None;
+        if let Some(eo) = &opts.explore_budget {
+            let substrate = if let Some(pool) = &pool {
+                Some((pool.clone(), pool.worker_count()))
+            } else if let Some(factory) = &eo.shadow_factory {
+                let spawned = match WorkerPool::spawn(PoolOptions {
+                    workers: 1,
+                    queue_depth: 8,
+                    factory: factory.clone(),
+                }) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        if let Some(pool) = &pool {
+                            pool.stop();
+                        }
+                        return Err(e);
+                    }
+                };
+                shadow_pool = Some(spawned.clone());
+                Some((spawned, 1))
+            } else {
+                log::warn!(
+                    "explore budget ignored: no worker pool and no shadow \
+                     factory, so background jobs have nowhere to run; \
+                     exploring inline"
+                );
+                None
+            };
+            if let Some((explore_pool, explore_workers)) = substrate {
+                let (bg_tx, bg_rx) = mpsc::channel::<ExploreResult>();
+                scheduler = Some(BackgroundScheduler::new(
+                    eo.clone(),
+                    explore_pool,
+                    explore_workers,
+                    bg_tx,
+                ));
+                let main_tx = tx.clone();
+                let fwd = std::thread::Builder::new()
+                    .name("jitune-explore-fwd".into())
+                    .spawn(move || {
+                        // Exits once every result sender (the leader's
+                        // scheduler plus any drained jobs) has dropped,
+                        // or when the leader queue itself is gone.
+                        for result in bg_rx {
+                            if main_tx.send(Request::ExploreDone(result)).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                match fwd {
+                    Ok(handle) => forwarder = Some(handle),
+                    Err(e) => {
+                        if let Some(pool) = &pool {
+                            pool.stop();
+                        }
+                        if let Some(sp) = &shadow_pool {
+                            sp.stop();
+                        }
+                        return Err(Error::Coordinator(format!("spawn: {e}")));
+                    }
+                }
+            }
+        }
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let join = std::thread::Builder::new()
             .name("jitune-leader".into())
@@ -398,6 +493,9 @@ impl Coordinator {
                         }
                         if let Some(pool) = leader_pool {
                             d.attach_pool(pool);
+                        }
+                        if let Some(scheduler) = scheduler {
+                            d.set_background(scheduler);
                         }
                         // Hub warm-start happens before readiness is
                         // signalled: when spawn() returns, the tuned map
@@ -436,13 +534,23 @@ impl Coordinator {
                 let mut next_drift = drift_every.map(|every| Instant::now() + every);
                 let mut next_pull = pull_every.map(|every| Instant::now() + every);
                 'serve: loop {
+                    // Advance the background explore scheduler first:
+                    // expire hedges, roll the duty-cycle window, issue
+                    // whatever jobs the budget allows, and learn when it
+                    // next needs the loop awake (hedge deadline or window
+                    // roll). No-op (`None`) when background mode is off.
+                    let next_bg = dispatcher.background_tick(Instant::now());
                     // Block for the head request — with a deadline when a
-                    // drift policy or a periodic hub pull needs the loop
-                    // to wake even while the queue is idle.
-                    let next_tick = match (next_drift, next_pull) {
-                        (Some(a), Some(b)) => Some(a.min(b)),
-                        (a, b) => a.or(b),
-                    };
+                    // drift policy, a periodic hub pull, or the background
+                    // scheduler needs the loop to wake even while the
+                    // queue is idle. All timers coalesce into a single
+                    // earliest-next-event `recv_timeout` deadline, so a
+                    // saturated round queue cannot starve drift ticks and
+                    // explore wakes never busy-spin the leader.
+                    let next_tick = [next_drift, next_pull, next_bg]
+                        .into_iter()
+                        .flatten()
+                        .min();
                     let first = match next_tick {
                         Some(deadline) => {
                             let timeout = deadline.saturating_duration_since(Instant::now());
@@ -559,6 +667,12 @@ impl Coordinator {
                                         dispatcher.stats().fused_json(),
                                     ));
                                 }
+                                if dispatcher.background_active() {
+                                    obj.push((
+                                        "background".to_string(),
+                                        dispatcher.stats().background_json(),
+                                    ));
+                                }
                                 let _ = reply.send(Value::Obj(obj));
                             }
                             Request::HubPull { reply } => {
@@ -566,6 +680,9 @@ impl Coordinator {
                             }
                             Request::SaveState { path, reply } => {
                                 let _ = reply.send(dispatcher.save_state(&path));
+                            }
+                            Request::ExploreDone(result) => {
+                                dispatcher.background_report(result);
                             }
                             Request::Shutdown => shutdown = true,
                         }
@@ -598,6 +715,9 @@ impl Coordinator {
                 if let Some(pool) = &pool {
                     pool.stop();
                 }
+                if let Some(sp) = &shadow_pool {
+                    sp.stop();
+                }
                 Error::Coordinator(format!("spawn: {e}"))
             })?;
         let ready = ready_rx
@@ -610,9 +730,15 @@ impl Coordinator {
             if let Some(pool) = &pool {
                 pool.stop();
             }
+            if let Some(sp) = &shadow_pool {
+                sp.stop();
+            }
+            if let Some(fwd) = forwarder.take() {
+                let _ = fwd.join();
+            }
             return Err(e);
         }
-        Ok(Coordinator { tx, join: Some(join), fast_lane: lane, pool })
+        Ok(Coordinator { tx, join: Some(join), fast_lane: lane, pool, shadow_pool, forwarder })
     }
 
     /// A new handle for this coordinator.
@@ -626,6 +752,9 @@ impl Coordinator {
 
     /// Graceful shutdown (also triggered by Drop): stop the leader, then
     /// the worker pool — queued pool jobs drain before the threads join.
+    /// The explore-result forwarder joins last: once the leader (holding
+    /// the scheduler's reply sender) is gone and the pools have dropped
+    /// their queued jobs, its channel disconnects and it exits.
     pub fn shutdown(&mut self) {
         let _ = self.tx.send(Request::Shutdown);
         if let Some(join) = self.join.take() {
@@ -633,6 +762,12 @@ impl Coordinator {
         }
         if let Some(pool) = &self.pool {
             pool.stop();
+        }
+        if let Some(pool) = &self.shadow_pool {
+            pool.stop();
+        }
+        if let Some(fwd) = self.forwarder.take() {
+            let _ = fwd.join();
         }
     }
 }

@@ -76,6 +76,43 @@ pub struct FusedStats {
     pub explore_rounds_saved: u64,
 }
 
+/// Background shadow-exploration counters (process-wide): what the
+/// serve/explore split moved off the serving path (see
+/// [`super::background`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BackgroundStats {
+    /// Background compile+measure jobs completed by explore workers
+    /// (including stale results whose measurement was dropped — the
+    /// worker still ran them).
+    pub jobs_run: u64,
+    /// Total worker time those jobs consumed.
+    pub busy: Duration,
+    /// In-flight jobs written off by the hedge deadline.
+    pub hedges_fired: u64,
+    /// Calls served the current-best/default variant while their problem
+    /// was still tuning — each one a call that would have paid an inline
+    /// explore or finalize.
+    pub serve_while_exploring: u64,
+    /// Completed duty-cycle windows.
+    pub windows: u64,
+    /// Sum of realized per-window duty-cycle percentages (mean =
+    /// [`BackgroundStats::duty_cycle_pct`]).
+    pub duty_pct_sum: f64,
+    /// Realized duty-cycle percentage of the most recent window.
+    pub last_duty_pct: f64,
+}
+
+impl BackgroundStats {
+    /// Mean realized duty-cycle percentage across completed windows.
+    pub fn duty_cycle_pct(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.duty_pct_sum / self.windows as f64
+        }
+    }
+}
+
 /// Tuned-state hub traffic counters (process-wide, not per kernel).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HubStats {
@@ -103,6 +140,8 @@ pub struct CoordStats {
     hub: HubStats,
     /// Fused exploration rounds, when co-scheduled calls got batched.
     fused: FusedStats,
+    /// Background shadow exploration, when a scheduler is attached.
+    background: BackgroundStats,
 }
 
 impl CoordStats {
@@ -114,6 +153,7 @@ impl CoordStats {
             drift_events: Vec::new(),
             hub: HubStats::default(),
             fused: FusedStats::default(),
+            background: BackgroundStats::default(),
         }
     }
 
@@ -233,6 +273,52 @@ impl CoordStats {
         ])
     }
 
+    /// Record one completed background explore job and the worker time
+    /// it consumed.
+    pub fn background_job(&mut self, busy: Duration) {
+        self.background.jobs_run += 1;
+        self.background.busy += busy;
+    }
+
+    /// Record one hedged (written-off) background job.
+    pub fn background_hedge(&mut self) {
+        self.background.hedges_fired += 1;
+    }
+
+    /// Record one call served the current-best/default variant while its
+    /// problem was still tuning.
+    pub fn background_serve(&mut self) {
+        self.background.serve_while_exploring += 1;
+    }
+
+    /// Record one completed duty-cycle window's realized percentage.
+    pub fn background_window(&mut self, pct: f64) {
+        self.background.windows += 1;
+        self.background.duty_pct_sum += pct;
+        self.background.last_duty_pct = pct;
+    }
+
+    /// Background shadow-exploration counters.
+    pub fn background(&self) -> BackgroundStats {
+        self.background
+    }
+
+    /// Background counters as JSON (the `background` object in
+    /// `stats_json()`).
+    pub fn background_json(&self) -> Value {
+        Value::Obj(vec![
+            ("jobs_run".into(), n(self.background.jobs_run as f64)),
+            ("busy_s".into(), n(self.background.busy.as_secs_f64())),
+            ("hedges_fired".into(), n(self.background.hedges_fired as f64)),
+            (
+                "serve_while_exploring".into(),
+                n(self.background.serve_while_exploring as f64),
+            ),
+            ("windows".into(), n(self.background.windows as f64)),
+            ("duty_cycle_pct".into(), n(self.background.duty_cycle_pct())),
+        ])
+    }
+
     /// Record one hub publish (and whether the broker reported a merge
     /// conflict for it).
     pub fn hub_push(&mut self, conflict: bool) {
@@ -336,6 +422,17 @@ impl CoordStats {
                 self.fused.fused_calls,
                 self.fused.replicated_measurements,
                 self.fused.explore_rounds_saved
+            ));
+        }
+        if self.background.jobs_run > 0 || self.background.serve_while_exploring > 0 {
+            out.push_str(&format!(
+                "background: jobs={} busy={:.1}ms hedges={} served-while-exploring={} \
+                 duty={:.2}%\n",
+                self.background.jobs_run,
+                self.background.busy.as_secs_f64() * 1e3,
+                self.background.hedges_fired,
+                self.background.serve_while_exploring,
+                self.background.duty_cycle_pct()
             ));
         }
         for (k, s) in &self.kernels {
@@ -457,6 +554,30 @@ mod tests {
         assert_eq!(json.get("replicated_measurements").unwrap().as_i64(), Some(1));
         assert_eq!(json.get("explore_rounds_saved").unwrap().as_i64(), Some(5));
         assert!(s.render().contains("fused rounds: 2"), "{}", s.render());
+    }
+
+    #[test]
+    fn background_counters_tracked_and_rendered() {
+        let mut s = CoordStats::new();
+        assert!(!s.render().contains("background:"), "no line before any activity");
+        s.background_job(Duration::from_millis(2));
+        s.background_job(Duration::from_millis(4));
+        s.background_hedge();
+        s.background_serve();
+        s.background_serve();
+        s.background_window(4.0);
+        s.background_window(6.0);
+        let b = s.background();
+        assert_eq!((b.jobs_run, b.hedges_fired, b.serve_while_exploring), (2, 1, 2));
+        assert_eq!(b.busy, Duration::from_millis(6));
+        assert!((b.duty_cycle_pct() - 5.0).abs() < 1e-9);
+        assert!((b.last_duty_pct - 6.0).abs() < 1e-9);
+        let json = s.background_json();
+        assert_eq!(json.get("jobs_run").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("hedges_fired").unwrap().as_i64(), Some(1));
+        assert_eq!(json.get("serve_while_exploring").unwrap().as_i64(), Some(2));
+        assert_eq!(json.get("windows").unwrap().as_i64(), Some(2));
+        assert!(s.render().contains("background: jobs=2"), "{}", s.render());
     }
 
     #[test]

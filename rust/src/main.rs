@@ -7,7 +7,8 @@ use jitune::autotuner::Autotuner;
 use jitune::cli::{self, FlagSpec};
 use jitune::config::{Config, RunSettings};
 use jitune::coordinator::{
-    BatchOptions, CallRoute, Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions,
+    BatchOptions, CallRoute, Coordinator, Dispatcher, ExploreOptions, KernelRegistry, PoolOptions,
+    ServerOptions,
 };
 use jitune::hub::{merge_entry, HubClient, HubEntry, HubOptions, HubServer, Merge};
 use jitune::manifest::Manifest;
@@ -60,6 +61,14 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "run: serve the trace through a coordinator whose leader drains \
                    up to N requests per scheduling round (co-scheduled same-problem \
                    calls fuse into one exploration round)",
+        },
+        FlagSpec {
+            name: "explore-budget",
+            takes_value: true,
+            help: "run: background shadow exploration — callers always execute the \
+                   current-best (or default) variant while candidates compile+measure \
+                   in the background, capped at this % of explore-worker time \
+                   (0 = serve the default variant only, never tune)",
         },
     ]
 }
@@ -118,17 +127,39 @@ fn run(args: &[String]) -> Result<()> {
                 n if n > 0 => Some(n as usize),
                 bad => return Err(Error::Config(format!("--max-batch `{bad}` must be positive"))),
             };
+            let explore_budget = match parsed.get("explore-budget") {
+                None => None,
+                Some(raw) => {
+                    let pct: f64 = raw.parse().map_err(|_| {
+                        Error::Config(format!("--explore-budget `{raw}` must be a number"))
+                    })?;
+                    if !(0.0..=100.0).contains(&pct) {
+                        return Err(Error::Config(format!(
+                            "--explore-budget `{raw}` must be between 0 and 100"
+                        )));
+                    }
+                    Some(pct)
+                }
+            };
             match parsed.i64_or("pool", 0)? {
-                // no pool, no explicit batching: the plain single-lane replay
-                0 if max_batch.is_none() => {
+                // no pool, no batching, no budget: plain single-lane replay
+                0 if max_batch.is_none() && explore_budget.is_none() => {
                     run_trace(&settings, &spec, parsed.get("state-file"))
                 }
-                0 => run_trace_served(&settings, &spec, 0, max_batch, parsed.get("state-file")),
+                0 => run_trace_served(
+                    &settings,
+                    &spec,
+                    0,
+                    max_batch,
+                    explore_budget,
+                    parsed.get("state-file"),
+                ),
                 workers if workers > 0 => run_trace_served(
                     &settings,
                     &spec,
                     workers as usize,
                     max_batch,
+                    explore_budget,
                     parsed.get("state-file"),
                 ),
                 bad => Err(Error::Config(format!("--pool `{bad}` must be positive"))),
@@ -234,6 +265,7 @@ fn tune_with_state(
             CallRoute::Explored => "explore",
             CallRoute::Finalized => "finalize",
             CallRoute::Tuned => "tuned",
+            CallRoute::Default => "default",
         };
         println!(
             "call {i:3}: {route:<8} variant={:<28} value={:<6} compile={} total={:.3}ms",
@@ -296,18 +328,25 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
     Ok(())
 }
 
-/// `jitune run --trace .. [--pool N] [--max-batch B]`: replay the trace
-/// through a live coordinator. `--pool N` serves steady-state calls on a
-/// worker pool of N PJRT engines (finalized winners replicated onto
-/// every worker — thread-pinned executables scale off-leader);
-/// `--max-batch B` sizes the leader's scheduling rounds, so co-scheduled
-/// same-problem calls fuse into one exploration round. The printed stats
-/// include the per-worker pool and fused-round counters.
+/// `jitune run --trace .. [--pool N] [--max-batch B] [--explore-budget P]`:
+/// replay the trace through a live coordinator. `--pool N` serves
+/// steady-state calls on a worker pool of N PJRT engines (finalized
+/// winners replicated onto every worker — thread-pinned executables
+/// scale off-leader); `--max-batch B` sizes the leader's scheduling
+/// rounds, so co-scheduled same-problem calls fuse into one exploration
+/// round; `--explore-budget P` moves exploration off the serving path
+/// entirely — callers execute the current-best (or default) variant
+/// while candidates compile+measure in the background, capped at P% of
+/// explore-worker time (`0` serves the default forever and never
+/// tunes). Without a pool the budget runs on a dedicated shadow engine.
+/// The printed stats include the per-worker pool, fused-round and
+/// background counters.
 fn run_trace_served(
     settings: &RunSettings,
     spec: &str,
     workers: usize,
     max_batch: Option<usize>,
+    explore_budget: Option<f64>,
     state_file: Option<&str>,
 ) -> Result<()> {
     let trace = parse_trace(spec)?;
@@ -321,6 +360,14 @@ fn run_trace_served(
     };
     if let Some(max_batch) = max_batch {
         opts.batch = BatchOptions { max_batch };
+    }
+    if let Some(pct) = explore_budget {
+        let mut eo = ExploreOptions::percent(pct);
+        if workers == 0 {
+            // no serving pool: background jobs get their own engine
+            eo = eo.with_shadow_factory(Arc::new(PjrtEngineFactory));
+        }
+        opts.explore_budget = Some(eo);
     }
     let coordinator = Coordinator::spawn_with_options(
         move || {

@@ -1,0 +1,225 @@
+//! Background shadow exploration contracts: the duty-cycle budget is
+//! respected under sustained traffic, a wedged candidate is hedged off
+//! and the round recovers, and a cold-start caller stream never observes
+//! explore-inflated latency once a runnable variant exists.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::autotuner::{search, Autotuner, WallClock};
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, ExploreOptions, KernelRegistry, PoolOptions, ServerOptions,
+};
+use jitune::runtime::mock::{MockEngineFactory, MockSpec};
+use jitune::runtime::EngineFactory;
+use jitune::tensor::HostTensor;
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
+use jitune::util::json::Value;
+
+const KERNEL: &str = "kern";
+const SIZE: i64 = 8;
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+fn background_json(stats: &Value) -> &Value {
+    stats.get("background").expect("background counters exported")
+}
+
+/// Poll `tuned_value` through the handle until the problem reaches
+/// `Phase::Tuned`; panics after `timeout`.
+fn wait_tuned(coord: &Coordinator, timeout: Duration) -> i64 {
+    let h = coord.handle();
+    let t0 = Instant::now();
+    loop {
+        if let Some(v) = h.tuned_value(KERNEL, SIZE).unwrap() {
+            return v;
+        }
+        assert!(t0.elapsed() < timeout, "background tuning never converged");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Duty-cycle budget under sustained traffic: with a 20% budget on 2
+/// explore workers, exploration busy time stays within the budget (the
+/// overshoot is bounded by the in-flight pipeline, about one window) and
+/// — the flip side — tuning is genuinely *stretched*: it cannot finish
+/// faster than the budget rate allows.
+#[test]
+fn duty_cycle_budget_respected_under_sustained_traffic() {
+    const WORKERS: usize = 2;
+    const PCT: f64 = 20.0;
+    let window = Duration::from_millis(50);
+    // Each explore job costs ~4ms (2ms compile spin + 2ms exec sleep),
+    // well under the 20ms per-window capacity, so issuance granularity
+    // cannot blow the budget. `random:32` keeps exploring long enough
+    // (~128ms of busy work) to span several windows.
+    let spec = MockSpec::default()
+        .with_compile_cost(Duration::from_millis(2))
+        .with_sleep_exec();
+    let spec = MockSpec { default_exec_cost: Duration::from_millis(2), ..spec };
+    let factory = Arc::new(MockEngineFactory::pinned(spec));
+    let leader_factory: Arc<dyn EngineFactory> = factory.clone();
+    let opts = ServerOptions {
+        pool: Some(PoolOptions::new(factory).with_workers(WORKERS)),
+        explore_budget: Some(ExploreOptions::percent(PCT).with_window(window)),
+        ..ServerOptions::default()
+    };
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest(KERNEL, 8, &[SIZE])?;
+            let tuner = Autotuner::with_factory(Box::new(|values| {
+                search::from_spec("random:32", values.len(), 7).unwrap()
+            }));
+            Ok(Dispatcher::with(
+                KernelRegistry::new(manifest),
+                leader_factory.create()?,
+                tuner,
+                Box::new(WallClock::new()),
+            ))
+        },
+        opts,
+    )
+    .unwrap();
+
+    // Sustained caller traffic while the background tunes.
+    let h = coord.handle();
+    let t0 = Instant::now();
+    let tuned_after = loop {
+        h.call(KERNEL, inputs()).unwrap();
+        if h.tuned_value(KERNEL, SIZE).unwrap().is_some() {
+            break t0.elapsed();
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "never tuned under budget");
+    };
+
+    let json = coord.handle().stats_json().unwrap();
+    let bg = background_json(&json);
+    let jobs = bg.get("jobs_run").unwrap().as_i64().unwrap();
+    let busy = bg.get("busy_s").unwrap().as_f64().unwrap();
+    assert!(jobs >= 8, "random:32 must run a real sample count, got {jobs}");
+    assert!(busy > 0.0);
+
+    // Budget rate in busy-seconds per wall-second across the workers.
+    let rate = WORKERS as f64 * PCT / 100.0;
+    let elapsed = tuned_after.as_secs_f64();
+    // Upper bound: spent busy time never exceeds the budget by more than
+    // the per-window issuance granularity (in-flight pipeline of
+    // workers+1 jobs, ~1 window of capacity) — allow 2x for CI noise.
+    // A broken throttle runs the workers flat out (~100% duty).
+    assert!(
+        busy <= 2.0 * rate * elapsed + 2.0 * window.as_secs_f64() * rate,
+        "duty cycle blown: {busy:.3}s busy in {elapsed:.3}s at {PCT}% x{WORKERS}"
+    );
+    // Lower bound: the throttle genuinely stretches exploration — the
+    // measured busy work cannot have fit in fewer windows than the
+    // budget allows (again with 2x overshoot headroom).
+    assert!(
+        elapsed >= busy / (2.0 * rate),
+        "tuned too fast for the budget: {busy:.3}s busy in {elapsed:.3}s"
+    );
+    // Every window's realized duty cycle was measured and reported.
+    assert!(bg.get("windows").unwrap().as_i64().unwrap() >= 2, "{}", json.to_json());
+}
+
+/// Hedged cancellation: one candidate whose measurement wedges (100x
+/// latency fault) is written off at the hedge deadline, the round moves
+/// on without it, and tuning still converges — to some other variant.
+#[test]
+fn hedge_writes_off_wedged_candidate_and_recovers() {
+    let spec = MockSpec::default()
+        .with_compile_cost(Duration::from_millis(2))
+        .with_sleep_exec();
+    let spec = MockSpec { default_exec_cost: Duration::from_millis(3), ..spec };
+    let fault = spec.latency_fault.clone();
+    // Wedge a middle candidate: the serving default (v0) stays healthy,
+    // only v2's background measurement hangs for ~300ms.
+    fault.set_scale(&format!("{KERNEL}.v2.n{SIZE}"), 100.0);
+    let opts = ServerOptions {
+        explore_budget: Some(
+            ExploreOptions::percent(50.0)
+                .with_window(Duration::from_millis(50))
+                .with_hedge(Duration::from_millis(80)),
+        ),
+        ..ServerOptions::default()
+    };
+    let coord = spawn_pooled_mock(KERNEL, 4, &[SIZE], spec, 2, opts).unwrap();
+
+    // One call plans the problem and starts background exploration.
+    let out = coord.handle().call(KERNEL, inputs()).unwrap();
+    assert_eq!(out.route, CallRoute::Default, "cold call serves the default");
+
+    let winner = wait_tuned(&coord, Duration::from_secs(10));
+    assert_ne!(winner, 2, "the wedged candidate cannot win");
+
+    let json = coord.handle().stats_json().unwrap();
+    let bg = background_json(&json);
+    assert!(
+        bg.get("hedges_fired").unwrap().as_i64().unwrap() >= 1,
+        "the wedged job must have been hedged: {}",
+        json.to_json()
+    );
+}
+
+/// Cold-start serving latency: while the background explores, callers
+/// are routed to the current-best/default variant and never pay a
+/// candidate's compile+measure. Only the call that compiles the default
+/// itself (and at most a couple queued behind the leader-side finalize
+/// compile) may exceed the serving cost; under inline exploration every
+/// early call would pay the ~40ms candidate compile.
+#[test]
+fn cold_start_callers_never_pay_exploration() {
+    let compile = Duration::from_millis(40);
+    let spec = MockSpec::default().with_compile_cost(compile).with_sleep_exec();
+    let spec = MockSpec { default_exec_cost: Duration::from_millis(2), ..spec };
+    let opts = ServerOptions {
+        explore_budget: Some(
+            ExploreOptions::percent(80.0).with_window(Duration::from_millis(20)),
+        ),
+        ..ServerOptions::default()
+    };
+    let coord = spawn_pooled_mock(KERNEL, 8, &[SIZE], spec, 2, opts).unwrap();
+
+    let h = coord.handle();
+    let mut outcomes = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        outcomes.push(h.call(KERNEL, inputs()).unwrap());
+        if h.tuned_value(KERNEL, SIZE).unwrap().is_some() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(30), "background tuning never converged");
+    }
+
+    // No caller ever ran an exploration round.
+    for o in &outcomes {
+        assert!(
+            matches!(o.route, CallRoute::Default | CallRoute::Tuned),
+            "caller must never explore in background mode, got {:?}",
+            o.route
+        );
+    }
+    // At most the default-compile call plus a couple of calls queued
+    // behind the leader's finalize compile may exceed half the compile
+    // cost; a caller paying a full explore round would be ~40ms+ and
+    // inline mode would put *every* early call there.
+    let slow = outcomes.iter().filter(|o| o.total > compile / 2).count();
+    assert!(
+        slow <= 3,
+        "{slow} of {} cold-start calls saw explore-inflated latency",
+        outcomes.len()
+    );
+
+    let json = coord.handle().stats_json().unwrap();
+    let bg = background_json(&json);
+    assert!(
+        bg.get("serve_while_exploring").unwrap().as_i64().unwrap() >= 1,
+        "{}",
+        json.to_json()
+    );
+    assert!(bg.get("jobs_run").unwrap().as_i64().unwrap() >= 8, "{}", json.to_json());
+    // The rendered stats surface the background block too.
+    let (rendered, _) = coord.handle().stats().unwrap();
+    assert!(rendered.contains("background:"), "{rendered}");
+}
