@@ -1,0 +1,4 @@
+fn sloppy(v: Option<u32>) -> u32 {
+    // jitune-lint: allow(L005)
+    v.unwrap()
+}

@@ -1,0 +1,7 @@
+use std::sync::{Condvar, Mutex, RwLock};
+
+struct Bad {
+    state: Mutex<u32>,
+    map: RwLock<u32>,
+    cv: Condvar,
+}

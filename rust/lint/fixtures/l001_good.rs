@@ -1,0 +1,12 @@
+use crate::sync::{TrackedCondvar, TrackedMutex, TrackedRwLock};
+
+struct Good {
+    state: TrackedMutex<u32>,
+    map: TrackedRwLock<u32>,
+    cv: TrackedCondvar,
+}
+
+// Mentioning Mutex, RwLock or Condvar in a comment is fine.
+fn sees_strings() -> &'static str {
+    "Mutex and Condvar in a string are fine too"
+}

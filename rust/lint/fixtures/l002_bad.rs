@@ -1,0 +1,5 @@
+fn bad(map: &SomeLock) {
+    let _ = map.lock().unwrap();
+    let _ = map.read().unwrap();
+    let _ = map.write().expect("poisoned");
+}

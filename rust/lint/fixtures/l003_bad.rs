@@ -1,0 +1,13 @@
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+
+fn bump() {
+    HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+fn unresolvable(pairs: &[(String, AtomicU64)]) {
+    for (_, v) in pairs {
+        v.fetch_add(1, Ordering::Relaxed);
+    }
+}

@@ -1,0 +1,14 @@
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+static HITS: AtomicU64 = AtomicU64::new(0); // relaxed-counter: stats-only tally
+
+// relaxed-counter: round-robin cursor, no ordering required
+static CURSOR: AtomicUsize = AtomicUsize::new(0);
+
+fn bump(buckets: &[AtomicU64]) {
+    HITS.fetch_add(1, Ordering::Relaxed);
+    CURSOR.fetch_add(1, Ordering::Relaxed);
+    for b in buckets {
+        b.swap(0, Ordering::Relaxed); // relaxed-counter: draining bucket tallies
+    }
+}

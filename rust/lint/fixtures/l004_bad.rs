@@ -1,0 +1,3 @@
+fn spawn_unnamed() {
+    std::thread::spawn(|| {});
+}

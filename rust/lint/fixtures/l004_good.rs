@@ -1,0 +1,15 @@
+fn spawn_named() {
+    std::thread::Builder::new()
+        .name("jitune-worker".into())
+        .spawn(|| {})
+        .expect("spawn worker");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_threads_may_be_unnamed() {
+        let j = std::thread::spawn(|| 1);
+        assert_eq!(j.join().unwrap(), 1);
+    }
+}

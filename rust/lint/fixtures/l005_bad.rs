@@ -1,0 +1,7 @@
+fn risky(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+fn also_risky(v: Option<u32>) -> u32 {
+    v.expect("present")
+}

@@ -1,0 +1,16 @@
+fn guarded(v: Option<u32>) -> u32 {
+    // jitune-lint: allow(L005): the caller checked v above
+    v.unwrap()
+}
+
+fn guarded_inline(v: Option<u32>) -> u32 {
+    v.unwrap() // jitune-lint: allow(L005): same-line form
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        assert_eq!(Some(3).unwrap(), 3);
+    }
+}

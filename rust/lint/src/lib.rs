@@ -1,0 +1,661 @@
+//! jitune-lint — project-specific concurrency lints for the jitune tree.
+//!
+//! A deliberately small, std-only pass: a line lexer (tracking block
+//! comments, string/raw-string/char literals across lines) feeds five
+//! substring-level rules. This is not a parser — the rules are written
+//! so that lexical matching is sufficient, and every rule has an inline
+//! escape hatch that forces the author to write down *why*.
+//!
+//! Rules:
+//! - **L001** — raw `std::sync` lock types (`Mutex`, `RwLock`, `Condvar`
+//!   and their guards) outside `sync/`. Everything else uses the
+//!   `crate::sync::Tracked*` wrappers so lock-order tracking and poison
+//!   tolerance stay in one place.
+//! - **L002** — `.lock().unwrap()` / `.read().unwrap()` /
+//!   `.write().unwrap()` (or the `.expect(...)` spellings). Poison
+//!   tolerance lives in the wrappers; call sites never re-decide it.
+//! - **L003** — `Ordering::Relaxed` on an atomic whose declaration is
+//!   not annotated `// relaxed-counter: <why>`. Relaxed is correct only
+//!   for pure counters/cursors that never synchronize other memory; the
+//!   annotation is the audit trail. When the receiver cannot be
+//!   resolved on the usage line (e.g. a loop variable), annotate the
+//!   usage line itself.
+//! - **L004** — `thread::spawn` outside `#[cfg(test)]`. Production
+//!   threads are spawned via `thread::Builder::new().name(..)` so panics,
+//!   TSan reports and `/proc` are attributable.
+//! - **L005** — `.unwrap()` / `.expect(` on non-test `coordinator/` and
+//!   `hub/` paths. Serving-path invariants are either handled or
+//!   justified in place.
+//!
+//! Suppression: `// jitune-lint: allow(LXXX): <reason>` on the offending
+//! line, or alone on the line directly above it. The reason is
+//! mandatory — an allow without one is reported as **L000**.
+
+use std::collections::HashSet;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint violation at a file/line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One source line split into executable code and comment text.
+struct Line {
+    code: String,
+    comment: String,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum LexState {
+    Code,
+    /// Inside a (nesting) block comment, with current depth.
+    Block(u32),
+    /// Inside a regular string literal.
+    Str,
+    /// Inside a raw string literal opened with this many `#`s.
+    RawStr(u8),
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Split `text` into per-line (code, comment) pairs. String and char
+/// literal *contents* are dropped from the code channel (the delimiters
+/// are kept) so literals never trip a rule; comment text is preserved
+/// separately because annotations and allows live there.
+fn lex(text: &str) -> Vec<Line> {
+    let mut state = LexState::Code;
+    let mut out = Vec::new();
+    for raw in text.lines() {
+        let b = raw.as_bytes();
+        let mut code = Vec::new();
+        let mut comment = Vec::new();
+        let mut i = 0;
+        while i < b.len() {
+            match state {
+                LexState::Code => {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        comment.extend_from_slice(&b[i + 2..]);
+                        i = b.len();
+                    } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        state = LexState::Block(1);
+                        code.push(b' ');
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        code.push(b'"');
+                        state = LexState::Str;
+                        i += 1;
+                    } else if b[i] == b'r' && (i == 0 || !is_ident(b[i - 1])) {
+                        // raw string head: r" or r#..#"
+                        let mut j = i + 1;
+                        let mut hashes: u8 = 0;
+                        while j < b.len() && b[j] == b'#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < b.len() && b[j] == b'"' {
+                            code.push(b'"');
+                            state = LexState::RawStr(hashes);
+                            i = j + 1;
+                        } else {
+                            code.push(b[i]);
+                            i += 1;
+                        }
+                    } else if b[i] == b'\'' {
+                        // char literal vs lifetime
+                        if i + 1 < b.len() && b[i + 1] == b'\\' {
+                            let mut j = i + 2;
+                            while j < b.len() && b[j] != b'\'' {
+                                j += 1;
+                            }
+                            i = j + 1;
+                        } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                            i += 3;
+                        } else {
+                            code.push(b'\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(b[i]);
+                        i += 1;
+                    }
+                }
+                LexState::Block(depth) => {
+                    if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                        state = LexState::Block(depth + 1);
+                        i += 2;
+                    } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                        state = if depth == 1 { LexState::Code } else { LexState::Block(depth - 1) };
+                        i += 2;
+                    } else {
+                        comment.push(b[i]);
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if b[i] == b'\\' {
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        code.push(b'"');
+                        state = LexState::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                LexState::RawStr(hashes) => {
+                    if b[i] == b'"' {
+                        let mut j = i + 1;
+                        let mut seen: u8 = 0;
+                        while j < b.len() && seen < hashes && b[j] == b'#' {
+                            seen += 1;
+                            j += 1;
+                        }
+                        if seen == hashes {
+                            code.push(b'"');
+                            state = LexState::Code;
+                            i = j;
+                        } else {
+                            i += 1;
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(Line {
+            code: String::from_utf8_lossy(&code).into_owned(),
+            comment: String::from_utf8_lossy(&comment).into_owned(),
+        });
+    }
+    out
+}
+
+/// True when `word` occurs in `code` as a whole identifier.
+fn has_word(code: &str, word: &str) -> bool {
+    let b = code.as_bytes();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(word) {
+        let s = from + p;
+        let e = s + word.len();
+        let pre = s == 0 || !is_ident(b[s - 1]);
+        let post = e >= b.len() || !is_ident(b[e]);
+        if pre && post {
+            return true;
+        }
+        from = s + 1;
+    }
+    false
+}
+
+/// Name of the atomic declared on this line (`static HITS: AtomicU64`,
+/// `executed: AtomicU64,` …): the identifier before the last single `:`
+/// preceding the word `Atomic`.
+fn counter_decl_name(code: &str) -> Option<String> {
+    let b = code.as_bytes();
+    let at = code.find("Atomic")?;
+    let mut colon = None;
+    let mut k = 0;
+    while k < at {
+        if b[k] == b':' {
+            if k + 1 < b.len() && b[k + 1] == b':' {
+                k += 2;
+                continue;
+            }
+            colon = Some(k);
+        }
+        k += 1;
+    }
+    let c = colon?;
+    let mut s = c;
+    while s > 0 && is_ident(b[s - 1]) {
+        s -= 1;
+    }
+    if s == c {
+        return None;
+    }
+    Some(code[s..c].to_string())
+}
+
+/// Atomic method calls whose last argument is a memory ordering.
+const ATOMIC_METHODS: &[&str] = &[
+    ".load(",
+    ".store(",
+    ".swap(",
+    ".fetch_add(",
+    ".fetch_sub(",
+    ".fetch_and(",
+    ".fetch_or(",
+    ".fetch_xor(",
+    ".fetch_max(",
+    ".fetch_min(",
+    ".compare_exchange(",
+    ".compare_exchange_weak(",
+];
+
+/// The identifier owning the atomic method call whose `.` is at `dot`:
+/// skips trailing index/call brackets, so `shard.buckets[i].fetch_add`
+/// resolves to `buckets` — the *field name*, which is what the
+/// `relaxed-counter` annotation marks.
+fn receiver_before(code: &[u8], dot: usize) -> Option<String> {
+    let mut i = dot;
+    while i > 0 && (code[i - 1] == b']' || code[i - 1] == b')') {
+        let close = code[i - 1];
+        let open = if close == b']' { b'[' } else { b'(' };
+        let mut depth = 1;
+        i -= 1;
+        while i > 0 && depth > 0 {
+            i -= 1;
+            if code[i] == close {
+                depth += 1;
+            } else if code[i] == open {
+                depth -= 1;
+            }
+        }
+        if depth > 0 {
+            return None;
+        }
+    }
+    let end = i;
+    while i > 0 && is_ident(code[i - 1]) {
+        i -= 1;
+    }
+    if i == end {
+        return None;
+    }
+    String::from_utf8(code[i..end].to_vec()).ok()
+}
+
+/// Receivers of every atomic method call on the line, or `None` when the
+/// line has no resolvable call (multi-line call, method on another line).
+fn relaxed_receivers(code: &str) -> Option<Vec<String>> {
+    let mut out = Vec::new();
+    for m in ATOMIC_METHODS {
+        let mut from = 0;
+        while let Some(p) = code[from..].find(m) {
+            let dot = from + p;
+            out.push(receiver_before(code.as_bytes(), dot)?);
+            from = dot + m.len();
+        }
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// Parse `jitune-lint: allow(LXXX): reason` out of a comment. Returns the
+/// rule id and whether a non-empty reason follows.
+fn parse_allow(comment: &str) -> Option<(String, bool)> {
+    const KEY: &str = "jitune-lint: allow(";
+    let p = comment.find(KEY)?;
+    let rest = &comment[p + KEY.len()..];
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    let after = rest[close + 1..].trim_start();
+    let has_reason = after.starts_with(':') && !after[1..].trim().is_empty();
+    Some((rule, has_reason))
+}
+
+/// Lock-type identifiers banned outside `sync/` (longest first so the
+/// guard names match as their own word, not via their prefix).
+const RAW_LOCK_WORDS: &[&str] =
+    &["MutexGuard", "RwLockReadGuard", "RwLockWriteGuard", "Mutex", "RwLock", "Condvar"];
+
+const L002_PATTERNS: &[&str] = &[
+    ".lock().unwrap()",
+    ".read().unwrap()",
+    ".write().unwrap()",
+    ".lock().expect(",
+    ".read().expect(",
+    ".write().expect(",
+];
+
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.contains(&format!("/{dir}/")) || path.starts_with(&format!("{dir}/"))
+}
+
+/// Run all rules over one file's text. `path` is used both for reporting
+/// and for the path-scoped rules (L001 exempts `sync/`, L005 applies to
+/// `coordinator/` and `hub/`).
+pub fn scan_file(path: &str, text: &str) -> Vec<Finding> {
+    let norm = path.replace('\\', "/");
+    let in_sync = in_dir(&norm, "sync");
+    let coord_or_hub = in_dir(&norm, "coordinator") || in_dir(&norm, "hub");
+    let lines = lex(text);
+    let n = lines.len();
+    let mut findings = Vec::new();
+
+    // Pass 1: relaxed-counter annotations. Collect the set of annotated
+    // atomic names and which lines carry a usage-level annotation.
+    let mut counters: HashSet<String> = HashSet::new();
+    let mut relaxed_allow = vec![false; n];
+    let mut pending_ann = false;
+    for (i, line) in lines.iter().enumerate() {
+        let has_ann = line.comment.contains("relaxed-counter:");
+        if line.code.trim().is_empty() {
+            pending_ann = pending_ann || has_ann;
+            continue;
+        }
+        if has_ann || pending_ann {
+            pending_ann = false;
+            relaxed_allow[i] = true;
+            if let Some(name) = counter_decl_name(&line.code) {
+                counters.insert(name);
+            } else if !line.code.contains("Ordering::Relaxed") {
+                findings.push(Finding {
+                    file: norm.clone(),
+                    line: i + 1,
+                    rule: "L000",
+                    message: "relaxed-counter annotation neither marks an atomic declaration \
+                              nor a Relaxed usage"
+                        .into(),
+                });
+            }
+        }
+    }
+
+    // Pass 2: allow comments.
+    let mut allows: Vec<Vec<String>> = vec![Vec::new(); n];
+    let mut pending_allows: Vec<String> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if let Some((rule, has_reason)) = parse_allow(&line.comment) {
+            if !has_reason {
+                findings.push(Finding {
+                    file: norm.clone(),
+                    line: i + 1,
+                    rule: "L000",
+                    message: format!("allow({rule}) without a `: <reason>` — say why"),
+                });
+            }
+            if line.code.trim().is_empty() {
+                pending_allows.push(rule);
+            } else {
+                allows[i].push(rule);
+            }
+        }
+        if !line.code.trim().is_empty() && !pending_allows.is_empty() {
+            allows[i].append(&mut pending_allows);
+        }
+    }
+
+    // Pass 3: rules, with `#[cfg(test)]` region tracking by brace depth.
+    let mut depth: i64 = 0;
+    let mut pending_test = false;
+    let mut test_until: Option<i64> = None;
+    for (i, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        let lineno = i + 1;
+        let in_test = test_until.is_some();
+        let allowed = |rule: &str| allows[i].iter().any(|r| r == rule);
+
+        if !in_sync && !allowed("L001") {
+            if let Some(w) = RAW_LOCK_WORDS.iter().find(|w| has_word(code, w)) {
+                findings.push(Finding {
+                    file: norm.clone(),
+                    line: lineno,
+                    rule: "L001",
+                    message: format!("raw std::sync `{w}` outside sync/ — use crate::sync::Tracked*"),
+                });
+            }
+        }
+
+        if !allowed("L002") {
+            if let Some(p) = L002_PATTERNS.iter().find(|p| code.contains(*p)) {
+                findings.push(Finding {
+                    file: norm.clone(),
+                    line: lineno,
+                    rule: "L002",
+                    message: format!(
+                        "`{p}` — the Tracked* wrappers are poison-tolerant, call `.lock()`/\
+                         `.read()`/`.write()` directly"
+                    ),
+                });
+            }
+        }
+
+        if code.contains("Ordering::Relaxed") && !relaxed_allow[i] && !allowed("L003") {
+            match relaxed_receivers(code) {
+                Some(rs) => {
+                    if let Some(bad) = rs.iter().find(|r| !counters.contains(*r)) {
+                        findings.push(Finding {
+                            file: norm.clone(),
+                            line: lineno,
+                            rule: "L003",
+                            message: format!(
+                                "`Ordering::Relaxed` on `{bad}`, which is not declared with a \
+                                 `// relaxed-counter: <why>` annotation"
+                            ),
+                        });
+                    }
+                }
+                None => findings.push(Finding {
+                    file: norm.clone(),
+                    line: lineno,
+                    rule: "L003",
+                    message: "cannot resolve the atomic behind this `Ordering::Relaxed`; \
+                              annotate the line `// relaxed-counter: <why>`"
+                        .into(),
+                }),
+            }
+        }
+
+        if !in_test && code.contains("thread::spawn") && !allowed("L004") {
+            findings.push(Finding {
+                file: norm.clone(),
+                line: lineno,
+                rule: "L004",
+                message: "unnamed `thread::spawn` — production threads use \
+                          `thread::Builder::new().name(..)` so panics and TSan reports are \
+                          attributable"
+                    .into(),
+            });
+        }
+
+        if coord_or_hub
+            && !in_test
+            && !allowed("L005")
+            && (code.contains(".unwrap()") || code.contains(".expect("))
+        {
+            findings.push(Finding {
+                file: norm.clone(),
+                line: lineno,
+                rule: "L005",
+                message: "`.unwrap()`/`.expect(` on a serving path — handle the error or \
+                          justify with `// jitune-lint: allow(L005): <reason>`"
+                    .into(),
+            });
+        }
+
+        // Region bookkeeping runs *after* the rules so the attribute line
+        // itself is judged as non-test (it carries no code anyway).
+        if code.contains("#[cfg(test)]") {
+            if code.contains('{') {
+                if test_until.is_none() {
+                    test_until = Some(depth);
+                }
+            } else {
+                pending_test = true;
+            }
+        } else if pending_test
+            && !code.trim().is_empty()
+            // a stacked attribute keeps us waiting for the actual item
+            && !code.trim_start().starts_with("#[")
+        {
+            if code.contains('{') && test_until.is_none() {
+                test_until = Some(depth);
+            }
+            pending_test = false;
+        }
+        for ch in code.bytes() {
+            match ch {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(d) = test_until {
+            if depth <= d {
+                test_until = None;
+            }
+        }
+    }
+
+    findings
+}
+
+fn collect_rs(p: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    if p.is_dir() {
+        for entry in fs::read_dir(p)? {
+            collect_rs(&entry?.path(), out)?;
+        }
+    } else if p.extension().is_some_and(|e| e == "rs") {
+        out.push(p.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under the given paths (files or directories),
+/// in deterministic path order.
+pub fn lint_paths(paths: &[PathBuf]) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect_rs(p, &mut files)?;
+    }
+    files.sort();
+    let mut out = Vec::new();
+    for f in files {
+        let text = fs::read_to_string(&f)?;
+        out.extend(scan_file(&f.to_string_lossy(), &text));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(path: &str, text: &str) -> Vec<&'static str> {
+        scan_file(path, text).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn l001_fires_on_each_raw_lock_type() {
+        let r = rules("coordinator/l001_bad.rs", include_str!("../fixtures/l001_bad.rs"));
+        assert_eq!(r.iter().filter(|r| **r == "L001").count(), 4, "{r:?}");
+    }
+
+    #[test]
+    fn l001_ignores_wrappers_comments_and_strings() {
+        let r = rules("coordinator/l001_good.rs", include_str!("../fixtures/l001_good.rs"));
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn l001_exempts_the_sync_module_itself() {
+        let r = rules("rust/src/sync/mod.rs", include_str!("../fixtures/l001_bad.rs"));
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn l002_fires_on_poison_unwraps() {
+        let r = rules("runtime/l002_bad.rs", include_str!("../fixtures/l002_bad.rs"));
+        assert_eq!(r, vec!["L002", "L002", "L002"]);
+    }
+
+    #[test]
+    fn l003_fires_on_unannotated_relaxed() {
+        let r = rules("util/l003_bad.rs", include_str!("../fixtures/l003_bad.rs"));
+        assert_eq!(r, vec!["L003", "L003"]);
+    }
+
+    #[test]
+    fn l003_accepts_all_three_annotation_forms() {
+        let r = rules("util/l003_good.rs", include_str!("../fixtures/l003_good.rs"));
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn l003_flags_unresolvable_receivers() {
+        let text = "fn f(a: &A) {\n    bump(a).fetch_add(\n        1,\n        Ordering::Relaxed,\n    );\n}\n";
+        let r = rules("util/multiline.rs", text);
+        assert_eq!(r, vec!["L003"], "ordering on a line without its method call");
+    }
+
+    #[test]
+    fn l004_fires_outside_tests_only() {
+        let bad = rules("runtime/l004_bad.rs", include_str!("../fixtures/l004_bad.rs"));
+        assert_eq!(bad, vec!["L004"]);
+        let good = rules("runtime/l004_good.rs", include_str!("../fixtures/l004_good.rs"));
+        assert!(good.is_empty(), "{good:?}");
+    }
+
+    #[test]
+    fn l005_fires_on_serving_paths_only() {
+        let src = include_str!("../fixtures/l005_bad.rs");
+        assert_eq!(rules("coordinator/l005_bad.rs", src), vec!["L005", "L005"]);
+        assert_eq!(rules("hub/l005_bad.rs", src), vec!["L005", "L005"]);
+        assert!(rules("runtime/l005_bad.rs", src).is_empty(), "only coordinator/ and hub/");
+    }
+
+    #[test]
+    fn l005_respects_allows_and_test_modules() {
+        let r = rules("coordinator/l005_good.rs", include_str!("../fixtures/l005_good.rs"));
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn allow_without_reason_is_itself_a_finding() {
+        let r = rules(
+            "coordinator/allow_missing_reason.rs",
+            include_str!("../fixtures/allow_missing_reason.rs"),
+        );
+        assert_eq!(r, vec!["L000"], "suppresses the L005 but reports the naked allow");
+    }
+
+    #[test]
+    fn literals_never_trip_rules() {
+        let text = concat!(
+            "fn f() -> &'static str {\n",
+            "    let _ = 'x';\n",
+            "    let _ = r#\"Mutex .lock().unwrap() thread::spawn\"#;\n",
+            "    \"Condvar Ordering::Relaxed .unwrap()\"\n",
+            "}\n",
+        );
+        let r = rules("coordinator/strings.rs", text);
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn block_comments_never_trip_rules() {
+        let text = "/* Mutex\n   .lock().unwrap()\n   thread::spawn */\nfn f() {}\n";
+        let r = rules("coordinator/blocks.rs", text);
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    /// The acceptance gate: the migrated source tree is lint-clean. This
+    /// runs in the ordinary workspace test suite, so a regression anywhere
+    /// in `rust/src` fails `cargo test` even before the CI lint step.
+    #[test]
+    fn migrated_tree_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+        let findings = lint_paths(&[src]).expect("walk rust/src");
+        let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+        assert!(findings.is_empty(), "expected a clean tree:\n{}", report.join("\n"));
+    }
+}

@@ -1,0 +1,32 @@
+//! CLI for jitune-lint: `jitune-lint <path>...` scans every `.rs` file
+//! under the given paths and exits non-zero on any finding, so it can be
+//! wired straight into CI as a gate.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: jitune-lint <file-or-dir>...");
+        return ExitCode::from(2);
+    }
+    let paths: Vec<PathBuf> = args.iter().map(PathBuf::from).collect();
+    match jitune_lint::lint_paths(&paths) {
+        Ok(findings) if findings.is_empty() => {
+            println!("jitune-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            eprintln!("jitune-lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("jitune-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -261,6 +261,7 @@ impl BackgroundScheduler {
         let lookup = (result.key.clone(), result.candidate);
         match self.inflight.get(&lookup) {
             Some(inf) if inf.seq == result.seq => {
+                // jitune-lint: allow(L005): the match arm above just observed this key
                 let inf = self.inflight.remove(&lookup).expect("entry just observed");
                 Some((inf.hash, inf.slot))
             }
@@ -282,6 +283,7 @@ impl BackgroundScheduler {
         expired
             .into_iter()
             .map(|k| {
+                // jitune-lint: allow(L005): key came from scanning this same map
                 let inf = self.inflight.remove(&k).expect("expired entry present");
                 (k.0, k.1, inf.hash, inf.slot)
             })

@@ -318,6 +318,7 @@ impl Dispatcher {
             winner_value,
             version,
         };
+        // jitune-lint: allow(L005): guarded by the early return above
         let result = self.hub.as_mut().expect("checked above").publish(&entry);
         match result {
             Ok(ack) if ack.conflict => {
@@ -401,6 +402,7 @@ impl Dispatcher {
                 .problems
                 .iter()
                 .position(|q| std::ptr::eq(q, problem))
+                // jitune-lint: allow(L005): `problem` is a reference into this same vec
                 .expect("problem from this manifest");
             let values: Vec<i64> = problem.variants.iter().map(|v| v.value).collect();
             (idx, ProblemKey::for_problem(problem), values)
@@ -648,6 +650,7 @@ impl Dispatcher {
         }
         results
             .into_iter()
+            // jitune-lint: allow(L005): the loop above filled every slot before this drain
             .map(|r| r.expect("every call in the round resolved"))
             .collect()
     }
@@ -795,6 +798,7 @@ impl Dispatcher {
                     problem.variants.iter().map(|v| v.id.clone()).collect();
                 (problem.variants[winner].clone(), all_ids)
             };
+            // jitune-lint: allow(L005): groups are built non-empty by the partition above
             let inputs = &batch[*members.last().expect("non-empty group")];
             match self.finalize(&variant, &all_ids, inputs, Instant::now()) {
                 Ok(outcome) => {
@@ -878,6 +882,7 @@ impl Dispatcher {
         loop {
             let (idx, pidx) = {
                 let plan = &self.plans[&hash][slot];
+                // jitune-lint: allow(L005): serve() registers the tuner state before issuing
                 let state = self.tuner.peek(&plan.key).expect("serve gate created the state");
                 let history = state.history();
                 let idx = state
@@ -941,6 +946,7 @@ impl Dispatcher {
     /// nothing is in flight and no problem can make progress.
     pub(crate) fn background_tick(&mut self, now: Instant) -> Option<Instant> {
         self.background.as_ref()?;
+        // jitune-lint: allow(L005): guarded by the `?` early return above
         let expired = self.background.as_mut().expect("checked above").expire_hedges(now);
         for (key, candidate, hash, slot) in expired {
             log::warn!("background: hedging wedged candidate {candidate} of {key}");
@@ -949,6 +955,7 @@ impl Dispatcher {
             self.stats.failure(&kernel);
             self.candidate_failed(hash, slot, candidate);
         }
+        // jitune-lint: allow(L005): guarded by the `?` early return above
         if let Some(pct) = self.background.as_mut().expect("checked above").roll_window(now) {
             self.stats.background_window(pct);
         }
@@ -961,6 +968,7 @@ impl Dispatcher {
         for (hash, slot) in plans {
             exploring |= self.background_advance(hash, slot, now);
         }
+        // jitune-lint: allow(L005): guarded by the `?` early return above
         let bg = self.background.as_ref().expect("checked above");
         let mut wake = bg.earliest_hedge();
         if exploring && bg.pct() > 0.0 {
@@ -994,6 +1002,7 @@ impl Dispatcher {
                 }
                 Phase::Exploring => {
                     let cap =
+                        // jitune-lint: allow(L005): Phase::Exploring only exists with background on
                         self.background.as_ref().expect("background active").issue_capacity();
                     if cap == 0 {
                         // Budget spent or pipeline full. Never consult
@@ -1049,6 +1058,7 @@ impl Dispatcher {
         };
         let inputs: Vec<HostTensor> =
             self.plans[&hash][slot].input_shapes.iter().map(|s| HostTensor::zeros(s)).collect();
+        // jitune-lint: allow(L005): callers reach here only from the background tick
         let submitted = self.background.as_mut().expect("background active").submit(
             variant.clone(),
             hlo,

@@ -34,12 +34,10 @@
 //! cannot race a stale monitor.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::sync::TrackedMutex;
 use crate::util::json::{n, Value};
-
-use super::mutex_lock;
 
 /// When to declare a published winner drifted and retune it.
 ///
@@ -126,11 +124,12 @@ fn bucket_of(nanos: u64) -> usize {
 /// different threads do not false-share the hot `hits`/`nanos` line.
 #[repr(align(64))]
 struct DriftShard {
-    hits: AtomicU64,
-    nanos: AtomicU64,
-    buckets: [AtomicU64; BUCKETS],
+    hits: AtomicU64,                // relaxed-counter: window tally, drained by the leader's scan
+    nanos: AtomicU64,               // relaxed-counter: window latency sum
+    buckets: [AtomicU64; BUCKETS], // relaxed-counter: window histogram tallies
 }
 
+// relaxed-counter: shard-assignment cursor, any interleaving is fine
 static NEXT_DRIFT_SHARD: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
@@ -170,7 +169,7 @@ struct EvalState {
 pub struct DriftMonitor {
     shards: [DriftShard; DRIFT_SHARDS],
     created: Instant,
-    eval: Mutex<EvalState>,
+    eval: TrackedMutex<EvalState>,
 }
 
 impl DriftMonitor {
@@ -186,7 +185,7 @@ impl DriftMonitor {
                 buckets: std::array::from_fn(|_| AtomicU64::new(0)),
             }),
             created: Instant::now(),
-            eval: Mutex::new(EvalState {
+            eval: TrackedMutex::new("coordinator.drift.eval", EvalState {
                 baseline_s: baseline,
                 calibrated: false,
                 ewma_s: 0.0,
@@ -228,10 +227,10 @@ impl DriftMonitor {
             hits += shard.hits.swap(0, Ordering::Relaxed);
             nanos += shard.nanos.swap(0, Ordering::Relaxed);
             for (acc, b) in buckets.iter_mut().zip(&shard.buckets) {
-                *acc += b.swap(0, Ordering::Relaxed);
+                *acc += b.swap(0, Ordering::Relaxed); // relaxed-counter: draining bucket tallies
             }
         }
-        let mut eval = mutex_lock(&self.eval);
+        let mut eval = self.eval.lock();
         eval.pending_hits += hits;
         eval.pending_nanos += nanos;
         for (acc, b) in eval.pending_buckets.iter_mut().zip(&buckets) {
@@ -299,32 +298,32 @@ impl DriftMonitor {
 
     /// Current baseline (seconds); 0 until self-calibration completes.
     pub fn baseline_s(&self) -> f64 {
-        mutex_lock(&self.eval).baseline_s
+        self.eval.lock().baseline_s
     }
 
     /// EWMA of judged window means (seconds); 0 before the first window.
     pub fn ewma_s(&self) -> f64 {
-        mutex_lock(&self.eval).ewma_s
+        self.eval.lock().ewma_s
     }
 
     /// Consecutive bad windows so far.
     pub fn streak(&self) -> u32 {
-        mutex_lock(&self.eval).streak
+        self.eval.lock().streak
     }
 
     /// Retunes this monitor has triggered.
     pub fn triggers(&self) -> u64 {
-        mutex_lock(&self.eval).triggered
+        self.eval.lock().triggered
     }
 
     /// Most recently judged window.
     pub fn last_window(&self) -> Option<WindowSummary> {
-        mutex_lock(&self.eval).last
+        self.eval.lock().last
     }
 
     /// Machine-readable monitor state for `stats_json()`.
     pub fn status_json(&self) -> Value {
-        let eval = mutex_lock(&self.eval);
+        let eval = self.eval.lock();
         let mut obj = vec![
             ("baseline_s".to_string(), n(eval.baseline_s)),
             ("ewma_s".to_string(), n(eval.ewma_s)),

@@ -28,15 +28,14 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::{BTreeMap, HashMap};
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
-
-use super::{mutex_lock, read_lock, write_lock};
 
 use crate::coordinator::dispatcher::{CallOutcome, CallRoute};
 use crate::coordinator::drift::{DriftHit, DriftMonitor, DriftPolicy};
 use crate::error::Result;
 use crate::runtime::SharedKernel;
+use crate::sync::{TrackedMutex, TrackedRwLock};
 use crate::tensor::HostTensor;
 use crate::util::json::{n, Value};
 
@@ -87,8 +86,8 @@ const LANE_SHARDS: usize = 8;
 /// different threads do not false-share.
 #[repr(align(64))]
 struct LaneShard {
-    hits: AtomicU64,
-    nanos: AtomicU64,
+    hits: AtomicU64,  // relaxed-counter: stats-only tally
+    nanos: AtomicU64, // relaxed-counter: stats-only latency sum
 }
 
 /// Sharded hit/latency counters for one kernel family. Threads are
@@ -98,6 +97,7 @@ pub struct LaneCounters {
     shards: [LaneShard; LANE_SHARDS],
 }
 
+// relaxed-counter: shard-assignment cursor, any interleaving is fine
 static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
 
 thread_local! {
@@ -234,11 +234,11 @@ impl TunedEntry {
 pub struct FastLane {
     /// plan hash → entries (a `Vec` bucket absorbs hash collisions;
     /// entries verify kernel + shapes on hit).
-    entries: RwLock<HashMap<u64, Vec<Arc<TunedEntry>>>>,
+    entries: TrackedRwLock<HashMap<u64, Vec<Arc<TunedEntry>>>>,
     /// Per-kernel counters, kept across invalidations so stats survive
     /// retunes. `Mutex` (not `RwLock`): touched only on publish and on
     /// stats rendering.
-    counters: Mutex<BTreeMap<String, Arc<LaneCounters>>>,
+    counters: TrackedMutex<BTreeMap<String, Arc<LaneCounters>>>,
     /// Drift-retune policy; `None` disables monitoring entirely (no
     /// window counters are even allocated on publish).
     drift: Option<DriftPolicy>,
@@ -248,8 +248,8 @@ impl FastLane {
     /// An empty lane without drift monitoring.
     pub fn new() -> FastLane {
         FastLane {
-            entries: RwLock::new(HashMap::new()),
-            counters: Mutex::new(BTreeMap::new()),
+            entries: TrackedRwLock::new("coordinator.fastlane.entries", HashMap::new()),
+            counters: TrackedMutex::new("coordinator.fastlane.counters", BTreeMap::new()),
             drift: None,
         }
     }
@@ -258,8 +258,8 @@ impl FastLane {
     /// evaluated against `policy`.
     pub fn with_drift(policy: DriftPolicy) -> FastLane {
         FastLane {
-            entries: RwLock::new(HashMap::new()),
-            counters: Mutex::new(BTreeMap::new()),
+            entries: TrackedRwLock::new("coordinator.fastlane.entries", HashMap::new()),
+            counters: TrackedMutex::new("coordinator.fastlane.counters", BTreeMap::new()),
             drift: Some(policy),
         }
     }
@@ -273,7 +273,7 @@ impl FastLane {
     /// This is the per-call read path: one hash, one brief read lock, one
     /// `Arc` clone.
     pub fn lookup(&self, kernel: &str, inputs: &[HostTensor]) -> Option<Arc<TunedEntry>> {
-        let map = read_lock(&self.entries);
+        let map = self.entries.read();
         map.get(&plan_hash(kernel, inputs))?
             .iter()
             .find(|e| e.matches(kernel, inputs))
@@ -290,7 +290,9 @@ impl FastLane {
     pub fn publish(&self, publication: Publication) {
         let Publication { kernel, input_shapes, variant_id, value, size, baseline_s, exe } =
             publication;
-        let counters = mutex_lock(&self.counters)
+        let counters = self
+            .counters
+            .lock()
             .entry(kernel.clone())
             .or_insert_with(|| Arc::new(LaneCounters::new()))
             .clone();
@@ -306,7 +308,7 @@ impl FastLane {
             counters,
             monitor,
         });
-        let mut map = write_lock(&self.entries);
+        let mut map = self.entries.write();
         let bucket = map.entry(hash).or_default();
         bucket.retain(|e| !(e.kernel == entry.kernel && e.input_shapes == entry.input_shapes));
         bucket.push(entry);
@@ -317,7 +319,7 @@ impl FastLane {
     /// entry was removed.
     pub fn invalidate(&self, kernel: &str, input_shapes: &[Vec<usize>]) -> bool {
         let hash = shape_hash(kernel, input_shapes);
-        let mut map = write_lock(&self.entries);
+        let mut map = self.entries.write();
         let Some(bucket) = map.get_mut(&hash) else { return false };
         let before = bucket.len();
         bucket.retain(|e| !(e.kernel == kernel && e.input_shapes.as_slice() == input_shapes));
@@ -335,7 +337,7 @@ impl FastLane {
     /// published.
     pub fn invalidate_entry(&self, entry: &Arc<TunedEntry>) -> bool {
         let hash = shape_hash(&entry.kernel, &entry.input_shapes);
-        let mut map = write_lock(&self.entries);
+        let mut map = self.entries.write();
         let Some(bucket) = map.get_mut(&hash) else { return false };
         let before = bucket.len();
         bucket.retain(|e| !Arc::ptr_eq(e, entry));
@@ -348,12 +350,12 @@ impl FastLane {
 
     /// Drop every published entry (state import / bulk reset).
     pub fn clear(&self) {
-        write_lock(&self.entries).clear();
+        self.entries.write().clear();
     }
 
     /// Number of published entries.
     pub fn published(&self) -> usize {
-        read_lock(&self.entries).values().map(Vec::len).sum()
+        self.entries.read().values().map(Vec::len).sum()
     }
 
     /// Drain every monitored entry's latency window and evaluate the
@@ -365,7 +367,7 @@ impl FastLane {
         // Collect Arc clones first so policy evaluation runs without
         // holding the read lock.
         let entries: Vec<Arc<TunedEntry>> =
-            read_lock(&self.entries).values().flat_map(|b| b.iter().cloned()).collect();
+            self.entries.read().values().flat_map(|b| b.iter().cloned()).collect();
         let now = Instant::now();
         let mut hits = Vec::new();
         for entry in entries {
@@ -385,7 +387,8 @@ impl FastLane {
 
     /// Per-kernel (hits, mean latency seconds) snapshot, sorted by kernel.
     pub fn snapshot(&self) -> Vec<(String, u64, f64)> {
-        mutex_lock(&self.counters)
+        self.counters
+            .lock()
             .iter()
             .map(|(kernel, c)| {
                 let (hits, total) = c.totals();
@@ -406,7 +409,9 @@ impl FastLane {
             ));
         }
         if self.drift.is_some() {
-            let mut lines: Vec<String> = read_lock(&self.entries)
+            let mut lines: Vec<String> = self
+                .entries
+                .read()
                 .values()
                 .flatten()
                 .filter_map(|e| {
@@ -450,7 +455,9 @@ impl FastLane {
             ("kernels".into(), Value::Obj(kernels)),
         ];
         if self.drift.is_some() {
-            let mut monitors: Vec<(String, Value)> = read_lock(&self.entries)
+            let mut monitors: Vec<(String, Value)> = self
+                .entries
+                .read()
                 .values()
                 .flatten()
                 .filter_map(|e| {

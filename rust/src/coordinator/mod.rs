@@ -211,6 +211,35 @@
 //! `rust/tests/hub_fleet.rs` for the multi-process contract and
 //! `examples/hub_fleet.rs` + `benches/hub_warm_start.rs` for the
 //! fleet-scale amortization story.
+//!
+//! # Correctness tooling
+//!
+//! Three lanes, a worker pool, background exploration and a drift
+//! monitor add up to a lot of locks. The coordinator leans on three
+//! layers of tooling to keep them honest:
+//!
+//! * **Tracked locks** — every lock in this module tree is a
+//!   [`crate::sync::TrackedMutex`] / [`crate::sync::TrackedRwLock`] /
+//!   [`crate::sync::TrackedCondvar`] with a dotted site label
+//!   (`"coordinator.pool.routes"`). Acquisition is poison-tolerant
+//!   (a panicking worker never wedges the serving path), and under the
+//!   `lock-doctor` feature every acquisition feeds a global lock-order
+//!   graph that reports ABBA cycles and held-too-long guards the moment
+//!   they become *possible*, not when they finally deadlock. With the
+//!   feature off the wrappers are zero-overhead transparent newtypes.
+//!   `rust/tests/lock_doctor.rs` seeds an inversion to prove detection
+//!   and hammers the full pooled stack to prove no false positives.
+//! * **`jitune-lint`** (`rust/lint/`, `cargo run -p jitune-lint --
+//!   rust/src`) — a std-only static pass gating CI: no raw `std::sync`
+//!   locks outside `sync/` (L001), no `.lock().unwrap()` (L002),
+//!   `Ordering::Relaxed` only on atomics annotated as pure counters
+//!   (L003), named-`thread::Builder` threads only (L004), and no
+//!   `unwrap`/`expect` on non-test coordinator/hub paths without an
+//!   inline justification (L005).
+//! * **Sanitizer CI** — ThreadSanitizer runs the pool, fast-lane and
+//!   background-explore suites on nightly, and a time-boxed Miri pass
+//!   covers the engine-free unit tests (`util::`, the pool's
+//!   single-threaded queue tests).
 
 pub mod background;
 pub mod drift;
@@ -230,19 +259,3 @@ pub use pool::{PoolOptions, PoolSnapshot, WorkerPool, WorkerSnapshot};
 pub use registry::KernelRegistry;
 pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
 pub use stats::{BackgroundStats, CoordStats, DriftEvent, FusedStats, HubStats, KernelStats};
-
-/// Poison-tolerant mutex lock shared by the coordinator's modules: a
-/// panicked recorder must not take the stats/monitor state down with it.
-pub(crate) fn mutex_lock<T>(lock: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
-    lock.lock().unwrap_or_else(|e| e.into_inner())
-}
-
-/// Poison-tolerant RwLock read lock (fast lane + worker pool maps).
-pub(crate) fn read_lock<T>(lock: &std::sync::RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
-    lock.read().unwrap_or_else(|e| e.into_inner())
-}
-
-/// Poison-tolerant RwLock write lock (fast lane + worker pool maps).
-pub(crate) fn write_lock<T>(lock: &std::sync::RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
-    lock.write().unwrap_or_else(|e| e.into_inner())
-}

@@ -51,7 +51,7 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -59,11 +59,11 @@ use crate::autotuner::ProblemKey;
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
 use crate::runtime::{CompiledKernel, Engine, EngineFactory, SharedKernel};
+use crate::sync::{TrackedCondvar, TrackedMutex, TrackedRwLock};
 use crate::tensor::HostTensor;
 use crate::util::json::{n, s, Value};
 
 use super::background::ExploreResult;
-use super::{mutex_lock, read_lock, write_lock};
 
 /// Worker-pool configuration, carried in
 /// [`super::ServerOptions`]`::pool`.
@@ -156,9 +156,9 @@ enum Job {
 /// when the main lane is empty — serving traffic always overtakes
 /// candidate exploration.
 struct Shard {
-    queue: Mutex<ShardQueues>,
-    not_empty: Condvar,
-    not_full: Condvar,
+    queue: TrackedMutex<ShardQueues>,
+    not_empty: TrackedCondvar,
+    not_full: TrackedCondvar,
 }
 
 /// The two priority classes of one shard.
@@ -180,9 +180,12 @@ impl ShardQueues {
 impl Shard {
     fn new() -> Shard {
         Shard {
-            queue: Mutex::new(ShardQueues::default()),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
+            // All shard instances share one site label: acquisition
+            // *order* is a per-class property, and no path ever holds
+            // two shard queues at once.
+            queue: TrackedMutex::new("coordinator.pool.shard", ShardQueues::default()),
+            not_empty: TrackedCondvar::new(),
+            not_full: TrackedCondvar::new(),
         }
     }
 }
@@ -192,11 +195,11 @@ impl Shard {
 /// false-share.
 #[repr(align(64))]
 struct WorkerSlot {
-    executed: AtomicU64,
-    exec_nanos: AtomicU64,
-    errors: AtomicU64,
-    compiles: AtomicU64,
-    steals: AtomicU64,
+    executed: AtomicU64,   // relaxed-counter: stats-only tally, no data published
+    exec_nanos: AtomicU64, // relaxed-counter: stats-only latency sum
+    errors: AtomicU64,     // relaxed-counter: stats-only tally
+    compiles: AtomicU64,   // relaxed-counter: stats-only tally
+    steals: AtomicU64,     // relaxed-counter: stats-only tally
     alive: AtomicBool,
 }
 
@@ -258,18 +261,18 @@ impl PoolSnapshot {
 pub struct WorkerPool {
     shards: Vec<Shard>,
     workers: Vec<WorkerSlot>,
-    joins: Mutex<Vec<JoinHandle<()>>>,
+    joins: TrackedMutex<Vec<JoinHandle<()>>>,
     shutdown: AtomicBool,
     queue_depth: usize,
-    rr: AtomicUsize,
+    rr: AtomicUsize, // relaxed-counter: round-robin cursor, any interleaving is fine
     /// variant id → install spec + ready workers.
-    routes: RwLock<HashMap<String, VariantRoute>>,
+    routes: TrackedRwLock<HashMap<String, VariantRoute>>,
     /// Variants no worker could compile — memoized so the leader's lazy
     /// republish probe costs one lookup instead of a re-broadcast per
     /// tuned call. Cleared by [`WorkerPool::evict`] (retune) so a fresh
     /// finalization retries.
-    failed_installs: Mutex<HashSet<String>>,
-    respawns: AtomicU64,
+    failed_installs: TrackedMutex<HashSet<String>>,
+    respawns: AtomicU64, // relaxed-counter: stats-only tally
     engine_name: String,
 }
 
@@ -283,12 +286,15 @@ impl WorkerPool {
         let pool = Arc::new(WorkerPool {
             shards: (0..workers).map(|_| Shard::new()).collect(),
             workers: (0..workers).map(|_| WorkerSlot::new()).collect(),
-            joins: Mutex::new(Vec::new()),
+            joins: TrackedMutex::new("coordinator.pool.joins", Vec::new()),
             shutdown: AtomicBool::new(false),
             queue_depth,
             rr: AtomicUsize::new(0),
-            routes: RwLock::new(HashMap::new()),
-            failed_installs: Mutex::new(HashSet::new()),
+            routes: TrackedRwLock::new("coordinator.pool.routes", HashMap::new()),
+            failed_installs: TrackedMutex::new(
+                "coordinator.pool.failed_installs",
+                HashSet::new(),
+            ),
             respawns: AtomicU64::new(0),
             engine_name: opts.factory.name().to_string(),
         });
@@ -308,7 +314,7 @@ impl WorkerPool {
                     return Err(Error::Coordinator(format!("pool worker spawn: {e}")));
                 }
             };
-            mutex_lock(&pool.joins).push(join);
+            pool.joins.lock().push(join);
             inits.push(init_rx);
         }
         for (idx, rx) in inits.into_iter().enumerate() {
@@ -355,14 +361,14 @@ impl WorkerPool {
             return 0;
         }
         let id = variant.id.clone();
-        if let Some(route) = read_lock(&self.routes).get(&id) {
+        if let Some(route) = self.routes.read().get(&id) {
             return route
                 .ready
                 .iter()
                 .filter(|&&i| self.workers[i].alive.load(Ordering::SeqCst))
                 .count();
         }
-        if mutex_lock(&self.failed_installs).contains(&id) {
+        if self.failed_installs.lock().contains(&id) {
             return 0;
         }
         let spec = Arc::new(InstallSpec { variant, hlo_text });
@@ -387,10 +393,10 @@ impl WorkerPool {
         let count = ready.len();
         if count == 0 {
             log::warn!("pool: no worker could compile {id}; leader keeps serving it");
-            mutex_lock(&self.failed_installs).insert(id);
+            self.failed_installs.lock().insert(id);
         } else {
             log::debug!("pool: {id} replicated on {count} worker(s)");
-            write_lock(&self.routes).insert(id, VariantRoute { spec, ready });
+            self.routes.write().insert(id, VariantRoute { spec, ready });
         }
         count
     }
@@ -403,13 +409,13 @@ impl WorkerPool {
             return;
         }
         {
-            let mut routes = write_lock(&self.routes);
+            let mut routes = self.routes.write();
             for id in variant_ids {
                 routes.remove(id);
             }
         }
         {
-            let mut failed = mutex_lock(&self.failed_installs);
+            let mut failed = self.failed_installs.lock();
             for id in variant_ids {
                 failed.remove(id);
             }
@@ -424,14 +430,14 @@ impl WorkerPool {
 
     /// Drop every installed variant (bulk reset on state import).
     pub fn clear(&self) {
-        let ids: Vec<String> = read_lock(&self.routes).keys().cloned().collect();
-        mutex_lock(&self.failed_installs).clear();
+        let ids: Vec<String> = self.routes.read().keys().cloned().collect();
+        self.failed_installs.lock().clear();
         self.evict(&ids);
     }
 
     /// Number of installed (routable) variants.
     pub fn installed(&self) -> usize {
-        read_lock(&self.routes).len()
+        self.routes.read().len()
     }
 
     /// Whether this variant's install is memoized as failed. The
@@ -439,7 +445,7 @@ impl WorkerPool {
     /// variant's HLO text, so a dead install costs one lookup per
     /// tuned call, not a broadcast or a text copy.
     pub fn install_failed(&self, variant_id: &str) -> bool {
-        mutex_lock(&self.failed_installs).contains(variant_id)
+        self.failed_installs.lock().contains(variant_id)
     }
 
     /// Memoize a publish-side failure that happened before the
@@ -447,7 +453,7 @@ impl WorkerPool {
     /// republish probe goes quiet. Cleared by [`WorkerPool::evict`]
     /// exactly like a failed install.
     pub fn mark_failed(&self, variant_id: &str) {
-        mutex_lock(&self.failed_installs).insert(variant_id.to_string());
+        self.failed_installs.lock().insert(variant_id.to_string());
     }
 
     /// A `Send + Sync` handle executing `variant_id` on the pool — what
@@ -467,7 +473,7 @@ impl WorkerPool {
             return Err(Error::Coordinator("worker pool stopped".into()));
         }
         let ready: Vec<usize> = {
-            let routes = read_lock(&self.routes);
+            let routes = self.routes.read();
             let Some(route) = routes.get(variant_id) else {
                 return Err(Error::Coordinator(format!(
                     "pool: {variant_id} is not installed"
@@ -584,11 +590,11 @@ impl WorkerPool {
         self.shutdown.store(true, Ordering::SeqCst);
         for shard in &self.shards {
             // lock-step with push/pop so no waiter can miss the wake-up
-            let _q = mutex_lock(&shard.queue);
+            let _q = shard.queue.lock();
             shard.not_empty.notify_all();
             shard.not_full.notify_all();
         }
-        let joins: Vec<JoinHandle<()>> = mutex_lock(&self.joins).drain(..).collect();
+        let joins: Vec<JoinHandle<()>> = self.joins.lock().drain(..).collect();
         for join in joins {
             let _ = join.join();
         }
@@ -597,7 +603,7 @@ impl WorkerPool {
     /// Install spec for a variant (workers use it for lazy recompiles
     /// after a respawn emptied their cache).
     fn route_spec(&self, variant_id: &str) -> Option<Arc<InstallSpec>> {
-        read_lock(&self.routes).get(variant_id).map(|r| r.spec.clone())
+        self.routes.read().get(variant_id).map(|r| r.spec.clone())
     }
 
     /// Remove one worker from a variant's routing — its lazy recompile
@@ -606,12 +612,12 @@ impl WorkerPool {
     /// memoized as failed, so the leader's republish probe goes quiet
     /// instead of churning; the next retune clears the memo.
     fn deregister(&self, variant_id: &str, idx: usize) {
-        let mut routes = write_lock(&self.routes);
+        let mut routes = self.routes.write();
         let Some(route) = routes.get_mut(variant_id) else { return };
         route.ready.retain(|&i| i != idx);
         if route.ready.is_empty() {
             routes.remove(variant_id);
-            mutex_lock(&self.failed_installs).insert(variant_id.to_string());
+            self.failed_installs.lock().insert(variant_id.to_string());
             log::warn!("pool: {variant_id} lost its last ready worker; leader keeps serving it");
         }
     }
@@ -631,7 +637,7 @@ impl WorkerPool {
         for k in 0..ready.len() {
             let idx = ready[(start + k) % ready.len()];
             let shard = &self.shards[idx];
-            let mut q = mutex_lock(&shard.queue);
+            let mut q = shard.queue.lock();
             if self.shutdown.load(Ordering::SeqCst) {
                 return Err(Error::Coordinator("worker pool stopped".into()));
             }
@@ -639,6 +645,7 @@ impl WorkerPool {
                 continue;
             }
             if q.main.len() < self.queue_depth {
+                // jitune-lint: allow(L005): job is consumed at most once per loop iteration
                 q.main.push_back(job.take().expect("job unconsumed"));
                 shard.not_empty.notify_one();
                 return Ok(());
@@ -654,7 +661,7 @@ impl WorkerPool {
             return Err(Error::Coordinator("pool: no live worker for this variant".into()));
         };
         let shard = &self.shards[idx];
-        let mut q = mutex_lock(&shard.queue);
+        let mut q = shard.queue.lock();
         loop {
             if self.shutdown.load(Ordering::SeqCst) {
                 return Err(Error::Coordinator("worker pool stopped".into()));
@@ -663,11 +670,12 @@ impl WorkerPool {
                 return Err(Error::Coordinator(format!("pool worker {idx} died")));
             }
             if q.main.len() < self.queue_depth {
+                // jitune-lint: allow(L005): job is consumed exactly once — the push returns
                 q.main.push_back(job.take().expect("job unconsumed"));
                 shard.not_empty.notify_one();
                 return Ok(());
             }
-            q = shard.not_full.wait(q).unwrap_or_else(|e| e.into_inner());
+            q = shard.not_full.wait(q);
         }
     }
 
@@ -679,7 +687,7 @@ impl WorkerPool {
     /// on its ack.
     fn push_ctrl(&self, idx: usize, job: Job) -> Result<()> {
         let shard = &self.shards[idx];
-        let mut q = mutex_lock(&shard.queue);
+        let mut q = shard.queue.lock();
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Coordinator("worker pool stopped".into()));
         }
@@ -713,13 +721,14 @@ impl WorkerPool {
         for k in 0..n {
             let idx = (start + k) % n;
             let shard = &self.shards[idx];
-            let mut q = mutex_lock(&shard.queue);
+            let mut q = shard.queue.lock();
             if self.shutdown.load(Ordering::SeqCst) {
                 return Err(Error::Coordinator("worker pool stopped".into()));
             }
             if !self.workers[idx].alive.load(Ordering::SeqCst) {
                 continue;
             }
+            // jitune-lint: allow(L005): job is consumed at most once per loop iteration
             q.bg.push_back(job.take().expect("job unconsumed"));
             shard.not_empty.notify_one();
             return Ok(());
@@ -755,7 +764,7 @@ impl WorkerPool {
         loop {
             {
                 let shard = &self.shards[idx];
-                let mut q = mutex_lock(&shard.queue);
+                let mut q = shard.queue.lock();
                 if let Some(job) = q.main.pop_front().or_else(|| q.bg.pop_front()) {
                     shard.not_full.notify_one();
                     return Some(job);
@@ -772,19 +781,16 @@ impl WorkerPool {
                 return Some(job);
             }
             let shard = &self.shards[idx];
-            let q = mutex_lock(&shard.queue);
+            let q = shard.queue.lock();
             if !q.is_empty() || self.shutdown.load(Ordering::SeqCst) {
                 continue; // re-check holding nothing stale
             }
             if self.shards.len() > 1 {
-                let _ = shard
-                    .not_empty
-                    .wait_timeout(q, poll)
-                    .unwrap_or_else(|e| e.into_inner());
+                let _ = shard.not_empty.wait_timeout(q, poll);
                 poll = (poll * 2).min(Duration::from_millis(50));
             } else {
                 // single worker: nothing to steal, park indefinitely
-                let _ = shard.not_empty.wait(q).unwrap_or_else(|e| e.into_inner());
+                let _ = shard.not_empty.wait(q);
             }
         }
     }
@@ -803,9 +809,11 @@ impl WorkerPool {
         for offset in 1..n {
             let victim = (idx + offset) % n;
             let shard = &self.shards[victim];
-            let mut q = mutex_lock(&shard.queue);
+            let mut q = shard.queue.lock();
             let stealable = match q.main.front() {
-                Some(Job::Exec { variant_id, .. }) => read_lock(&self.routes)
+                Some(Job::Exec { variant_id, .. }) => self
+                    .routes
+                    .read()
                     .get(variant_id)
                     .is_some_and(|route| route.ready.contains(&idx)),
                 _ => false,
@@ -828,7 +836,7 @@ impl WorkerPool {
     /// reply senders close and no caller is left waiting forever.
     fn drain_shard(&self, idx: usize) {
         let shard = &self.shards[idx];
-        let mut q = mutex_lock(&shard.queue);
+        let mut q = shard.queue.lock();
         q.main.clear();
         q.bg.clear();
         shard.not_full.notify_all();
@@ -1023,6 +1031,85 @@ fn execute_local(
     slot.executed.fetch_add(1, Ordering::Relaxed);
     slot.exec_nanos.fetch_add(exec.as_nanos() as u64, Ordering::Relaxed);
     Ok((output, exec))
+}
+
+/// Single-threaded queue-discipline tests, deliberately engine- and
+/// thread-free so the nightly Miri CI job can interpret them in
+/// seconds (`cargo miri test coordinator::pool::queue_tests`).
+#[cfg(test)]
+mod queue_tests {
+    use super::*;
+
+    fn exec_job(id: &str) -> (Job, mpsc::Receiver<Result<(HostTensor, Duration)>>) {
+        let (reply, rx) = mpsc::sync_channel(1);
+        (Job::Exec { variant_id: id.to_string(), inputs: Vec::new(), reply }, rx)
+    }
+
+    fn queued_id(job: &Job) -> String {
+        match job {
+            Job::Exec { variant_id, .. } => variant_id.clone(),
+            Job::Evict { variant_ids } => format!("evict:{}", variant_ids.join(",")),
+            _ => "other".into(),
+        }
+    }
+
+    #[test]
+    fn main_lane_overtakes_background() {
+        let mut q = ShardQueues::default();
+        assert!(q.is_empty());
+        q.bg.push_back(Job::Evict { variant_ids: vec!["bg1".into()] });
+        let (main_job, _rx) = exec_job("m1");
+        q.main.push_back(main_job);
+        assert!(!q.is_empty());
+        // pop order mirrors `WorkerPool::pop`: main first, then bg
+        let first = q.main.pop_front().or_else(|| q.bg.pop_front()).unwrap();
+        assert_eq!(queued_id(&first), "m1");
+        let second = q.main.pop_front().or_else(|| q.bg.pop_front()).unwrap();
+        assert_eq!(queued_id(&second), "evict:bg1");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn main_lane_is_fifo() {
+        let mut q = ShardQueues::default();
+        let mut rxs = Vec::new();
+        for id in ["a", "b", "c"] {
+            let (job, rx) = exec_job(id);
+            q.main.push_back(job);
+            rxs.push(rx);
+        }
+        for expected in ["a", "b", "c"] {
+            let job = q.main.pop_front().unwrap();
+            assert_eq!(queued_id(&job), expected);
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn dropping_exec_job_closes_its_reply_channel() {
+        // The death path (`drain_shard`) clears queues wholesale; the
+        // caller blocked on `rx.recv()` must observe a disconnect, not
+        // a hang.
+        let mut q = ShardQueues::default();
+        let (job, rx) = exec_job("m1");
+        q.main.push_back(job);
+        q.main.clear();
+        assert!(rx.recv().is_err(), "dropped job closes the reply channel");
+    }
+
+    #[test]
+    fn shard_lock_roundtrip() {
+        let shard = Shard::new();
+        {
+            let mut q = shard.queue.lock();
+            q.bg.push_back(Job::Evict { variant_ids: vec!["x".into()] });
+            assert!(!q.is_empty());
+        }
+        let mut q = shard.queue.lock();
+        assert!(q.main.pop_front().is_none());
+        assert!(q.bg.pop_front().is_some());
+        assert!(q.is_empty());
+    }
 }
 
 #[cfg(test)]

@@ -11,9 +11,10 @@ use std::collections::BTreeMap;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::error::Result;
+use crate::sync::TrackedMutex;
 
 use super::protocol::{
     merge_entry, proto_err, read_frame, write_frame, EntryKey, Frame, HubEntry, Merge,
@@ -22,10 +23,10 @@ use super::protocol::{
 
 /// Broker state shared across connection threads.
 struct Shared {
-    entries: Mutex<BTreeMap<EntryKey, HubEntry>>,
-    publishes: AtomicU64,
-    pulls: AtomicU64,
-    conflicts: AtomicU64,
+    entries: TrackedMutex<BTreeMap<EntryKey, HubEntry>>,
+    publishes: AtomicU64, // relaxed-counter: stats-only tally
+    pulls: AtomicU64,     // relaxed-counter: stats-only tally
+    conflicts: AtomicU64, // relaxed-counter: stats-only tally
 }
 
 /// The tuned-state hub broker.
@@ -66,7 +67,7 @@ impl HubServer {
             Err(e) => return Err(proto_err(format!("bind {}: {e}", path.display()))),
         };
         let shared = Arc::new(Shared {
-            entries: Mutex::new(BTreeMap::new()),
+            entries: TrackedMutex::new("hub.entries", BTreeMap::new()),
             publishes: AtomicU64::new(0),
             pulls: AtomicU64::new(0),
             conflicts: AtomicU64::new(0),
@@ -81,7 +82,7 @@ impl HubServer {
 
     /// Number of entries currently held.
     pub fn entries(&self) -> usize {
-        crate::coordinator::mutex_lock(&self.shared.entries).len()
+        self.shared.entries.lock().len()
     }
 
     /// (publishes, pulls, merge conflicts) counters.
@@ -126,6 +127,7 @@ impl HubServer {
                     log::warn!("hub: server stopped: {e}");
                 }
             })
+            // jitune-lint: allow(L005): spawn failure at broker startup is unrecoverable
             .expect("spawn hub server thread")
     }
 }
@@ -142,13 +144,13 @@ fn handle_conn(mut stream: UnixStream, shared: &Shared) {
                 if protocol != PROTOCOL_VERSION {
                     log::warn!("hub: peer {peer} speaks v{protocol}, want v{PROTOCOL_VERSION}");
                 }
-                let entries = crate::coordinator::mutex_lock(&shared.entries).len() as i64;
+                let entries = shared.entries.lock().len() as i64;
                 Frame::HelloAck { protocol: PROTOCOL_VERSION, entries }
             }
             Frame::PullAll => {
                 shared.pulls.fetch_add(1, Ordering::Relaxed);
                 let entries: Vec<HubEntry> =
-                    crate::coordinator::mutex_lock(&shared.entries).values().cloned().collect();
+                    shared.entries.lock().values().cloned().collect();
                 Frame::Update { entries }
             }
             Frame::Publish { entry } => {
@@ -156,8 +158,9 @@ fn handle_conn(mut stream: UnixStream, shared: &Shared) {
                 let label = entry.problem_key();
                 let key = entry.entry_key();
                 let proposed = entry.version;
-                let mut map = crate::coordinator::mutex_lock(&shared.entries);
+                let mut map = shared.entries.lock();
                 let merge = merge_entry(&mut map, entry);
+                // jitune-lint: allow(L005): merge_entry always leaves `key` present in the map
                 let stored = map.get(&key).expect("merged entry present").version;
                 drop(map);
                 let conflict = matches!(merge, Merge::Conflict { .. } | Merge::Outdated);

@@ -30,6 +30,7 @@ pub mod hub;
 pub mod manifest;
 pub mod report;
 pub mod runtime;
+pub mod sync;
 pub mod tensor;
 pub mod testutil;
 pub mod util;

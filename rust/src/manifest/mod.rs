@@ -239,6 +239,7 @@ pub(crate) mod tests {
     /// (dummy HLO text in a unique temp dir), for CompileCache and
     /// coordinator tests running against the mock engine.
     pub(crate) fn sample_manifest() -> Result<Manifest> {
+        // relaxed-counter: unique-suffix sequence, never synchronizes
         static COUNTER: AtomicU64 = AtomicU64::new(0);
         let dir = std::env::temp_dir().join(format!(
             "jitune-test-{}-{}",

@@ -9,12 +9,13 @@
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::manifest::Variant;
 use crate::runtime::engine::{CompiledKernel, Engine, EngineFactory, SharedKernel};
+use crate::sync::TrackedMutex;
 use crate::tensor::HostTensor;
 use crate::util::prng::Rng;
 
@@ -37,14 +38,25 @@ pub struct LatencyFault {
     inner: Arc<FaultInner>,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct FaultInner {
-    /// Fast-path gate: false until the first injection.
+    /// Fast-path gate: false until the first injection. Release store /
+    /// Acquire load so an armed reader also sees the injected entries.
     armed: AtomicBool,
-    scales: Mutex<HashMap<String, f64>>,
+    scales: TrackedMutex<HashMap<String, f64>>,
     /// Variant ids whose *next* execution panics (one-shot: consumed by
     /// the execution that fires it).
-    panics: Mutex<HashSet<String>>,
+    panics: TrackedMutex<HashSet<String>>,
+}
+
+impl Default for FaultInner {
+    fn default() -> Self {
+        FaultInner {
+            armed: AtomicBool::new(false),
+            scales: TrackedMutex::new("runtime.mock.fault.scales", HashMap::new()),
+            panics: TrackedMutex::new("runtime.mock.fault.panics", HashSet::new()),
+        }
+    }
 }
 
 impl LatencyFault {
@@ -56,7 +68,7 @@ impl LatencyFault {
     /// Multiply `variant_id`'s execution cost by `scale` from now on
     /// (1.0 restores health).
     pub fn set_scale(&self, variant_id: &str, scale: f64) {
-        self.inner.scales.lock().unwrap().insert(variant_id.to_string(), scale);
+        self.inner.scales.lock().insert(variant_id.to_string(), scale);
         self.inner.armed.store(true, Ordering::Release);
     }
 
@@ -65,15 +77,15 @@ impl LatencyFault {
     /// (fallback + worker respawn) can be observed deterministically
     /// without the retried call panicking again.
     pub fn panic_once(&self, variant_id: &str) {
-        self.inner.panics.lock().unwrap().insert(variant_id.to_string());
+        self.inner.panics.lock().insert(variant_id.to_string());
         self.inner.armed.store(true, Ordering::Release);
     }
 
     /// Remove every injected shift and pending panic.
     pub fn clear(&self) {
-        let mut scales = self.inner.scales.lock().unwrap();
+        let mut scales = self.inner.scales.lock();
         scales.clear();
-        self.inner.panics.lock().unwrap().clear();
+        self.inner.panics.lock().clear();
         self.inner.armed.store(false, Ordering::Release);
     }
 
@@ -81,7 +93,7 @@ impl LatencyFault {
         if !self.inner.armed.load(Ordering::Acquire) {
             return 1.0;
         }
-        self.inner.scales.lock().unwrap().get(variant_id).copied().unwrap_or(1.0)
+        self.inner.scales.lock().get(variant_id).copied().unwrap_or(1.0)
     }
 
     /// Consume a pending panic injection for `variant_id`, if any.
@@ -89,7 +101,7 @@ impl LatencyFault {
         if !self.inner.armed.load(Ordering::Acquire) {
             return false;
         }
-        self.inner.panics.lock().unwrap().remove(variant_id)
+        self.inner.panics.lock().remove(variant_id)
     }
 }
 
@@ -160,20 +172,20 @@ impl MockSpec {
 /// The mock engine.
 pub struct MockEngine {
     spec: MockSpec,
-    rng: Mutex<Rng>,
-    compiles: Mutex<Vec<String>>,
+    rng: TrackedMutex<Rng>,
+    compiles: TrackedMutex<Vec<String>>,
 }
 
 impl MockEngine {
     /// Build from a spec.
     pub fn new(spec: MockSpec) -> MockEngine {
-        let rng = Mutex::new(Rng::seed(spec.seed));
-        MockEngine { spec, rng, compiles: Mutex::new(Vec::new()) }
+        let rng = TrackedMutex::new("runtime.mock.rng", Rng::seed(spec.seed));
+        MockEngine { spec, rng, compiles: TrackedMutex::new("runtime.mock.compiles", Vec::new()) }
     }
 
     /// Variant ids compiled so far, in order (test observability).
     pub fn compiled_order(&self) -> Vec<String> {
-        self.compiles.lock().unwrap().clone()
+        self.compiles.lock().clone()
     }
 }
 
@@ -195,7 +207,7 @@ impl Engine for MockEngine {
             });
         }
         spin_for(self.spec.compile_cost);
-        self.compiles.lock().unwrap().push(variant.id.clone());
+        self.compiles.lock().push(variant.id.clone());
         let base = self
             .spec
             .exec_cost
@@ -212,7 +224,7 @@ impl Engine for MockEngine {
                 fail: self.spec.fail_execute.contains(&variant.id),
                 sleep: self.spec.exec_sleep,
                 fault: self.spec.latency_fault.clone(),
-                rng: Mutex::new(self.rng.lock().unwrap().split()),
+                rng: TrackedMutex::new("runtime.mock.kernel.rng", self.rng.lock().split()),
             }),
         }))
     }
@@ -234,7 +246,7 @@ struct MockKernelState {
     fail: bool,
     sleep: bool,
     fault: LatencyFault,
-    rng: Mutex<Rng>,
+    rng: TrackedMutex<Rng>,
 }
 
 impl SharedKernel for MockKernelState {
@@ -247,7 +259,7 @@ impl SharedKernel for MockKernelState {
         }
         let mut cost = self.base.as_secs_f64() * self.fault.scale_for(&self.variant_id);
         if self.jitter_frac > 0.0 {
-            let z = self.rng.lock().unwrap().normal();
+            let z = self.rng.lock().normal();
             cost *= (1.0 + self.jitter_frac * z).max(0.1);
         }
         if self.sleep {

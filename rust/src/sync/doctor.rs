@@ -1,0 +1,256 @@
+//! The lock doctor: process-wide lock-order and hold-time tracking.
+//!
+//! Compiled only under the `lock-doctor` feature. Every
+//! [`TrackedMutex`](super::TrackedMutex) /
+//! [`TrackedRwLock`](super::TrackedRwLock) acquisition reports here:
+//!
+//! * a **site** is a static label registered once per lock field
+//!   (`"coordinator.pool.routes"`), shared by all instances of that
+//!   field;
+//! * each thread keeps a stack of currently held sites;
+//! * acquiring site `B` while holding site `A` inserts the directed
+//!   edge `A → B` into a global site-order graph;
+//! * any cycle in that graph is a potential ABBA deadlock — two
+//!   threads interleaving the two orders would hang — and is recorded
+//!   (deduplicated) and logged via `log::warn!` the moment the closing
+//!   edge appears, even if the run itself never deadlocked;
+//! * a guard held longer than [`set_hold_threshold`] (default 100 ms)
+//!   is recorded as a [`HoldViolation`] when dropped.
+//!
+//! Same-site edges (`A → A`) are deliberately not recorded: acquiring
+//! two instances of the same site class in a fixed instance order
+//! (e.g. the pool's per-shard queues during work stealing) is an
+//! ordered same-class pattern, not an order inversion the graph can
+//! judge — and the pool only ever holds one shard queue at a time
+//! anyway.
+//!
+//! The registry is process-global so integration tests exercise the
+//! whole coordinator stack; [`reset`] clears observations (but keeps
+//! site registrations, which live as long as the process).
+
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::mutex_lock;
+
+/// Index of a registered lock site in the global registry.
+pub type SiteId = usize;
+
+/// A cycle in the lock-order graph: site labels along the cycle, with
+/// `path.first() == path.last()`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LockCycle {
+    /// Labels along the cycle, closed (first element repeated last).
+    pub path: Vec<String>,
+}
+
+/// A guard that stayed held past the configured threshold.
+#[derive(Debug, Clone)]
+pub struct HoldViolation {
+    /// Label of the lock site.
+    pub site: String,
+    /// How long the guard was held.
+    pub held_for: Duration,
+}
+
+#[derive(Default)]
+struct Registry {
+    labels: Vec<&'static str>,
+    by_label: HashMap<&'static str, SiteId>,
+    /// Adjacency: `edges[from]` lists sites acquired while `from` held.
+    edges: Vec<Vec<SiteId>>,
+    edge_set: HashSet<(SiteId, SiteId)>,
+    cycles: Vec<Vec<SiteId>>,
+    cycle_keys: HashSet<Vec<SiteId>>,
+    violations: Vec<HoldViolation>,
+    hold_threshold: Option<Duration>,
+}
+
+impl Registry {
+    fn threshold(&self) -> Duration {
+        self.hold_threshold.unwrap_or_else(|| Duration::from_millis(100))
+    }
+}
+
+fn registry() -> &'static Mutex<Registry> {
+    static REGISTRY: OnceLock<Mutex<Registry>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Registry::default()))
+}
+
+thread_local! {
+    /// Sites currently held by this thread, in acquisition order.
+    static HELD: RefCell<Vec<SiteId>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Register (or look up) the site id for `label`.
+pub fn site_id(label: &'static str) -> SiteId {
+    let mut reg = mutex_lock(registry());
+    if let Some(&id) = reg.by_label.get(label) {
+        return id;
+    }
+    let id = reg.labels.len();
+    reg.labels.push(label);
+    reg.by_label.insert(label, id);
+    reg.edges.push(Vec::new());
+    id
+}
+
+/// Record order edges from every currently held site to `site`, and
+/// check each *new* edge for a cycle. Called before the real blocking
+/// acquisition (or, for condvar re-acquisition, right after the wait
+/// returns — the held set is identical at both points).
+pub fn before_acquire(site: SiteId) {
+    let held: Vec<SiteId> = HELD.with(|h| h.borrow().clone());
+    if held.is_empty() {
+        return;
+    }
+    let mut reg = mutex_lock(registry());
+    let mut seen = HashSet::new();
+    for &from in &held {
+        // Same-site self-edges are an ordered same-class pattern, not
+        // an inversion — see module docs.
+        if from == site || !seen.insert(from) {
+            continue;
+        }
+        if reg.edge_set.insert((from, site)) {
+            reg.edges[from].push(site);
+            check_cycle(&mut reg, from, site);
+        }
+    }
+}
+
+/// After inserting `from → to`, search for a path `to → … → from`; if
+/// one exists the new edge closed a cycle.
+fn check_cycle(reg: &mut Registry, from: SiteId, to: SiteId) {
+    let mut path = vec![to];
+    let mut visited = HashSet::new();
+    if !dfs(reg, to, from, &mut path, &mut visited) {
+        return;
+    }
+    // Cycle as sites: from → to → … → from.
+    let mut cycle = vec![from];
+    cycle.extend(path);
+    let key = canonical(&cycle);
+    if !reg.cycle_keys.insert(key) {
+        return;
+    }
+    let labels: Vec<String> = cycle.iter().map(|&s| reg.labels[s].to_string()).collect();
+    log::warn!("lock-doctor: lock-order cycle detected: {}", labels.join(" -> "));
+    reg.cycles.push(cycle);
+}
+
+fn dfs(
+    reg: &Registry,
+    node: SiteId,
+    target: SiteId,
+    path: &mut Vec<SiteId>,
+    visited: &mut HashSet<SiteId>,
+) -> bool {
+    if node == target {
+        return true;
+    }
+    if !visited.insert(node) {
+        return false;
+    }
+    for &next in &reg.edges[node] {
+        path.push(next);
+        if dfs(reg, next, target, path, visited) {
+            return true;
+        }
+        path.pop();
+    }
+    false
+}
+
+/// Canonical dedup key for a closed cycle: the distinct node sequence
+/// rotated so the smallest site id leads.
+fn canonical(cycle: &[SiteId]) -> Vec<SiteId> {
+    let nodes = &cycle[..cycle.len() - 1]; // drop the closing repeat
+    let min_pos = nodes
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, &s)| s)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let mut key = Vec::with_capacity(nodes.len());
+    key.extend_from_slice(&nodes[min_pos..]);
+    key.extend_from_slice(&nodes[..min_pos]);
+    key
+}
+
+/// Record the acquisition of `site` on this thread; the returned token
+/// keeps it on the held stack until dropped.
+pub fn acquired(site: SiteId) -> Held {
+    HELD.with(|h| h.borrow_mut().push(site));
+    Held { site, since: Instant::now() }
+}
+
+/// A held-lock token: created by [`acquired`], pops the thread's held
+/// stack (and checks hold time) on drop.
+pub struct Held {
+    site: SiteId,
+    since: Instant,
+}
+
+impl Held {
+    /// The site this token tracks (used by condvar wait to re-register
+    /// the re-acquisition).
+    pub(super) fn site(&self) -> SiteId {
+        self.site
+    }
+}
+
+impl Drop for Held {
+    fn drop(&mut self) {
+        HELD.with(|h| {
+            let mut held = h.borrow_mut();
+            if let Some(pos) = held.iter().rposition(|&s| s == self.site) {
+                held.remove(pos);
+            }
+        });
+        let held_for = self.since.elapsed();
+        let mut reg = mutex_lock(registry());
+        if held_for > reg.threshold() {
+            let site = reg.labels[self.site].to_string();
+            log::warn!("lock-doctor: {site} held for {held_for:?} (over threshold)");
+            reg.violations.push(HoldViolation { site, held_for });
+        }
+    }
+}
+
+/// All lock-order cycles observed so far (deduplicated).
+pub fn cycles() -> Vec<LockCycle> {
+    let reg = mutex_lock(registry());
+    reg.cycles
+        .iter()
+        .map(|cycle| LockCycle {
+            path: cycle.iter().map(|&s| reg.labels[s].to_string()).collect(),
+        })
+        .collect()
+}
+
+/// All hold-time violations observed so far.
+pub fn hold_violations() -> Vec<HoldViolation> {
+    mutex_lock(registry()).violations.clone()
+}
+
+/// Set the held-too-long reporting threshold (default 100 ms).
+pub fn set_hold_threshold(threshold: Duration) {
+    mutex_lock(registry()).hold_threshold = Some(threshold);
+}
+
+/// Clear observed edges, cycles and violations. Site registrations are
+/// kept — they are cached in live lock instances for the life of the
+/// process.
+pub fn reset() {
+    let mut reg = mutex_lock(registry());
+    for adj in &mut reg.edges {
+        adj.clear();
+    }
+    reg.edge_set.clear();
+    reg.cycles.clear();
+    reg.cycle_keys.clear();
+    reg.violations.clear();
+}

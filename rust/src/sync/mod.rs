@@ -1,0 +1,384 @@
+//! Tracked synchronization primitives: the repo's only lock types.
+//!
+//! Everything in `coordinator/`, `hub/` and `runtime/` synchronizes
+//! through [`TrackedMutex`], [`TrackedRwLock`] and [`TrackedCondvar`]
+//! instead of the raw `std::sync` types (enforced by `jitune-lint`
+//! rule L001). The wrappers buy three things:
+//!
+//! 1. **Poison tolerance.** Every acquisition folds in
+//!    `unwrap_or_else(|e| e.into_inner())`: a panicking worker must
+//!    never wedge the serving path, and the coordinator's state types
+//!    are written so any interrupted update leaves them consistent.
+//!    This replaces the old `mutex_lock`/`read_lock`/`write_lock`
+//!    helpers that were duplicated in `coordinator::mod` (the raw
+//!    helpers remain available here for the rare raw-lock need inside
+//!    `sync/` itself).
+//! 2. **Lock-order deadlock detection** (the *lock doctor*). With the
+//!    `lock-doctor` cargo feature enabled, every lock carries a static
+//!    site label (e.g. `"coordinator.pool.routes"`); acquisitions
+//!    maintain a per-thread stack of held sites and a global
+//!    site-order graph, and any cycle in that graph — a potential
+//!    ABBA deadlock, even one that never actually deadlocked in the
+//!    run — is recorded and logged with the full label path. See
+//!    [`doctor`].
+//! 3. **Held-too-long reporting.** The doctor also records any guard
+//!    held longer than a configurable threshold, catching slow work
+//!    (compiles, measurements) accidentally moved under a serve-path
+//!    lock.
+//!
+//! With the feature **off** (the default, including release serving
+//! builds) the wrappers are transparent newtypes: no extra fields
+//! (`repr(transparent)`), `#[inline]` passthrough methods, zero
+//! allocation, zero atomics — the compiled code is identical to using
+//! `std::sync` directly.
+//!
+//! # Usage
+//!
+//! ```
+//! use jitune::sync::TrackedMutex;
+//! let counter = TrackedMutex::new("docs.example.counter", 0u64);
+//! *counter.lock() += 1;
+//! assert_eq!(*counter.lock(), 1);
+//! ```
+//!
+//! Run the tracked test suite with
+//! `cargo test --features lock-doctor --test lock_doctor`.
+
+use std::fmt;
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
+
+pub use std::sync::WaitTimeoutResult;
+
+#[cfg(feature = "lock-doctor")]
+pub mod doctor;
+
+/// Poison-tolerant raw mutex acquisition. Prefer [`TrackedMutex`]; this
+/// exists for raw `std::sync` locks inside `sync/` itself and for code
+/// that must interoperate with externally owned locks.
+pub fn mutex_lock<T>(lock: &Mutex<T>) -> MutexGuard<'_, T> {
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant raw read acquisition. See [`mutex_lock`].
+pub fn read_lock<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Poison-tolerant raw write acquisition. See [`mutex_lock`].
+pub fn write_lock<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A [`std::sync::Mutex`] with a site label, poison-tolerant
+/// acquisition, and (under the `lock-doctor` feature) lock-order
+/// tracking.
+#[cfg_attr(not(feature = "lock-doctor"), repr(transparent))]
+pub struct TrackedMutex<T> {
+    inner: Mutex<T>,
+    #[cfg(feature = "lock-doctor")]
+    site: doctor::SiteId,
+}
+
+impl<T> TrackedMutex<T> {
+    /// Wrap `value` in a mutex registered under `label`. Labels are
+    /// dotted paths naming the lock *site* (one per field, not per
+    /// instance): every shard queue of every pool shares
+    /// `"coordinator.pool.shard"`, which is exactly what makes
+    /// order-graph cycles meaningful across instances.
+    #[inline]
+    pub fn new(label: &'static str, value: T) -> Self {
+        #[cfg(not(feature = "lock-doctor"))]
+        let _ = label;
+        TrackedMutex {
+            inner: Mutex::new(value),
+            #[cfg(feature = "lock-doctor")]
+            site: doctor::site_id(label),
+        }
+    }
+
+    /// Acquire, recovering from poison (see module docs).
+    #[inline]
+    pub fn lock(&self) -> TrackedMutexGuard<'_, T> {
+        #[cfg(feature = "lock-doctor")]
+        doctor::before_acquire(self.site);
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        TrackedMutexGuard {
+            inner,
+            #[cfg(feature = "lock-doctor")]
+            held: doctor::acquired(self.site),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for TrackedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TrackedMutex").finish_non_exhaustive()
+    }
+}
+
+/// Guard returned by [`TrackedMutex::lock`]. Intentionally has no
+/// `Drop` impl of its own so [`TrackedCondvar::wait`] can destructure
+/// it; release bookkeeping lives in the field types.
+pub struct TrackedMutexGuard<'a, T> {
+    inner: MutexGuard<'a, T>,
+    #[cfg(feature = "lock-doctor")]
+    held: doctor::Held,
+}
+
+impl<T> std::ops::Deref for TrackedMutexGuard<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> std::ops::DerefMut for TrackedMutexGuard<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+/// A [`std::sync::RwLock`] with a site label, poison-tolerant
+/// acquisition, and (under `lock-doctor`) lock-order tracking. Reads
+/// and writes share one site: the order graph tracks *site* order, and
+/// a read-then-write cycle is just as much a deadlock risk as
+/// write-then-write.
+#[cfg_attr(not(feature = "lock-doctor"), repr(transparent))]
+pub struct TrackedRwLock<T> {
+    inner: RwLock<T>,
+    #[cfg(feature = "lock-doctor")]
+    site: doctor::SiteId,
+}
+
+impl<T> TrackedRwLock<T> {
+    /// Wrap `value` in an rwlock registered under `label` (see
+    /// [`TrackedMutex::new`] for labeling conventions).
+    #[inline]
+    pub fn new(label: &'static str, value: T) -> Self {
+        #[cfg(not(feature = "lock-doctor"))]
+        let _ = label;
+        TrackedRwLock {
+            inner: RwLock::new(value),
+            #[cfg(feature = "lock-doctor")]
+            site: doctor::site_id(label),
+        }
+    }
+
+    /// Shared acquisition, recovering from poison.
+    #[inline]
+    pub fn read(&self) -> TrackedReadGuard<'_, T> {
+        #[cfg(feature = "lock-doctor")]
+        doctor::before_acquire(self.site);
+        let inner = self.inner.read().unwrap_or_else(|e| e.into_inner());
+        TrackedReadGuard {
+            inner,
+            #[cfg(feature = "lock-doctor")]
+            _held: doctor::acquired(self.site),
+        }
+    }
+
+    /// Exclusive acquisition, recovering from poison.
+    #[inline]
+    pub fn write(&self) -> TrackedWriteGuard<'_, T> {
+        #[cfg(feature = "lock-doctor")]
+        doctor::before_acquire(self.site);
+        let inner = self.inner.write().unwrap_or_else(|e| e.into_inner());
+        TrackedWriteGuard {
+            inner,
+            #[cfg(feature = "lock-doctor")]
+            _held: doctor::acquired(self.site),
+        }
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for TrackedRwLock<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TrackedRwLock").finish_non_exhaustive()
+    }
+}
+
+/// Guard returned by [`TrackedRwLock::read`].
+pub struct TrackedReadGuard<'a, T> {
+    inner: RwLockReadGuard<'a, T>,
+    #[cfg(feature = "lock-doctor")]
+    _held: doctor::Held,
+}
+
+impl<T> std::ops::Deref for TrackedReadGuard<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+/// Guard returned by [`TrackedRwLock::write`].
+pub struct TrackedWriteGuard<'a, T> {
+    inner: RwLockWriteGuard<'a, T>,
+    #[cfg(feature = "lock-doctor")]
+    _held: doctor::Held,
+}
+
+impl<T> std::ops::Deref for TrackedWriteGuard<'_, T> {
+    type Target = T;
+    #[inline]
+    fn deref(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T> std::ops::DerefMut for TrackedWriteGuard<'_, T> {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.inner
+    }
+}
+
+/// A [`std::sync::Condvar`] paired with [`TrackedMutex`]. Waiting
+/// releases the mutex, so under `lock-doctor` the wait drops the held
+/// token for the park and re-registers the acquisition (with a fresh
+/// order check) when the wait returns — a parked worker never shows up
+/// as "holding" its queue lock.
+#[cfg_attr(not(feature = "lock-doctor"), repr(transparent))]
+pub struct TrackedCondvar {
+    inner: Condvar,
+}
+
+impl TrackedCondvar {
+    /// A fresh condvar.
+    #[inline]
+    pub fn new() -> Self {
+        TrackedCondvar { inner: Condvar::new() }
+    }
+
+    /// Block until notified, recovering from poison.
+    #[inline]
+    pub fn wait<'a, T>(&self, guard: TrackedMutexGuard<'a, T>) -> TrackedMutexGuard<'a, T> {
+        #[cfg(feature = "lock-doctor")]
+        {
+            let TrackedMutexGuard { inner, held } = guard;
+            let site = held.site();
+            drop(held); // parked threads hold nothing
+            let inner = self.inner.wait(inner).unwrap_or_else(|e| e.into_inner());
+            doctor::before_acquire(site);
+            TrackedMutexGuard { inner, held: doctor::acquired(site) }
+        }
+        #[cfg(not(feature = "lock-doctor"))]
+        {
+            let TrackedMutexGuard { inner } = guard;
+            TrackedMutexGuard { inner: self.inner.wait(inner).unwrap_or_else(|e| e.into_inner()) }
+        }
+    }
+
+    /// Block until notified or `dur` elapses, recovering from poison.
+    #[inline]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: TrackedMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (TrackedMutexGuard<'a, T>, WaitTimeoutResult) {
+        #[cfg(feature = "lock-doctor")]
+        {
+            let TrackedMutexGuard { inner, held } = guard;
+            let site = held.site();
+            drop(held);
+            let (inner, timed_out) =
+                self.inner.wait_timeout(inner, dur).unwrap_or_else(|e| e.into_inner());
+            doctor::before_acquire(site);
+            (TrackedMutexGuard { inner, held: doctor::acquired(site) }, timed_out)
+        }
+        #[cfg(not(feature = "lock-doctor"))]
+        {
+            let TrackedMutexGuard { inner } = guard;
+            let (inner, timed_out) =
+                self.inner.wait_timeout(inner, dur).unwrap_or_else(|e| e.into_inner());
+            (TrackedMutexGuard { inner }, timed_out)
+        }
+    }
+
+    /// Wake one waiter.
+    #[inline]
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    /// Wake all waiters.
+    #[inline]
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+impl Default for TrackedCondvar {
+    fn default() -> Self {
+        TrackedCondvar::new()
+    }
+}
+
+impl fmt::Debug for TrackedCondvar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("TrackedCondvar").finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_basic() {
+        let m = TrackedMutex::new("sync.test.mutex_basic", 1u32);
+        *m.lock() += 1;
+        assert_eq!(*m.lock(), 2);
+    }
+
+    #[test]
+    fn rwlock_basic() {
+        let l = TrackedRwLock::new("sync.test.rwlock_basic", vec![1, 2]);
+        assert_eq!(l.read().len(), 2);
+        l.write().push(3);
+        assert_eq!(*l.read(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn condvar_roundtrip() {
+        let pair = Arc::new((
+            TrackedMutex::new("sync.test.condvar_flag", false),
+            TrackedCondvar::new(),
+        ));
+        let pair2 = Arc::clone(&pair);
+        let t = std::thread::Builder::new()
+            .name("sync-test-notifier".into())
+            .spawn(move || {
+                *pair2.0.lock() = true;
+                pair2.1.notify_one();
+            })
+            .unwrap();
+        let mut flag = pair.0.lock();
+        while !*flag {
+            let (g, _timed_out) = pair.1.wait_timeout(flag, Duration::from_millis(50));
+            flag = g;
+        }
+        assert!(*flag);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn poisoned_mutex_recovers() {
+        let m = Arc::new(TrackedMutex::new("sync.test.poison", 7u32));
+        let m2 = Arc::clone(&m);
+        let t = std::thread::Builder::new()
+            .name("sync-test-poisoner".into())
+            .spawn(move || {
+                let _g = m2.lock();
+                panic!("poison the lock");
+            })
+            .unwrap();
+        assert!(t.join().is_err());
+        assert_eq!(*m.lock(), 7);
+    }
+}

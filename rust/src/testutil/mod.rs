@@ -18,6 +18,7 @@ use crate::util::prng::Rng;
 /// counter intra-process uniqueness.
 fn next_uniq() -> u64 {
     use std::sync::atomic::{AtomicU64, Ordering};
+    // relaxed-counter: unique-suffix sequence, never synchronizes
     static COUNTER: AtomicU64 = AtomicU64::new(0);
     COUNTER.fetch_add(1, Ordering::Relaxed)
 }

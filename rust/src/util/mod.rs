@@ -35,6 +35,7 @@ pub fn atomic_write(path: &std::path::Path, contents: &str) -> crate::Result<()>
     // *and* in this one each get their own scratch file
     let seq = {
         use std::sync::atomic::{AtomicU64, Ordering};
+        // relaxed-counter: unique-suffix sequence, never synchronizes
         static COUNTER: AtomicU64 = AtomicU64::new(0);
         COUNTER.fetch_add(1, Ordering::Relaxed)
     };
