@@ -1,0 +1,314 @@
+//! **Traffic replay on the native engine** — real kernels, real traffic.
+//!
+//! Every other bench drives mock engines under uniform call loops. This
+//! one grounds the scaling claims: the CPU-native engine's variants do
+//! genuinely different machine work (tiling/unrolling, access patterns,
+//! reduction trees), and the traffic generator replays a seeded
+//! production-shaped trace (Zipfian popularity, shape churn, open-loop
+//! bursts, mid-run interference) against the full coordinator stack —
+//! fast lane + worker pool + background exploration + drift retuning.
+//!
+//! Three stages (full mode):
+//!
+//! 1. **Exhaustive sweep**: every matmul variant at the sweep size,
+//!    measured directly on a native engine. Acceptance: >= 1.3x spread
+//!    between worst and best variant (the tuner has something real to
+//!    find).
+//! 2. **Replay**: the Zipfian shape-churn trace through a live
+//!    coordinator; mid-run the interference handle quadruples matmul
+//!    work (drift). Reported: p50/p99 (overall/cold/steady),
+//!    per-problem time-to-good, explore duty cycle, tuned-state size
+//!    series.
+//! 3. **Convergence**: the tuned winner's sweep-measured mean must be
+//!    within noise (1.25x) of the exhaustive best.
+//!
+//! Results land in `BENCH_TRAFFIC.json` at the repository root — but
+//! only from a full run whose figures validated as real measurements:
+//! `--smoke` never touches the committed file, and a figure that comes
+//! out non-finite or non-positive aborts the run instead of being
+//! written. No placeholder can get in silently.
+//!
+//! Env knob: `JITUNE_BENCH_TRAFFIC_CALLS` (trace length, default 3000).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    Coordinator, Dispatcher, DriftPolicy, ExploreOptions, KernelRegistry, PoolOptions,
+    ServerOptions,
+};
+use jitune::manifest::Manifest;
+use jitune::runtime::native::native_manifest;
+use jitune::runtime::{Engine, EngineFactory, NativeEngine, NativeEngineFactory, NativeFault};
+use jitune::traffic::{ReplayOptions, TrafficHarness, TrafficSpec};
+use jitune::util::json::{n, s, Value};
+use jitune::workload::inputs_for;
+
+const WORKERS: usize = 2;
+const BUDGET_PCT: f64 = 25.0;
+const SWEEP_KERNEL: &str = "matmul";
+const SWEEP_REPS: usize = 30;
+const INPUT_SEED: u64 = 0xBEEF;
+
+/// One matmul variant's exhaustive measurement.
+struct SweepPoint {
+    id: String,
+    value: i64,
+    mean_us: f64,
+}
+
+/// Measure every variant of the sweep problem directly on a fresh
+/// native engine (no coordinator — this is the ground truth the tuner
+/// is judged against).
+fn sweep(manifest: &Manifest, size: i64) -> Vec<SweepPoint> {
+    let engine = NativeEngine::new();
+    let problem = manifest.problem(SWEEP_KERNEL, size).expect("sweep problem");
+    let inputs = inputs_for(problem, INPUT_SEED);
+    problem
+        .variants
+        .iter()
+        .map(|v| {
+            let kernel = engine.compile(v, "").expect("native compile");
+            kernel.execute(&inputs).expect("sweep warmup");
+            let t0 = Instant::now();
+            for _ in 0..SWEEP_REPS {
+                kernel.execute(&inputs).expect("sweep exec");
+            }
+            SweepPoint {
+                id: v.id.clone(),
+                value: v.value,
+                mean_us: t0.elapsed().as_secs_f64() * 1e6 / SWEEP_REPS as f64,
+            }
+        })
+        .collect()
+}
+
+/// Full coordinator over a pinned native factory: fast lane, worker
+/// pool, background exploration under a duty-cycle budget, and a
+/// fast-reacting drift policy (bench runs are seconds, not hours).
+fn coordinator(manifest_sizes: (&[i64], &[i64])) -> (Coordinator, NativeFault) {
+    let factory = Arc::new(NativeEngineFactory::pinned());
+    let fault = factory.fault();
+    let leader_factory: Arc<dyn EngineFactory> = factory.clone();
+    let opts = ServerOptions {
+        pool: Some(PoolOptions::new(factory).with_workers(WORKERS)),
+        explore_budget: Some(
+            ExploreOptions::percent(BUDGET_PCT).with_window(Duration::from_millis(50)),
+        ),
+        drift: Some(DriftPolicy {
+            window: Duration::from_millis(100),
+            min_samples: 16,
+            ratio_threshold: 1.7,
+            cooldown: Duration::from_secs(1),
+            consecutive_windows: 2,
+            ..DriftPolicy::default()
+        }),
+        ..ServerOptions::default()
+    };
+    let (matmul_sizes, vec_sizes) = (manifest_sizes.0.to_vec(), manifest_sizes.1.to_vec());
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = native_manifest(&matmul_sizes, &vec_sizes)?;
+            Ok(Dispatcher::new(KernelRegistry::new(manifest), leader_factory.create()?))
+        },
+        opts,
+    )
+    .expect("coordinator");
+    (coord, fault)
+}
+
+/// Poll (with keep-alive traffic) until the coordinator has a tuned
+/// winner for `(kernel, size)`.
+fn wait_tuned(coord: &Coordinator, manifest: &Manifest, kernel: &str, size: i64) -> i64 {
+    let h = coord.handle();
+    let inputs = inputs_for(manifest.problem(kernel, size).expect("problem"), INPUT_SEED);
+    let t0 = Instant::now();
+    loop {
+        if let Some(value) = h.tuned_value(kernel, size).expect("tuned_value") {
+            return value;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "{kernel}/n{size} never converged after the trace"
+        );
+        h.call(kernel, inputs.clone()).expect("keep-alive call");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Abort instead of emitting a figure that is not a real measurement.
+fn require_real(figures: &[(&str, f64)]) {
+    for (label, v) in figures {
+        assert!(
+            v.is_finite() && *v > 0.0,
+            "refusing to emit placeholder output: {label} = {v} is not a real measurement"
+        );
+    }
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let calls: usize = std::env::var("JITUNE_BENCH_TRAFFIC_CALLS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 400 } else { 3000 });
+    // Smoke keeps kernels tiny so the PR gate stays fast; full mode uses
+    // sizes where variant choice visibly moves the needle.
+    let (matmul_sizes, vec_sizes, sweep_size): (&[i64], &[i64], i64) = if smoke {
+        (&[48], &[16_384], 48)
+    } else {
+        (&[64, 128], &[65_536], 128)
+    };
+    println!(
+        "== traffic replay on the native engine ({WORKERS} workers, {BUDGET_PCT}% budget{}) ==\n",
+        if smoke { ", smoke" } else { "" }
+    );
+
+    let manifest = native_manifest(matmul_sizes, vec_sizes).expect("native manifest");
+
+    // Stage 1: exhaustive variant sweep (ground truth).
+    println!("exhaustive sweep: {SWEEP_KERNEL} n={sweep_size}, {SWEEP_REPS} reps/variant:");
+    let points = sweep(&manifest, sweep_size);
+    for p in &points {
+        println!("  {:<22} {:9.1}us", p.id, p.mean_us);
+    }
+    let best = points
+        .iter()
+        .min_by(|a, b| a.mean_us.partial_cmp(&b.mean_us).expect("finite means"))
+        .expect("non-empty sweep");
+    let worst = points
+        .iter()
+        .max_by(|a, b| a.mean_us.partial_cmp(&b.mean_us).expect("finite means"))
+        .expect("non-empty sweep");
+    let spread = worst.mean_us / best.mean_us;
+    println!("  spread {spread:.2}x ({} .. {})\n", best.id, worst.id);
+
+    // Stage 2: replay the production-shaped trace.
+    let spec = TrafficSpec {
+        calls,
+        rps: if smoke { 2000.0 } else { 600.0 },
+        zipf_s: 1.1,
+        initial: 2,
+        churn_every: calls / 6,
+        burst: 3.0,
+        burst_len: 60,
+        drift_at: 0.5,
+        seed: 42,
+        clients: 4,
+    };
+    let (coord, fault) = coordinator((matmul_sizes, vec_sizes));
+    let harness = TrafficHarness::new(&manifest, spec, INPUT_SEED).expect("harness");
+    let inject = fault.clone();
+    let opts = ReplayOptions {
+        // Mid-run interference: matmul suddenly does 4x the work — the
+        // drift monitor should notice the published winners degrading.
+        drift_inject: Some(Arc::new(move || inject.slow_down(SWEEP_KERNEL, 3))),
+        ..ReplayOptions::default()
+    };
+    let report = harness.run(&coord, &opts).expect("replay");
+    print!("{}", report.render());
+    assert_eq!(report.errors, 0, "replay must be error-free");
+
+    // Stage 3: convergence. Clear the interference first so any
+    // post-trace keep-alive tuning measures the same machine the sweep
+    // did.
+    fault.clear();
+    let tuned = wait_tuned(&coord, &manifest, SWEEP_KERNEL, sweep_size);
+    let tuned_point = points.iter().find(|p| p.value == tuned).expect("tuned variant in sweep");
+    let convergence = tuned_point.mean_us / best.mean_us;
+    println!(
+        "\nconvergence: tuner picked {} ({:.1}us), exhaustive best {} ({:.1}us) -> {convergence:.2}x",
+        tuned_point.id, tuned_point.mean_us, best.id, best.mean_us
+    );
+
+    if smoke {
+        // The PR gate proves the stack runs end to end; tiny sizes make
+        // timing-based acceptance too noisy to assert, and the committed
+        // trajectory file must only ever hold full-run measurements.
+        println!("\nsmoke mode: skipping acceptance gates and BENCH_TRAFFIC.json write.");
+        println!("traffic_replay done.");
+        return;
+    }
+
+    // Acceptance gates (ISSUE 8): the variants differ for real, and the
+    // tuner found (within noise) the variant the exhaustive sweep found.
+    assert!(spread >= 1.3, "variant spread must be >= 1.3x, got {spread:.2}x");
+    assert!(
+        convergence <= 1.25,
+        "tuner must converge within noise of the exhaustive best, got {convergence:.2}x"
+    );
+
+    require_real(&[
+        ("sweep best mean", best.mean_us),
+        ("sweep spread", spread),
+        ("replay p50", report.p50_us),
+        ("replay p99", report.p99_us),
+        ("steady p99", report.steady_p99_us),
+        ("wall ms", report.wall_ms),
+        ("tuned state bytes", report.tuned_state_bytes as f64),
+    ]);
+
+    let json = Value::Obj(vec![
+        ("bench".into(), s("traffic_replay")),
+        ("smoke".into(), Value::Bool(false)),
+        (
+            "config".into(),
+            Value::Obj(vec![
+                ("engine".into(), s("native")),
+                (
+                    "matmul_sizes".into(),
+                    Value::Arr(matmul_sizes.iter().map(|&v| n(v as f64)).collect()),
+                ),
+                (
+                    "vec_sizes".into(),
+                    Value::Arr(vec_sizes.iter().map(|&v| n(v as f64)).collect()),
+                ),
+                ("workers".into(), n(WORKERS as f64)),
+                ("budget_pct".into(), n(BUDGET_PCT)),
+                ("sweep_size".into(), n(sweep_size as f64)),
+                ("sweep_reps".into(), n(SWEEP_REPS as f64)),
+            ]),
+        ),
+        (
+            "sweep".into(),
+            Value::Obj(vec![
+                (
+                    "variants".into(),
+                    Value::Arr(
+                        points
+                            .iter()
+                            .map(|p| {
+                                Value::Obj(vec![
+                                    ("id".into(), s(p.id.clone())),
+                                    ("value".into(), n(p.value as f64)),
+                                    ("mean_us".into(), n(p.mean_us)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("best".into(), s(best.id.clone())),
+                ("worst".into(), s(worst.id.clone())),
+                ("spread".into(), n(spread)),
+            ]),
+        ),
+        (
+            "convergence".into(),
+            Value::Obj(vec![
+                ("tuned".into(), s(tuned_point.id.clone())),
+                ("tuned_mean_us".into(), n(tuned_point.mean_us)),
+                ("best_mean_us".into(), n(best.mean_us)),
+                ("over_best".into(), n(convergence)),
+            ]),
+        ),
+        ("replay".into(), report.to_json()),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_TRAFFIC.json");
+    jitune::util::atomic_write(&out, &json.to_json_pretty()).expect("write bench json");
+    println!("\nwrote {}", out.display());
+    println!("traffic_replay done.");
+}

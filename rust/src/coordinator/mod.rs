@@ -212,6 +212,36 @@
 //! `examples/hub_fleet.rs` + `benches/hub_warm_start.rs` for the
 //! fleet-scale amortization story.
 //!
+//! # Grounding the claims: native engine + traffic replay
+//!
+//! Everything above is measurable against mocks, but mocks only prove
+//! scheduling, not that tuning *finds* anything. Two subsystems close
+//! the loop:
+//!
+//! * [`crate::runtime::native`] is a real CPU backend whose manifest
+//!   parameters select genuinely different machine behaviour — matmul
+//!   loop scheduling (naive / packed-transpose / tiled+unrolled), saxpy
+//!   access patterns (strided / chunked), reduce accumulator-lane
+//!   counts — with bit-identical results across every variant of a
+//!   problem, and a size-classed aligned [`crate::runtime::native::BufferPool`]
+//!   so pool workers stop paying per-call allocation. It slots into the
+//!   fast lane, worker pool and background exploration through the same
+//!   [`crate::runtime::EngineFactory`] seam as PJRT
+//!   (`NativeEngineFactory::pinned()` for the thread-pinned shape).
+//! * [`crate::traffic`] replays a seeded production-shaped trace —
+//!   Zipfian kernel popularity, shape churn, bursty open-loop arrivals,
+//!   mid-run interference injection — against a live coordinator from N
+//!   client threads, and reports what callers actually observed:
+//!   p50/p99 by phase, per-problem time-to-good, explore duty cycle,
+//!   and a tuned-state-size series.
+//!
+//! `benches/traffic_replay.rs` combines them: an exhaustive sweep
+//! establishes the real variant spread (>= 1.3x gate), the replay shows
+//! the coordinator converging to the sweep's best under churn and drift,
+//! and `BENCH_TRAFFIC.json` at the repo root records the trajectory
+//! (refreshed by CI on pushes to main; see the README for how to read
+//! it).
+//!
 //! # Correctness tooling
 //!
 //! Three lanes, a worker pool, background exploration and a drift

@@ -33,6 +33,7 @@ pub mod runtime;
 pub mod sync;
 pub mod tensor;
 pub mod testutil;
+pub mod traffic;
 pub mod util;
 pub mod workload;
 

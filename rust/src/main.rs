@@ -12,7 +12,11 @@ use jitune::coordinator::{
 };
 use jitune::hub::{merge_entry, HubClient, HubEntry, HubOptions, HubServer, Merge};
 use jitune::manifest::Manifest;
-use jitune::runtime::{PjrtEngine, PjrtEngineFactory};
+use jitune::runtime::native::default_native_manifest;
+use jitune::runtime::{
+    Engine, EngineFactory, NativeEngine, NativeEngineFactory, PjrtEngine, PjrtEngineFactory,
+};
+use jitune::traffic::{ReplayOptions, TrafficHarness, TrafficSpec};
 use jitune::util::json::Value;
 use jitune::workload::{inputs_for, CallTrace};
 use jitune::{Error, Result};
@@ -20,7 +24,7 @@ use jitune::{Error, Result};
 const COMMANDS: &[(&str, &str)] = &[
     ("inspect", "list kernels, problems and variants in the manifest"),
     ("tune", "tune one kernel at one size and print the tuning report"),
-    ("run", "replay a call trace (kernel:size:iters[,...]) through the dispatcher"),
+    ("run", "replay a call trace (--trace kernel:size:iters[,...]) or a generated production-shaped trace (--traffic k=v,...) through the dispatcher"),
     ("stats", "tune then print coordinator + cache statistics"),
     ("hub", "tuned-state hub broker: `hub serve --socket <p>` | `hub dump --socket <p>`"),
     ("state", "tuning-state files: `state show <file>` | `state merge <out> <in>...`"),
@@ -61,6 +65,20 @@ fn flag_specs() -> Vec<FlagSpec> {
             help: "run: serve the trace through a coordinator whose leader drains \
                    up to N requests per scheduling round (co-scheduled same-problem \
                    calls fuse into one exploration round)",
+        },
+        FlagSpec {
+            name: "engine",
+            takes_value: true,
+            help: "execution backend: `pjrt` (default; needs artifacts) or `native` \
+                   (built-in CPU kernels with a generated manifest — no artifacts)",
+        },
+        FlagSpec {
+            name: "traffic",
+            takes_value: true,
+            help: "run: replay a seeded production-shaped trace (Zipf popularity, \
+                   shape churn, bursts) instead of --trace; comma-separated k=v over \
+                   calls/rps/zipf/initial/churn/burst/burstlen/drift/seed/clients, \
+                   empty string for defaults",
         },
         FlagSpec {
             name: "explore-budget",
@@ -108,9 +126,10 @@ fn run(args: &[String]) -> Result<()> {
     let settings = RunSettings::from_config(&cfg)?;
 
     match parsed.command.as_str() {
-        "inspect" => inspect(&settings, parsed.has("json")),
+        "inspect" => inspect(&settings, engine_kind(&parsed)?, parsed.has("json")),
         "tune" => tune_with_state(
             &settings,
+            engine_kind(&parsed)?,
             &parsed.str_or("kernel", "matmul_tiled"),
             parsed.i64_or("size", 128)?,
             parsed.i64_or("iters", 20)? as usize,
@@ -118,10 +137,7 @@ fn run(args: &[String]) -> Result<()> {
             parsed.get("state-file"),
         ),
         "run" => {
-            let spec = parsed
-                .get("trace")
-                .ok_or_else(|| Error::Config("run requires --trace".into()))?
-                .to_string();
+            let kind = engine_kind(&parsed)?;
             let max_batch = match parsed.i64_or("max-batch", 0)? {
                 0 => None,
                 n if n > 0 => Some(n as usize),
@@ -141,32 +157,44 @@ fn run(args: &[String]) -> Result<()> {
                     Some(pct)
                 }
             };
-            match parsed.i64_or("pool", 0)? {
+            let pool = match parsed.i64_or("pool", 0)? {
+                n if n >= 0 => n as usize,
+                bad => return Err(Error::Config(format!("--pool `{bad}` must be positive"))),
+            };
+            if let Some(traffic) = parsed.get("traffic") {
+                return run_traffic(
+                    &settings,
+                    kind,
+                    traffic,
+                    pool,
+                    max_batch,
+                    explore_budget,
+                    parsed.has("json"),
+                );
+            }
+            let spec = parsed
+                .get("trace")
+                .ok_or_else(|| Error::Config("run requires --trace or --traffic".into()))?
+                .to_string();
+            match pool {
                 // no pool, no batching, no budget: plain single-lane replay
                 0 if max_batch.is_none() && explore_budget.is_none() => {
-                    run_trace(&settings, &spec, parsed.get("state-file"))
+                    run_trace(&settings, kind, &spec, parsed.get("state-file"))
                 }
-                0 => run_trace_served(
+                workers => run_trace_served(
                     &settings,
+                    kind,
                     &spec,
-                    0,
+                    workers,
                     max_batch,
                     explore_budget,
                     parsed.get("state-file"),
                 ),
-                workers if workers > 0 => run_trace_served(
-                    &settings,
-                    &spec,
-                    workers as usize,
-                    max_batch,
-                    explore_budget,
-                    parsed.get("state-file"),
-                ),
-                bad => Err(Error::Config(format!("--pool `{bad}` must be positive"))),
             }
         }
         "stats" => tune_with_stats(
             &settings,
+            engine_kind(&parsed)?,
             &parsed.str_or("kernel", "matmul_tiled"),
             parsed.i64_or("size", 128)?,
             parsed.i64_or("iters", 20)? as usize,
@@ -181,17 +209,56 @@ fn run(args: &[String]) -> Result<()> {
     }
 }
 
-fn build_dispatcher(settings: &RunSettings) -> Result<Dispatcher> {
-    let manifest = Manifest::load(&settings.artifacts)?;
-    let registry = KernelRegistry::new(manifest);
-    let engine = PjrtEngine::cpu()?;
-    let tuner = Autotuner::with_factory(settings.build_strategy_factory()?);
-    let metric = settings.build_metric()?;
-    Ok(Dispatcher::with(registry, Box::new(engine), tuner, metric))
+/// Which execution backend `--engine` selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EngineKind {
+    /// PJRT over compiled HLO artifacts (the default).
+    Pjrt,
+    /// Built-in CPU kernels with a generated manifest ([`jitune::runtime::native`]).
+    Native,
 }
 
-fn inspect(settings: &RunSettings, json: bool) -> Result<()> {
-    let manifest = Manifest::load(&settings.artifacts)?;
+fn engine_kind(parsed: &cli::Parsed) -> Result<EngineKind> {
+    match parsed.str_or("engine", "pjrt").as_str() {
+        "pjrt" => Ok(EngineKind::Pjrt),
+        "native" => Ok(EngineKind::Native),
+        other => Err(Error::Config(format!("--engine `{other}` must be `pjrt` or `native`"))),
+    }
+}
+
+/// The manifest for a backend: PJRT reads the artifacts directory,
+/// native generates its own (stub HLO, real kernel configs).
+fn load_manifest(kind: EngineKind, settings: &RunSettings) -> Result<Manifest> {
+    match kind {
+        EngineKind::Pjrt => Manifest::load(&settings.artifacts),
+        EngineKind::Native => default_native_manifest(),
+    }
+}
+
+/// Per-worker engine factory for pools and shadow exploration. Native is
+/// pinned for parity with PJRT: tuned traffic exercises the same
+/// replicate-onto-workers path.
+fn engine_factory(kind: EngineKind) -> Arc<dyn EngineFactory> {
+    match kind {
+        EngineKind::Pjrt => Arc::new(PjrtEngineFactory),
+        EngineKind::Native => Arc::new(NativeEngineFactory::pinned()),
+    }
+}
+
+fn build_dispatcher(settings: &RunSettings, kind: EngineKind) -> Result<Dispatcher> {
+    let manifest = load_manifest(kind, settings)?;
+    let registry = KernelRegistry::new(manifest);
+    let engine: Box<dyn Engine> = match kind {
+        EngineKind::Pjrt => Box::new(PjrtEngine::cpu()?),
+        EngineKind::Native => Box::new(NativeEngine::new()),
+    };
+    let tuner = Autotuner::with_factory(settings.build_strategy_factory()?);
+    let metric = settings.build_metric()?;
+    Ok(Dispatcher::with(registry, engine, tuner, metric))
+}
+
+fn inspect(settings: &RunSettings, kind: EngineKind, json: bool) -> Result<()> {
+    let manifest = load_manifest(kind, settings)?;
     if json {
         println!(
             "{}",
@@ -244,13 +311,14 @@ fn save_state_flag(dispatcher: &Dispatcher, path: &Option<std::path::PathBuf>) -
 
 fn tune_with_state(
     settings: &RunSettings,
+    kind: EngineKind,
     kernel: &str,
     size: i64,
     iters: usize,
     json: bool,
     state_file: Option<&str>,
 ) -> Result<()> {
-    let mut dispatcher = build_dispatcher(settings)?;
+    let mut dispatcher = build_dispatcher(settings, kind)?;
     let state_path = load_state_flag(&mut dispatcher, state_file)?;
     let problem = dispatcher.registry().problem(kernel, size)?.clone();
     let inputs = inputs_for(&problem, settings.seed);
@@ -305,8 +373,13 @@ fn parse_trace(spec: &str) -> Result<CallTrace> {
     Ok(trace)
 }
 
-fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Result<()> {
-    let mut dispatcher = build_dispatcher(settings)?;
+fn run_trace(
+    settings: &RunSettings,
+    kind: EngineKind,
+    spec: &str,
+    state_file: Option<&str>,
+) -> Result<()> {
+    let mut dispatcher = build_dispatcher(settings, kind)?;
     let state_path = load_state_flag(&mut dispatcher, state_file)?;
     let trace = parse_trace(spec)?;
     println!("replaying {} calls...", trace.len());
@@ -328,6 +401,85 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
     Ok(())
 }
 
+/// Spawn the serving coordinator all served `run` paths share: optional
+/// worker pool and background-explore budget over the `--engine`
+/// backend's factory, optional warm start from `--state-file`.
+fn spawn_coordinator(
+    settings: &RunSettings,
+    kind: EngineKind,
+    workers: usize,
+    max_batch: Option<usize>,
+    explore_budget: Option<f64>,
+    warm_start: Option<std::path::PathBuf>,
+) -> Result<Coordinator> {
+    let leader_settings = settings.clone();
+    let mut opts = ServerOptions {
+        pool: (workers > 0).then(|| PoolOptions::new(engine_factory(kind)).with_workers(workers)),
+        ..ServerOptions::default()
+    };
+    if let Some(max_batch) = max_batch {
+        opts.batch = BatchOptions { max_batch };
+    }
+    if let Some(pct) = explore_budget {
+        let mut eo = ExploreOptions::percent(pct);
+        if workers == 0 {
+            // no serving pool: background jobs get their own engine
+            eo = eo.with_shadow_factory(engine_factory(kind));
+        }
+        opts.explore_budget = Some(eo);
+    }
+    Coordinator::spawn_with_options(
+        move || {
+            let mut dispatcher = build_dispatcher(&leader_settings, kind)?;
+            if let Some(path) = warm_start.filter(|p| p.exists()) {
+                let (imported, skipped) = dispatcher.load_state(&path)?;
+                println!("state: warm-started {imported} problem(s), skipped {skipped} stale");
+            }
+            Ok(dispatcher)
+        },
+        opts,
+    )
+}
+
+/// `jitune run --traffic <spec> [--engine native] [--pool N]
+/// [--explore-budget P]`: generate the seeded production-shaped trace
+/// (Zipf popularity over the manifest's problems, shape churn, open-loop
+/// bursts) and replay it open-loop against a live coordinator from the
+/// spec's client threads. Prints the traffic report — p50/p99 serve
+/// latency (overall/cold/steady), per-problem time-to-good, explore duty
+/// cycle, tuned-state size — or its JSON with `--json`. Runs with a
+/// 2-worker pool unless `--pool` says otherwise, so the full serving
+/// stack is exercised by default.
+fn run_traffic(
+    settings: &RunSettings,
+    kind: EngineKind,
+    traffic: &str,
+    pool: usize,
+    max_batch: Option<usize>,
+    explore_budget: Option<f64>,
+    json: bool,
+) -> Result<()> {
+    let spec = TrafficSpec::parse(traffic)?;
+    let manifest = load_manifest(kind, settings)?;
+    let workers = if pool == 0 { 2 } else { pool };
+    let coordinator = spawn_coordinator(settings, kind, workers, max_batch, explore_budget, None)?;
+    let harness = TrafficHarness::new(&manifest, spec.clone(), settings.seed)?;
+    println!(
+        "replaying {} generated arrivals ({} problems, {} clients, {} worker(s))...",
+        harness.trace().len(),
+        harness.trace().problems().len(),
+        spec.clients,
+        workers
+    );
+    let report = harness.run(&coordinator, &ReplayOptions::default())?;
+    if json {
+        println!("{}", report.to_json().to_json_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(())
+}
+
 /// `jitune run --trace .. [--pool N] [--max-batch B] [--explore-budget P]`:
 /// replay the trace through a live coordinator. `--pool N` serves
 /// steady-state calls on a worker pool of N PJRT engines (finalized
@@ -343,6 +495,7 @@ fn run_trace(settings: &RunSettings, spec: &str, state_file: Option<&str>) -> Re
 /// background counters.
 fn run_trace_served(
     settings: &RunSettings,
+    kind: EngineKind,
     spec: &str,
     workers: usize,
     max_batch: Option<usize>,
@@ -350,38 +503,11 @@ fn run_trace_served(
     state_file: Option<&str>,
 ) -> Result<()> {
     let trace = parse_trace(spec)?;
-    let leader_settings = settings.clone();
     let state_path = state_file.map(std::path::PathBuf::from);
-    let warm_start = state_path.clone();
-    let mut opts = ServerOptions {
-        pool: (workers > 0)
-            .then(|| PoolOptions::new(Arc::new(PjrtEngineFactory)).with_workers(workers)),
-        ..ServerOptions::default()
-    };
-    if let Some(max_batch) = max_batch {
-        opts.batch = BatchOptions { max_batch };
-    }
-    if let Some(pct) = explore_budget {
-        let mut eo = ExploreOptions::percent(pct);
-        if workers == 0 {
-            // no serving pool: background jobs get their own engine
-            eo = eo.with_shadow_factory(Arc::new(PjrtEngineFactory));
-        }
-        opts.explore_budget = Some(eo);
-    }
-    let coordinator = Coordinator::spawn_with_options(
-        move || {
-            let mut dispatcher = build_dispatcher(&leader_settings)?;
-            if let Some(path) = warm_start.filter(|p| p.exists()) {
-                let (imported, skipped) = dispatcher.load_state(&path)?;
-                println!("state: warm-started {imported} problem(s), skipped {skipped} stale");
-            }
-            Ok(dispatcher)
-        },
-        opts,
-    )?;
+    let coordinator =
+        spawn_coordinator(settings, kind, workers, max_batch, explore_budget, state_path.clone())?;
     let h = coordinator.handle();
-    let manifest = Manifest::load(&settings.artifacts)?;
+    let manifest = load_manifest(kind, settings)?;
     println!(
         "replaying {} calls through the coordinator ({} pool worker(s), max_batch {})...",
         trace.len(),
@@ -520,8 +646,14 @@ fn state_merge(out: &std::path::Path, inputs: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn tune_with_stats(settings: &RunSettings, kernel: &str, size: i64, iters: usize) -> Result<()> {
-    let mut dispatcher = build_dispatcher(settings)?;
+fn tune_with_stats(
+    settings: &RunSettings,
+    kind: EngineKind,
+    kernel: &str,
+    size: i64,
+    iters: usize,
+) -> Result<()> {
+    let mut dispatcher = build_dispatcher(settings, kind)?;
     let problem = dispatcher.registry().problem(kernel, size)?.clone();
     let inputs = inputs_for(&problem, settings.seed);
     for _ in 0..iters {

@@ -105,6 +105,69 @@ impl LatencyFault {
     }
 }
 
+/// Shared compile-failure injection keyed by *executing thread name*.
+///
+/// The pool names its workers deterministically (`jitune-pool-{idx}`),
+/// so a rule `("k.b.n8", "jitune-pool-1")` makes exactly worker 1's
+/// replication of that winner fail while workers 0 and 2 succeed — the
+/// fixture for partial-install routing tests, which a process-wide
+/// [`MockSpec::fail_compile`] set cannot express (every engine cloned
+/// from a factory shares the spec, so it fails everywhere or nowhere).
+///
+/// Hot-path cost mirrors [`LatencyFault`]: one relaxed atomic load per
+/// compile until the first rule is installed.
+#[derive(Debug, Clone, Default)]
+pub struct CompileFault {
+    inner: Arc<CompileFaultInner>,
+}
+
+#[derive(Debug)]
+struct CompileFaultInner {
+    /// Fast-path gate: false until the first injection. Release store /
+    /// Acquire load so an armed reader also sees the injected rules.
+    armed: AtomicBool,
+    /// `(variant id, exact thread name)` pairs whose compile fails.
+    rules: TrackedMutex<Vec<(String, String)>>,
+}
+
+impl Default for CompileFaultInner {
+    fn default() -> Self {
+        CompileFaultInner {
+            armed: AtomicBool::new(false),
+            rules: TrackedMutex::new("runtime.mock.fault.compile_rules", Vec::new()),
+        }
+    }
+}
+
+impl CompileFault {
+    /// A handle with no rules installed.
+    pub fn new() -> CompileFault {
+        CompileFault::default()
+    }
+
+    /// From now on, compiling `variant_id` fails on the thread named
+    /// `thread_name` (and only there).
+    pub fn fail_on_thread(&self, variant_id: &str, thread_name: &str) {
+        self.inner.rules.lock().push((variant_id.to_string(), thread_name.to_string()));
+        self.inner.armed.store(true, Ordering::Release);
+    }
+
+    /// Remove every rule.
+    pub fn clear(&self) {
+        self.inner.rules.lock().clear();
+        self.inner.armed.store(false, Ordering::Release);
+    }
+
+    fn should_fail(&self, variant_id: &str) -> bool {
+        if !self.inner.armed.load(Ordering::Acquire) {
+            return false;
+        }
+        let current = std::thread::current();
+        let name = current.name().unwrap_or("");
+        self.inner.rules.lock().iter().any(|(v, t)| v == variant_id && t == name)
+    }
+}
+
 /// Configuration for the mock engine.
 #[derive(Debug, Clone)]
 pub struct MockSpec {
@@ -130,6 +193,8 @@ pub struct MockSpec {
     /// Run-time latency-shift injection: clone this handle before moving
     /// the spec, then `set_scale` to degrade a variant mid-run.
     pub latency_fault: LatencyFault,
+    /// Thread-targeted compile-failure injection (partial pool installs).
+    pub compile_fault: CompileFault,
 }
 
 impl Default for MockSpec {
@@ -144,6 +209,7 @@ impl Default for MockSpec {
             seed: 0x6a69_7475,
             exec_sleep: false,
             latency_fault: LatencyFault::new(),
+            compile_fault: CompileFault::new(),
         }
     }
 }
@@ -204,6 +270,15 @@ impl Engine for MockEngine {
             return Err(Error::CompileFailed {
                 variant: variant.id.clone(),
                 msg: "injected compile failure".into(),
+            });
+        }
+        if self.spec.compile_fault.should_fail(&variant.id) {
+            return Err(Error::CompileFailed {
+                variant: variant.id.clone(),
+                msg: format!(
+                    "injected compile failure on thread {:?}",
+                    std::thread::current().name().unwrap_or("?")
+                ),
             });
         }
         spin_for(self.spec.compile_cost);

@@ -11,8 +11,9 @@
 //! cache are deliberately `!Send` — but an engine *may* hand out
 //! [`SharedKernel`] handles (`Send + Sync`) for individual compiled
 //! executables, which the coordinator's tuned fast lane publishes so
-//! steady-state calls can execute on application threads. The mock
-//! engine supports this; PJRT does not (its executables are `Rc`-based).
+//! steady-state calls can execute on application threads. The mock and
+//! native engines support this; PJRT does not (its executables are
+//! `Rc`-based).
 //! For backends like PJRT the [`EngineFactory`] trait closes the gap:
 //! the coordinator's worker pool builds one engine per worker thread
 //! (each client born on — and pinned to — its own worker) and replicates
@@ -22,8 +23,10 @@
 mod compile;
 mod engine;
 pub mod mock;
+pub mod native;
 mod pjrt;
 
 pub use compile::{CacheStats, CompileCache};
 pub use engine::{CompiledKernel, Engine, EngineFactory, ExecOutcome, SharedKernel};
+pub use native::{NativeEngine, NativeEngineFactory, NativeFault};
 pub use pjrt::{PjrtEngine, PjrtEngineFactory};

@@ -1,0 +1,438 @@
+//! Real CPU kernels with tunable schedules.
+//!
+//! Every kernel family exposes several *variants* that compute the exact
+//! same function but walk memory / issue arithmetic differently, so the
+//! manifest's tuning parameter genuinely changes machine behaviour:
+//!
+//! - **matmul** (`sched`): naive ijk (strided column walks of B), a
+//!   transpose-into-scratch schedule (packs `Bᵀ` into a pooled panel so
+//!   both operands stream), and tiled ikj schedules at several tile
+//!   sizes with optional 4-way inner-loop unrolling.
+//! - **saxpy** (`access`): strided multi-pass walks (cache-hostile on
+//!   large vectors) vs. chunked/sequential single-pass.
+//! - **reduce** (`lanes`): sequential single-accumulator sum vs. a
+//!   lane-split tree reduction (N independent accumulators combined
+//!   pairwise) that breaks the add-latency dependency chain.
+//!
+//! ## Bit-identity contract
+//!
+//! The tuner must never be able to pick a *wrong-but-fast* winner, so
+//! all variants of a family are constructed to produce **bit-identical
+//! `f32` outputs**:
+//!
+//! - matmul: every variant accumulates each `C[i][j]` in `f32`, over
+//!   `k` in ascending order, one product per step. Tiling over `i`/`k`
+//!   and unrolling over `j` permute *which element* is updated next but
+//!   never the per-element operand order, so the float operation
+//!   sequence per output element is literally identical.
+//! - saxpy: elementwise; each element is computed exactly once by one
+//!   fused expression regardless of visit order.
+//! - reduce: all variants accumulate in `f64` and round to `f32` once
+//!   at the end. Lane-splitting permutes the `f64` summation order,
+//!   whose error (~1e-16 relative per step) is ~1e7× below the final
+//!   `f32` rounding step, so the rounded result is identical on real
+//!   data (asserted on seeded inputs by `tests/native_engine.rs`).
+
+use crate::error::{Error, Result};
+use crate::manifest::Variant;
+
+use super::mempool::BufferPool;
+
+/// Matmul schedule, decoded from the variant's packed tuning value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MatmulSched {
+    /// ijk, k innermost: B is walked down columns (stride `4n` bytes) —
+    /// the cache-hostile baseline.
+    Naive,
+    /// Transpose B into pooled scratch, then row·row dot products: both
+    /// operands stream. Exercises [`BufferPool`] on the serve path.
+    Transposed,
+    /// ikj with `tile`×`tile` blocking over i/k and the inner j loop
+    /// unrolled by `unroll` (1 or 4).
+    Tiled {
+        /// Block edge over the i and k loops.
+        tile: usize,
+        /// Unroll factor of the innermost j loop.
+        unroll: usize,
+    },
+}
+
+/// Saxpy access pattern, decoded from the variant's tuning value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SaxpyAccess {
+    /// `stride` passes over the vector, pass `p` touching elements
+    /// `p, p+stride, …` — on vectors larger than cache every touch is a
+    /// fresh line fetch.
+    Strided(usize),
+    /// Sequential passes over `chunk`-element windows (one pass when
+    /// `chunk >= len`).
+    Chunked(usize),
+}
+
+/// A fully-decoded native kernel configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelCfg {
+    /// `C = A·B`, square `n×n` f32.
+    Matmul {
+        /// Matrix edge.
+        n: usize,
+        /// Schedule variant.
+        sched: MatmulSched,
+    },
+    /// `out = a·x + y` over `len` f32s.
+    Saxpy {
+        /// Vector length.
+        len: usize,
+        /// Access-pattern variant.
+        access: SaxpyAccess,
+    },
+    /// `out[0] = Σ x`, accumulated in f64.
+    Reduce {
+        /// Vector length.
+        len: usize,
+        /// Number of parallel accumulator lanes (1 = sequential).
+        lanes: usize,
+    },
+}
+
+/// Kernel-family names the native engine understands.
+pub const FAMILIES: &[&str] = &["matmul", "saxpy", "reduce"];
+
+impl KernelCfg {
+    /// Decode a manifest variant into a native kernel configuration.
+    ///
+    /// Value packing (one `i64` per manifest schema v1):
+    /// - matmul: `1` = naive, `2` = transposed, `tile*100 + unroll`
+    ///   otherwise.
+    /// - saxpy: `< 1000` = strided with that stride, `1000 + chunk` =
+    ///   chunked.
+    /// - reduce: the lane count.
+    pub fn parse(variant: &Variant) -> Result<KernelCfg> {
+        let size = variant.size;
+        if size <= 0 {
+            return Err(Error::Manifest(format!(
+                "native variant {}: non-positive size {size}",
+                variant.id
+            )));
+        }
+        let v = variant.value;
+        let bad = |msg: &str| {
+            Err(Error::Manifest(format!(
+                "native variant {}: bad tuning value {v}: {msg}",
+                variant.id
+            )))
+        };
+        match variant.kernel.as_str() {
+            "matmul" => {
+                let n = size as usize;
+                let sched = match v {
+                    1 => MatmulSched::Naive,
+                    2 => MatmulSched::Transposed,
+                    _ => {
+                        let (tile, unroll) = ((v / 100) as usize, (v % 100) as usize);
+                        if tile == 0 || !(unroll == 1 || unroll == 4) {
+                            return bad("expect 1, 2, or tile*100+unroll with unroll in {1,4}");
+                        }
+                        MatmulSched::Tiled { tile, unroll }
+                    }
+                };
+                Ok(KernelCfg::Matmul { n, sched })
+            }
+            "saxpy" => {
+                let len = size as usize;
+                let access = if v >= 1000 {
+                    SaxpyAccess::Chunked((v - 1000) as usize)
+                } else if v >= 1 {
+                    SaxpyAccess::Strided(v as usize)
+                } else {
+                    return bad("expect stride (<1000) or 1000+chunk");
+                };
+                Ok(KernelCfg::Saxpy { len, access })
+            }
+            "reduce" => {
+                if v < 1 || v > 1024 {
+                    return bad("lane count out of range");
+                }
+                Ok(KernelCfg::Reduce { len: size as usize, lanes: v as usize })
+            }
+            other => Err(Error::Unknown { kind: "native kernel", name: other.to_string() }),
+        }
+    }
+
+    /// Output length in f32s.
+    pub fn output_len(&self) -> usize {
+        match *self {
+            KernelCfg::Matmul { n, .. } => n * n,
+            KernelCfg::Saxpy { len, .. } => len,
+            KernelCfg::Reduce { .. } => 1,
+        }
+    }
+
+    /// Execute into `out` (already sized to [`Self::output_len`]).
+    /// `inputs` are the raw data slices of the call's tensors, in
+    /// manifest signature order.
+    pub fn run(&self, inputs: &[&[f32]], out: &mut [f32], pool: &BufferPool) -> Result<()> {
+        match *self {
+            KernelCfg::Matmul { n, sched } => {
+                let (a, b) = (want(inputs, 0, n * n)?, want(inputs, 1, n * n)?);
+                matmul(sched, a, b, out, n, pool);
+            }
+            KernelCfg::Saxpy { len, access } => {
+                let a = want(inputs, 0, 1)?[0];
+                let (x, y) = (want(inputs, 1, len)?, want(inputs, 2, len)?);
+                saxpy(access, a, x, y, out);
+            }
+            KernelCfg::Reduce { len, lanes } => {
+                out[0] = reduce(lanes, want(inputs, 0, len)?);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Fetch input `idx` and check its length (belt-and-braces: the
+/// dispatcher already validated the call signature).
+fn want<'a>(inputs: &[&'a [f32]], idx: usize, len: usize) -> Result<&'a [f32]> {
+    match inputs.get(idx) {
+        Some(s) if s.len() == len => Ok(s),
+        Some(s) => Err(Error::Xla(format!(
+            "native kernel: input {idx} has {} elements, expected {len}",
+            s.len()
+        ))),
+        None => Err(Error::Xla(format!("native kernel: missing input {idx}"))),
+    }
+}
+
+fn matmul(sched: MatmulSched, a: &[f32], b: &[f32], out: &mut [f32], n: usize, pool: &BufferPool) {
+    match sched {
+        MatmulSched::Naive => {
+            for i in 0..n {
+                let arow = &a[i * n..(i + 1) * n];
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for (k, &av) in arow.iter().enumerate() {
+                        acc += av * b[k * n + j];
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+        }
+        MatmulSched::Transposed => {
+            let mut bt = pool.take(n * n);
+            let bts = bt.as_mut_slice();
+            for k in 0..n {
+                let brow = &b[k * n..(k + 1) * n];
+                for (j, &bv) in brow.iter().enumerate() {
+                    bts[j * n + k] = bv;
+                }
+            }
+            for i in 0..n {
+                let arow = &a[i * n..(i + 1) * n];
+                for j in 0..n {
+                    let btrow = &bts[j * n..(j + 1) * n];
+                    let mut acc = 0.0f32;
+                    for k in 0..n {
+                        acc += arow[k] * btrow[k];
+                    }
+                    out[i * n + j] = acc;
+                }
+            }
+        }
+        MatmulSched::Tiled { tile, unroll } => {
+            // out is accumulated in place and must start at zero.
+            out.fill(0.0);
+            for i0 in (0..n).step_by(tile) {
+                let imax = (i0 + tile).min(n);
+                for k0 in (0..n).step_by(tile) {
+                    let kmax = (k0 + tile).min(n);
+                    for i in i0..imax {
+                        let arow = &a[i * n..(i + 1) * n];
+                        let orow = &mut out[i * n..(i + 1) * n];
+                        for k in k0..kmax {
+                            let av = arow[k];
+                            let brow = &b[k * n..(k + 1) * n];
+                            if unroll == 4 {
+                                let mut j = 0;
+                                while j + 4 <= n {
+                                    orow[j] += av * brow[j];
+                                    orow[j + 1] += av * brow[j + 1];
+                                    orow[j + 2] += av * brow[j + 2];
+                                    orow[j + 3] += av * brow[j + 3];
+                                    j += 4;
+                                }
+                                while j < n {
+                                    orow[j] += av * brow[j];
+                                    j += 1;
+                                }
+                            } else {
+                                for j in 0..n {
+                                    orow[j] += av * brow[j];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn saxpy(access: SaxpyAccess, a: f32, x: &[f32], y: &[f32], out: &mut [f32]) {
+    let len = x.len();
+    match access {
+        SaxpyAccess::Strided(stride) => {
+            let stride = stride.max(1);
+            for phase in 0..stride.min(len) {
+                let mut i = phase;
+                while i < len {
+                    out[i] = a * x[i] + y[i];
+                    i += stride;
+                }
+            }
+        }
+        SaxpyAccess::Chunked(chunk) => {
+            let chunk = chunk.max(1);
+            let mut c0 = 0;
+            while c0 < len {
+                let c1 = (c0 + chunk).min(len);
+                for i in c0..c1 {
+                    out[i] = a * x[i] + y[i];
+                }
+                c0 = c1;
+            }
+        }
+    }
+}
+
+fn reduce(lanes: usize, x: &[f32]) -> f32 {
+    if lanes <= 1 {
+        let mut acc = 0.0f64;
+        for &v in x {
+            acc += v as f64;
+        }
+        return acc as f32;
+    }
+    let lanes = lanes.min(x.len().max(1));
+    let mut acc = vec![0.0f64; lanes];
+    let main = x.len() - x.len() % lanes;
+    let mut i = 0;
+    while i < main {
+        for (j, slot) in acc.iter_mut().enumerate() {
+            *slot += x[i + j] as f64;
+        }
+        i += lanes;
+    }
+    for &v in &x[main..] {
+        acc[0] += v as f64;
+    }
+    // Pairwise tree combine of the lane partials.
+    let mut width = lanes;
+    while width > 1 {
+        let half = (width + 1) / 2;
+        for j in 0..width / 2 {
+            acc[j] = acc[2 * j] + acc[2 * j + 1];
+        }
+        if width % 2 == 1 {
+            acc[half - 1] = acc[width - 1];
+        }
+        width = half;
+    }
+    acc[0] as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seeded(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::prng::Rng::seed(seed);
+        (0..n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matmul_variants_bit_identical() {
+        let n = 48; // not a multiple of 32/64: exercises tile remainders
+        let (a, b) = (seeded(n * n, 1), seeded(n * n, 2));
+        let pool = BufferPool::new();
+        let mut base = vec![0.0f32; n * n];
+        matmul(MatmulSched::Naive, &a, &b, &mut base, n, &pool);
+        for sched in [
+            MatmulSched::Transposed,
+            MatmulSched::Tiled { tile: 8, unroll: 1 },
+            MatmulSched::Tiled { tile: 32, unroll: 1 },
+            MatmulSched::Tiled { tile: 32, unroll: 4 },
+            MatmulSched::Tiled { tile: 64, unroll: 4 },
+        ] {
+            let mut out = vec![0.0f32; n * n];
+            matmul(sched, &a, &b, &mut out, n, &pool);
+            assert_eq!(base, out, "{sched:?} diverged from naive");
+        }
+    }
+
+    #[test]
+    fn saxpy_variants_bit_identical() {
+        let len = 1000; // not a multiple of any stride/chunk
+        let (x, y) = (seeded(len, 3), seeded(len, 4));
+        let mut base = vec![0.0f32; len];
+        saxpy(SaxpyAccess::Chunked(len), 2.5, &x, &y, &mut base);
+        for access in [
+            SaxpyAccess::Strided(8),
+            SaxpyAccess::Strided(32),
+            SaxpyAccess::Chunked(256),
+            SaxpyAccess::Chunked(4096),
+        ] {
+            let mut out = vec![0.0f32; len];
+            saxpy(access, 2.5, &x, &y, &mut out);
+            assert_eq!(base, out, "{access:?} diverged");
+        }
+    }
+
+    #[test]
+    fn reduce_variants_identical_after_rounding() {
+        let x = seeded(100_000, 5);
+        let base = reduce(1, &x);
+        for lanes in [2, 4, 8, 16, 32] {
+            assert_eq!(base.to_bits(), reduce(lanes, &x).to_bits(), "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn reduce_matches_plain_sum() {
+        let x = seeded(10_000, 6);
+        let expect: f64 = x.iter().map(|&v| v as f64).sum();
+        assert!((reduce(8, &x) as f64 - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        // Parsing is exercised end-to-end in tests/native_engine.rs; here
+        // just the guard rails.
+        assert!(matches!(
+            KernelCfg::parse(&bad_variant("matmul", 77)),
+            Err(Error::Manifest(_))
+        ));
+        assert!(matches!(
+            KernelCfg::parse(&bad_variant("reduce", 0)),
+            Err(Error::Manifest(_))
+        ));
+        assert!(matches!(
+            KernelCfg::parse(&bad_variant("conv", 1)),
+            Err(Error::Unknown { .. })
+        ));
+    }
+
+    fn bad_variant(kernel: &str, value: i64) -> Variant {
+        Variant {
+            id: format!("{kernel}.test.n8"),
+            kernel: kernel.to_string(),
+            param: "p".into(),
+            value,
+            label: "test".into(),
+            size: 8,
+            inputs: vec!["f32[8,8]".into(), "f32[8,8]".into()],
+            output: "f32[8,8]".into(),
+            path: "none.hlo.txt".into(),
+            flops: 1,
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Per-engine scratch-buffer pool: reusable cache-line-aligned `f32`
+//! slabs keyed by power-of-two size class, modeled on kubecl's exclusive
+//! memory pool (one handle owns one slab; the slab returns to its class's
+//! free list when the handle drops).
+//!
+//! Native kernels allocate real scratch — the transpose-schedule matmul
+//! packs an `n*n` panel per call — and without a pool every pool-worker
+//! execution pays a fresh multi-megabyte allocation + page-fault storm.
+//! With the pool, the first call per size class allocates and every
+//! subsequent call recycles ([`PoolStats`] makes the hit rate
+//! observable, and `tests/native_engine.rs` asserts it).
+//!
+//! Alignment: slabs are over-allocated by one cache line and handed out
+//! at a 64-byte-aligned offset, so tile loops never straddle an extra
+//! line and the alignment is real rather than "whatever the allocator
+//! gave us" — done with safe pointer arithmetic on `as_ptr()`, no
+//! `unsafe`.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::sync::TrackedMutex;
+
+/// Floats per 64-byte cache line.
+const LINE_F32: usize = 16;
+
+/// Max recycled slabs retained per size class; beyond this, returned
+/// slabs are dropped (kubecl's "max allocations" bound — keeps a burst
+/// of concurrent takes from pinning memory forever).
+const MAX_PER_CLASS: usize = 8;
+
+/// Counters for pool observability. Loads/stores are relaxed: the
+/// counters are monotonic telemetry, never used for synchronization.
+#[derive(Debug, Default)]
+struct Counters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    returned: AtomicU64,
+    bytes_live: AtomicU64,
+}
+
+/// Snapshot of pool activity (see [`BufferPool::stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Takes served from a recycled slab.
+    pub hits: u64,
+    /// Takes that had to allocate.
+    pub misses: u64,
+    /// Slabs returned to a free list (drops past the per-class cap are
+    /// not counted).
+    pub returned: u64,
+    /// Bytes currently allocated by the pool (live handles + free
+    /// lists).
+    pub bytes_live: u64,
+}
+
+#[derive(Debug)]
+struct PoolShared {
+    /// size class (slab length in f32s, power of two) -> free slabs.
+    classes: TrackedMutex<HashMap<usize, Vec<Vec<f32>>>>,
+    counters: Counters,
+}
+
+/// The pool. Cheap to clone (`Arc` inside); every engine owns one and
+/// threads it into each kernel it compiles.
+#[derive(Debug, Clone)]
+pub struct BufferPool {
+    shared: Arc<PoolShared>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    /// An empty pool.
+    pub fn new() -> BufferPool {
+        BufferPool {
+            shared: Arc::new(PoolShared {
+                classes: TrackedMutex::new("runtime.native.pool.classes", HashMap::new()),
+                counters: Counters::default(),
+            }),
+        }
+    }
+
+    /// Take a zero-initialized-on-first-use scratch buffer of at least
+    /// `len` f32s, 64-byte aligned. Recycled slabs keep their previous
+    /// contents — callers must treat the buffer as uninitialized and
+    /// write before reading.
+    pub fn take(&self, len: usize) -> PoolBuffer {
+        let class = len.next_power_of_two().max(LINE_F32);
+        let recycled = self.shared.classes.lock().get_mut(&class).and_then(Vec::pop);
+        let raw = match recycled {
+            Some(raw) => {
+                // relaxed-counter: telemetry only, no ordering required
+                self.shared.counters.hits.fetch_add(1, Ordering::Relaxed);
+                raw
+            }
+            None => {
+                // relaxed-counter: telemetry only, no ordering required
+                self.shared.counters.misses.fetch_add(1, Ordering::Relaxed);
+                let slab = vec![0.0f32; class + LINE_F32];
+                // relaxed-counter: telemetry only, no ordering required
+                self.shared
+                    .counters
+                    .bytes_live
+                    .fetch_add((slab.len() * 4) as u64, Ordering::Relaxed);
+                slab
+            }
+        };
+        // Offset the view so it starts on a 64-byte boundary. The slab
+        // is over-allocated by a full line, so offset + len always fits.
+        let addr = raw.as_ptr() as usize;
+        let offset = (((addr + 63) & !63) - addr) / 4;
+        PoolBuffer { raw, offset, len, pool: self.shared.clone() }
+    }
+
+    /// Activity counters.
+    pub fn stats(&self) -> PoolStats {
+        let c = &self.shared.counters;
+        PoolStats {
+            // relaxed-counter: telemetry only, no ordering required
+            hits: c.hits.load(Ordering::Relaxed),
+            // relaxed-counter: telemetry only, no ordering required
+            misses: c.misses.load(Ordering::Relaxed),
+            // relaxed-counter: telemetry only, no ordering required
+            returned: c.returned.load(Ordering::Relaxed),
+            // relaxed-counter: telemetry only, no ordering required
+            bytes_live: c.bytes_live.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Exclusive handle to a pooled slab. Derefs to the aligned `[f32]`
+/// window; returns the slab to its size class on drop.
+#[derive(Debug)]
+pub struct PoolBuffer {
+    raw: Vec<f32>,
+    offset: usize,
+    len: usize,
+    pool: Arc<PoolShared>,
+}
+
+impl PoolBuffer {
+    /// The aligned scratch window.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.raw[self.offset..self.offset + self.len]
+    }
+
+    /// The aligned scratch window, mutably.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.raw[self.offset..self.offset + self.len]
+    }
+}
+
+impl Drop for PoolBuffer {
+    fn drop(&mut self) {
+        let raw = std::mem::take(&mut self.raw);
+        let class = raw.len() - LINE_F32;
+        let mut classes = self.pool.classes.lock();
+        let list = classes.entry(class).or_default();
+        if list.len() < MAX_PER_CLASS {
+            list.push(raw);
+            // relaxed-counter: telemetry only, no ordering required
+            self.pool.counters.returned.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // relaxed-counter: telemetry only, no ordering required
+            self.pool.counters.bytes_live.fetch_sub((raw.len() * 4) as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_aligned_and_sized() {
+        let pool = BufferPool::new();
+        for len in [1usize, 7, 16, 100, 4096, 1 << 20] {
+            let buf = pool.take(len);
+            assert_eq!(buf.as_slice().len(), len);
+            assert_eq!(buf.as_slice().as_ptr() as usize % 64, 0, "len={len}");
+        }
+    }
+
+    #[test]
+    fn second_take_recycles() {
+        let pool = BufferPool::new();
+        {
+            let mut a = pool.take(1000);
+            a.as_mut_slice()[0] = 7.0;
+        }
+        let b = pool.take(900); // same class (1024)
+        let s = pool.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.returned, 1);
+        drop(b);
+    }
+
+    #[test]
+    fn per_class_cap_bounds_memory() {
+        let pool = BufferPool::new();
+        let held: Vec<PoolBuffer> = (0..MAX_PER_CLASS + 4).map(|_| pool.take(256)).collect();
+        let live_before = pool.stats().bytes_live;
+        drop(held);
+        let s = pool.stats();
+        assert_eq!(s.returned as usize, MAX_PER_CLASS);
+        assert!(s.bytes_live < live_before, "drops past the cap release memory");
+    }
+
+    #[test]
+    fn distinct_classes_do_not_share() {
+        let pool = BufferPool::new();
+        drop(pool.take(256));
+        let _big = pool.take(4096);
+        assert_eq!(pool.stats().hits, 0, "4096 must not reuse the 256-class slab");
+    }
+}

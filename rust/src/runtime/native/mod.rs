@@ -1,0 +1,508 @@
+//! Real CPU-native engine: kernels whose tuning parameters change actual
+//! machine behaviour.
+//!
+//! Everything upstream of this module was validated against
+//! [`crate::runtime::mock`], whose "kernels" spin for configured
+//! durations — ground truth by fiat. `NativeEngine` replaces fiat with
+//! hardware: its variants are real tiled/unrolled matmuls, strided vs.
+//! chunked saxpy walks and sequential-vs-tree reductions
+//! ([`kernels`]), so a winner found by the tuner reflects genuine cache
+//! and ILP behaviour of the machine it runs on, and the spread between
+//! worst and best variant (asserted ≥1.3x by `benches/traffic_replay`)
+//! is a property of silicon, not of the spec.
+//!
+//! Pieces:
+//!
+//! - [`kernels`] — the compute, with a strict bit-identity contract
+//!   across the variants of each family (a wrong-but-fast winner is
+//!   impossible by construction; `tests/native_engine.rs` asserts it).
+//! - [`mempool::BufferPool`] — per-engine recycled, 64-byte-aligned
+//!   scratch slabs keyed by size class (kubecl's exclusive-pool shape),
+//!   so pool workers stop paying per-call allocation for kernel
+//!   scratch.
+//! - [`NativeFault`] — run-time interference injection: make a kernel
+//!   family do N extra *real* compute passes, so drift tests degrade a
+//!   published winner with genuine work rather than synthetic sleeps.
+//! - [`NativeEngineFactory`] — `new`/`pinned` construction mirroring
+//!   [`MockEngineFactory`], so the native engine slots into the fast
+//!   lane, the worker pool and background shadow exploration unchanged.
+//! - [`native_manifest`] — a generated manifest over the native variant
+//!   catalog (stub HLO artifacts on disk for the compile cache; the
+//!   engine compiles from the variant's packed tuning value, not from
+//!   HLO).
+//!
+//! [`MockEngineFactory`]: crate::runtime::mock::MockEngineFactory
+
+pub mod kernels;
+pub mod mempool;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::manifest::{Manifest, Variant};
+use crate::runtime::engine::{CompiledKernel, Engine, EngineFactory, SharedKernel};
+use crate::runtime::mock::PinnedEngine;
+use crate::sync::TrackedMutex;
+use crate::tensor::HostTensor;
+
+pub use kernels::{KernelCfg, MatmulSched, SaxpyAccess};
+pub use mempool::{BufferPool, PoolBuffer, PoolStats};
+
+/// Shared run-time interference handle: make every execution of a
+/// kernel family perform `1 + extra` full compute passes. Unlike the
+/// mock's [`LatencyFault`] this injects *real work* — the extra passes
+/// hit the same memory and ALUs — so drift detection and retuning are
+/// exercised against genuine hardware slowdown.
+///
+/// Clone the handle out of a factory before building the coordinator,
+/// then [`slow_down`] mid-run. Hot-path cost when disarmed: one relaxed
+/// atomic load.
+///
+/// [`LatencyFault`]: crate::runtime::mock::LatencyFault
+/// [`slow_down`]: NativeFault::slow_down
+#[derive(Debug, Clone, Default)]
+pub struct NativeFault {
+    inner: Arc<NativeFaultInner>,
+}
+
+#[derive(Debug)]
+struct NativeFaultInner {
+    /// Fast-path gate: false until the first injection. Release store /
+    /// Acquire load so an armed reader also sees the injected entries.
+    armed: AtomicBool,
+    extra: TrackedMutex<HashMap<String, u32>>,
+}
+
+impl Default for NativeFaultInner {
+    fn default() -> Self {
+        NativeFaultInner {
+            armed: AtomicBool::new(false),
+            extra: TrackedMutex::new("runtime.native.fault.extra", HashMap::new()),
+        }
+    }
+}
+
+impl NativeFault {
+    /// A handle with no interference installed.
+    pub fn new() -> NativeFault {
+        NativeFault::default()
+    }
+
+    /// From now on, every execution of `kernel` performs `extra`
+    /// additional full compute passes (0 restores health).
+    pub fn slow_down(&self, kernel: &str, extra: u32) {
+        self.inner.extra.lock().insert(kernel.to_string(), extra);
+        self.inner.armed.store(true, Ordering::Release);
+    }
+
+    /// Remove all interference.
+    pub fn clear(&self) {
+        self.inner.extra.lock().clear();
+        self.inner.armed.store(false, Ordering::Release);
+    }
+
+    fn extra_for(&self, kernel: &str) -> u32 {
+        if !self.inner.armed.load(Ordering::Acquire) {
+            return 0;
+        }
+        self.inner.extra.lock().get(kernel).copied().unwrap_or(0)
+    }
+}
+
+/// The native engine. One per thread (by the [`Engine`] contract);
+/// each engine owns a private [`BufferPool`], so a pool worker's scratch
+/// slabs are reused across its calls without cross-worker contention.
+pub struct NativeEngine {
+    pool: BufferPool,
+    fault: NativeFault,
+}
+
+impl NativeEngine {
+    /// An engine with a fresh scratch pool and no interference.
+    pub fn new() -> NativeEngine {
+        NativeEngine { pool: BufferPool::new(), fault: NativeFault::new() }
+    }
+
+    /// An engine sharing an interference handle (factory construction).
+    pub fn with_fault(fault: NativeFault) -> NativeEngine {
+        NativeEngine { pool: BufferPool::new(), fault }
+    }
+
+    /// Scratch-pool counters (observability; asserted by tests).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine::new()
+    }
+}
+
+impl Engine for NativeEngine {
+    fn compile(&self, variant: &Variant, _hlo_text: &str) -> Result<Box<dyn CompiledKernel>> {
+        let cfg = KernelCfg::parse(variant).map_err(|e| Error::CompileFailed {
+            variant: variant.id.clone(),
+            msg: e.to_string(),
+        })?;
+        let output_shape = variant.output_shape()?;
+        let out_len: usize = output_shape.iter().product();
+        if out_len != cfg.output_len() {
+            return Err(Error::CompileFailed {
+                variant: variant.id.clone(),
+                msg: format!(
+                    "output signature {} disagrees with kernel output length {}",
+                    variant.output, cfg.output_len()
+                ),
+            });
+        }
+        Ok(Box::new(NativeKernel {
+            inner: Arc::new(NativeKernelState {
+                variant_id: variant.id.clone(),
+                kernel: variant.kernel.clone(),
+                cfg,
+                output_shape,
+                pool: self.pool.clone(),
+                fault: self.fault.clone(),
+            }),
+        }))
+    }
+
+    fn name(&self) -> &str {
+        "native"
+    }
+}
+
+/// Sharable executable state: the kernel config is `Copy`, the pool and
+/// fault handles are `Arc`-backed, so the fast lane can publish native
+/// kernels and run them from any application thread.
+struct NativeKernelState {
+    variant_id: String,
+    kernel: String,
+    cfg: KernelCfg,
+    output_shape: Vec<usize>,
+    pool: BufferPool,
+    fault: NativeFault,
+}
+
+impl SharedKernel for NativeKernelState {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
+        let slices: Vec<&[f32]> = inputs.iter().map(HostTensor::data).collect();
+        let mut out = vec![0.0f32; self.cfg.output_len()];
+        // 1 + extra real passes: the interference handle models a
+        // noisy-neighbour / thermal slowdown with genuine work.
+        for _ in 0..=self.fault.extra_for(&self.kernel) {
+            self.cfg.run(&slices, &mut out, &self.pool)?;
+        }
+        HostTensor::from_vec(&self.output_shape, out)
+    }
+
+    fn variant_id(&self) -> &str {
+        &self.variant_id
+    }
+}
+
+struct NativeKernel {
+    inner: Arc<NativeKernelState>,
+}
+
+impl CompiledKernel for NativeKernel {
+    fn execute(&self, inputs: &[HostTensor]) -> Result<HostTensor> {
+        SharedKernel::execute(&*self.inner, inputs)
+    }
+
+    fn variant_id(&self) -> &str {
+        &self.inner.variant_id
+    }
+
+    fn shared(&self) -> Option<Arc<dyn SharedKernel>> {
+        Some(self.inner.clone())
+    }
+}
+
+/// [`EngineFactory`] for native engines: every `create` builds a fresh
+/// engine (private scratch pool) sharing one [`NativeFault`] handle, so
+/// run-time interference reaches every pool worker. `pinned`
+/// construction wraps engines in [`PinnedEngine`] — kernels refuse
+/// `shared()`, forcing tuned traffic onto the worker pool exactly as a
+/// thread-pinned backend would.
+pub struct NativeEngineFactory {
+    fault: NativeFault,
+    pinned: bool,
+}
+
+impl NativeEngineFactory {
+    /// Factory for plain native engines (kernels are shareable).
+    pub fn new() -> NativeEngineFactory {
+        NativeEngineFactory { fault: NativeFault::new(), pinned: false }
+    }
+
+    /// Factory whose engines refuse `shared()` (the PJRT shape).
+    pub fn pinned() -> NativeEngineFactory {
+        NativeEngineFactory { fault: NativeFault::new(), pinned: true }
+    }
+
+    /// The shared interference handle (clone before spawning the
+    /// coordinator, inject mid-run).
+    pub fn fault(&self) -> NativeFault {
+        self.fault.clone()
+    }
+}
+
+impl Default for NativeEngineFactory {
+    fn default() -> Self {
+        NativeEngineFactory::new()
+    }
+}
+
+impl EngineFactory for NativeEngineFactory {
+    fn create(&self) -> Result<Box<dyn Engine>> {
+        let engine = NativeEngine::with_fault(self.fault.clone());
+        Ok(if self.pinned {
+            Box::new(PinnedEngine::new(Box::new(engine)))
+        } else {
+            Box::new(engine)
+        })
+    }
+
+    fn name(&self) -> &str {
+        if self.pinned {
+            "native-pinned"
+        } else {
+            "native"
+        }
+    }
+}
+
+/// Matmul variant catalog: `(label, packed value)`. See
+/// [`KernelCfg::parse`] for the packing.
+pub const MATMUL_VARIANTS: &[(&str, i64)] = &[
+    ("naive", 1),
+    ("bt", 2),
+    ("t8u1", 801),
+    ("t16u1", 1601),
+    ("t32u1", 3201),
+    ("t64u1", 6401),
+    ("t16u4", 1604),
+    ("t32u4", 3204),
+];
+
+/// Saxpy variant catalog.
+pub const SAXPY_VARIANTS: &[(&str, i64)] =
+    &[("s8", 8), ("s32", 32), ("c256", 1256), ("c4096", 5096), ("full", 1049576)];
+
+/// Reduce variant catalog.
+pub const REDUCE_VARIANTS: &[(&str, i64)] =
+    &[("seq", 1), ("lanes4", 4), ("lanes8", 8), ("lanes16", 16), ("lanes32", 32)];
+
+/// Default matrix edges for the matmul family.
+pub const DEFAULT_MATMUL_SIZES: &[i64] = &[64, 128, 192, 256];
+
+/// Default vector lengths for the saxpy/reduce families.
+pub const DEFAULT_VEC_SIZES: &[i64] = &[65_536, 1_048_576];
+
+fn next_uniq() -> u64 {
+    use std::sync::atomic::AtomicU64;
+    // relaxed-counter: unique-suffix sequence, never synchronizes
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    COUNTER.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Build a manifest over the native variant catalog: every matmul
+/// variant at each of `matmul_sizes`, every saxpy/reduce variant at each
+/// of `vec_sizes`. Stub HLO artifacts are written to a unique temp dir
+/// so the compile cache's read path works unchanged; the native engine
+/// compiles from the variant's packed value and ignores the HLO text.
+pub fn native_manifest(matmul_sizes: &[i64], vec_sizes: &[i64]) -> Result<Manifest> {
+    let dir = std::env::temp_dir().join(format!(
+        "jitune-native-{}-{}",
+        std::process::id(),
+        next_uniq()
+    ));
+    std::fs::create_dir_all(&dir).map_err(|e| Error::io(dir.display().to_string(), e))?;
+    let mut entries = Vec::new();
+    let mut push = |id: String, kernel: &str, param: &str, value: i64, label: &str, size: i64,
+                    inputs: String, output: String, flops: i64|
+     -> Result<()> {
+        std::fs::write(dir.join(format!("{id}.hlo.txt")), "HloModule native_stub\n")
+            .map_err(|e| Error::io(id.clone(), e))?;
+        entries.push(format!(
+            r#"{{"id":"{id}","kernel":"{kernel}","param":"{param}","value":{value},"label":"{label}","size":{size},"inputs":[{inputs}],"output":{output},"path":"{id}.hlo.txt","flops":{flops}}}"#
+        ));
+        Ok(())
+    };
+    for &n in matmul_sizes {
+        for &(label, value) in MATMUL_VARIANTS {
+            let sq = format!(r#""f32[{n},{n}]""#);
+            push(
+                format!("matmul.{label}.n{n}"),
+                "matmul",
+                "sched",
+                value,
+                label,
+                n,
+                format!("{sq},{sq}"),
+                sq.clone(),
+                2 * n * n * n,
+            )?;
+        }
+    }
+    for &len in vec_sizes {
+        let vec_sig = format!(r#""f32[{len}]""#);
+        for &(label, value) in SAXPY_VARIANTS {
+            push(
+                format!("saxpy.{label}.n{len}"),
+                "saxpy",
+                "access",
+                value,
+                label,
+                len,
+                format!(r#""f32[1]",{vec_sig},{vec_sig}"#),
+                vec_sig.clone(),
+                2 * len,
+            )?;
+        }
+        for &(label, value) in REDUCE_VARIANTS {
+            push(
+                format!("reduce.{label}.n{len}"),
+                "reduce",
+                "lanes",
+                value,
+                label,
+                len,
+                vec_sig.clone(),
+                r#""f32[1]""#.to_string(),
+                len,
+            )?;
+        }
+    }
+    let text =
+        format!(r#"{{"schema":1,"jax_version":"native","entries":[{}]}}"#, entries.join(","));
+    Manifest::from_json_str(&text, dir)
+}
+
+/// [`native_manifest`] at the default size grid.
+pub fn default_native_manifest() -> Result<Manifest> {
+    native_manifest(DEFAULT_MATMUL_SIZES, DEFAULT_VEC_SIZES)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::reference::{ref_matmul, ref_saxpy};
+
+    #[test]
+    fn manifest_loads_groups_and_artifacts_exist() {
+        let m = native_manifest(&[16, 32], &[4096]).unwrap();
+        // 2 matmul problems + saxpy + reduce
+        assert_eq!(m.problems.len(), 4);
+        assert_eq!(m.problem("matmul", 16).unwrap().variants.len(), MATMUL_VARIANTS.len());
+        assert_eq!(m.problem("saxpy", 4096).unwrap().variants.len(), SAXPY_VARIANTS.len());
+        assert_eq!(m.problem("reduce", 4096).unwrap().variants.len(), REDUCE_VARIANTS.len());
+        for v in &m.variants {
+            assert!(m.artifact_path(v).exists(), "missing artifact for {}", v.id);
+        }
+    }
+
+    #[test]
+    fn compiled_matmul_matches_oracle() {
+        let m = native_manifest(&[24], &[]).unwrap();
+        let engine = NativeEngine::new();
+        let a = HostTensor::random(&[24, 24], 11);
+        let b = HostTensor::random(&[24, 24], 12);
+        let oracle = ref_matmul(&a, &b).unwrap();
+        for v in &m.problem("matmul", 24).unwrap().variants {
+            let k = engine.compile(v, "").unwrap();
+            let out = k.execute(&[a.clone(), b.clone()]).unwrap();
+            assert!(
+                out.allclose(&oracle, 1e-4, 1e-5),
+                "{} diverged from the f64 oracle",
+                v.id
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_saxpy_matches_oracle() {
+        let m = native_manifest(&[], &[1000]).unwrap();
+        let engine = NativeEngine::new();
+        let a = HostTensor::full(&[1], 2.5);
+        let x = HostTensor::random(&[1000], 21);
+        let y = HostTensor::random(&[1000], 22);
+        let oracle = ref_saxpy(2.5, &x, &y).unwrap();
+        for v in &m.problem("saxpy", 1000).unwrap().variants {
+            let k = engine.compile(v, "").unwrap();
+            let out = k.execute(&[a.clone(), x.clone(), y.clone()]).unwrap();
+            assert!(out.allclose(&oracle, 1e-6, 1e-7), "{} diverged", v.id);
+        }
+    }
+
+    #[test]
+    fn shared_handles_follow_factory_mode() {
+        let m = native_manifest(&[], &[256]).unwrap();
+        let v = &m.problem("reduce", 256).unwrap().variants[0];
+        let plain = NativeEngineFactory::new().create().unwrap();
+        assert!(plain.compile(v, "").unwrap().shared().is_some());
+        let pinned = NativeEngineFactory::pinned().create().unwrap();
+        assert!(pinned.compile(v, "").unwrap().shared().is_none());
+        assert_eq!(pinned.name(), "pinned(native)");
+    }
+
+    #[test]
+    fn scratch_pool_recycles_across_calls() {
+        let m = native_manifest(&[32], &[]).unwrap();
+        let engine = NativeEngine::new();
+        let v = m.variant("matmul.bt.n32").unwrap();
+        let k = engine.compile(v, "").unwrap();
+        let a = HostTensor::random(&[32, 32], 31);
+        let b = HostTensor::random(&[32, 32], 32);
+        for _ in 0..4 {
+            k.execute(&[a.clone(), b.clone()]).unwrap();
+        }
+        let s = engine.pool_stats();
+        assert_eq!(s.misses, 1, "only the first call may allocate scratch");
+        assert_eq!(s.hits, 3, "subsequent calls recycle the transpose panel");
+    }
+
+    #[test]
+    fn fault_injects_real_extra_work() {
+        let m = native_manifest(&[96], &[]).unwrap();
+        let factory = NativeEngineFactory::new();
+        let fault = factory.fault();
+        let engine = factory.create().unwrap();
+        let v = m.variant("matmul.t32u1.n96").unwrap();
+        let k = engine.compile(v, "").unwrap();
+        let a = HostTensor::random(&[96, 96], 41);
+        let b = HostTensor::random(&[96, 96], 42);
+        let inputs = [a, b];
+        let time = |k: &dyn CompiledKernel| {
+            let t0 = std::time::Instant::now();
+            for _ in 0..3 {
+                k.execute(&inputs).unwrap();
+            }
+            t0.elapsed()
+        };
+        let healthy = time(k.as_ref());
+        fault.slow_down("matmul", 7);
+        let degraded = time(k.as_ref());
+        fault.clear();
+        assert!(
+            degraded > healthy * 3,
+            "8 passes should dominate 1: healthy={healthy:?} degraded={degraded:?}"
+        );
+    }
+
+    #[test]
+    fn compile_rejects_mismatched_output() {
+        let mut v = native_manifest(&[16], &[]).unwrap().variant("matmul.naive.n16").unwrap().clone();
+        v.output = "f32[4,4]".into();
+        let engine = NativeEngine::new();
+        assert!(matches!(
+            engine.compile(&v, ""),
+            Err(Error::CompileFailed { .. })
+        ));
+    }
+}

@@ -1,0 +1,198 @@
+//! Trace generation: spec + problem catalog → arrival-timed call list.
+//!
+//! The trace is a pure function of ([`TrafficSpec`], catalog order):
+//! one seeded PRNG drives problem choice, inter-arrival sampling and
+//! burst transitions, so two runs with the same spec replay the exact
+//! same workload — the property every A/B comparison in
+//! `benches/traffic_replay.rs` rests on.
+
+use std::time::Duration;
+
+use crate::util::prng::Rng;
+use crate::workload::{CallSpec, TimedCall, TimedTrace};
+
+use super::TrafficSpec;
+
+/// Generate the arrival-timed trace for `spec` over `catalog` (the
+/// orderable universe of problems, e.g. every problem of a manifest in
+/// declaration order).
+///
+/// - **Popularity**: problem `i` of the *active* prefix is drawn with
+///   weight `1/(i+1)^zipf_s` — earlier catalog entries are the perennial
+///   hot shapes, churned-in entries join the tail.
+/// - **Churn**: the active prefix starts at `initial` problems and grows
+///   by one every `churn_every` calls until the catalog is exhausted —
+///   each growth step is a cold shape arriving mid-run.
+/// - **Arrivals**: exponential inter-arrival times at `rps`, modulated
+///   by a two-state (normal/burst) chain: bursts multiply the rate by
+///   `burst` and last ~`burst_len` calls (geometric), with off periods
+///   ~3x longer.
+///
+/// Panics if `catalog` is empty (a spec without problems is a caller
+/// bug, not a runtime condition).
+pub fn generate(spec: &TrafficSpec, catalog: &[CallSpec]) -> TimedTrace {
+    assert!(!catalog.is_empty(), "traffic generation needs a non-empty problem catalog");
+    let mut rng = Rng::seed(spec.seed);
+    let mut active = spec.initial.clamp(1, catalog.len());
+    let mut weights = zipf_weights(active, spec.zipf_s);
+    let mut bursting = false;
+    let mut clock = 0.0f64;
+    let mut calls = Vec::with_capacity(spec.calls);
+    for i in 0..spec.calls {
+        // Shape churn: one more catalog problem goes live every
+        // `churn_every` calls.
+        if spec.churn_every > 0 && i > 0 && i % spec.churn_every == 0 && active < catalog.len() {
+            active += 1;
+            weights = zipf_weights(active, spec.zipf_s);
+        }
+        // Burst chain: geometric dwell times in each state.
+        let mean_dwell = spec.burst_len.max(1) as f64;
+        if bursting {
+            if rng.chance(1.0 / mean_dwell) {
+                bursting = false;
+            }
+        } else if rng.chance(1.0 / (3.0 * mean_dwell)) {
+            bursting = true;
+        }
+        let rate = if bursting { spec.rps * spec.burst } else { spec.rps };
+        // Exponential inter-arrival; f64() is in [0, 1) so 1-u is in
+        // (0, 1] and the log is finite.
+        clock += -(1.0 - rng.f64()).ln() / rate;
+        let idx = pick_weighted(&mut rng, &weights);
+        calls.push(TimedCall {
+            at: Duration::from_secs_f64(clock),
+            spec: catalog[idx].clone(),
+        });
+    }
+    TimedTrace { calls }
+}
+
+/// Unnormalized Zipf weights for ranks `0..active`, prefix-summed into a
+/// CDF for O(log n) sampling.
+fn zipf_weights(active: usize, s: f64) -> Vec<f64> {
+    let mut cdf = Vec::with_capacity(active);
+    let mut total = 0.0;
+    for rank in 0..active {
+        total += 1.0 / ((rank + 1) as f64).powf(s);
+        cdf.push(total);
+    }
+    cdf
+}
+
+/// Draw an index from the prefix-sum CDF.
+fn pick_weighted(rng: &mut Rng, cdf: &[f64]) -> usize {
+    let total = cdf[cdf.len() - 1];
+    let u = rng.f64() * total;
+    match cdf.binary_search_by(|probe| probe.partial_cmp(&u).unwrap_or(std::cmp::Ordering::Less)) {
+        Ok(i) => (i + 1).min(cdf.len() - 1),
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catalog(n: usize) -> Vec<CallSpec> {
+        (0..n).map(|i| CallSpec { kernel: format!("k{i}"), size: 8 }).collect()
+    }
+
+    fn counts(trace: &TimedTrace, catalog_len: usize) -> Vec<usize> {
+        let mut c = vec![0usize; catalog_len];
+        for call in &trace.calls {
+            let idx: usize = call.spec.kernel[1..].parse().unwrap();
+            c[idx] += 1;
+        }
+        c
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let spec = TrafficSpec { calls: 500, ..TrafficSpec::default() };
+        let cat = catalog(6);
+        assert_eq!(generate(&spec, &cat), generate(&spec, &cat));
+        let other = TrafficSpec { seed: 43, ..spec };
+        assert_ne!(generate(&other, &cat), generate(&spec, &cat));
+    }
+
+    #[test]
+    fn zipf_skews_toward_head() {
+        let spec = TrafficSpec {
+            calls: 4000,
+            zipf_s: 1.2,
+            churn_every: 0,
+            initial: 8,
+            ..TrafficSpec::default()
+        };
+        let cat = catalog(8);
+        let c = counts(&generate(&spec, &cat), 8);
+        assert!(
+            c[0] > 3 * c[7].max(1),
+            "rank 0 should dominate rank 7: {c:?}"
+        );
+        assert!(c[0] > c[1], "monotone-ish head: {c:?}");
+    }
+
+    #[test]
+    fn churn_activates_problems_over_time() {
+        let spec = TrafficSpec {
+            calls: 1000,
+            initial: 2,
+            churn_every: 100,
+            ..TrafficSpec::default()
+        };
+        let cat = catalog(5);
+        let trace = generate(&spec, &cat);
+        // Problems beyond the initial 2 must not appear before their
+        // activation call index.
+        for (i, call) in trace.calls.iter().enumerate() {
+            let idx: usize = call.spec.kernel[1..].parse().unwrap();
+            if idx >= 2 {
+                assert!(
+                    i >= (idx - 1) * 100,
+                    "problem {idx} arrived at call {i}, before activation"
+                );
+            }
+        }
+        // ... and the whole catalog is live by the end.
+        let c = counts(&trace, 5);
+        assert!(c.iter().all(|&n| n > 0), "all problems eventually seen: {c:?}");
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_roughly_at_rate() {
+        let spec = TrafficSpec {
+            calls: 2000,
+            rps: 1000.0,
+            burst: 1.0, // burst state exists but does not change the rate
+            ..TrafficSpec::default()
+        };
+        let trace = generate(&spec, &catalog(3));
+        for w in trace.calls.windows(2) {
+            assert!(w[1].at >= w[0].at, "arrival times are monotone");
+        }
+        let span = trace.span().as_secs_f64();
+        // 2000 calls at 1000/s ≈ 2s of trace time; exponential noise is
+        // ~±2*sqrt(2000)/1000 ≈ 0.09s at 2 sigma — use a wide band.
+        assert!((1.5..2.6).contains(&span), "span {span:.3}s for 2s of traffic");
+    }
+
+    #[test]
+    fn bursts_compress_interarrivals() {
+        let base = TrafficSpec {
+            calls: 3000,
+            rps: 1000.0,
+            burst: 1.0,
+            churn_every: 0,
+            ..TrafficSpec::default()
+        };
+        let bursty = TrafficSpec { burst: 8.0, ..base.clone() };
+        let cat = catalog(3);
+        let slow = generate(&base, &cat).span();
+        let fast = generate(&bursty, &cat).span();
+        assert!(
+            fast < slow,
+            "burst episodes shorten the trace: burst=8 {fast:?} vs burst=1 {slow:?}"
+        );
+    }
+}

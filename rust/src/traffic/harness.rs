@@ -1,0 +1,623 @@
+//! Open-loop trace replay against a live coordinator.
+//!
+//! N named client threads walk one shared arrival schedule: each claims
+//! the next arrival index, sleeps until its scheduled offset (open loop:
+//! a late arrival is issued immediately — queueing shows up as latency,
+//! exactly like a real service under burst), issues the call, and
+//! records scheduled/actual/latency/route. A sampler thread polls the
+//! fast lane's published-entry count into a time series, so the report
+//! shows tuned-state growth *during* the run, not just its end state.
+//!
+//! The report answers the paper's questions under realistic traffic:
+//! what did callers pay while tuning was in flight (cold vs. steady
+//! p50/p99), how long until each problem was served by its tuned winner
+//! (time-to-good), how much serving capacity exploration consumed
+//! (duty cycle), and how much tuned state the shape churn accumulated.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{CallRoute, Coordinator};
+use crate::error::{Error, Result};
+use crate::manifest::Manifest;
+use crate::sync::TrackedMutex;
+use crate::tensor::HostTensor;
+use crate::util::json::{n, obj, s, Value};
+use crate::util::stats::percentile;
+use crate::workload::{inputs_for, CallSpec, TimedTrace};
+
+use super::{generate, TrafficSpec};
+
+/// Replay tuning knobs (separate from [`TrafficSpec`] because they do
+/// not change the generated workload, only how it is replayed and
+/// observed).
+#[derive(Clone)]
+pub struct ReplayOptions {
+    /// Multiplier on every scheduled arrival offset (1.0 = replay in
+    /// trace time; tests use small values to replay faster).
+    pub time_scale: f64,
+    /// Cadence of the tuned-state time series sampler.
+    pub sample_every: Duration,
+    /// Fired exactly once, by the client that claims the trace's
+    /// drift-injection index (see [`TrafficSpec::drift_at`]) — wire it
+    /// to a [`NativeFault`](crate::runtime::native::NativeFault) or
+    /// [`LatencyFault`](crate::runtime::mock::LatencyFault) handle.
+    pub drift_inject: Option<Arc<dyn Fn() + Send + Sync>>,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        ReplayOptions {
+            time_scale: 1.0,
+            sample_every: Duration::from_millis(25),
+            drift_inject: None,
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplayOptions {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReplayOptions")
+            .field("time_scale", &self.time_scale)
+            .field("sample_every", &self.sample_every)
+            .field("drift_inject", &self.drift_inject.is_some())
+            .finish()
+    }
+}
+
+/// What one replayed call observed.
+#[derive(Debug, Clone)]
+struct CallRecord {
+    idx: usize,
+    spec: CallSpec,
+    /// Scheduled offset (after time scaling).
+    sched: Duration,
+    /// Actual issue offset from replay start.
+    start: Duration,
+    latency: Duration,
+    /// `None` when the call errored.
+    route: Option<CallRoute>,
+}
+
+/// A generated trace plus pre-built inputs, ready to replay any number
+/// of times (A/B runs replay the identical workload).
+pub struct TrafficHarness {
+    spec: TrafficSpec,
+    trace: Arc<TimedTrace>,
+    /// Per-problem input tensors, keyed by `kernel/n{size}`. Built once
+    /// up front — input synthesis must not pollute serve latency.
+    inputs: Arc<HashMap<String, Vec<HostTensor>>>,
+}
+
+fn problem_key(spec: &CallSpec) -> String {
+    format!("{}/n{}", spec.kernel, spec.size)
+}
+
+impl TrafficHarness {
+    /// Generate the trace for `spec` over every problem of `manifest`
+    /// (declaration order = popularity rank) and pre-build each
+    /// problem's input tensors.
+    pub fn new(manifest: &Manifest, spec: TrafficSpec, input_seed: u64) -> Result<TrafficHarness> {
+        spec.validate()?;
+        let catalog: Vec<CallSpec> = manifest
+            .problems
+            .iter()
+            .map(|p| CallSpec { kernel: p.kernel.clone(), size: p.size })
+            .collect();
+        if catalog.is_empty() {
+            return Err(Error::Config("traffic harness: manifest has no problems".into()));
+        }
+        let trace = generate(&spec, &catalog);
+        let mut inputs = HashMap::new();
+        for call in trace.problems() {
+            let problem = manifest.problem(&call.kernel, call.size)?;
+            inputs.insert(problem_key(&call), inputs_for(problem, input_seed));
+        }
+        Ok(TrafficHarness { spec, trace: Arc::new(trace), inputs: Arc::new(inputs) })
+    }
+
+    /// The generated arrival schedule.
+    pub fn trace(&self) -> &TimedTrace {
+        &self.trace
+    }
+
+    /// Replay the trace against `coord` and assemble the report.
+    pub fn run(&self, coord: &Coordinator, opts: &ReplayOptions) -> Result<TrafficReport> {
+        let next = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(AtomicBool::new(false));
+        let records: Arc<TrackedMutex<Vec<CallRecord>>> =
+            Arc::new(TrackedMutex::new("traffic.harness.records", Vec::new()));
+        let drift_fired: Arc<TrackedMutex<Option<Duration>>> =
+            Arc::new(TrackedMutex::new("traffic.harness.drift_fired", None));
+        let drift_call = self.spec.drift_call();
+        let t0 = Instant::now();
+
+        // Tuned-state sampler: published fast-lane entries over time
+        // (reads a shared map — no leader round-trip, no serve impact).
+        let sampler = {
+            let h = coord.handle();
+            let done = done.clone();
+            let every = opts.sample_every;
+            std::thread::Builder::new()
+                .name("jitune-traffic-sampler".into())
+                .spawn(move || {
+                    let mut series: Vec<(f64, usize)> = vec![(0.0, h.fast_lane_published())];
+                    while !done.load(Ordering::Acquire) {
+                        std::thread::sleep(every);
+                        series.push((t0.elapsed().as_secs_f64() * 1e3, h.fast_lane_published()));
+                    }
+                    // Final sample after the replay ends, so the series
+                    // always closes on the end-of-run state.
+                    series.push((t0.elapsed().as_secs_f64() * 1e3, h.fast_lane_published()));
+                    series
+                })
+                .map_err(|e| Error::Coordinator(format!("traffic sampler spawn: {e}")))?
+        };
+
+        let mut clients = Vec::new();
+        for c in 0..self.spec.clients {
+            let h = coord.handle();
+            let trace = self.trace.clone();
+            let inputs = self.inputs.clone();
+            let next = next.clone();
+            let records = records.clone();
+            let drift_fired = drift_fired.clone();
+            let drift_inject = opts.drift_inject.clone();
+            let time_scale = opts.time_scale;
+            let join = std::thread::Builder::new()
+                .name(format!("jitune-traffic-{c}"))
+                .spawn(move || {
+                    let mut local: Vec<CallRecord> = Vec::new();
+                    loop {
+                        let idx = next.fetch_add(1, Ordering::AcqRel);
+                        if idx >= trace.calls.len() {
+                            break;
+                        }
+                        let call = &trace.calls[idx];
+                        if drift_call == Some(idx) {
+                            if let Some(inject) = &drift_inject {
+                                inject();
+                                *drift_fired.lock() = Some(t0.elapsed());
+                            }
+                        }
+                        let sched = call.at.mul_f64(time_scale);
+                        let now = t0.elapsed();
+                        if sched > now {
+                            std::thread::sleep(sched - now);
+                        }
+                        let args = inputs[&problem_key(&call.spec)].clone();
+                        let start = t0.elapsed();
+                        let issued = Instant::now();
+                        let route = match h.call(&call.spec.kernel, args) {
+                            Ok(outcome) => Some(outcome.route),
+                            Err(e) => {
+                                log::warn!("traffic call {idx} ({}) failed: {e}", call.spec.kernel);
+                                None
+                            }
+                        };
+                        local.push(CallRecord {
+                            idx,
+                            spec: call.spec.clone(),
+                            sched,
+                            start,
+                            latency: issued.elapsed(),
+                            route,
+                        });
+                    }
+                    records.lock().append(&mut local);
+                })
+                .map_err(|e| Error::Coordinator(format!("traffic client spawn: {e}")))?;
+            clients.push(join);
+        }
+        for join in clients {
+            join.join()
+                .map_err(|_| Error::Coordinator("traffic client panicked".into()))?;
+        }
+        let wall = t0.elapsed();
+        done.store(true, Ordering::Release);
+        let tuned_series = sampler
+            .join()
+            .map_err(|_| Error::Coordinator("traffic sampler panicked".into()))?;
+
+        let mut records = std::mem::take(&mut *records.lock());
+        records.sort_by_key(|r| r.idx);
+        let drift_fired_ms = drift_fired.lock().map(|d| d.as_secs_f64() * 1e3);
+        self.assemble(coord, records, tuned_series, wall, drift_fired_ms)
+    }
+
+    fn assemble(
+        &self,
+        coord: &Coordinator,
+        records: Vec<CallRecord>,
+        tuned_series: Vec<(f64, usize)>,
+        wall: Duration,
+        drift_fired_ms: Option<f64>,
+    ) -> Result<TrafficReport> {
+        let h = coord.handle();
+        let lat_us: Vec<f64> =
+            records.iter().map(|r| r.latency.as_secs_f64() * 1e6).collect();
+        let cold_end = records.len() / 5;
+        let steady_start = records.len() / 2;
+        let errors = records.iter().filter(|r| r.route.is_none()).count();
+
+        // Per-problem stats, in first-arrival order.
+        let mut order: Vec<String> = Vec::new();
+        let mut by_problem: HashMap<String, Vec<&CallRecord>> = HashMap::new();
+        for r in &records {
+            let key = problem_key(&r.spec);
+            if !by_problem.contains_key(&key) {
+                order.push(key.clone());
+            }
+            by_problem.entry(key).or_default().push(r);
+        }
+        let mut problems = Vec::new();
+        for key in &order {
+            let rs = &by_problem[key];
+            let first_arrival = rs[0].sched;
+            // Time-to-good: first serve by the *tuned winner* relative to
+            // the problem's first arrival. Explored/Finalized/Default
+            // routes are the cold phase being bridged.
+            let time_to_good_ms = rs
+                .iter()
+                .find(|r| r.route == Some(CallRoute::Tuned))
+                .map(|r| ((r.start + r.latency) - first_arrival).as_secs_f64() * 1e3);
+            let us: Vec<f64> = rs.iter().map(|r| r.latency.as_secs_f64() * 1e6).collect();
+            problems.push(ProblemStats {
+                kernel: rs[0].spec.kernel.clone(),
+                size: rs[0].spec.size,
+                calls: rs.len(),
+                errors: rs.iter().filter(|r| r.route.is_none()).count(),
+                first_arrival_ms: first_arrival.as_secs_f64() * 1e3,
+                time_to_good_ms,
+                p50_us: pct(&us, 50.0),
+                p99_us: pct(&us, 99.0),
+            });
+        }
+        let ttg: Vec<f64> = problems.iter().filter_map(|p| p.time_to_good_ms).collect();
+        let untuned_problems = problems.len() - ttg.len();
+
+        // Tuned-state size: serialize the tuner's exported state to a
+        // scratch file and measure it (the deployable-cache footprint).
+        let state_path = crate::testutil::temp_path("traffic-state", "json");
+        let tuned_problems = h.save_state(&state_path)?;
+        let tuned_state_bytes = std::fs::metadata(&state_path).map(|m| m.len()).unwrap_or(0);
+        let _ = std::fs::remove_file(&state_path);
+
+        let stats = h.stats_json()?;
+        let duty_cycle_pct = stats
+            .get("background")
+            .and_then(|b| b.get("duty_cycle_pct"))
+            .and_then(Value::as_f64);
+        let drift_retunes = stats
+            .get("kernels")
+            .and_then(Value::as_obj)
+            .map(|kernels| {
+                kernels
+                    .iter()
+                    .filter_map(|(_, v)| v.get("drift_retunes").and_then(Value::as_i64))
+                    .sum()
+            })
+            .unwrap_or(0);
+
+        Ok(TrafficReport {
+            spec: self.spec.clone(),
+            calls: records.len(),
+            errors,
+            wall_ms: wall.as_secs_f64() * 1e3,
+            p50_us: pct(&lat_us, 50.0),
+            p99_us: pct(&lat_us, 99.0),
+            cold_p50_us: pct(&lat_us[..cold_end], 50.0),
+            cold_p99_us: pct(&lat_us[..cold_end], 99.0),
+            steady_p50_us: pct(&lat_us[steady_start..], 50.0),
+            steady_p99_us: pct(&lat_us[steady_start..], 99.0),
+            problems,
+            ttg_median_ms: if ttg.is_empty() { None } else { Some(pct(&ttg, 50.0)) },
+            ttg_max_ms: ttg.iter().cloned().fold(None, |acc: Option<f64>, v| {
+                Some(acc.map_or(v, |a| a.max(v)))
+            }),
+            untuned_problems,
+            tuned_series,
+            tuned_problems,
+            tuned_state_bytes,
+            duty_cycle_pct,
+            drift_retunes,
+            drift_fired_ms,
+        })
+    }
+}
+
+fn pct(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        percentile(samples, p)
+    }
+}
+
+/// Per-problem slice of a [`TrafficReport`].
+#[derive(Debug, Clone)]
+pub struct ProblemStats {
+    /// Kernel family.
+    pub kernel: String,
+    /// Problem size.
+    pub size: i64,
+    /// Calls replayed for this problem.
+    pub calls: usize,
+    /// Calls that errored.
+    pub errors: usize,
+    /// Scheduled offset of the problem's first arrival.
+    pub first_arrival_ms: f64,
+    /// First tuned-winner serve relative to first arrival (`None`: the
+    /// problem never reached its tuned winner within the trace).
+    pub time_to_good_ms: Option<f64>,
+    /// Median serve latency.
+    pub p50_us: f64,
+    /// Tail serve latency.
+    pub p99_us: f64,
+}
+
+/// Everything a replay observed. `to_json` is the `BENCH_TRAFFIC.json`
+/// payload; `render` is the human CLI summary.
+#[derive(Debug, Clone)]
+pub struct TrafficReport {
+    /// The spec that generated the workload.
+    pub spec: TrafficSpec,
+    /// Calls replayed.
+    pub calls: usize,
+    /// Calls that errored.
+    pub errors: usize,
+    /// Wall time of the replay.
+    pub wall_ms: f64,
+    /// Overall median serve latency (µs).
+    pub p50_us: f64,
+    /// Overall tail serve latency (µs).
+    pub p99_us: f64,
+    /// Median over the first 20% of arrivals (tuning in flight).
+    pub cold_p50_us: f64,
+    /// Tail over the first 20% of arrivals.
+    pub cold_p99_us: f64,
+    /// Median over the last 50% of arrivals.
+    pub steady_p50_us: f64,
+    /// Tail over the last 50% of arrivals.
+    pub steady_p99_us: f64,
+    /// Per-problem stats, first-arrival order.
+    pub problems: Vec<ProblemStats>,
+    /// Median time-to-good over problems that tuned.
+    pub ttg_median_ms: Option<f64>,
+    /// Worst time-to-good.
+    pub ttg_max_ms: Option<f64>,
+    /// Problems that never reached their tuned winner in-trace.
+    pub untuned_problems: usize,
+    /// `(ms since start, fast-lane entries)` samples.
+    pub tuned_series: Vec<(f64, usize)>,
+    /// Tuned problems in the exported state.
+    pub tuned_problems: usize,
+    /// Size of the exported tuned state (deployable-cache footprint).
+    pub tuned_state_bytes: u64,
+    /// Background-explore duty cycle over the run, when enabled.
+    pub duty_cycle_pct: Option<f64>,
+    /// Drift-triggered retunes observed.
+    pub drift_retunes: i64,
+    /// When the drift injection actually fired.
+    pub drift_fired_ms: Option<f64>,
+}
+
+impl TrafficReport {
+    /// Machine-readable export (the `BENCH_TRAFFIC.json` schema).
+    pub fn to_json(&self) -> Value {
+        let spec = &self.spec;
+        obj(vec![
+            (
+                "spec",
+                obj(vec![
+                    ("calls", n(spec.calls as f64)),
+                    ("rps", n(spec.rps)),
+                    ("zipf_s", n(spec.zipf_s)),
+                    ("initial", n(spec.initial as f64)),
+                    ("churn_every", n(spec.churn_every as f64)),
+                    ("burst", n(spec.burst)),
+                    ("burst_len", n(spec.burst_len as f64)),
+                    ("drift_at", n(spec.drift_at)),
+                    ("seed", n(spec.seed as f64)),
+                    ("clients", n(spec.clients as f64)),
+                ]),
+            ),
+            ("calls", n(self.calls as f64)),
+            ("errors", n(self.errors as f64)),
+            ("wall_ms", n(self.wall_ms)),
+            (
+                "latency_us",
+                obj(vec![
+                    ("p50", n(self.p50_us)),
+                    ("p99", n(self.p99_us)),
+                    ("cold_p50", n(self.cold_p50_us)),
+                    ("cold_p99", n(self.cold_p99_us)),
+                    ("steady_p50", n(self.steady_p50_us)),
+                    ("steady_p99", n(self.steady_p99_us)),
+                ]),
+            ),
+            (
+                "time_to_good_ms",
+                obj(vec![
+                    ("median", self.ttg_median_ms.map(n).unwrap_or(Value::Null)),
+                    ("max", self.ttg_max_ms.map(n).unwrap_or(Value::Null)),
+                    ("untuned_problems", n(self.untuned_problems as f64)),
+                ]),
+            ),
+            (
+                "problems",
+                Value::Arr(
+                    self.problems
+                        .iter()
+                        .map(|p| {
+                            obj(vec![
+                                ("kernel", s(p.kernel.clone())),
+                                ("size", n(p.size as f64)),
+                                ("calls", n(p.calls as f64)),
+                                ("errors", n(p.errors as f64)),
+                                ("first_arrival_ms", n(p.first_arrival_ms)),
+                                (
+                                    "time_to_good_ms",
+                                    p.time_to_good_ms.map(n).unwrap_or(Value::Null),
+                                ),
+                                ("p50_us", n(p.p50_us)),
+                                ("p99_us", n(p.p99_us)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "tuned_state",
+                obj(vec![
+                    (
+                        "series",
+                        Value::Arr(
+                            self.tuned_series
+                                .iter()
+                                .map(|&(ms, count)| {
+                                    Value::Arr(vec![n(ms), n(count as f64)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("problems", n(self.tuned_problems as f64)),
+                    ("bytes", n(self.tuned_state_bytes as f64)),
+                ]),
+            ),
+            (
+                "background",
+                obj(vec![(
+                    "duty_cycle_pct",
+                    self.duty_cycle_pct.map(n).unwrap_or(Value::Null),
+                )]),
+            ),
+            (
+                "drift",
+                obj(vec![
+                    ("retunes", n(self.drift_retunes as f64)),
+                    ("fired_ms", self.drift_fired_ms.map(n).unwrap_or(Value::Null)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "traffic: {} calls ({} errors) in {:.0}ms across {} clients\n",
+            self.calls, self.errors, self.wall_ms, self.spec.clients
+        ));
+        out.push_str(&format!(
+            "latency: p50 {:.0}us p99 {:.0}us (cold p99 {:.0}us -> steady p99 {:.0}us)\n",
+            self.p50_us, self.p99_us, self.cold_p99_us, self.steady_p99_us
+        ));
+        match self.ttg_median_ms {
+            Some(median) => out.push_str(&format!(
+                "time-to-good: median {median:.0}ms max {:.0}ms ({} problem(s) untuned)\n",
+                self.ttg_max_ms.unwrap_or(median),
+                self.untuned_problems
+            )),
+            None => out.push_str("time-to-good: no problem reached its tuned winner\n"),
+        }
+        out.push_str(&format!(
+            "tuned state: {} problem(s), {} bytes exported\n",
+            self.tuned_problems, self.tuned_state_bytes
+        ));
+        if let Some(duty) = self.duty_cycle_pct {
+            out.push_str(&format!("background explore duty cycle: {duty:.2}%\n"));
+        }
+        if self.drift_retunes > 0 || self.drift_fired_ms.is_some() {
+            out.push_str(&format!(
+                "drift: injection at {} -> {} retune(s)\n",
+                self.drift_fired_ms
+                    .map(|ms| format!("{ms:.0}ms"))
+                    .unwrap_or_else(|| "-".into()),
+                self.drift_retunes
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServerOptions;
+    use crate::runtime::mock::MockSpec;
+    use crate::testutil::spawn_pooled_mock;
+
+    fn mock_coord() -> Coordinator {
+        spawn_pooled_mock("kern", 2, &[8, 16], MockSpec::default(), 2, ServerOptions::default())
+            .unwrap()
+    }
+
+    fn quick_spec() -> TrafficSpec {
+        TrafficSpec {
+            calls: 120,
+            rps: 4000.0,
+            initial: 2,
+            churn_every: 0,
+            clients: 3,
+            ..TrafficSpec::default()
+        }
+    }
+
+    #[test]
+    fn replays_every_call_and_reports() {
+        let coord = mock_coord();
+        let manifest = crate::testutil::synthetic_manifest("kern", 2, &[8, 16]).unwrap();
+        let harness = TrafficHarness::new(&manifest, quick_spec(), 7).unwrap();
+        let report = harness.run(&coord, &ReplayOptions::default()).unwrap();
+        assert_eq!(report.calls, 120);
+        assert_eq!(report.errors, 0);
+        assert!(report.p50_us > 0.0);
+        assert!(report.p99_us >= report.p50_us);
+        assert_eq!(report.problems.len(), 2);
+        assert_eq!(report.problems.iter().map(|p| p.calls).sum::<usize>(), 120);
+        // both problems see enough traffic to tune (sweep needs
+        // 2 explores + 1 finalize each)
+        assert!(report.ttg_median_ms.is_some(), "problems tuned: {report:?}");
+        assert_eq!(report.untuned_problems, 0);
+        assert_eq!(report.tuned_problems, 2);
+        assert!(report.tuned_state_bytes > 0);
+        // the sampler saw the lane fill up
+        assert_eq!(report.tuned_series.last().unwrap().1, 2);
+        // JSON export parses back
+        let text = report.to_json().to_json_pretty();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.get("calls").unwrap().as_i64(), Some(120));
+        assert!(parsed.get("latency_us").unwrap().get("p99").is_some());
+        assert!(!report.render().is_empty());
+    }
+
+    #[test]
+    fn drift_injection_fires_once_at_fraction() {
+        let coord = mock_coord();
+        let manifest = crate::testutil::synthetic_manifest("kern", 2, &[8, 16]).unwrap();
+        let spec = TrafficSpec { drift_at: 0.5, ..quick_spec() };
+        let harness = TrafficHarness::new(&manifest, spec, 7).unwrap();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let counter = fired.clone();
+        let opts = ReplayOptions {
+            drift_inject: Some(Arc::new(move || {
+                counter.fetch_add(1, Ordering::AcqRel);
+            })),
+            ..ReplayOptions::default()
+        };
+        let report = harness.run(&coord, &opts).unwrap();
+        assert_eq!(fired.load(Ordering::Acquire), 1, "exactly one injection");
+        assert!(report.drift_fired_ms.is_some());
+    }
+
+    #[test]
+    fn identical_spec_replays_identical_workload() {
+        let manifest = crate::testutil::synthetic_manifest("kern", 2, &[8, 16]).unwrap();
+        let a = TrafficHarness::new(&manifest, quick_spec(), 7).unwrap();
+        let b = TrafficHarness::new(&manifest, quick_spec(), 7).unwrap();
+        assert_eq!(a.trace(), b.trace());
+    }
+}

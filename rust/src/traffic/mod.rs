@@ -1,0 +1,181 @@
+//! Production-traffic replay: seeded generators + a harness that drives
+//! a full coordinator the way a real service would.
+//!
+//! Every scaling claim upstream (fast lane, worker pool, background
+//! exploration, drift retuning) was demonstrated under uniform call
+//! loops. Real services look nothing like that: a few kernels dominate
+//! (Zipfian popularity), the shape catalog churns as new models roll
+//! out, arrivals come in open-loop bursts, and machine behaviour drifts
+//! mid-run. This module makes those conditions reproducible from a seed:
+//!
+//! - [`TrafficSpec`] — the knobs, parseable from a compact
+//!   `k=v,k=v` string (`jitune run --traffic <spec>`).
+//! - [`generate`](generate::generate) — spec + problem catalog →
+//!   [`TimedTrace`](crate::workload::TimedTrace): Zipf-weighted problem
+//!   choice over a churning active set, exponential inter-arrivals with
+//!   a two-state (normal/burst) modulator.
+//! - [`TrafficHarness`](harness::TrafficHarness) — open-loop replay of
+//!   a trace against a live coordinator from N client threads,
+//!   producing a [`TrafficReport`](harness::TrafficReport): p50/p99
+//!   serve latency (overall, cold, steady), per-problem time-to-good,
+//!   explore duty cycle, and a tuned-state-size time series.
+//!
+//! `benches/traffic_replay.rs` runs the harness over the native engine
+//! ([`crate::runtime::native`]) and writes `BENCH_TRAFFIC.json` at the
+//! repo root, extending the visible perf trajectory on every push to
+//! main.
+
+pub mod generate;
+pub mod harness;
+
+use crate::error::{Error, Result};
+
+pub use generate::generate;
+pub use harness::{ReplayOptions, TrafficHarness, TrafficReport};
+
+/// Knobs of a synthetic traffic trace. All fields have serving-shaped
+/// defaults; construct with `TrafficSpec::default()` and override, or
+/// parse a `k=v,k=v` string (see [`TrafficSpec::parse`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficSpec {
+    /// Total arrivals in the trace.
+    pub calls: usize,
+    /// Mean arrival rate (calls/second of trace time) outside bursts.
+    pub rps: f64,
+    /// Zipf popularity exponent over the active problem set (0 =
+    /// uniform; ~1 = classic web-serving skew).
+    pub zipf_s: f64,
+    /// Problems active at trace start (the rest arrive via churn).
+    pub initial: usize,
+    /// Activate one more catalog problem every N calls (shape churn);
+    /// 0 disables churn.
+    pub churn_every: usize,
+    /// Arrival-rate multiplier while the burst state is on.
+    pub burst: f64,
+    /// Mean burst episode length in calls (geometric); also sets the
+    /// off-state length to ~3x this, so bursts cover ~25% of arrivals.
+    pub burst_len: usize,
+    /// Fraction of the trace (0..1] after which the harness fires its
+    /// drift injection; 0 disables.
+    pub drift_at: f64,
+    /// Generator seed — the whole trace is a pure function of the spec.
+    pub seed: u64,
+    /// Replay client threads.
+    pub clients: usize,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        TrafficSpec {
+            calls: 2000,
+            rps: 1000.0,
+            zipf_s: 1.1,
+            initial: 3,
+            churn_every: 250,
+            burst: 4.0,
+            burst_len: 50,
+            drift_at: 0.0,
+            seed: 42,
+            clients: 4,
+        }
+    }
+}
+
+impl TrafficSpec {
+    /// Parse a compact spec string: comma-separated `key=value` pairs
+    /// over the struct's fields (`calls`, `rps`, `zipf`, `initial`,
+    /// `churn`, `burst`, `burstlen`, `drift`, `seed`, `clients`).
+    /// Omitted keys keep their defaults; `TrafficSpec::parse("")` is
+    /// `TrafficSpec::default()`.
+    pub fn parse(text: &str) -> Result<TrafficSpec> {
+        let mut spec = TrafficSpec::default();
+        for pair in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = pair.split_once('=').ok_or_else(|| {
+                Error::Config(format!("traffic spec: `{pair}` is not key=value"))
+            })?;
+            let bad = |what: &str| {
+                Error::Config(format!("traffic spec: `{value}` is not a valid {what} for {key}"))
+            };
+            match key.trim() {
+                "calls" => spec.calls = value.parse().map_err(|_| bad("count"))?,
+                "rps" => spec.rps = value.parse().map_err(|_| bad("rate"))?,
+                "zipf" => spec.zipf_s = value.parse().map_err(|_| bad("exponent"))?,
+                "initial" => spec.initial = value.parse().map_err(|_| bad("count"))?,
+                "churn" => spec.churn_every = value.parse().map_err(|_| bad("count"))?,
+                "burst" => spec.burst = value.parse().map_err(|_| bad("factor"))?,
+                "burstlen" => spec.burst_len = value.parse().map_err(|_| bad("count"))?,
+                "drift" => spec.drift_at = value.parse().map_err(|_| bad("fraction"))?,
+                "seed" => spec.seed = value.parse().map_err(|_| bad("seed"))?,
+                "clients" => spec.clients = value.parse().map_err(|_| bad("count"))?,
+                other => {
+                    return Err(Error::Config(format!("traffic spec: unknown key `{other}`")))
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject degenerate configurations early.
+    pub fn validate(&self) -> Result<()> {
+        if self.calls == 0 {
+            return Err(Error::Config("traffic spec: calls must be > 0".into()));
+        }
+        if !self.rps.is_finite() || self.rps <= 0.0 {
+            return Err(Error::Config("traffic spec: rps must be > 0".into()));
+        }
+        if !self.zipf_s.is_finite() || self.zipf_s < 0.0 {
+            return Err(Error::Config("traffic spec: zipf must be >= 0".into()));
+        }
+        if !self.burst.is_finite() || self.burst < 1.0 {
+            return Err(Error::Config("traffic spec: burst must be >= 1".into()));
+        }
+        if self.clients == 0 {
+            return Err(Error::Config("traffic spec: clients must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.drift_at) {
+            return Err(Error::Config("traffic spec: drift must be in [0, 1]".into()));
+        }
+        Ok(())
+    }
+
+    /// The call index at which the harness fires drift injection
+    /// (`None` when disabled).
+    pub fn drift_call(&self) -> Option<usize> {
+        if self.drift_at > 0.0 {
+            Some(((self.calls as f64 * self.drift_at) as usize).min(self.calls - 1))
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_defaults_and_overrides() {
+        assert_eq!(TrafficSpec::parse("").unwrap(), TrafficSpec::default());
+        let s =
+            TrafficSpec::parse("calls=500, rps=250, zipf=0.9, churn=0, drift=0.5, seed=7").unwrap();
+        assert_eq!(s.calls, 500);
+        assert_eq!(s.rps, 250.0);
+        assert_eq!(s.zipf_s, 0.9);
+        assert_eq!(s.churn_every, 0);
+        assert_eq!(s.drift_at, 0.5);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.clients, TrafficSpec::default().clients);
+        assert_eq!(s.drift_call(), Some(250));
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(TrafficSpec::parse("calls").is_err());
+        assert!(TrafficSpec::parse("calls=zero").is_err());
+        assert!(TrafficSpec::parse("warp=9").is_err());
+        assert!(TrafficSpec::parse("calls=0").is_err());
+        assert!(TrafficSpec::parse("burst=0.5").is_err());
+        assert!(TrafficSpec::parse("drift=1.5").is_err());
+    }
+}

@@ -102,6 +102,71 @@ impl CallTrace {
     }
 }
 
+/// One arrival of an open-loop trace: *what* to call and *when*,
+/// relative to replay start. The timed generalization of [`CallSpec`] —
+/// [`crate::traffic`] generates these (Zipfian popularity, churn,
+/// bursts) and replays them against a live coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TimedCall {
+    /// Scheduled arrival offset from replay start.
+    pub at: std::time::Duration,
+    /// The call itself.
+    pub spec: CallSpec,
+}
+
+/// An arrival-timed call sequence (open loop: arrivals do not wait for
+/// completions).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimedTrace {
+    /// Arrivals in schedule order.
+    pub calls: Vec<TimedCall>,
+}
+
+impl TimedTrace {
+    /// Time an untimed trace at a constant `rps` arrival rate.
+    pub fn constant_rate(trace: &CallTrace, rps: f64) -> TimedTrace {
+        let gap = 1.0 / rps.max(1e-9);
+        TimedTrace {
+            calls: trace
+                .calls
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| TimedCall {
+                    at: std::time::Duration::from_secs_f64(i as f64 * gap),
+                    spec: spec.clone(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of arrivals.
+    pub fn len(&self) -> usize {
+        self.calls.len()
+    }
+
+    /// True when the trace is empty.
+    pub fn is_empty(&self) -> bool {
+        self.calls.is_empty()
+    }
+
+    /// Total scheduled duration (arrival offset of the last call).
+    pub fn span(&self) -> std::time::Duration {
+        self.calls.last().map(|c| c.at).unwrap_or_default()
+    }
+
+    /// The distinct problems appearing in the trace, in first-arrival
+    /// order.
+    pub fn problems(&self) -> Vec<CallSpec> {
+        let mut seen = Vec::new();
+        for c in &self.calls {
+            if !seen.contains(&c.spec) {
+                seen.push(c.spec.clone());
+            }
+        }
+        seen
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +194,18 @@ mod tests {
         assert_eq!(t.calls[0].kernel, "a");
         assert_eq!(t.calls[1].kernel, "b");
         assert_eq!(t.calls[4].kernel, "a");
+    }
+
+    #[test]
+    fn timed_trace_constant_rate_and_problems() {
+        let t = TimedTrace::constant_rate(&CallTrace::interleaved(&[("a", 1), ("b", 2)], 3), 100.0);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.calls[0].at, std::time::Duration::ZERO);
+        assert_eq!(t.calls[2].at, std::time::Duration::from_millis(20));
+        assert_eq!(t.span(), std::time::Duration::from_millis(50));
+        let probs = t.problems();
+        assert_eq!(probs.len(), 2);
+        assert_eq!(probs[0], CallSpec { kernel: "a".into(), size: 1 });
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! End-to-end tests for the CPU-native engine: variant bit-identity
+//! through the full engine path, coordinator convergence on real
+//! kernels, and a loose ordering sanity check on the tunables.
+//!
+//! The unit tests inside `runtime/native/` cover the kernel math
+//! directly; these tests go through `Engine::compile` + manifest
+//! signatures + the coordinator, i.e. the path production traffic takes.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{Coordinator, Dispatcher, KernelRegistry, PoolOptions, ServerOptions};
+use jitune::runtime::native::native_manifest;
+use jitune::runtime::{Engine, EngineFactory, NativeEngine, NativeEngineFactory};
+use jitune::workload::inputs_for;
+
+/// Every tunable variant of every native kernel family must produce
+/// bit-identical outputs on seeded inputs when run through the full
+/// engine path (manifest signature -> compile -> execute). A
+/// wrong-but-fast variant would otherwise win tuning and silently
+/// corrupt results.
+#[test]
+fn all_variants_bit_identical_through_engine_path() {
+    let manifest = native_manifest(&[48, 64], &[4096]).expect("native manifest");
+    let engine = NativeEngine::new();
+    for problem in &manifest.problems {
+        let inputs = inputs_for(problem, 0xFEED);
+        let baseline = engine
+            .compile(&problem.variants[0], "")
+            .expect("compile baseline")
+            .execute(&inputs)
+            .expect("execute baseline");
+        for variant in &problem.variants[1..] {
+            let out = engine
+                .compile(variant, "")
+                .expect("compile variant")
+                .execute(&inputs)
+                .expect("execute variant");
+            assert_eq!(
+                baseline.data(),
+                out.data(),
+                "{} disagrees with {} on {}",
+                variant.id,
+                problem.variants[0].id,
+                problem.key()
+            );
+        }
+    }
+}
+
+/// The same contract holds across *engines* (fresh scratch pools must
+/// not change results) and across repeat executions (pool recycling must
+/// not leak state between calls).
+#[test]
+fn results_stable_across_engines_and_repeats() {
+    let manifest = native_manifest(&[48], &[4096]).expect("native manifest");
+    let problem = manifest.problem("matmul", 48).expect("matmul problem");
+    let inputs = inputs_for(problem, 0xABCD);
+    let variant = &problem.variants[1]; // bt — packs B^T via the scratch pool
+    let first = NativeEngine::new()
+        .compile(variant, "")
+        .expect("compile")
+        .execute(&inputs)
+        .expect("execute");
+    let other_engine = NativeEngine::new();
+    let kernel = other_engine.compile(variant, "").expect("compile");
+    for round in 0..3 {
+        let out = kernel.execute(&inputs).expect("execute");
+        assert_eq!(first.data(), out.data(), "round {round} diverged");
+    }
+}
+
+/// A full coordinator over the native engine converges to a tuned
+/// winner and keeps serving correct results from it.
+#[test]
+fn coordinator_converges_on_native_kernels() {
+    let factory = Arc::new(NativeEngineFactory::pinned());
+    let leader_factory: Arc<dyn EngineFactory> = factory.clone();
+    let opts = ServerOptions {
+        pool: Some(PoolOptions::new(factory).with_workers(2)),
+        ..ServerOptions::default()
+    };
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = native_manifest(&[48], &[4096])?;
+            Ok(Dispatcher::new(KernelRegistry::new(manifest), leader_factory.create()?))
+        },
+        opts,
+    )
+    .expect("coordinator");
+    let h = coord.handle();
+    let manifest = native_manifest(&[48], &[4096]).expect("manifest");
+    let problem = manifest.problem("matmul", 48).expect("problem");
+    let inputs = inputs_for(problem, 0x5EED);
+
+    let expected = NativeEngine::new()
+        .compile(&problem.variants[0], "")
+        .expect("oracle compile")
+        .execute(&inputs)
+        .expect("oracle execute");
+
+    let t0 = Instant::now();
+    let mut tuned = None;
+    while tuned.is_none() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "native tuning never converged");
+        let out = h.call("matmul", inputs.clone()).expect("call");
+        assert_eq!(expected.data(), out.output.data(), "served result diverged mid-tuning");
+        tuned = h.tuned_value("matmul", 48).expect("tuned_value");
+    }
+    let winner = tuned.expect("winner");
+    let catalog: Vec<i64> = problem.variants.iter().map(|v| v.value).collect();
+    assert!(catalog.contains(&winner), "winner {winner} not in catalog {catalog:?}");
+    // steady state serves the winner, still correct
+    for _ in 0..10 {
+        let out = h.call("matmul", inputs.clone()).expect("tuned call");
+        assert_eq!(expected.data(), out.output.data());
+        assert_eq!(out.value, winner);
+    }
+}
+
+/// Loose perf sanity on the tunables (ordering only — absolute timings
+/// are CI-noise): at a cache-unfriendly size, the transposed matmul
+/// must not lose to naive by a large factor. This catches a variant
+/// whose "tuning axis" stopped doing anything (e.g. the packed-B path
+/// accidentally falling back to the naive loop), without flaking on
+/// machine speed.
+#[test]
+fn transposed_matmul_not_dramatically_slower_than_naive() {
+    let manifest = native_manifest(&[128], &[]).expect("native manifest");
+    let problem = manifest.problem("matmul", 128).expect("problem");
+    let inputs = inputs_for(problem, 0xD1CE);
+    let engine = NativeEngine::new();
+    let time = |label: &str| {
+        let v = problem
+            .variants
+            .iter()
+            .find(|v| v.label == label)
+            .unwrap_or_else(|| panic!("variant {label} in catalog"));
+        let k = engine.compile(v, "").expect("compile");
+        k.execute(&inputs).expect("warmup");
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            k.execute(&inputs).expect("execute");
+        }
+        t0.elapsed()
+    };
+    let naive = time("naive");
+    let transposed = time("bt");
+    assert!(
+        transposed < naive * 3,
+        "transposed matmul should be in naive's ballpark or better: \
+         bt {transposed:?} vs naive {naive:?}"
+    );
+}

@@ -8,7 +8,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use jitune::coordinator::{CallRoute, Coordinator, PoolOptions, ServerOptions, WorkerPool};
-use jitune::runtime::mock::{MockEngineFactory, MockSpec};
+use jitune::runtime::mock::{CompileFault, MockEngineFactory, MockSpec};
 use jitune::tensor::HostTensor;
 use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
 
@@ -173,6 +173,54 @@ fn idle_worker_steals_from_busy_siblings_shard() {
         .sum();
     assert_eq!(steals_json as u64, steals);
     pool.stop();
+}
+
+#[test]
+fn partial_install_routes_to_ready_worker_subset() {
+    // PR 4 follow-up regression: when only a subset of pool workers
+    // manages to compile a finalized winner, tuned traffic must be
+    // routed to that ready subset — not degraded to the leader, and
+    // never to the failed worker. The CompileFault rule targets the
+    // winner on worker 1's deterministically-named thread, so the
+    // install broadcast acks on workers 0 and 2 only.
+    const THREADS: usize = 4;
+    const CALLS: usize = 50;
+    let spec = sleepy_spec(100);
+    let fault: CompileFault = spec.compile_fault.clone();
+    fault.fail_on_thread("kern.v1.n8", "jitune-pool-1");
+    let coord = spawn(spec, 3);
+    let h = coord.handle();
+
+    tune(&coord);
+    assert_eq!(
+        h.fast_lane_published(),
+        1,
+        "a 2-of-3 partial install still publishes a pool route"
+    );
+
+    let total = hammer(&coord, THREADS, CALLS);
+    assert_eq!(total, THREADS * CALLS, "no call lost");
+
+    let snap = h.pool_snapshot().expect("pool attached");
+    assert_eq!(snap.workers.len(), 3);
+    assert_eq!(
+        snap.workers[1].executed, 0,
+        "the worker that failed the compile never serves the winner: {snap:?}"
+    );
+    assert!(
+        snap.workers[0].executed > 0 && snap.workers[2].executed > 0,
+        "both ready workers share the tuned traffic: {snap:?}"
+    );
+    // All hammered calls ran on the pool's ready subset — none fell back
+    // to the leader (pool executions and lane hits agree, and cover the
+    // hammered volume).
+    let lane_hits: u64 = h.fast_lane_stats().iter().map(|(_, hits, _)| *hits).sum();
+    assert_eq!(snap.total_executed(), lane_hits, "pool executions == lane hits");
+    assert!(
+        snap.total_executed() >= (THREADS * CALLS) as u64,
+        "steady-state calls stayed on the ready subset: {snap:?}"
+    );
+    assert_eq!(snap.respawns, 0, "a failed install is not a worker crash");
 }
 
 #[test]

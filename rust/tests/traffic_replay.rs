@@ -1,0 +1,162 @@
+//! Integration tests for the traffic subsystem: the generated trace
+//! drives a full coordinator (mock and native engines) and the report
+//! reflects what actually happened.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use jitune::coordinator::{
+    Coordinator, Dispatcher, DriftPolicy, ExploreOptions, KernelRegistry, PoolOptions,
+    ServerOptions,
+};
+use jitune::runtime::mock::MockSpec;
+use jitune::runtime::native::native_manifest;
+use jitune::runtime::{EngineFactory, NativeEngineFactory, NativeFault};
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
+use jitune::traffic::{ReplayOptions, TrafficHarness, TrafficSpec};
+
+/// Replay a churning multi-problem trace on the mock stack and check the
+/// report is internally consistent: every arrival accounted for, cold
+/// tail at least as heavy as steady, tuned-state series monotone.
+#[test]
+fn mock_replay_report_is_consistent() {
+    let coord = spawn_pooled_mock(
+        "kern",
+        3,
+        &[8, 16, 32],
+        MockSpec::default().with_compile_cost(Duration::from_micros(300)),
+        2,
+        ServerOptions::default(),
+    )
+    .expect("coordinator");
+    let manifest = synthetic_manifest("kern", 3, &[8, 16, 32]).expect("manifest");
+    let spec = TrafficSpec {
+        calls: 600,
+        rps: 5000.0,
+        initial: 2,
+        churn_every: 150,
+        clients: 4,
+        seed: 11,
+        ..TrafficSpec::default()
+    };
+    let harness = TrafficHarness::new(&manifest, spec, 99).expect("harness");
+    let report = harness.run(&coord, &ReplayOptions::default()).expect("replay");
+
+    assert_eq!(report.calls, 600);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.problems.iter().map(|p| p.calls).sum::<usize>(), 600);
+    assert_eq!(report.problems.len(), 3, "all three sizes activated by churn");
+    // churned-in problems arrive later
+    assert!(report.problems[0].first_arrival_ms <= report.problems[2].first_arrival_ms);
+    assert!(report.p99_us >= report.p50_us);
+    // tuned-state series: starts at zero, never shrinks, ends at the
+    // exported-problem count
+    assert_eq!(report.tuned_series.first().expect("series").1, 0);
+    for w in report.tuned_series.windows(2) {
+        assert!(w[1].1 >= w[0].1, "published entries never retract");
+    }
+    assert_eq!(report.tuned_series.last().expect("series").1, report.tuned_problems);
+    assert!(report.tuned_state_bytes > 0);
+    // every problem saw enough traffic to tune on the fast mock
+    assert_eq!(report.untuned_problems, 0, "report: {report:?}");
+}
+
+/// The same spec + seed replays the identical workload — the property
+/// every A/B comparison rests on.
+#[test]
+fn trace_is_reproducible_across_harnesses() {
+    let manifest = synthetic_manifest("kern", 2, &[8]).expect("manifest");
+    let spec = TrafficSpec { calls: 400, ..TrafficSpec::default() };
+    let a = TrafficHarness::new(&manifest, spec.clone(), 5).expect("harness a");
+    let b = TrafficHarness::new(&manifest, spec, 5).expect("harness b");
+    assert_eq!(a.trace(), b.trace());
+    let c = TrafficHarness::new(
+        &manifest,
+        TrafficSpec { seed: 43, calls: 400, ..TrafficSpec::default() },
+        5,
+    )
+    .expect("harness c");
+    assert_ne!(a.trace(), c.trace());
+}
+
+/// Mini production run on the native engine: real kernels, background
+/// exploration, drift injection through the interference handle. The
+/// serving stack must stay error-free and end up tuned.
+#[test]
+fn native_mini_replay_with_drift_injection() {
+    let factory = Arc::new(NativeEngineFactory::pinned());
+    let fault: NativeFault = factory.fault();
+    let leader_factory: Arc<dyn EngineFactory> = factory.clone();
+    let opts = ServerOptions {
+        pool: Some(PoolOptions::new(factory).with_workers(2)),
+        explore_budget: Some(
+            ExploreOptions::percent(30.0).with_window(Duration::from_millis(25)),
+        ),
+        drift: Some(DriftPolicy {
+            window: Duration::from_millis(50),
+            min_samples: 8,
+            cooldown: Duration::from_millis(250),
+            ..DriftPolicy::default()
+        }),
+        ..ServerOptions::default()
+    };
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = native_manifest(&[48], &[8192])?;
+            Ok(Dispatcher::new(KernelRegistry::new(manifest), leader_factory.create()?))
+        },
+        opts,
+    )
+    .expect("coordinator");
+    let manifest = native_manifest(&[48], &[8192]).expect("manifest");
+    let spec = TrafficSpec {
+        calls: 500,
+        rps: 2500.0,
+        initial: 3,
+        churn_every: 0,
+        drift_at: 0.5,
+        clients: 3,
+        ..TrafficSpec::default()
+    };
+    let harness = TrafficHarness::new(&manifest, spec, 0xCAFE).expect("harness");
+    let inject = fault.clone();
+    let opts = ReplayOptions {
+        drift_inject: Some(Arc::new(move || inject.slow_down("matmul", 2))),
+        ..ReplayOptions::default()
+    };
+    let report = harness.run(&coord, &opts).expect("replay");
+    fault.clear();
+
+    assert_eq!(report.calls, 500);
+    assert_eq!(report.errors, 0, "native serving must be error-free: {report:?}");
+    assert_eq!(report.problems.len(), 3, "matmul + saxpy + reduce all active");
+    assert!(report.drift_fired_ms.is_some(), "injection claimed exactly once");
+    assert!(
+        report.duty_cycle_pct.is_some(),
+        "background explore stats present in the report"
+    );
+    assert!(report.p50_us > 0.0 && report.p99_us.is_finite());
+}
+
+/// The CLI spec string round-trips into the harness (the `jitune run
+/// --traffic <spec>` path).
+#[test]
+fn parsed_spec_drives_harness() {
+    let manifest = synthetic_manifest("kern", 2, &[8]).expect("manifest");
+    let spec = TrafficSpec::parse("calls=80,rps=4000,clients=2,churn=0,initial=1")
+        .expect("spec parse");
+    let coord = spawn_pooled_mock(
+        "kern",
+        2,
+        &[8],
+        MockSpec::default(),
+        2,
+        ServerOptions::default(),
+    )
+    .expect("coordinator");
+    let harness = TrafficHarness::new(&manifest, spec, 3).expect("harness");
+    let report = harness.run(&coord, &ReplayOptions::default()).expect("replay");
+    assert_eq!(report.calls, 80);
+    assert_eq!(report.errors, 0);
+    assert_eq!(report.problems.len(), 1);
+}
