@@ -1,15 +1,35 @@
 //! **Hub warm-start** — time-to-first-tuned-call and explore-iteration
-//! count for a cold process vs a process warm-started from the
+//! count for a cold process vs processes warm-started from the
 //! tuned-state hub: the fleet-scale version of the paper's Fig. 3-5
 //! amortization claim. Online tuning amortizes its overhead over one
 //! process's calls; the hub amortizes it over the *fleet* — every member
 //! after the first skips exploration entirely.
 //!
-//! Runs on the mock engine with sleep-based execution (each explore
-//! iteration really costs wall time, as a JIT compile + measurement
-//! would). An in-process broker stands in for `jitune hub serve`.
+//! Four series, all driven on the mock engine with sleep-based
+//! execution (each explore iteration really costs wall time, as a JIT
+//! compile + measurement would). An in-process broker stands in for
+//! `jitune hub serve`:
 //!
-//! Output: stdout chart + `target/figures/hub_warm_start.{csv,txt,json}`.
+//! 1. **cold** — the first member pays the full candidate sweep and
+//!    seeds the hub.
+//! 2. **warm** — fleet members spawned against the live broker adopt
+//!    the winner at spawn: zero explores each.
+//! 3. **restart** — the broker is stopped and rebound from its persist
+//!    directory; a member spawned against the *restarted* broker still
+//!    sees zero explores (durability: no acked publish was lost).
+//! 4. **shipped** — the broker's map is exported as a tuned-cache
+//!    artifact (`jitune state export`), and a hub-less process
+//!    cold-boots from that file alone: zero explores (the "ship the
+//!    cache" deployment path).
+//!
+//! Results land in `BENCH_HUB.json` at the repository root — but only
+//! from a full run: `--smoke` exercises every series with tiny knobs
+//! and never touches the committed file, and a non-finite/non-positive
+//! figure aborts the run instead of being written. No placeholder can
+//! get in silently. Explore-count assertions (cold sweeps all, every
+//! other series explores zero) hold in both modes.
+//!
+//! Also emits `target/figures/hub_warm_start.{csv,txt,json}`.
 //!
 //! Env knobs: `JITUNE_BENCH_VARIANTS` (candidate count, default 8),
 //! `JITUNE_BENCH_EXEC_US` (per-iteration execution sleep, default 300),
@@ -18,7 +38,10 @@
 use std::time::{Duration, Instant};
 
 use jitune::coordinator::{CallRoute, Coordinator, Dispatcher, KernelRegistry, ServerOptions};
-use jitune::hub::{HubOptions, HubServer};
+use jitune::hub::{
+    artifact_json, BrokerOptions, HubClient, HubOptions, HubServer, HubStopHandle, PersistOptions,
+    ReplayReport,
+};
 use jitune::report::Figure;
 use jitune::runtime::mock::{MockEngine, MockSpec};
 use jitune::tensor::HostTensor;
@@ -30,9 +53,33 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn spawn_member(socket: &std::path::Path, variants: usize, exec_us: u64) -> Coordinator {
-    // variant i costs (i+1) * exec_us: a real spread for the sweep to
-    // rank; v0 is the eventual winner
+/// A broker we can stop and rebind, as `jitune hub serve` restarting.
+struct Broker {
+    stop: HubStopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    replay: ReplayReport,
+}
+
+impl Broker {
+    fn start(opts: BrokerOptions) -> Broker {
+        let server = HubServer::bind_with(opts).expect("bind hub");
+        let replay = server.replay_report();
+        let stop = server.stop_handle();
+        let join = Some(server.spawn());
+        Broker { stop, join, replay }
+    }
+
+    fn shutdown(mut self) {
+        self.stop.stop();
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// Variant i costs (i+1) * exec_us: a real spread for the sweep to
+/// rank; v0 is the eventual winner.
+fn member_spec(variants: usize, exec_us: u64) -> MockSpec {
     let mut spec = MockSpec::default().with_sleep_exec();
     for i in 0..variants {
         spec = spec.with_cost(
@@ -40,6 +87,11 @@ fn spawn_member(socket: &std::path::Path, variants: usize, exec_us: u64) -> Coor
             Duration::from_micros((i as u64 + 1) * exec_us),
         );
     }
+    spec
+}
+
+fn spawn_member(socket: &std::path::Path, variants: usize, exec_us: u64) -> Coordinator {
+    let spec = member_spec(variants, exec_us);
     let hub = HubOptions::at(socket);
     Coordinator::spawn_with_options(
         move || {
@@ -50,6 +102,23 @@ fn spawn_member(socket: &std::path::Path, variants: usize, exec_us: u64) -> Coor
         ServerOptions { hub: Some(hub), ..ServerOptions::default() },
     )
     .expect("spawn coordinator")
+}
+
+/// A hub-less process booting from a shipped cache artifact alone.
+fn spawn_shipped(artifact: &std::path::Path, variants: usize, exec_us: u64) -> Coordinator {
+    let spec = member_spec(variants, exec_us);
+    let artifact = artifact.to_path_buf();
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", variants, &[8])?;
+            let registry = KernelRegistry::new(manifest);
+            let mut d = Dispatcher::new(registry, Box::new(MockEngine::new(spec)));
+            d.load_state(&artifact)?;
+            Ok(d)
+        },
+        ServerOptions::default(),
+    )
+    .expect("spawn shipped-cache coordinator")
 }
 
 /// Drive one member to its first steady-state call; returns
@@ -77,24 +146,38 @@ fn time_to_tuned(coord: &Coordinator) -> (f64, i64, usize) {
     (dt, explored, calls)
 }
 
+/// Abort instead of emitting a figure that is not a real measurement.
+fn require_real(figures: &[(&str, f64)]) {
+    for (label, v) in figures {
+        assert!(
+            v.is_finite() && *v > 0.0,
+            "refusing to emit placeholder output: {label} = {v} is not a real measurement"
+        );
+    }
+}
+
 fn main() {
     jitune::util::logging::init();
-    let variants = env_usize("JITUNE_BENCH_VARIANTS", 8);
-    let exec_us = env_usize("JITUNE_BENCH_EXEC_US", 300) as u64;
-    let fleet = env_usize("JITUNE_BENCH_FLEET", 4);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let variants = env_usize("JITUNE_BENCH_VARIANTS", if smoke { 4 } else { 8 });
+    let exec_us = env_usize("JITUNE_BENCH_EXEC_US", if smoke { 60 } else { 300 }) as u64;
+    let fleet = env_usize("JITUNE_BENCH_FLEET", if smoke { 2 } else { 4 });
     println!(
         "== hub warm-start: time to first tuned call, cold vs hub-warmed \
-         ({variants} variants, {exec_us}us exec, fleet of {fleet}) =="
+         ({variants} variants, {exec_us}us exec, fleet of {fleet}{}) ==",
+        if smoke { ", smoke" } else { "" }
     );
 
     let socket = jitune::testutil::temp_path("hub-bench", "sock");
-    HubServer::bind(&socket).expect("bind hub").spawn();
+    let persist_dir = jitune::testutil::temp_path("hub-bench-persist", "d");
+    let broker_opts = BrokerOptions::unix(&socket).with_persist(PersistOptions::at(&persist_dir));
+    let broker = Broker::start(broker_opts.clone());
 
     // member 0 is cold: it pays the full sweep and seeds the hub
     let cold = spawn_member(&socket, variants, exec_us);
     let (cold_s, cold_explored, cold_calls) = time_to_tuned(&cold);
     println!(
-        "  cold   explores={cold_explored:<3} calls={cold_calls:<3} \
+        "  cold     explores={cold_explored:<3} calls={cold_calls:<3} \
          time_to_tuned={:.1}ms",
         cold_s * 1e3
     );
@@ -117,7 +200,7 @@ fn main() {
         let member = spawn_member(&socket, variants, exec_us);
         let (warm_s, warm_explored, warm_calls) = time_to_tuned(&member);
         println!(
-            "  warm#{i} explores={warm_explored:<3} calls={warm_calls:<3} \
+            "  warm#{i}   explores={warm_explored:<3} calls={warm_calls:<3} \
              time_to_tuned={:.1}ms",
             warm_s * 1e3
         );
@@ -135,6 +218,62 @@ fn main() {
             ("time_to_tuned_ms".into(), n(warm_s * 1e3)),
         ]));
     }
+    drop(cold);
+
+    // restart series: bounce the broker and rebind it from its persist
+    // directory; a fresh member against the restarted broker must still
+    // warm-start — no acked publish may be lost.
+    broker.shutdown();
+    let broker = Broker::start(broker_opts);
+    let replayed = broker.replay.snapshot_entries + broker.replay.log_records;
+    assert!(replayed > 0, "restarted broker must replay the seeded entries");
+    let member = spawn_member(&socket, variants, exec_us);
+    let (restart_s, restart_explored, restart_calls) = time_to_tuned(&member);
+    println!(
+        "  restart  explores={restart_explored:<3} calls={restart_calls:<3} \
+         time_to_tuned={:.1}ms  (broker bounced, {replayed} records replayed)",
+        restart_s * 1e3
+    );
+    assert_eq!(restart_explored, 0, "a broker restart must not cost the fleet a re-sweep");
+    rows.push(vec![
+        "restart".to_string(),
+        restart_explored.to_string(),
+        format!("{:.3}", restart_s * 1e3),
+    ]);
+    results.push(Value::Obj(vec![
+        ("mode".into(), s("restart")),
+        ("explores".into(), n(restart_explored as f64)),
+        ("time_to_tuned_ms".into(), n(restart_s * 1e3)),
+    ]));
+    drop(member);
+
+    // shipped series: export the broker's map as a cache artifact and
+    // cold-boot a hub-less process from the file alone.
+    let artifact = jitune::testutil::temp_path("hub-bench-cache", "json");
+    let entries = HubClient::connect(HubOptions::at(&socket))
+        .expect("connect for export")
+        .pull_all()
+        .expect("pull for export");
+    jitune::util::atomic_write(&artifact, &artifact_json(&entries).to_json_pretty())
+        .expect("write cache artifact");
+    let shipped = spawn_shipped(&artifact, variants, exec_us);
+    let (ship_s, ship_explored, ship_calls) = time_to_tuned(&shipped);
+    println!(
+        "  shipped  explores={ship_explored:<3} calls={ship_calls:<3} \
+         time_to_tuned={:.1}ms  (cold boot from exported artifact, no hub)",
+        ship_s * 1e3
+    );
+    assert_eq!(ship_explored, 0, "a cold boot from a shipped cache artifact explores nothing");
+    rows.push(vec![
+        "shipped".to_string(),
+        ship_explored.to_string(),
+        format!("{:.3}", ship_s * 1e3),
+    ]);
+    results.push(Value::Obj(vec![
+        ("mode".into(), s("shipped")),
+        ("explores".into(), n(ship_explored as f64)),
+        ("time_to_tuned_ms".into(), n(ship_s * 1e3)),
+    ]));
 
     let warm_mean_s = warm_total_s / fleet as f64;
     let speedup = if warm_mean_s > 0.0 { cold_s / warm_mean_s } else { 0.0 };
@@ -155,11 +294,73 @@ fn main() {
         series: vec![
             Series::new("cold", vec![(0.0, cold_s * 1e3)]),
             Series::new("warm", warm_points),
+            Series::new("restart", vec![(0.0, restart_s * 1e3)]),
+            Series::new("shipped", vec![(0.0, ship_s * 1e3)]),
         ],
         log_y: false,
     };
     let rendered = fig.emit().expect("emit");
     println!("{rendered}");
+
+    broker.shutdown();
+    let _ = std::fs::remove_file(&socket);
+    let _ = std::fs::remove_file(&artifact);
+    let _ = std::fs::remove_dir_all(&persist_dir);
+
+    if smoke {
+        // The PR gate proves every series runs end to end (the explore
+        // counts asserted above are exact in any mode); tiny knobs make
+        // the timings meaningless, and the committed file must only
+        // ever hold full-run measurements.
+        println!("smoke mode: skipping BENCH_HUB.json write.");
+        println!("hub_warm_start done.");
+        return;
+    }
+
+    require_real(&[
+        ("cold time_to_tuned_ms", cold_s * 1e3),
+        ("warm mean time_to_tuned_ms", warm_mean_s * 1e3),
+        ("restart time_to_tuned_ms", restart_s * 1e3),
+        ("shipped time_to_tuned_ms", ship_s * 1e3),
+        ("speedup_to_tuned", speedup),
+        ("replayed records", replayed as f64),
+    ]);
+
+    let json = Value::Obj(vec![
+        ("bench".into(), s("hub_warm_start")),
+        ("smoke".into(), Value::Bool(false)),
+        (
+            "config".into(),
+            Value::Obj(vec![
+                ("engine".into(), s("mock(sleep)")),
+                ("variants".into(), n(variants as f64)),
+                ("exec_us".into(), n(exec_us as f64)),
+                ("fleet".into(), n(fleet as f64)),
+            ]),
+        ),
+        (
+            "summary".into(),
+            Value::Obj(vec![
+                ("cold_ms".into(), n(cold_s * 1e3)),
+                ("warm_mean_ms".into(), n(warm_mean_s * 1e3)),
+                ("restart_ms".into(), n(restart_s * 1e3)),
+                ("shipped_ms".into(), n(ship_s * 1e3)),
+                ("speedup_to_tuned".into(), n(speedup)),
+                ("cold_explores".into(), n(cold_explored as f64)),
+                ("warm_explores".into(), n(0.0)),
+                ("restart_explores".into(), n(restart_explored as f64)),
+                ("shipped_explores".into(), n(ship_explored as f64)),
+                ("replayed_records".into(), n(replayed as f64)),
+            ]),
+        ),
+        ("results".into(), Value::Arr(results.clone())),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_HUB.json");
+    jitune::util::atomic_write(&out, &json.to_json_pretty()).expect("write bench json");
+    println!("wrote {}", out.display());
 
     let report = Value::Obj(vec![
         ("bench".into(), s("hub_warm_start")),
@@ -173,5 +374,5 @@ fn main() {
     jitune::report::write_figure_file("hub_warm_start.json", &report.to_json_pretty())
         .expect("json");
     println!("wrote target/figures/hub_warm_start.{{csv,txt,json}}");
-    let _ = std::fs::remove_file(&socket);
+    println!("hub_warm_start done.");
 }

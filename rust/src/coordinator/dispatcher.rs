@@ -287,6 +287,62 @@ impl Dispatcher {
         Ok((adopted, skipped))
     }
 
+    /// Compile every adopted-but-unfinalized winner right now, so the
+    /// first call of each warm-started problem is served from the
+    /// instantiation cache instead of paying the winner's one JIT
+    /// compilation. Pool-aware: finalization flows through the same
+    /// `publish_winner` path as a caller finalize, so with thread-pinned
+    /// engines the winner is replicated onto the worker pool and the
+    /// fast-lane entry is live before the first request arrives.
+    /// Returns (compiled, failed).
+    pub fn prewarm_tuned(&mut self) -> (usize, usize) {
+        // Stage (kernel, input shapes) first: the registry borrow must
+        // not overlap the mutable plan/tuner calls below.
+        let mut pending: Vec<(String, Vec<Vec<usize>>)> = Vec::new();
+        let mut failed = 0;
+        for problem in &self.registry.manifest().problems {
+            let key = ProblemKey::for_problem(problem);
+            let Some(state) = self.tuner.peek(&key) else { continue };
+            if state.pending_winner().is_none() {
+                continue;
+            }
+            match problem.variants[0].input_shapes() {
+                Ok(shapes) => pending.push((problem.kernel.clone(), shapes)),
+                Err(e) => {
+                    log::warn!("prewarm: cannot derive input shapes for {key}: {e}");
+                    failed += 1;
+                }
+            }
+        }
+        let mut ok = 0;
+        for (kernel, shapes) in pending {
+            let inputs: Vec<HostTensor> = shapes.iter().map(|s| HostTensor::zeros(s)).collect();
+            let (hash, slot) = match self.plan_slot(&kernel, &inputs) {
+                Ok(id) => id,
+                Err(e) => {
+                    log::warn!("prewarm: cannot plan {kernel}: {e}");
+                    failed += 1;
+                    continue;
+                }
+            };
+            // Re-read the winner through the registered plan: plan_slot
+            // may have raced nothing (leader-only), but the state could
+            // have been confirmed by an earlier iteration of this loop
+            // if two manifest problems share a key.
+            let winner = {
+                let plan = &self.plans[&hash][slot];
+                self.tuner.peek(&plan.key).and_then(|s| s.pending_winner())
+            };
+            let Some(winner) = winner else { continue };
+            if self.finalize_pending(hash, slot, winner, "at prewarm") {
+                ok += 1;
+            } else {
+                failed += 1;
+            }
+        }
+        (ok, failed)
+    }
+
     /// Publish the problem's confirmed winner to the hub. A winner the
     /// hub already holds is *re-asserted at its known version* rather
     /// than skipped: on a healthy broker that merges as `Stale` (no
@@ -1084,6 +1140,16 @@ impl Dispatcher {
     /// accounting must keep holding); the work shows up in the
     /// `background` stats block instead.
     fn background_finalize(&mut self, hash: u64, slot: usize, winner: usize) {
+        self.finalize_pending(hash, slot, winner, "in background");
+    }
+
+    /// Caller-less finalization shared by the background scheduler and
+    /// the spawn-time prewarm: losers evicted, the winner compiled into
+    /// the instantiation cache, state confirmed, fast-lane + hub
+    /// publication. A winner that fails to compile is demoted via
+    /// `candidate_failed`, exactly like the caller-path finalize.
+    /// Returns whether the winner compiled.
+    fn finalize_pending(&mut self, hash: u64, slot: usize, winner: usize, how: &str) -> bool {
         let (key, variant, all_ids) = {
             let plan = &self.plans[&hash][slot];
             let problem = &self.registry.manifest().problems[plan.problem_idx];
@@ -1100,12 +1166,14 @@ impl Dispatcher {
                 self.tuner.state(&key, &[]).confirm_finalized(winner);
                 self.publish_winner(hash, slot);
                 self.hub_publish(hash, slot);
-                log::info!("{key} tuned in background: value={} ({})", variant.value, variant.id);
+                log::info!("{key} tuned {how}: value={} ({})", variant.value, variant.id);
+                true
             }
             Err(e) => {
-                log::warn!("winner {} failed background finalization: {e}", variant.id);
+                log::warn!("winner {} failed finalization ({how}): {e}", variant.id);
                 self.stats.failure(&variant.kernel);
                 self.candidate_failed(hash, slot, winner);
+                false
             }
         }
     }
@@ -1432,18 +1500,17 @@ impl Dispatcher {
         Ok(n)
     }
 
-    /// Warm-start from persisted tuning results. Entries are validated
-    /// against the live manifest: a problem whose candidate values
-    /// changed since the state was saved is skipped (stale results must
-    /// not be trusted across artifact regenerations). Returns
-    /// (imported, skipped).
+    /// Warm-start from persisted tuning results — a plain `save_state`
+    /// array or a `jitune state export` cache artifact. Entries are
+    /// validated against the live manifest: a problem whose candidate
+    /// values changed since the state was saved is skipped (stale
+    /// results must not be trusted across artifact regenerations).
+    /// Returns (imported, skipped).
     pub fn load_state(&mut self, path: &std::path::Path) -> Result<(usize, usize)> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| Error::io(path.display().to_string(), e))?;
         let parsed = crate::util::json::parse(&text)?;
-        let arr = parsed
-            .as_arr()
-            .ok_or_else(|| Error::Autotune("state file: expected array".into()))?;
+        let arr = crate::hub::state_entry_values(&parsed)?;
         let mut valid = Vec::new();
         let mut skipped = 0;
         for entry in arr {

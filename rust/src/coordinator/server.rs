@@ -13,6 +13,7 @@
 //! "compilation is protected by a mutex" guarantee and keeps the tuner
 //! observing executions under real cross-request contention.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -24,7 +25,7 @@ use crate::coordinator::drift::DriftPolicy;
 use crate::coordinator::fastlane::FastLane;
 use crate::coordinator::pool::{PoolOptions, PoolSnapshot, WorkerPool};
 use crate::error::{Error, Result};
-use crate::hub::{HubClient, HubOptions};
+use crate::hub::{HubClient, HubOptions, HubSubscriber};
 use crate::tensor::HostTensor;
 use crate::util::json::Value;
 
@@ -60,6 +61,10 @@ enum Request {
     /// Internal: one background explore job's outcome, forwarded from
     /// the explore-worker reply channel onto the leader queue.
     ExploreDone(ExploreResult),
+    /// Internal: the hub notifier thread saw a pushed update — pull the
+    /// broker's map now instead of waiting for the next pull tick.
+    /// Coalesced per scheduling round (N queued notifies → one pull).
+    HubNotify,
     Shutdown,
 }
 
@@ -290,9 +295,21 @@ pub struct ServerOptions {
     /// serving. An unreachable broker degrades to a warning — serving
     /// never depends on hub liveness — and, when `pull_interval` is
     /// set, the connection is re-attempted on pull ticks so a broker
-    /// that starts late still gets joined. `None` keeps the
+    /// that starts late still gets joined. With
+    /// [`HubOptions::subscribe`] a notifier thread receives broker
+    /// pushes and triggers an immediate pull — push-first propagation,
+    /// with `pull_interval` as the fallback. `None` keeps the
     /// process-local behaviour exactly.
     pub hub: Option<HubOptions>,
+    /// Compile hub-adopted (and state-file-imported) winners at spawn:
+    /// after the hub warm start, every problem sitting in `Finalizing`
+    /// with a pending winner is finalized immediately — compiled on the
+    /// leader, replicated across the worker pool when one is attached,
+    /// and published to the fast lane — so a freshly booted replica
+    /// serves tuned traffic from its *first* call instead of paying the
+    /// winner's compile on it. `false` (the default) defers that
+    /// compile to first use, exactly as before.
+    pub prewarm: bool,
     /// Background shadow exploration (the serve/explore split — see
     /// [`crate::coordinator::background`]). `Some(opts)` means callers
     /// never pay exploration: anything not yet tuned serves the
@@ -314,6 +331,7 @@ impl Default for ServerOptions {
             pool: None,
             drift: None,
             hub: None,
+            prewarm: false,
             explore_budget: None,
         }
     }
@@ -332,6 +350,10 @@ pub struct Coordinator {
     /// (the leader's scheduler + drained jobs) has dropped, joined at
     /// shutdown.
     forwarder: Option<JoinHandle<()>>,
+    /// Hub push-notify subscriber thread (see `HubOptions::subscribe`);
+    /// stopped via `notifier_stop` and joined at shutdown.
+    notifier: Option<JoinHandle<()>>,
+    notifier_stop: Arc<AtomicBool>,
 }
 
 impl Coordinator {
@@ -399,6 +421,8 @@ impl Coordinator {
             None
         };
         let hub_opts = opts.hub.clone();
+        let notify_opts = opts.hub.clone().filter(|h| h.subscribe);
+        let prewarm = opts.prewarm;
         let pull_every = hub_opts
             .as_ref()
             .and_then(|h| h.pull_interval)
@@ -523,6 +547,20 @@ impl Coordinator {
                                 }
                             }
                         }
+                        // Pre-replication: compile adopted winners (hub
+                        // warm start and/or a state file loaded by the
+                        // factory) before the first call arrives. Runs
+                        // before readiness so spawn() returning means
+                        // "tuned traffic serves tuned from call one".
+                        if prewarm {
+                            let (compiled, failed) = d.prewarm_tuned();
+                            if compiled + failed > 0 {
+                                log::info!(
+                                    "prewarm: compiled {compiled} adopted winner(s) at \
+                                     spawn ({failed} failed)"
+                                );
+                            }
+                        }
                         let _ = ready_tx.send(Ok(()));
                         d
                     }
@@ -618,6 +656,7 @@ impl Coordinator {
                     // batches, flushed around each Retune.
                     let mut calls: Vec<Deferred> = Vec::new();
                     let mut shutdown = false;
+                    let mut hub_notified = false;
                     for req in round {
                         match req {
                             Request::Call { kernel, inputs, reply } => {
@@ -684,7 +723,21 @@ impl Coordinator {
                             Request::ExploreDone(result) => {
                                 dispatcher.background_report(result);
                             }
+                            Request::HubNotify => hub_notified = true,
                             Request::Shutdown => shutdown = true,
+                        }
+                    }
+                    // Push-notified pull: one pull per round no matter
+                    // how many notifies queued, and *before* the fused
+                    // call dispatch so calls in this round already see
+                    // freshly adopted winners.
+                    if hub_notified && dispatcher.hub_active() {
+                        match dispatcher.hub_pull() {
+                            Ok((adopted, _)) if adopted > 0 => {
+                                log::debug!("hub: push-notified pull adopted {adopted}")
+                            }
+                            Ok(_) => {}
+                            Err(e) => log::warn!("hub: push-notified pull failed: {e}"),
                         }
                     }
                     // Fused dispatch: runs of same-kernel calls go down
@@ -738,7 +791,84 @@ impl Coordinator {
             }
             return Err(e);
         }
-        Ok(Coordinator { tx, join: Some(join), fast_lane: lane, pool, shadow_pool, forwarder })
+        // Hub push-notify: a dedicated thread holds the subscribed
+        // connection and nudges the leader (Request::HubNotify) on every
+        // broker push. Reconnects with bounded backoff; checks its stop
+        // flag between waits so shutdown stays prompt. Its failure to
+        // spawn degrades propagation to the pull fallback — never the
+        // coordinator.
+        let notifier_stop = Arc::new(AtomicBool::new(false));
+        let notifier = match notify_opts {
+            None => None,
+            Some(sub_opts) => {
+                let stop = Arc::clone(&notifier_stop);
+                let notify_tx = tx.clone();
+                let spawned = std::thread::Builder::new().name("jitune-hub-notify".into()).spawn(
+                    move || {
+                        // single connect attempt per cycle: the backoff
+                        // loop below owns the retry cadence (and the
+                        // stop checks)
+                        let once = HubOptions { connect_retries: 0, ..sub_opts };
+                        loop {
+                            if stop.load(Ordering::Acquire) {
+                                return;
+                            }
+                            if let Ok(mut sub) = HubSubscriber::connect(&once) {
+                                // the snapshot itself is adopted through
+                                // the leader's validated pull; one nudge
+                                // covers pushes missed while disconnected
+                                let _ = sub.take_initial();
+                                if notify_tx.send(Request::HubNotify).is_err() {
+                                    return;
+                                }
+                                loop {
+                                    if stop.load(Ordering::Acquire) {
+                                        return;
+                                    }
+                                    match sub.next(Duration::from_millis(200)) {
+                                        Ok(None) => continue,
+                                        Ok(Some(_)) => {
+                                            if notify_tx.send(Request::HubNotify).is_err() {
+                                                return;
+                                            }
+                                        }
+                                        Err(e) => {
+                                            log::debug!(
+                                                "hub: push channel lost ({e}); resubscribing"
+                                            );
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                            for _ in 0..10 {
+                                if stop.load(Ordering::Acquire) {
+                                    return;
+                                }
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                        }
+                    },
+                );
+                match spawned {
+                    Ok(handle) => Some(handle),
+                    Err(e) => {
+                        log::warn!("hub: notifier spawn failed ({e}); falling back to pulls");
+                        None
+                    }
+                }
+            }
+        };
+        Ok(Coordinator {
+            tx,
+            join: Some(join),
+            fast_lane: lane,
+            pool,
+            shadow_pool,
+            forwarder,
+            notifier,
+            notifier_stop,
+        })
     }
 
     /// A new handle for this coordinator.
@@ -756,9 +886,15 @@ impl Coordinator {
     /// the scheduler's reply sender) is gone and the pools have dropped
     /// their queued jobs, its channel disconnects and it exits.
     pub fn shutdown(&mut self) {
+        // flag the notifier first so it winds down while the leader
+        // drains; it is joined after the leader below
+        self.notifier_stop.store(true, Ordering::Release);
         let _ = self.tx.send(Request::Shutdown);
         if let Some(join) = self.join.take() {
             let _ = join.join();
+        }
+        if let Some(notifier) = self.notifier.take() {
+            let _ = notifier.join();
         }
         if let Some(pool) = &self.pool {
             pool.stop();

@@ -1,19 +1,23 @@
 //! Hub client: connect-with-retry plus a tiny request/reply layer with
-//! one transparent reconnect per request.
+//! one transparent reconnect per request, and a push subscriber
+//! ([`HubSubscriber`]) that receives broker updates without polling.
 
-use std::os::unix::net::UnixStream;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 use std::time::Duration;
 
 use crate::error::Result;
 
-use super::protocol::{proto_err, read_frame, write_frame, Frame, HubEntry, PROTOCOL_VERSION};
+use super::protocol::{
+    proto_err, read_frame, write_frame, Frame, HubEntry, MAX_FRAME_BYTES, PROTOCOL_VERSION,
+};
+use super::transport::{HubAddr, HubStream};
 
 /// Hub connection configuration (`ServerOptions { hub: Some(..) }`).
 #[derive(Debug, Clone)]
 pub struct HubOptions {
-    /// Unix-domain socket the broker listens on.
-    pub socket: PathBuf,
+    /// Broker address: Unix socket ([`HubOptions::at`]) or TCP
+    /// ([`HubOptions::tcp`]).
+    pub addr: HubAddr,
     /// Connection attempts before giving up (covers the race of a fleet
     /// starting alongside its broker).
     pub connect_retries: u32,
@@ -23,23 +27,39 @@ pub struct HubOptions {
     /// the leader thread.
     pub io_timeout: Duration,
     /// Periodically pull the tuned map and adopt newer winners while
-    /// serving. `None` pulls only at startup (plus explicit
+    /// serving. With push-notify subscribed this is the *fallback*
+    /// propagation path; `None` pulls only at startup (plus explicit
     /// `hub_pull` calls).
     pub pull_interval: Option<Duration>,
+    /// Subscribe a push channel: the broker pushes every accepted
+    /// publish, and the coordinator pulls on each push instead of
+    /// waiting for the next `pull_interval` tick.
+    pub subscribe: bool,
     /// Peer name sent in `Hello` (diagnostics only).
     pub peer: String,
 }
 
 impl HubOptions {
-    /// Defaults for a broker at `socket`: 40 × 25ms connect budget
-    /// (~1s), 5s io timeout, no periodic pull.
+    /// Defaults for a broker at a Unix socket: 40 × 25ms connect budget
+    /// (~1s), 5s io timeout, no periodic pull, no push subscription.
     pub fn at(socket: impl AsRef<Path>) -> HubOptions {
+        HubOptions::for_addr(HubAddr::Unix(socket.as_ref().to_path_buf()))
+    }
+
+    /// Same defaults for a broker at a TCP `host:port`.
+    pub fn tcp(addr: impl Into<String>) -> HubOptions {
+        HubOptions::for_addr(HubAddr::Tcp(addr.into()))
+    }
+
+    /// Defaults for an already-parsed address.
+    pub fn for_addr(addr: HubAddr) -> HubOptions {
         HubOptions {
-            socket: socket.as_ref().to_path_buf(),
+            addr,
             connect_retries: 40,
             retry_delay: Duration::from_millis(25),
             io_timeout: Duration::from_secs(5),
             pull_interval: None,
+            subscribe: false,
             peer: format!("jitune-{}", std::process::id()),
         }
     }
@@ -58,7 +78,7 @@ pub struct PublishAck {
 /// A connected hub client.
 pub struct HubClient {
     opts: HubOptions,
-    stream: UnixStream,
+    stream: HubStream,
     generation: u64,
 }
 
@@ -76,8 +96,9 @@ impl HubClient {
 
     /// Connection generation: bumped every time the client had to redial
     /// after a dead stream. A change signals the broker may have
-    /// restarted (and, being in-memory, lost its map) — callers caching
-    /// per-entry versions must drop that cache and resynchronize.
+    /// restarted (and, unless persistent, lost its map) — callers
+    /// caching per-entry versions must drop that cache and
+    /// resynchronize.
     pub fn generation(&self) -> u64 {
         self.generation
     }
@@ -115,7 +136,7 @@ impl HubClient {
                 // the stream (the next request would read *this* one's
                 // answer): kill the stream so the next request starts
                 // from a clean redial instead of a stale frame
-                let _ = self.stream.shutdown(std::net::Shutdown::Both);
+                self.stream.shutdown();
                 Err(e)
             }
             Err(first) => {
@@ -130,11 +151,104 @@ impl HubClient {
     /// Test hook: kill the live stream to exercise the redial path.
     #[cfg(test)]
     pub(crate) fn shutdown_stream_for_test(&mut self) {
-        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        self.stream.shutdown();
     }
 }
 
-fn round_trip(stream: &mut UnixStream, frame: &Frame) -> Result<Frame> {
+/// A push-subscribed hub connection: the broker pushes every accepted
+/// publish as an `Update` frame. Built for a dedicated notifier thread
+/// — [`HubSubscriber::next`] polls with a bounded wait so the thread
+/// can check its stop flag between frames, and partial frames survive
+/// across calls (a timeout mid-frame resumes cleanly).
+pub struct HubSubscriber {
+    stream: HubStream,
+    pending: Vec<u8>,
+    initial: Vec<HubEntry>,
+}
+
+impl HubSubscriber {
+    /// Connect (with retry), shake hands, and subscribe. The broker
+    /// replies with its full map, retrievable once via
+    /// [`HubSubscriber::take_initial`].
+    pub fn connect(opts: &HubOptions) -> Result<HubSubscriber> {
+        let mut stream = dial(opts, opts.connect_retries)?;
+        write_frame(&mut stream, &Frame::Subscribe { peer: opts.peer.clone() })?;
+        // the broker registers the push channel before replying, so an
+        // Update can legitimately overtake the Subscribed frame
+        let mut early: Vec<HubEntry> = Vec::new();
+        let mut initial = loop {
+            match read_frame(&mut stream)? {
+                Frame::Subscribed { entries } => break entries,
+                Frame::Update { entries } => early.extend(entries),
+                other => return Err(proto_err(format!("expected subscribed, got {other:?}"))),
+            }
+        };
+        initial.extend(early);
+        Ok(HubSubscriber { stream, pending: Vec::new(), initial })
+    }
+
+    /// The broker's map as of subscription (plus any update that raced
+    /// the handshake). Empties on first call.
+    pub fn take_initial(&mut self) -> Vec<HubEntry> {
+        std::mem::take(&mut self.initial)
+    }
+
+    /// Wait up to `wait` for one pushed update. `Ok(None)` is a clean
+    /// timeout (check your stop flag and call again); an error means
+    /// the push channel is gone and the subscriber must reconnect.
+    pub fn next(&mut self, wait: Duration) -> Result<Option<Vec<HubEntry>>> {
+        self.stream
+            .set_read_timeout(Some(wait.max(Duration::from_millis(1))))
+            .map_err(|e| proto_err(format!("subscriber timeout: {e}")))?;
+        let mut chunk = [0u8; 4096];
+        loop {
+            if let Some(frame) = self.decode_buffered()? {
+                return match frame {
+                    Frame::Update { entries } => Ok(Some(entries)),
+                    other => Err(proto_err(format!("unexpected push frame {other:?}"))),
+                };
+            }
+            match std::io::Read::read(&mut self.stream, &mut chunk) {
+                Ok(0) => return Err(proto_err("push channel closed by broker")),
+                Ok(n) => self.pending.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(None)
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(crate::Error::io("hub push channel".into(), e)),
+            }
+        }
+    }
+
+    /// Decode one frame out of the partial-read buffer, if complete.
+    fn decode_buffered(&mut self) -> Result<Option<Frame>> {
+        if self.pending.len() < 4 {
+            return Ok(None);
+        }
+        let len =
+            u32::from_be_bytes([self.pending[0], self.pending[1], self.pending[2], self.pending[3]])
+                as usize;
+        if len == 0 || len > MAX_FRAME_BYTES {
+            return Err(proto_err(format!("bad push frame length {len}")));
+        }
+        if self.pending.len() < 4 + len {
+            return Ok(None);
+        }
+        let frame = {
+            let mut slice = &self.pending[..4 + len];
+            read_frame(&mut slice)?
+        };
+        self.pending.drain(..4 + len);
+        Ok(Some(frame))
+    }
+}
+
+fn round_trip(stream: &mut HubStream, frame: &Frame) -> Result<Frame> {
     write_frame(stream, frame)?;
     read_frame(stream)
 }
@@ -148,17 +262,16 @@ fn is_timeout(e: &crate::Error) -> bool {
 }
 
 /// Connect (with up to `retries` re-attempts) and shake hands.
-fn dial(opts: &HubOptions, retries: u32) -> Result<UnixStream> {
+fn dial(opts: &HubOptions, retries: u32) -> Result<HubStream> {
     let mut last: Option<std::io::Error> = None;
     for attempt in 0..=retries {
         if attempt > 0 {
             std::thread::sleep(opts.retry_delay);
         }
-        match UnixStream::connect(&opts.socket) {
+        match HubStream::connect(&opts.addr) {
             Ok(mut stream) => {
                 stream
-                    .set_read_timeout(Some(opts.io_timeout))
-                    .and_then(|()| stream.set_write_timeout(Some(opts.io_timeout)))
+                    .set_timeouts(Some(opts.io_timeout))
                     .map_err(|e| proto_err(format!("set timeout: {e}")))?;
                 let hello = Frame::Hello { protocol: PROTOCOL_VERSION, peer: opts.peer.clone() };
                 match round_trip(&mut stream, &hello)? {
@@ -168,10 +281,7 @@ fn dial(opts: &HubOptions, retries: u32) -> Result<UnixStream> {
                                 "protocol mismatch: broker v{protocol}, client v{PROTOCOL_VERSION}"
                             )));
                         }
-                        log::debug!(
-                            "hub: connected to {} ({entries} entries held)",
-                            opts.socket.display()
-                        );
+                        log::debug!("hub: connected to {} ({entries} entries held)", opts.addr);
                         return Ok(stream);
                     }
                     other => return Err(proto_err(format!("expected hello_ack, got {other:?}"))),
@@ -182,7 +292,7 @@ fn dial(opts: &HubOptions, retries: u32) -> Result<UnixStream> {
     }
     Err(proto_err(format!(
         "cannot reach broker at {} after {} attempt(s): {}",
-        opts.socket.display(),
+        opts.addr,
         retries + 1,
         last.map(|e| e.to_string()).unwrap_or_else(|| "no attempt made".into()),
     )))

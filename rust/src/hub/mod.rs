@@ -1,49 +1,93 @@
-//! Tuned-state hub: a fleet-wide warm-start service.
+//! Tuned-state hub: a fleet-wide warm-start service that survives
+//! broker restarts, spans hosts, and ships its cache.
 //!
 //! The paper's payoff is that "the programmer can obtain the optimal
 //! parameters to use them for other kernels" — but without help that
 //! knowledge dies with the process. `save_state`/`load_state` bridges
-//! runs through files; the hub bridges *processes*: a tiny std-only
-//! broker holding the fleet's tuned map, so any number of serving
-//! processes warm-start from whichever process tuned first and adopt
-//! retuned winners as they happen.
+//! runs through files; the hub bridges *processes and machines*: a tiny
+//! std-only broker holding the fleet's tuned map, so any number of
+//! serving processes warm-start from whichever process tuned first and
+//! adopt retuned winners as they happen.
 //!
 //! # Pieces
 //!
 //! * [`protocol`] — the wire format: length-prefixed JSON frames
-//!   ([`Frame`]: `Hello`/`HelloAck`/`PullAll`/`Update`/`Publish`/`Ack`)
-//!   over any byte stream, carrying [`HubEntry`] records (the same
-//!   kernel/param/signature/values/winner_value shape `save_state`
-//!   writes, plus a per-entry monotonic `version`). The merge rule is
-//!   last-writer-wins-by-version ([`merge_entry`]), shared by the broker
-//!   and the `jitune state merge` CLI.
-//! * [`server`] — [`HubServer`]: a Unix-domain-socket broker, one thread
-//!   per connection, state under a mutex. Run it with
-//!   `jitune hub serve --socket <path>` (or in-process via
-//!   [`HubServer::spawn`] for examples/tests).
+//!   ([`Frame`]: `Hello`/`HelloAck`/`PullAll`/`Update`/`Publish`/`Ack`/
+//!   `Subscribe`/`Subscribed`) over any byte stream, carrying
+//!   [`HubEntry`] records (the same kernel/param/signature/values/
+//!   winner_value shape `save_state` writes, plus a per-entry monotonic
+//!   `version`). The merge rule is last-writer-wins-by-version
+//!   ([`merge_entry`]), shared by the broker, replay, and the
+//!   `jitune state merge` CLI.
+//! * [`transport`] — [`HubAddr`]/[`HubStream`]: one address/stream type
+//!   over Unix-domain sockets (same host) and TCP (cross-host fleets);
+//!   the protocol never sees which.
+//! * [`persist`] — [`HubLog`]: the broker's durability layer. Every
+//!   accepted publish is appended to `entries.log` (`[len][crc32]
+//!   [json]` records, fsynced **before** the ack), and the log is
+//!   periodically compacted into `snapshot.json` (written via
+//!   `util::atomic_write`, which fsyncs file *and* directory). Replay
+//!   on bind folds snapshot + log through [`merge_entry`], so it is
+//!   idempotent; a torn tail record from a crash mid-append is
+//!   detected by length+checksum, logged, and truncated away.
+//! * [`server`] — [`HubServer`]: the broker. One thread per connection,
+//!   state under a mutex, configured by [`BrokerOptions`] (Unix socket
+//!   and/or TCP listener, optional [`PersistOptions`]). Run it with
+//!   `jitune hub serve --socket <path> [--listen <host:port>]
+//!   [--persist <dir>]` (or in-process via [`HubServer::spawn`];
+//!   [`HubServer::stop_handle`] winds it down cleanly). Subscribed
+//!   clients get every accepted publish *pushed* as an `Update`.
 //! * [`client`] — [`HubClient`]: connect-with-retry, one reconnect per
-//!   request, `pull_all` + `publish`. Configured by [`HubOptions`]
-//!   (socket path, retry budget, optional periodic pull interval).
+//!   request, `pull_all` + `publish`; and [`HubSubscriber`]: the push
+//!   channel. Configured by [`HubOptions`] (address, retry budget,
+//!   optional periodic pull interval, `subscribe`).
+//!
+//! # Durability model
+//!
+//! What survives a broker crash or restart: every publish that was
+//! **acked** (the ack happens after the log append is fsynced) plus
+//! everything in the last snapshot. What does not: nothing — an unacked
+//! publish is re-asserted by its publisher anyway (`hub_publish`
+//! re-publishes known winners on reconnect, and the coordinator's
+//! resync path re-seeds a broker that did come back empty).
 //!
 //! # How the coordinator uses it
 //!
 //! With `ServerOptions { hub: Some(HubOptions::at(path)) }` the leader
 //! connects at spawn, pulls the full tuned map and warm-starts every
 //! matching problem (zero explore iterations — only the winner's final
-//! compilation remains, as with `load_state`). Every finalization —
+//! compilation remains, as with `load_state`; with
+//! `ServerOptions { prewarm: true }` even that compilation happens at
+//! spawn, so the first call is already tuned). Every finalization —
 //! first tune, manual retune, drift-triggered retune — publishes the
-//! winner back; other processes adopt it on their next pull (periodic
-//! via `HubOptions::pull_interval`, or explicit via
-//! `CoordinatorHandle::hub_pull`). `stats_json()` reports pushes, pulls,
-//! adoptions and merge conflicts under `"hub"`.
+//! winner back. Propagation to other processes is push-first: with
+//! `HubOptions { subscribe: true }` a notifier thread receives broker
+//! pushes and triggers an immediate pull; `pull_interval` remains as
+//! the fallback. `stats_json()` reports pushes, pulls, adoptions and
+//! merge conflicts under `"hub"`.
 //!
-//! Everything is `std`-only: `std::os::unix::net` sockets and
-//! [`crate::util::json`] for the frames — no new dependencies.
+//! # Shipping the cache
+//!
+//! `jitune state export --hub <addr> <file>` captures the broker's map
+//! as a single versioned artifact; `jitune state import --hub <addr>
+//! <file>` publishes it into any other broker (LWW-merged), and
+//! `jitune run --state-file <file>` boots a process straight from it —
+//! tuned configurations as deployment artifacts.
+//!
+//! Everything is `std`-only: `std::os::unix::net` / `std::net` sockets
+//! and [`crate::util::json`] for the frames — no new dependencies.
 
 pub mod client;
+pub mod persist;
 pub mod protocol;
 pub mod server;
+pub mod transport;
 
-pub use client::{HubClient, HubOptions, PublishAck};
-pub use protocol::{merge_entry, read_frame, write_frame, EntryKey, Frame, HubEntry, Merge};
-pub use server::HubServer;
+pub use client::{HubClient, HubOptions, HubSubscriber, PublishAck};
+pub use persist::{HubLog, PersistOptions, ReplayReport};
+pub use protocol::{
+    artifact_json, merge_entry, read_frame, state_entry_values, write_frame, EntryKey, Frame,
+    HubEntry, Merge,
+};
+pub use server::{BrokerOptions, HubServer, HubStopHandle};
+pub use transport::{HubAddr, HubStream};

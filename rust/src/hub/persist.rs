@@ -1,0 +1,414 @@
+//! Broker persistence: an append-only entry log plus periodic snapshot
+//! compaction, so a restarted broker comes back with the fleet's
+//! winners instead of an empty map.
+//!
+//! # Durability model
+//!
+//! The persist directory holds two files:
+//!
+//! * `snapshot.json` — the full tuned map as a JSON array of entries
+//!   (the same shape `save_state` writes), rewritten atomically via
+//!   [`crate::util::atomic_write`] (tmp sibling + fsync file *and*
+//!   parent directory + rename).
+//! * `entries.log` — one record per accepted publish, appended and
+//!   `fdatasync`ed **before** the broker acks, so an acked publish is
+//!   on disk. A record is `[u32 BE body-len][u32 BE crc32(body)][body]`
+//!   where the body is the entry's JSON.
+//!
+//! Replay on [`HubLog::open`] loads the snapshot, then folds every log
+//! record through [`merge_entry`] — the same last-writer-wins rule the
+//! live broker applies, so replay is idempotent and order-tolerant. A
+//! torn tail record (crash mid-append: short header, short body, crc
+//! mismatch, or unparseable JSON) is detected, logged, and truncated
+//! away; everything before it is kept. Once the log grows past
+//! `compact_every` records, the map is snapshotted and the log reset —
+//! a crash between those two steps only re-replays records the
+//! snapshot already holds, which LWW merging absorbs.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::atomic_write;
+use crate::util::json::Value;
+
+use super::protocol::{merge_entry, EntryKey, HubEntry, MAX_FRAME_BYTES};
+
+/// Snapshot file name inside the persist directory.
+pub const SNAPSHOT_FILE: &str = "snapshot.json";
+/// Append-only log file name inside the persist directory.
+pub const LOG_FILE: &str = "entries.log";
+
+/// Bytes of record framing ahead of each body: length + checksum.
+const RECORD_HEADER: usize = 8;
+
+/// Persistence configuration for a broker.
+#[derive(Debug, Clone)]
+pub struct PersistOptions {
+    /// Directory holding `snapshot.json` + `entries.log` (created on
+    /// open).
+    pub dir: PathBuf,
+    /// Snapshot-compact the log every N appended records; 0 disables
+    /// compaction (the log grows unboundedly — tests only).
+    pub compact_every: u64,
+}
+
+impl PersistOptions {
+    /// Defaults for a persist directory: compact every 256 records.
+    pub fn at(dir: impl AsRef<Path>) -> PersistOptions {
+        PersistOptions { dir: dir.as_ref().to_path_buf(), compact_every: 256 }
+    }
+}
+
+/// What replay found when opening a persist directory.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReplayReport {
+    /// Entries restored from the snapshot.
+    pub snapshot_entries: usize,
+    /// Valid log records folded in after the snapshot.
+    pub log_records: usize,
+    /// Bytes of torn/corrupt tail discarded (0 on a clean log).
+    pub truncated_bytes: u64,
+}
+
+/// An open broker log: owns the append handle and the compaction
+/// counter. The in-memory map itself lives with the caller (the broker
+/// holds it under its own lock).
+pub struct HubLog {
+    dir: PathBuf,
+    file: File,
+    compact_every: u64,
+    records_since_snapshot: u64,
+}
+
+impl HubLog {
+    /// Open (creating if needed) a persist directory: load the
+    /// snapshot, replay the log — truncating a torn tail — and return
+    /// the restored map plus a replay report.
+    pub fn open(opts: &PersistOptions) -> Result<(HubLog, BTreeMap<EntryKey, HubEntry>, ReplayReport)> {
+        std::fs::create_dir_all(&opts.dir)
+            .map_err(|e| Error::io(opts.dir.display().to_string(), e))?;
+        let mut map = BTreeMap::new();
+        let mut report = ReplayReport::default();
+
+        let snap_path = opts.dir.join(SNAPSHOT_FILE);
+        if snap_path.exists() {
+            let text = std::fs::read_to_string(&snap_path)
+                .map_err(|e| Error::io(snap_path.display().to_string(), e))?;
+            let parsed = crate::util::json::parse(&text)?;
+            let Value::Arr(items) = &parsed else {
+                return Err(Error::Coordinator(format!(
+                    "hub snapshot {} is not a JSON array",
+                    snap_path.display()
+                )));
+            };
+            for item in items {
+                merge_entry(&mut map, HubEntry::from_json(item)?);
+            }
+            report.snapshot_entries = map.len();
+        }
+
+        let log_path = opts.dir.join(LOG_FILE);
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&log_path)
+            .map_err(|e| Error::io(log_path.display().to_string(), e))?;
+        let mut buf = Vec::new();
+        file.read_to_end(&mut buf).map_err(|e| Error::io(log_path.display().to_string(), e))?;
+
+        let mut offset = 0usize;
+        while offset < buf.len() {
+            let Some(body) = read_record(&buf[offset..]) else { break };
+            match body.and_then(parse_entry) {
+                Some(entry) => {
+                    let len = entry_len(&buf[offset..]);
+                    merge_entry(&mut map, entry);
+                    report.log_records += 1;
+                    offset += len;
+                }
+                None => break, // corrupt record: treat as torn tail
+            }
+        }
+        if offset < buf.len() {
+            report.truncated_bytes = (buf.len() - offset) as u64;
+            log::warn!(
+                "hub: {} torn/corrupt byte(s) at log tail of {} (crash mid-append); \
+                 truncating and continuing with {} replayed record(s)",
+                report.truncated_bytes,
+                log_path.display(),
+                report.log_records
+            );
+            file.set_len(offset as u64).map_err(|e| Error::io(log_path.display().to_string(), e))?;
+            file.sync_all().map_err(|e| Error::io(log_path.display().to_string(), e))?;
+        }
+        file.seek(SeekFrom::Start(offset as u64))
+            .map_err(|e| Error::io(log_path.display().to_string(), e))?;
+
+        let log = HubLog {
+            dir: opts.dir.clone(),
+            file,
+            compact_every: opts.compact_every,
+            records_since_snapshot: report.log_records as u64,
+        };
+        Ok((log, map, report))
+    }
+
+    /// Append one entry record and `fdatasync` it — callers ack the
+    /// publish only after this returns.
+    pub fn append(&mut self, entry: &HubEntry) -> Result<()> {
+        let body = entry.to_json().to_json();
+        let bytes = body.as_bytes();
+        if bytes.len() > MAX_FRAME_BYTES {
+            return Err(Error::Coordinator(format!(
+                "hub: log record too large ({} bytes)",
+                bytes.len()
+            )));
+        }
+        let log_path = self.dir.join(LOG_FILE);
+        let io = |e: std::io::Error| Error::io(log_path.display().to_string(), e);
+        self.file.write_all(&(bytes.len() as u32).to_be_bytes()).map_err(io)?;
+        self.file.write_all(&crc32(bytes).to_be_bytes()).map_err(io)?;
+        self.file.write_all(bytes).map_err(io)?;
+        self.file.sync_data().map_err(io)?;
+        self.records_since_snapshot += 1;
+        Ok(())
+    }
+
+    /// Whether the log has grown enough to warrant a snapshot compact.
+    pub fn should_compact(&self) -> bool {
+        self.compact_every > 0 && self.records_since_snapshot >= self.compact_every
+    }
+
+    /// Snapshot `entries` and reset the log. Crash-ordering: the
+    /// snapshot lands atomically first; only then is the log truncated,
+    /// so a crash in between merely re-replays records the snapshot
+    /// already contains (idempotent under LWW merge).
+    pub fn compact(&mut self, entries: &BTreeMap<EntryKey, HubEntry>) -> Result<()> {
+        let snap = Value::Arr(entries.values().map(HubEntry::to_json).collect()).to_json();
+        atomic_write(&self.dir.join(SNAPSHOT_FILE), &snap)?;
+        let log_path = self.dir.join(LOG_FILE);
+        let io = |e: std::io::Error| Error::io(log_path.display().to_string(), e);
+        self.file.set_len(0).map_err(io)?;
+        self.file.seek(SeekFrom::Start(0)).map_err(io)?;
+        self.file.sync_all().map_err(io)?;
+        self.records_since_snapshot = 0;
+        log::debug!("hub: compacted log into snapshot ({} entries)", entries.len());
+        Ok(())
+    }
+
+    /// Records appended since the last snapshot (diagnostics/tests).
+    pub fn records_since_snapshot(&self) -> u64 {
+        self.records_since_snapshot
+    }
+}
+
+/// Slice one record's body out of `buf` (which starts at a record
+/// boundary). `None` means the bytes end mid-record; `Some(None)` means
+/// a structurally complete but corrupt record (bad length or checksum).
+#[allow(clippy::option_option)]
+fn read_record(buf: &[u8]) -> Option<Option<&[u8]>> {
+    if buf.len() < RECORD_HEADER {
+        return None;
+    }
+    let len = u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Some(None);
+    }
+    if buf.len() < RECORD_HEADER + len {
+        return None;
+    }
+    let crc = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    let body = &buf[RECORD_HEADER..RECORD_HEADER + len];
+    if crc32(body) != crc {
+        return Some(None);
+    }
+    Some(Some(body))
+}
+
+/// Total on-disk length of the (valid) record at the head of `buf`.
+fn entry_len(buf: &[u8]) -> usize {
+    RECORD_HEADER + u32::from_be_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize
+}
+
+fn parse_entry(body: &[u8]) -> Option<HubEntry> {
+    let text = std::str::from_utf8(body).ok()?;
+    let value = crate::util::json::parse(text).ok()?;
+    HubEntry::from_json(&value).ok()
+}
+
+/// CRC-32 (IEEE 802.3, reflected) — the log's torn-write detector.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    const TABLE: [u32; 256] = crc32_table();
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(kernel: &str, winner: i64, version: u64) -> HubEntry {
+        HubEntry {
+            kernel: kernel.into(),
+            param: "p".into(),
+            signature: "f32[8,8]".into(),
+            values: vec![0, 1],
+            winner_value: winner,
+            version,
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = crate::testutil::temp_path(&format!("hub-persist-{tag}"), "d");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // canonical IEEE test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn append_then_reopen_restores_entries() {
+        let dir = temp_dir("roundtrip");
+        let opts = PersistOptions::at(&dir);
+        {
+            let (mut log, map, report) = HubLog::open(&opts).unwrap();
+            assert!(map.is_empty());
+            assert_eq!(report, ReplayReport::default());
+            log.append(&entry("a", 1, 1)).unwrap();
+            log.append(&entry("b", 0, 3)).unwrap();
+            log.append(&entry("a", 0, 2)).unwrap(); // newer version of `a`
+        }
+        let (_log, map, report) = HubLog::open(&opts).unwrap();
+        assert_eq!(report.log_records, 3);
+        assert_eq!(report.truncated_bytes, 0);
+        assert_eq!(map.len(), 2);
+        let a = map.values().find(|e| e.kernel == "a").unwrap();
+        assert_eq!((a.winner_value, a.version), (0, 2), "replay is LWW");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_log_stays_appendable() {
+        let dir = temp_dir("torn");
+        let opts = PersistOptions::at(&dir);
+        {
+            let (mut log, _, _) = HubLog::open(&opts).unwrap();
+            log.append(&entry("a", 1, 1)).unwrap();
+            log.append(&entry("b", 0, 1)).unwrap();
+        }
+        // crash mid-append: a partial record (length prefix promising
+        // more bytes than exist) lands at the tail
+        let log_path = dir.join(LOG_FILE);
+        let clean_len = std::fs::metadata(&log_path).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&log_path).unwrap();
+        f.write_all(&200u32.to_be_bytes()).unwrap();
+        f.write_all(&[0xAB; 10]).unwrap();
+        drop(f);
+
+        let (mut log, map, report) = HubLog::open(&opts).unwrap();
+        assert_eq!(report.log_records, 2, "records before the tear survive");
+        assert_eq!(report.truncated_bytes, 14);
+        assert_eq!(map.len(), 2);
+        assert_eq!(std::fs::metadata(&log_path).unwrap().len(), clean_len, "tail truncated");
+        // the log keeps working after recovery
+        log.append(&entry("c", 1, 1)).unwrap();
+        drop(log);
+        let (_log, map, report) = HubLog::open(&opts).unwrap();
+        assert_eq!((map.len(), report.log_records, report.truncated_bytes), (3, 3, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_checksum_tail_is_detected() {
+        let dir = temp_dir("crc");
+        let opts = PersistOptions::at(&dir);
+        {
+            let (mut log, _, _) = HubLog::open(&opts).unwrap();
+            log.append(&entry("a", 1, 1)).unwrap();
+            log.append(&entry("b", 0, 1)).unwrap();
+        }
+        // flip one byte inside the *last* record's body: the length
+        // still reads fine, only the checksum catches it
+        let log_path = dir.join(LOG_FILE);
+        let mut bytes = std::fs::read(&log_path).unwrap();
+        let last = bytes.len() - 3;
+        bytes[last] ^= 0x40;
+        std::fs::write(&log_path, &bytes).unwrap();
+
+        let (_log, map, report) = HubLog::open(&opts).unwrap();
+        assert_eq!(report.log_records, 1, "only the intact prefix replays");
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(map.len(), 1);
+        assert_eq!(map.values().next().unwrap().kernel, "a");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compaction_snapshots_and_resets_the_log() {
+        let dir = temp_dir("compact");
+        let opts = PersistOptions { dir: dir.clone(), compact_every: 3 };
+        let (mut log, mut map, _) = HubLog::open(&opts).unwrap();
+        for v in 1..=3u64 {
+            let e = entry("a", v as i64 % 2, v);
+            merge_entry(&mut map, e.clone());
+            log.append(&e).unwrap();
+        }
+        assert!(log.should_compact());
+        log.compact(&map).unwrap();
+        assert!(!log.should_compact());
+        assert_eq!(std::fs::metadata(dir.join(LOG_FILE)).unwrap().len(), 0);
+
+        // post-compaction appends land in the fresh log; reopen sees
+        // snapshot + new records
+        let e = entry("b", 1, 1);
+        merge_entry(&mut map, e.clone());
+        log.append(&e).unwrap();
+        drop(log);
+        let (_log, restored, report) = HubLog::open(&opts).unwrap();
+        assert_eq!(report.snapshot_entries, 1);
+        assert_eq!(report.log_records, 1);
+        assert_eq!(restored, map);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_compact_every_never_compacts() {
+        let dir = temp_dir("nocompact");
+        let opts = PersistOptions { dir: dir.clone(), compact_every: 0 };
+        let (mut log, _, _) = HubLog::open(&opts).unwrap();
+        for v in 1..=10u64 {
+            log.append(&entry("a", 0, v)).unwrap();
+            assert!(!log.should_compact());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -162,6 +162,51 @@ pub fn merge_entry(map: &mut BTreeMap<EntryKey, HubEntry>, mut entry: HubEntry) 
     }
 }
 
+/// Marker string identifying a `jitune state export` cache artifact.
+pub const ARTIFACT_KIND: &str = "jitune-tuned-cache";
+
+/// Artifact format version this build writes (and the newest it reads).
+pub const ARTIFACT_FORMAT: i64 = 1;
+
+/// Wrap a tuned map into the deployable cache-artifact object that
+/// `jitune state export` writes: versioned entries under a typed
+/// envelope, so an import can tell a shipped cache from an arbitrary
+/// JSON file.
+pub fn artifact_json(entries: &[HubEntry]) -> Value {
+    Value::Obj(vec![
+        ("artifact".into(), s(ARTIFACT_KIND)),
+        ("format".into(), n(ARTIFACT_FORMAT as f64)),
+        ("entries".into(), Value::Arr(entries.iter().map(HubEntry::to_json).collect())),
+    ])
+}
+
+/// The entry array of a tuned-state document, whichever shape it is: a
+/// bare JSON array (`save_state` output) or a `jitune state export`
+/// artifact object. Everything that reads tuned state — `load_state`,
+/// `state merge`, `state import` — accepts both, so a shipped cache
+/// artifact is usable anywhere a state file is.
+pub fn state_entry_values(doc: &Value) -> Result<&[Value]> {
+    if let Some(arr) = doc.as_arr() {
+        return Ok(arr);
+    }
+    match doc.get("artifact").and_then(Value::as_str) {
+        Some(ARTIFACT_KIND) => {
+            let format = doc.get("format").and_then(Value::as_i64).unwrap_or(ARTIFACT_FORMAT);
+            if format > ARTIFACT_FORMAT {
+                return Err(proto_err(format!(
+                    "cache artifact format {format} is newer than this build reads \
+                     ({ARTIFACT_FORMAT}); upgrade jitune"
+                )));
+            }
+            doc.req_arr("entries")
+        }
+        Some(kind) => Err(proto_err(format!("unknown artifact kind `{kind}`"))),
+        None => Err(Error::Autotune(
+            "state file: expected a JSON array or a jitune-tuned-cache artifact".into(),
+        )),
+    }
+}
+
 /// One protocol message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Frame {
@@ -199,6 +244,20 @@ pub enum Frame {
         /// Whether the merge was a version conflict.
         conflict: bool,
     },
+    /// Client → server: turn this connection into a push channel. After
+    /// the server replies [`Frame::Subscribed`], every accepted publish
+    /// is pushed to it as an [`Frame::Update`] — no polling.
+    Subscribe {
+        /// Human-readable peer name (diagnostics only).
+        peer: String,
+    },
+    /// Server → client: subscription accepted; carries the full tuned
+    /// map so the subscriber starts synchronized (pushes only cover
+    /// publishes *after* this point).
+    Subscribed {
+        /// Every entry the hub holds at subscription time.
+        entries: Vec<HubEntry>,
+    },
 }
 
 impl Frame {
@@ -227,6 +286,14 @@ impl Frame {
                 ("type".into(), s("ack")),
                 ("version".into(), n(*version as f64)),
                 ("conflict".into(), Value::Bool(*conflict)),
+            ]),
+            Frame::Subscribe { peer } => Value::Obj(vec![
+                ("type".into(), s("subscribe")),
+                ("peer".into(), s(peer.clone())),
+            ]),
+            Frame::Subscribed { entries } => Value::Obj(vec![
+                ("type".into(), s("subscribed")),
+                ("entries".into(), Value::Arr(entries.iter().map(HubEntry::to_json).collect())),
             ]),
         }
     }
@@ -258,6 +325,14 @@ impl Frame {
             "ack" => Ok(Frame::Ack {
                 version: v.req_i64("version")?.max(0) as u64,
                 conflict: v.get("conflict").and_then(Value::as_bool).unwrap_or(false),
+            }),
+            "subscribe" => Ok(Frame::Subscribe { peer: v.req_str("peer")?.to_string() }),
+            "subscribed" => Ok(Frame::Subscribed {
+                entries: v
+                    .req_arr("entries")?
+                    .iter()
+                    .map(HubEntry::from_json)
+                    .collect::<Result<_>>()?,
             }),
             other => Err(proto_err(format!("unknown frame type `{other}`"))),
         }
@@ -329,6 +404,8 @@ mod tests {
             Frame::Update { entries: vec![entry("a", 1, 3), entry("b", 0, 1)] },
             Frame::Publish { entry: entry("c", 1, 7) },
             Frame::Ack { version: 7, conflict: true },
+            Frame::Subscribe { peer: "replica-2".into() },
+            Frame::Subscribed { entries: vec![entry("a", 1, 3)] },
         ];
         let mut buf = Vec::new();
         for f in &frames {
@@ -390,6 +467,33 @@ mod tests {
         let mut buf = (body.len() as u32).to_be_bytes().to_vec();
         buf.extend_from_slice(body);
         assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn state_documents_may_be_arrays_or_artifacts() {
+        let entries = vec![entry("a", 1, 3), entry("b", 0, 1)];
+        // artifact object: the envelope unwraps to its entries
+        let doc = artifact_json(&entries);
+        let values = state_entry_values(&doc).unwrap();
+        let parsed: Vec<HubEntry> =
+            values.iter().map(|v| HubEntry::from_json(v).unwrap()).collect();
+        assert_eq!(parsed, entries);
+        // bare array (plain save_state output) passes through untouched
+        let bare = Value::Arr(entries.iter().map(HubEntry::to_json).collect());
+        assert_eq!(state_entry_values(&bare).unwrap().len(), 2);
+        // a future format is refused rather than misread
+        let future = crate::util::json::parse(
+            r#"{"artifact":"jitune-tuned-cache","format":99,"entries":[]}"#,
+        )
+        .unwrap();
+        assert!(state_entry_values(&future).is_err());
+        // a different artifact kind is refused
+        let alien =
+            crate::util::json::parse(r#"{"artifact":"something-else","entries":[]}"#).unwrap();
+        assert!(state_entry_values(&alien).is_err());
+        // an arbitrary object is not a state document
+        let junk = crate::util::json::parse(r#"{"entries":[]}"#).unwrap();
+        assert!(state_entry_values(&junk).is_err());
     }
 
     #[test]

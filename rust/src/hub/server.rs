@@ -1,83 +1,217 @@
-//! The hub broker: a Unix-domain-socket server holding the fleet's
-//! tuned map.
+//! The hub broker: the server holding the fleet's tuned map, over a
+//! Unix-domain socket (same host), TCP (cross-host fleets), or both.
 //!
 //! Deliberately boring: one accept loop, one thread per connection
 //! (fleets are tens of processes, not thousands), state behind a mutex.
 //! The broker is manifest-agnostic — it stores whatever entries clients
 //! publish and lets *pullers* validate against their own manifest, so
 //! one hub can serve heterogeneous binaries.
+//!
+//! With [`BrokerOptions::persist`] set, every accepted publish is
+//! appended (and fsynced) to an on-disk log *before* it is acked, and
+//! [`HubServer::bind_with`] replays log + snapshot — a restarted broker
+//! comes back with the fleet's winners. See [`super::persist`] for the
+//! durability model.
+//!
+//! Clients that [`Frame::Subscribe`] get every accepted publish pushed
+//! to them as an [`Frame::Update`] — propagation is push-first, with
+//! periodic pulls as the fallback.
 
 use std::collections::BTreeMap;
+use std::net::TcpListener;
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::Result;
 use crate::sync::TrackedMutex;
 
+use super::persist::{HubLog, PersistOptions, ReplayReport};
 use super::protocol::{
     merge_entry, proto_err, read_frame, write_frame, EntryKey, Frame, HubEntry, Merge,
     PROTOCOL_VERSION,
 };
+use super::transport::HubStream;
+
+/// Broker configuration: which transports to listen on and whether the
+/// tuned map is durable.
+#[derive(Debug, Clone, Default)]
+pub struct BrokerOptions {
+    /// Unix-domain socket path to listen on.
+    pub socket: Option<PathBuf>,
+    /// TCP listen address (`host:port`; port 0 picks a free port —
+    /// read it back via [`HubServer::tcp_addr`]).
+    pub tcp: Option<String>,
+    /// Persist directory — `None` keeps the map in memory only.
+    pub persist: Option<PersistOptions>,
+}
+
+impl BrokerOptions {
+    /// Listen on a Unix socket only (the pre-TCP default).
+    pub fn unix(path: impl AsRef<Path>) -> BrokerOptions {
+        BrokerOptions { socket: Some(path.as_ref().to_path_buf()), ..Default::default() }
+    }
+
+    /// Add a TCP listener.
+    pub fn with_tcp(mut self, addr: impl Into<String>) -> BrokerOptions {
+        self.tcp = Some(addr.into());
+        self
+    }
+
+    /// Make the tuned map durable under `persist`.
+    pub fn with_persist(mut self, persist: PersistOptions) -> BrokerOptions {
+        self.persist = Some(persist);
+        self
+    }
+}
+
+/// One push-subscribed client connection.
+struct Subscriber {
+    id: u64,
+    peer: String,
+    /// Pushed-to socket clone; the lock serializes writers (the
+    /// `Subscribed` reply and every publisher thread's push).
+    stream: Arc<TrackedMutex<HubStream>>,
+}
 
 /// Broker state shared across connection threads.
 struct Shared {
     entries: TrackedMutex<BTreeMap<EntryKey, HubEntry>>,
-    publishes: AtomicU64, // relaxed-counter: stats-only tally
-    pulls: AtomicU64,     // relaxed-counter: stats-only tally
-    conflicts: AtomicU64, // relaxed-counter: stats-only tally
+    /// Durable log; publishes append+fsync here before they are acked.
+    log: Option<TrackedMutex<HubLog>>,
+    subscribers: TrackedMutex<Vec<Subscriber>>,
+    next_subscriber: AtomicU64, // relaxed-counter: id allocator, never synchronizes
+    publishes: AtomicU64,       // relaxed-counter: stats-only tally
+    pulls: AtomicU64,           // relaxed-counter: stats-only tally
+    conflicts: AtomicU64,       // relaxed-counter: stats-only tally
+    notifies: AtomicU64,        // relaxed-counter: stats-only tally
+    /// Injection hook: the next accepted connection's handler spawn
+    /// "fails" (per-broker so parallel tests cannot interfere).
+    #[cfg(test)]
+    fail_next_spawn: AtomicBool,
+}
+
+/// Signals a serving broker to wind down (accept loop exits, listeners
+/// close, subscriber push channels shut). Cloneable; obtained from
+/// [`HubServer::stop_handle`] before [`HubServer::spawn`] consumes the
+/// server.
+#[derive(Clone)]
+pub struct HubStopHandle {
+    stop: Arc<AtomicBool>,
+}
+
+impl HubStopHandle {
+    /// Request shutdown; the serve loop notices within its poll tick.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Release);
+    }
 }
 
 /// The tuned-state hub broker.
 pub struct HubServer {
-    listener: UnixListener,
-    path: PathBuf,
+    unix: Option<UnixListener>,
+    tcp: Option<TcpListener>,
+    path: Option<PathBuf>,
+    tcp_local: Option<std::net::SocketAddr>,
+    replay: ReplayReport,
     shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
 }
 
 impl HubServer {
-    /// Bind the broker socket, replacing a stale socket file from a
-    /// previous run. A path where a broker is still *answering* is
-    /// refused — unlinking a live broker's socket would silently split
-    /// the fleet across two inconsistent in-memory maps. Bind is
-    /// attempted *first* (no probe-then-unlink window for a racing
-    /// broker to fall into): only an `AddrInUse` failure probes the
-    /// existing socket, and only a socket nobody answers is removed.
+    /// Bind a Unix-socket-only, in-memory broker (the original shape;
+    /// see [`HubServer::bind_with`] for TCP and persistence).
     pub fn bind(path: impl AsRef<Path>) -> Result<HubServer> {
-        let path = path.as_ref().to_path_buf();
-        let bind_once = |path: &Path| UnixListener::bind(path);
-        let listener = match bind_once(&path) {
-            Ok(l) => l,
-            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
-                if UnixStream::connect(&path).is_ok() {
-                    return Err(proto_err(format!(
-                        "a broker is already serving on {}",
-                        path.display()
-                    )));
-                }
-                std::fs::remove_file(&path).map_err(|e| {
-                    proto_err(format!("remove stale socket {}: {e}", path.display()))
-                })?;
-                // a concurrent bind in this window surfaces as an error
-                // here — never a silent hijack
-                bind_once(&path)
-                    .map_err(|e| proto_err(format!("bind {}: {e}", path.display())))?
+        HubServer::bind_with(BrokerOptions::unix(path))
+    }
+
+    /// Bind the configured listeners and, when persistence is enabled,
+    /// replay the on-disk log/snapshot so the broker comes back with
+    /// the fleet's winners.
+    ///
+    /// For the Unix socket, a stale socket file from a previous run is
+    /// replaced — but a path where a broker is still *answering* is
+    /// refused (unlinking a live broker's socket would silently split
+    /// the fleet across two inconsistent maps). Bind is attempted
+    /// *first* (no probe-then-unlink window for a racing broker to fall
+    /// into): only an `AddrInUse` failure probes the existing socket,
+    /// and only a socket nobody answers is removed.
+    pub fn bind_with(opts: BrokerOptions) -> Result<HubServer> {
+        if opts.socket.is_none() && opts.tcp.is_none() {
+            return Err(proto_err("broker needs at least one listener (socket or tcp)"));
+        }
+        let unix = match &opts.socket {
+            None => None,
+            Some(path) => Some(bind_unix(path)?),
+        };
+        let tcp = match &opts.tcp {
+            None => None,
+            Some(addr) => Some(
+                TcpListener::bind(addr).map_err(|e| proto_err(format!("bind tcp {addr}: {e}")))?,
+            ),
+        };
+        let tcp_local = match &tcp {
+            Some(l) => {
+                Some(l.local_addr().map_err(|e| proto_err(format!("tcp local addr: {e}")))?)
             }
-            Err(e) => return Err(proto_err(format!("bind {}: {e}", path.display()))),
+            None => None,
+        };
+        let (log, entries, replay) = match &opts.persist {
+            None => (None, BTreeMap::new(), ReplayReport::default()),
+            Some(popts) => {
+                let (log, entries, replay) = HubLog::open(popts)?;
+                if replay.snapshot_entries + replay.log_records > 0 {
+                    log::info!(
+                        "hub: restored {} entr{} from {} (snapshot {}, log records {})",
+                        entries.len(),
+                        if entries.len() == 1 { "y" } else { "ies" },
+                        popts.dir.display(),
+                        replay.snapshot_entries,
+                        replay.log_records
+                    );
+                }
+                (Some(TrackedMutex::new("hub.log", log)), entries, replay)
+            }
         };
         let shared = Arc::new(Shared {
-            entries: TrackedMutex::new("hub.entries", BTreeMap::new()),
+            entries: TrackedMutex::new("hub.entries", entries),
+            log,
+            subscribers: TrackedMutex::new("hub.subscribers", Vec::new()),
+            next_subscriber: AtomicU64::new(0),
             publishes: AtomicU64::new(0),
             pulls: AtomicU64::new(0),
             conflicts: AtomicU64::new(0),
+            notifies: AtomicU64::new(0),
+            #[cfg(test)]
+            fail_next_spawn: AtomicBool::new(false),
         });
-        Ok(HubServer { listener, path, shared })
+        Ok(HubServer {
+            unix,
+            tcp,
+            path: opts.socket,
+            tcp_local,
+            replay,
+            shared,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
     }
 
-    /// Socket path this broker listens on.
-    pub fn socket_path(&self) -> &Path {
-        &self.path
+    /// Unix socket path this broker listens on, if any.
+    pub fn socket_path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Resolved TCP listen address, if any (port 0 specs resolve to the
+    /// actual port here).
+    pub fn tcp_addr(&self) -> Option<std::net::SocketAddr> {
+        self.tcp_local
+    }
+
+    /// What replay restored at bind time (zeros without persistence).
+    pub fn replay_report(&self) -> ReplayReport {
+        self.replay
     }
 
     /// Number of entries currently held.
@@ -94,31 +228,83 @@ impl HubServer {
         )
     }
 
-    /// Serve until the process exits: accept connections and spawn one
-    /// handler thread each. Accept errors are logged and survived.
+    /// Update pushes delivered to subscribers.
+    pub fn notifies(&self) -> u64 {
+        self.shared.notifies.load(Ordering::Relaxed)
+    }
+
+    /// Handle that stops a serving broker (see [`HubStopHandle`]).
+    pub fn stop_handle(&self) -> HubStopHandle {
+        HubStopHandle { stop: Arc::clone(&self.stop) }
+    }
+
+    /// Serve until stopped (or forever): accept connections on every
+    /// listener and spawn one handler thread each. Accept errors are
+    /// logged and survived; so is a failed handler spawn (thread
+    /// exhaustion at peak fleet size drops one connection, never the
+    /// broker). On stop, listeners close, the Unix socket file is
+    /// unlinked, and subscriber push channels are shut so their handler
+    /// threads unblock.
     pub fn serve_forever(&self) -> Result<()> {
-        log::info!("hub: listening on {}", self.path.display());
-        for stream in self.listener.incoming() {
-            match stream {
-                Ok(stream) => {
-                    let shared = Arc::clone(&self.shared);
-                    // a failed handler spawn (thread exhaustion at peak
-                    // fleet size) drops one connection, never the broker
-                    if let Err(e) = std::thread::Builder::new()
-                        .name("jitune-hub-conn".into())
-                        .spawn(move || handle_conn(stream, &shared))
-                    {
-                        log::warn!("hub: could not spawn handler: {e}");
+        match (&self.path, &self.tcp_local) {
+            (Some(p), Some(t)) => log::info!("hub: listening on {} and tcp {t}", p.display()),
+            (Some(p), None) => log::info!("hub: listening on {}", p.display()),
+            (None, Some(t)) => log::info!("hub: listening on tcp {t}"),
+            (None, None) => {}
+        }
+        // Nonblocking accept + poll: the loop wakes every tick to check
+        // the stop flag, so no sentinel wake-connection is needed (and
+        // the listeners close promptly on stop).
+        if let Some(l) = &self.unix {
+            l.set_nonblocking(true).map_err(|e| proto_err(format!("unix nonblocking: {e}")))?;
+        }
+        if let Some(l) = &self.tcp {
+            l.set_nonblocking(true).map_err(|e| proto_err(format!("tcp nonblocking: {e}")))?;
+        }
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                break;
+            }
+            let mut accepted = false;
+            if let Some(l) = &self.unix {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        accepted = true;
+                        spawn_handler(HubStream::Unix(stream), &self.shared);
                     }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(e) => log::warn!("hub: unix accept failed: {e}"),
                 }
-                Err(e) => log::warn!("hub: accept failed: {e}"),
+            }
+            if let Some(l) = &self.tcp {
+                match l.accept() {
+                    Ok((stream, _)) => {
+                        accepted = true;
+                        let _ = stream.set_nodelay(true);
+                        spawn_handler(HubStream::Tcp(stream), &self.shared);
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+                    Err(e) => log::warn!("hub: tcp accept failed: {e}"),
+                }
+            }
+            if !accepted {
+                std::thread::sleep(Duration::from_millis(5));
             }
         }
+        // unblock subscriber handler threads parked in read
+        for sub in self.shared.subscribers.lock().drain(..) {
+            sub.stream.lock().shutdown();
+        }
+        if let Some(p) = &self.path {
+            let _ = std::fs::remove_file(p);
+        }
+        log::info!("hub: stopped");
         Ok(())
     }
 
-    /// Run the broker on a background thread (examples and tests; the
-    /// thread serves until process exit).
+    /// Run the broker on a background thread (examples, tests, and
+    /// `jitune hub serve`; the thread serves until stopped via
+    /// [`HubServer::stop_handle`] or process exit).
     pub fn spawn(self) -> std::thread::JoinHandle<()> {
         std::thread::Builder::new()
             .name("jitune-hub".into())
@@ -132,12 +318,54 @@ impl HubServer {
     }
 }
 
-/// Serve one client connection until it disconnects.
-fn handle_conn(mut stream: UnixStream, shared: &Shared) {
+/// Bind the Unix listener, replacing a stale socket file (see
+/// [`HubServer::bind_with`] for the race discipline).
+fn bind_unix(path: &Path) -> Result<UnixListener> {
+    let bind_once = |path: &Path| UnixListener::bind(path);
+    match bind_once(path) {
+        Ok(l) => Ok(l),
+        Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+            if UnixStream::connect(path).is_ok() {
+                return Err(proto_err(format!("a broker is already serving on {}", path.display())));
+            }
+            std::fs::remove_file(path)
+                .map_err(|e| proto_err(format!("remove stale socket {}: {e}", path.display())))?;
+            // a concurrent bind in this window surfaces as an error
+            // here — never a silent hijack
+            bind_once(path).map_err(|e| proto_err(format!("bind {}: {e}", path.display())))
+        }
+        Err(e) => Err(proto_err(format!("bind {}: {e}", path.display()))),
+    }
+}
+
+/// Spawn one connection-handler thread. A failed spawn (thread/fd
+/// exhaustion at peak fleet size) logs and drops that one connection —
+/// it must never take the broker down.
+fn spawn_handler(stream: HubStream, shared: &Arc<Shared>) {
+    #[cfg(test)]
+    if shared.fail_next_spawn.swap(false, Ordering::SeqCst) {
+        log::warn!("hub: could not spawn handler: injected failure (connection dropped)");
+        return;
+    }
+    let shared = Arc::clone(shared);
+    if let Err(e) = std::thread::Builder::new()
+        .name("jitune-hub-conn".into())
+        .spawn(move || handle_conn(stream, &shared))
+    {
+        log::warn!("hub: could not spawn handler: {e} (connection dropped)");
+    }
+}
+
+/// Serve one client connection until it disconnects. A connection that
+/// subscribes turns into a push channel: the handler thread keeps
+/// draining reads (to notice the disconnect) while publisher threads
+/// push updates through the registered socket clone.
+fn handle_conn(mut stream: HubStream, shared: &Shared) {
+    let mut subscriber_id: Option<u64> = None;
     loop {
         let frame = match read_frame(&mut stream) {
             Ok(f) => f,
-            Err(_) => return, // EOF or a broken peer: drop the connection
+            Err(_) => break, // EOF or a broken peer: drop the connection
         };
         let reply = match frame {
             Frame::Hello { protocol, peer } => {
@@ -149,45 +377,160 @@ fn handle_conn(mut stream: UnixStream, shared: &Shared) {
             }
             Frame::PullAll => {
                 shared.pulls.fetch_add(1, Ordering::Relaxed);
-                let entries: Vec<HubEntry> =
-                    shared.entries.lock().values().cloned().collect();
+                let entries: Vec<HubEntry> = shared.entries.lock().values().cloned().collect();
                 Frame::Update { entries }
             }
-            Frame::Publish { entry } => {
-                shared.publishes.fetch_add(1, Ordering::Relaxed);
-                let label = entry.problem_key();
-                let key = entry.entry_key();
-                let proposed = entry.version;
-                let mut map = shared.entries.lock();
-                let merge = merge_entry(&mut map, entry);
-                // jitune-lint: allow(L005): merge_entry always leaves `key` present in the map
-                let stored = map.get(&key).expect("merged entry present").version;
-                drop(map);
-                let conflict = matches!(merge, Merge::Conflict { .. } | Merge::Outdated);
-                if conflict {
-                    shared.conflicts.fetch_add(1, Ordering::Relaxed);
-                    log::warn!("hub: conflict on {label} (proposed v{proposed}, stored v{stored})");
-                } else {
-                    log::debug!("hub: publish {label} → v{stored} ({merge:?})");
+            Frame::Publish { entry } => apply_publish(shared, entry),
+            Frame::Subscribe { peer } => {
+                match register_subscriber(shared, &stream, peer) {
+                    Ok((id, snapshot, writer)) => {
+                        subscriber_id = Some(id);
+                        // the Subscribed reply goes through the shared
+                        // writer so it serializes against concurrent
+                        // pushes (which may legitimately overtake it —
+                        // the client tolerates either order)
+                        let ok = {
+                            let mut w = writer.lock();
+                            write_frame(&mut *w, &Frame::Subscribed { entries: snapshot }).is_ok()
+                        };
+                        if !ok {
+                            break;
+                        }
+                        continue; // stay in the read loop to notice EOF
+                    }
+                    Err(e) => {
+                        log::warn!("hub: subscribe failed: {e}");
+                        break;
+                    }
                 }
-                Frame::Ack { version: stored, conflict }
             }
             other => {
                 // a server-bound stream must never carry server frames
                 log::warn!("hub: unexpected frame from client: {other:?}");
-                return;
+                break;
             }
         };
         if write_frame(&mut stream, &reply).is_err() {
-            return;
+            break;
         }
+    }
+    if let Some(id) = subscriber_id {
+        shared.subscribers.lock().retain(|s| s.id != id);
+    }
+}
+
+/// Merge one published entry, persist it (fsync before ack), and push
+/// it to subscribers. Returns the ack frame.
+fn apply_publish(shared: &Shared, entry: HubEntry) -> Frame {
+    shared.publishes.fetch_add(1, Ordering::Relaxed);
+    let label = entry.problem_key();
+    let key = entry.entry_key();
+    let proposed = entry.version;
+    let mut map = shared.entries.lock();
+    let merge = merge_entry(&mut map, entry);
+    // jitune-lint: allow(L005): merge_entry always leaves `key` present in the map
+    let stored = map.get(&key).expect("merged entry present").clone();
+    drop(map);
+    let conflict = matches!(merge, Merge::Conflict { .. } | Merge::Outdated);
+    if conflict {
+        shared.conflicts.fetch_add(1, Ordering::Relaxed);
+        log::warn!("hub: conflict on {label} (proposed v{proposed}, stored v{})", stored.version);
+    } else {
+        log::debug!("hub: publish {label} → v{} ({merge:?})", stored.version);
+    }
+    if matches!(merge, Merge::Inserted | Merge::Replaced | Merge::Conflict { .. }) {
+        persist_entry(shared, &stored);
+        notify_subscribers(shared, &stored);
+    }
+    Frame::Ack { version: stored.version, conflict }
+}
+
+/// Append one accepted entry to the durable log (when persistence is
+/// on) and compact when due. Lock order: `hub.log` → `hub.entries`
+/// (compaction snapshots the map while holding the log); no path locks
+/// them in the opposite order.
+fn persist_entry(shared: &Shared, stored: &HubEntry) {
+    let Some(log) = &shared.log else { return };
+    let mut lg = log.lock();
+    if let Err(e) = lg.append(stored) {
+        // keep serving from memory — durability degrades, the fleet
+        // does not
+        log::error!("hub: persist append failed: {e} — entry survives in memory only");
+        return;
+    }
+    if lg.should_compact() {
+        let snapshot = shared.entries.lock().clone();
+        if let Err(e) = lg.compact(&snapshot) {
+            log::warn!("hub: snapshot compaction failed: {e}");
+        }
+    }
+}
+
+/// Register a push subscriber: snapshot the map and add the socket
+/// clone to the subscriber list *atomically with respect to publishes*
+/// (both under `hub.entries`), so no accepted publish can fall between
+/// the snapshot and the registration.
+#[allow(clippy::type_complexity)]
+fn register_subscriber(
+    shared: &Shared,
+    stream: &HubStream,
+    peer: String,
+) -> Result<(u64, Vec<HubEntry>, Arc<TrackedMutex<HubStream>>)> {
+    let clone = stream.try_clone().map_err(|e| proto_err(format!("clone subscriber: {e}")))?;
+    // a wedged subscriber must stall pushes for at most this long
+    // before being dropped from the list
+    clone
+        .set_timeouts(Some(Duration::from_secs(5)))
+        .map_err(|e| proto_err(format!("subscriber timeouts: {e}")))?;
+    let writer = Arc::new(TrackedMutex::new("hub.sub.stream", clone));
+    let id = shared.next_subscriber.fetch_add(1, Ordering::Relaxed);
+    let map = shared.entries.lock();
+    let snapshot: Vec<HubEntry> = map.values().cloned().collect();
+    shared.subscribers.lock().push(Subscriber {
+        id,
+        peer: peer.clone(),
+        stream: Arc::clone(&writer),
+    });
+    drop(map);
+    log::debug!("hub: subscriber {peer} registered (#{id})");
+    Ok((id, snapshot, writer))
+}
+
+/// Push one accepted entry to every subscriber; unreachable subscribers
+/// are dropped from the list. Streams are pushed outside the subscriber
+/// list lock (each has its own writer lock), so one slow subscriber
+/// delays the others but cannot deadlock registration.
+fn notify_subscribers(shared: &Shared, stored: &HubEntry) {
+    let targets: Vec<(u64, String, Arc<TrackedMutex<HubStream>>)> = shared
+        .subscribers
+        .lock()
+        .iter()
+        .map(|s| (s.id, s.peer.clone(), Arc::clone(&s.stream)))
+        .collect();
+    if targets.is_empty() {
+        return;
+    }
+    let update = Frame::Update { entries: vec![stored.clone()] };
+    let mut dead = Vec::new();
+    for (id, peer, stream) in targets {
+        let mut w = stream.lock();
+        if let Err(e) = write_frame(&mut *w, &update) {
+            log::debug!("hub: dropping subscriber {peer} (#{id}): {e}");
+            w.shutdown();
+            dead.push(id);
+        } else {
+            shared.notifies.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    if !dead.is_empty() {
+        shared.subscribers.lock().retain(|s| !dead.contains(&s.id));
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::hub::client::{HubClient, HubOptions};
+    use crate::hub::client::{HubClient, HubOptions, HubSubscriber};
 
     fn temp_socket(tag: &str) -> PathBuf {
         crate::testutil::temp_path(&format!("hub-test-{tag}"), "sock")
@@ -229,6 +572,38 @@ mod tests {
     }
 
     #[test]
+    fn tcp_transport_serves_the_same_protocol() {
+        let server =
+            HubServer::bind_with(BrokerOptions::default().with_tcp("127.0.0.1:0")).unwrap();
+        let addr = server.tcp_addr().unwrap();
+        server.spawn();
+
+        let mut a = HubClient::connect(HubOptions::tcp(addr.to_string())).unwrap();
+        let mut b = HubClient::connect(HubOptions::tcp(addr.to_string())).unwrap();
+        let ack = a.publish(&entry("k", 1, 1)).unwrap();
+        assert_eq!((ack.version, ack.conflict), (1, false));
+        let pulled = b.pull_all().unwrap();
+        assert_eq!(pulled.len(), 1);
+        assert_eq!(pulled[0].winner_value, 1);
+    }
+
+    #[test]
+    fn dual_transport_brokers_share_one_map() {
+        let path = temp_socket("dual");
+        let server =
+            HubServer::bind_with(BrokerOptions::unix(&path).with_tcp("127.0.0.1:0")).unwrap();
+        let addr = server.tcp_addr().unwrap();
+        server.spawn();
+
+        let mut unix = HubClient::connect(HubOptions::at(&path)).unwrap();
+        let mut tcp = HubClient::connect(HubOptions::tcp(addr.to_string())).unwrap();
+        unix.publish(&entry("k", 1, 1)).unwrap();
+        let pulled = tcp.pull_all().unwrap();
+        assert_eq!(pulled.len(), 1, "tcp client sees the unix client's publish");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
     fn concurrent_publishers_conflict_is_last_writer_wins() {
         let path = temp_socket("conflict");
         HubServer::bind(&path).unwrap().spawn();
@@ -254,7 +629,7 @@ mod tests {
         std::fs::write(&path, b"stale").unwrap();
         let server = HubServer::bind(&path).unwrap();
         assert_eq!(server.entries(), 0);
-        assert_eq!(server.socket_path(), path.as_path());
+        assert_eq!(server.socket_path(), Some(path.as_path()));
         let _ = std::fs::remove_file(&path);
     }
 
@@ -295,5 +670,88 @@ mod tests {
             ..HubOptions::at(&path)
         };
         assert!(HubClient::connect(opts).is_err());
+    }
+
+    #[test]
+    fn handler_spawn_failure_drops_one_connection_not_the_broker() {
+        let path = temp_socket("spawnfail");
+        let server = HubServer::bind(&path).unwrap();
+        let shared = Arc::clone(&server.shared);
+        server.spawn();
+        // warm up: the broker answers before the injection
+        let mut ok = HubClient::connect(HubOptions::at(&path)).unwrap();
+        ok.publish(&entry("k", 1, 1)).unwrap();
+
+        shared.fail_next_spawn.store(true, Ordering::SeqCst);
+        let victim = HubClient::connect(HubOptions {
+            connect_retries: 0,
+            ..HubOptions::at(&path)
+        });
+        assert!(victim.is_err(), "the injected connection is dropped");
+        assert!(!shared.fail_next_spawn.load(Ordering::SeqCst), "injection consumed");
+
+        // the broker survived: existing and new clients still work
+        assert_eq!(ok.pull_all().unwrap().len(), 1);
+        let mut fresh = HubClient::connect(HubOptions::at(&path)).unwrap();
+        assert_eq!(fresh.pull_all().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn subscribers_get_publishes_pushed() {
+        let path = temp_socket("push");
+        let server = HubServer::bind(&path).unwrap();
+        let shared = Arc::clone(&server.shared);
+        server.spawn();
+
+        let mut sub = HubSubscriber::connect(&HubOptions::at(&path)).unwrap();
+        assert!(sub.take_initial().is_empty());
+
+        let mut publisher = HubClient::connect(HubOptions::at(&path)).unwrap();
+        publisher.publish(&entry("k", 1, 1)).unwrap();
+
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut got = Vec::new();
+        while got.is_empty() && std::time::Instant::now() < deadline {
+            if let Some(entries) = sub.next(Duration::from_millis(50)).unwrap() {
+                got = entries;
+            }
+        }
+        assert_eq!(got.len(), 1, "publish pushed to subscriber without polling");
+        assert_eq!(got[0].winner_value, 1);
+        assert!(shared.notifies.load(Ordering::Relaxed) >= 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn subscriber_snapshot_covers_pre_subscription_entries() {
+        let path = temp_socket("snapshot");
+        HubServer::bind(&path).unwrap().spawn();
+        let mut publisher = HubClient::connect(HubOptions::at(&path)).unwrap();
+        publisher.publish(&entry("k", 1, 3)).unwrap();
+
+        let mut sub = HubSubscriber::connect(&HubOptions::at(&path)).unwrap();
+        let initial = sub.take_initial();
+        assert_eq!(initial.len(), 1);
+        assert_eq!((initial[0].winner_value, initial[0].version), (1, 3));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stop_handle_winds_the_broker_down() {
+        let path = temp_socket("stop");
+        let server = HubServer::bind(&path).unwrap();
+        let stop = server.stop_handle();
+        let join = server.spawn();
+        let mut c = HubClient::connect(HubOptions::at(&path)).unwrap();
+        c.publish(&entry("k", 1, 1)).unwrap();
+        drop(c);
+        stop.stop();
+        join.join().unwrap();
+        assert!(!path.exists(), "socket unlinked on stop");
+        // a new broker can bind the same path immediately
+        let server = HubServer::bind(&path).unwrap();
+        drop(server);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,198 @@
+//! Hub transport abstraction: one broker address / stream type over
+//! both Unix-domain sockets (same-host fleets) and TCP (cross-host
+//! fleets).
+//!
+//! The wire protocol ([`super::protocol`]) is transport-agnostic — a
+//! frame is a frame over any byte stream — so the only transport-aware
+//! pieces are connecting, cloning, timeouts and shutdown, all folded
+//! into [`HubStream`]. Addresses parse from operator-facing strings:
+//! `unix:/path/to.sock`, `tcp:host:port`, or a bare path (treated as a
+//! Unix socket for backward compatibility).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::os::unix::net::UnixStream;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::error::Result;
+
+use super::protocol::proto_err;
+
+/// Where a hub broker lives.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HubAddr {
+    /// Unix-domain socket path (same host).
+    Unix(PathBuf),
+    /// TCP `host:port` (cross-host fleets).
+    Tcp(String),
+}
+
+impl HubAddr {
+    /// Parse an operator-facing address spec: `unix:<path>`,
+    /// `tcp:<host:port>`, or a bare path (Unix socket).
+    pub fn parse(spec: &str) -> Result<HubAddr> {
+        if let Some(rest) = spec.strip_prefix("unix:") {
+            if rest.is_empty() {
+                return Err(proto_err("empty unix socket path in hub address"));
+            }
+            return Ok(HubAddr::Unix(PathBuf::from(rest)));
+        }
+        if let Some(rest) = spec.strip_prefix("tcp:") {
+            if !rest.contains(':') {
+                return Err(proto_err(format!("tcp hub address `{rest}` needs host:port")));
+            }
+            return Ok(HubAddr::Tcp(rest.to_string()));
+        }
+        if spec.is_empty() {
+            return Err(proto_err("empty hub address"));
+        }
+        Ok(HubAddr::Unix(PathBuf::from(spec)))
+    }
+
+    /// Unix socket path, when this is a Unix address.
+    pub fn unix_path(&self) -> Option<&Path> {
+        match self {
+            HubAddr::Unix(p) => Some(p),
+            HubAddr::Tcp(_) => None,
+        }
+    }
+}
+
+impl std::fmt::Display for HubAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HubAddr::Unix(p) => write!(f, "unix:{}", p.display()),
+            HubAddr::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// A connected broker stream over either transport. Implements
+/// `Read`/`Write` so the frame codec never sees which one.
+#[derive(Debug)]
+pub enum HubStream {
+    /// Unix-domain stream.
+    Unix(UnixStream),
+    /// TCP stream (`TCP_NODELAY` set: frames are small request/reply
+    /// and push payloads, Nagle would only add latency).
+    Tcp(TcpStream),
+}
+
+impl HubStream {
+    /// Connect to `addr` (one attempt; retry policy lives in the
+    /// client's dial loop).
+    pub fn connect(addr: &HubAddr) -> std::io::Result<HubStream> {
+        match addr {
+            HubAddr::Unix(path) => UnixStream::connect(path).map(HubStream::Unix),
+            HubAddr::Tcp(spec) => {
+                let s = TcpStream::connect(spec)?;
+                s.set_nodelay(true)?;
+                Ok(HubStream::Tcp(s))
+            }
+        }
+    }
+
+    /// Set both read and write timeouts (`None` blocks forever).
+    pub fn set_timeouts(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            HubStream::Unix(s) => {
+                s.set_read_timeout(timeout)?;
+                s.set_write_timeout(timeout)
+            }
+            HubStream::Tcp(s) => {
+                s.set_read_timeout(timeout)?;
+                s.set_write_timeout(timeout)
+            }
+        }
+    }
+
+    /// Set only the read timeout (subscriber streams poll reads but
+    /// must not time out pushes).
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            HubStream::Unix(s) => s.set_read_timeout(timeout),
+            HubStream::Tcp(s) => s.set_read_timeout(timeout),
+        }
+    }
+
+    /// Clone the underlying socket handle (used to push to a subscriber
+    /// from publisher threads while its own thread blocks in read).
+    pub fn try_clone(&self) -> std::io::Result<HubStream> {
+        match self {
+            HubStream::Unix(s) => s.try_clone().map(HubStream::Unix),
+            HubStream::Tcp(s) => s.try_clone().map(HubStream::Tcp),
+        }
+    }
+
+    /// Shut down both directions, unblocking any reader.
+    pub fn shutdown(&self) {
+        match self {
+            HubStream::Unix(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+            HubStream::Tcp(s) => {
+                let _ = s.shutdown(std::net::Shutdown::Both);
+            }
+        }
+    }
+}
+
+impl Read for HubStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            HubStream::Unix(s) => s.read(buf),
+            HubStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for HubStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            HubStream::Unix(s) => s.write(buf),
+            HubStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            HubStream::Unix(s) => s.flush(),
+            HubStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parses_all_spellings() {
+        assert_eq!(
+            HubAddr::parse("unix:/tmp/hub.sock").unwrap(),
+            HubAddr::Unix(PathBuf::from("/tmp/hub.sock"))
+        );
+        assert_eq!(
+            HubAddr::parse("tcp:127.0.0.1:7878").unwrap(),
+            HubAddr::Tcp("127.0.0.1:7878".into())
+        );
+        // bare path stays a unix socket (backward compatibility)
+        assert_eq!(
+            HubAddr::parse("/tmp/hub.sock").unwrap(),
+            HubAddr::Unix(PathBuf::from("/tmp/hub.sock"))
+        );
+        assert!(HubAddr::parse("").is_err());
+        assert!(HubAddr::parse("unix:").is_err());
+        assert!(HubAddr::parse("tcp:no-port").is_err());
+    }
+
+    #[test]
+    fn addr_displays_roundtrip() {
+        for spec in ["unix:/tmp/x.sock", "tcp:10.0.0.1:9000"] {
+            let addr = HubAddr::parse(spec).unwrap();
+            assert_eq!(addr.to_string(), spec);
+            assert_eq!(HubAddr::parse(&addr.to_string()).unwrap(), addr);
+        }
+    }
+}

@@ -10,7 +10,10 @@ use jitune::coordinator::{
     BatchOptions, CallRoute, Coordinator, Dispatcher, ExploreOptions, KernelRegistry, PoolOptions,
     ServerOptions,
 };
-use jitune::hub::{merge_entry, HubClient, HubEntry, HubOptions, HubServer, Merge};
+use jitune::hub::{
+    artifact_json, merge_entry, state_entry_values, BrokerOptions, HubAddr, HubClient, HubEntry,
+    HubOptions, HubServer, Merge, PersistOptions,
+};
 use jitune::manifest::Manifest;
 use jitune::runtime::native::default_native_manifest;
 use jitune::runtime::{
@@ -26,8 +29,8 @@ const COMMANDS: &[(&str, &str)] = &[
     ("tune", "tune one kernel at one size and print the tuning report"),
     ("run", "replay a call trace (--trace kernel:size:iters[,...]) or a generated production-shaped trace (--traffic k=v,...) through the dispatcher"),
     ("stats", "tune then print coordinator + cache statistics"),
-    ("hub", "tuned-state hub broker: `hub serve --socket <p>` | `hub dump --socket <p>`"),
-    ("state", "tuning-state files: `state show <file>` | `state merge <out> <in>...`"),
+    ("hub", "tuned-state hub broker: `hub serve --socket <p> [--listen host:port] [--persist <dir>]` | `hub dump --hub <addr>`"),
+    ("state", "tuning-state files: `state show <file>` | `state merge <out> <in>...` | `state export <out> --hub <addr>` | `state import <file> --hub <addr>`"),
     ("help", "show this message"),
 ];
 
@@ -52,6 +55,37 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "socket",
             takes_value: true,
             help: "hub broker Unix socket path (hub serve / hub dump)",
+        },
+        FlagSpec {
+            name: "listen",
+            takes_value: true,
+            help: "hub serve: also listen on TCP host:port (cross-host fleets; \
+                   port 0 picks a free port)",
+        },
+        FlagSpec {
+            name: "persist",
+            takes_value: true,
+            help: "hub serve: durable broker state directory (append-only entry \
+                   log + snapshot, replayed on restart)",
+        },
+        FlagSpec {
+            name: "compact-every",
+            takes_value: true,
+            help: "hub serve: snapshot-compact the log every N appended records \
+                   (default 256; 0 never compacts)",
+        },
+        FlagSpec {
+            name: "hub",
+            takes_value: true,
+            help: "hub broker address `unix:<path>` | `tcp:host:port` | bare \
+                   socket path (hub dump, state export/import, run warm-start)",
+        },
+        FlagSpec {
+            name: "prewarm",
+            takes_value: false,
+            help: "run: compile warm-started winners (hub- or state-file-adopted) \
+                   at spawn, so the very first call of each problem is served \
+                   from the cache",
         },
         FlagSpec {
             name: "pool",
@@ -161,6 +195,18 @@ fn run(args: &[String]) -> Result<()> {
                 n if n >= 0 => n as usize,
                 bad => return Err(Error::Config(format!("--pool `{bad}` must be positive"))),
             };
+            // --hub attaches the fleet's tuned-state broker: warm-start
+            // at spawn, publish every finalization, and subscribe the
+            // push channel so retunes elsewhere propagate immediately.
+            let hub = match parsed.get("hub") {
+                None => None,
+                Some(spec) => {
+                    let mut opts = HubOptions::for_addr(HubAddr::parse(spec)?);
+                    opts.subscribe = true;
+                    Some(opts)
+                }
+            };
+            let prewarm = parsed.has("prewarm");
             if let Some(traffic) = parsed.get("traffic") {
                 return run_traffic(
                     &settings,
@@ -169,6 +215,8 @@ fn run(args: &[String]) -> Result<()> {
                     pool,
                     max_batch,
                     explore_budget,
+                    hub,
+                    prewarm,
                     parsed.has("json"),
                 );
             }
@@ -177,8 +225,13 @@ fn run(args: &[String]) -> Result<()> {
                 .ok_or_else(|| Error::Config("run requires --trace or --traffic".into()))?
                 .to_string();
             match pool {
-                // no pool, no batching, no budget: plain single-lane replay
-                0 if max_batch.is_none() && explore_budget.is_none() => {
+                // no pool, no batching, no budget, no hub: plain
+                // single-lane replay without a coordinator
+                0 if max_batch.is_none()
+                    && explore_budget.is_none()
+                    && hub.is_none()
+                    && !prewarm =>
+                {
                     run_trace(&settings, kind, &spec, parsed.get("state-file"))
                 }
                 workers => run_trace_served(
@@ -188,6 +241,8 @@ fn run(args: &[String]) -> Result<()> {
                     workers,
                     max_batch,
                     explore_budget,
+                    hub,
+                    prewarm,
                     parsed.get("state-file"),
                 ),
             }
@@ -404,17 +459,22 @@ fn run_trace(
 /// Spawn the serving coordinator all served `run` paths share: optional
 /// worker pool and background-explore budget over the `--engine`
 /// backend's factory, optional warm start from `--state-file`.
+#[allow(clippy::too_many_arguments)]
 fn spawn_coordinator(
     settings: &RunSettings,
     kind: EngineKind,
     workers: usize,
     max_batch: Option<usize>,
     explore_budget: Option<f64>,
+    hub: Option<HubOptions>,
+    prewarm: bool,
     warm_start: Option<std::path::PathBuf>,
 ) -> Result<Coordinator> {
     let leader_settings = settings.clone();
     let mut opts = ServerOptions {
         pool: (workers > 0).then(|| PoolOptions::new(engine_factory(kind)).with_workers(workers)),
+        hub,
+        prewarm,
         ..ServerOptions::default()
     };
     if let Some(max_batch) = max_batch {
@@ -450,6 +510,7 @@ fn spawn_coordinator(
 /// cycle, tuned-state size — or its JSON with `--json`. Runs with a
 /// 2-worker pool unless `--pool` says otherwise, so the full serving
 /// stack is exercised by default.
+#[allow(clippy::too_many_arguments)]
 fn run_traffic(
     settings: &RunSettings,
     kind: EngineKind,
@@ -457,12 +518,15 @@ fn run_traffic(
     pool: usize,
     max_batch: Option<usize>,
     explore_budget: Option<f64>,
+    hub: Option<HubOptions>,
+    prewarm: bool,
     json: bool,
 ) -> Result<()> {
     let spec = TrafficSpec::parse(traffic)?;
     let manifest = load_manifest(kind, settings)?;
     let workers = if pool == 0 { 2 } else { pool };
-    let coordinator = spawn_coordinator(settings, kind, workers, max_batch, explore_budget, None)?;
+    let coordinator =
+        spawn_coordinator(settings, kind, workers, max_batch, explore_budget, hub, prewarm, None)?;
     let harness = TrafficHarness::new(&manifest, spec.clone(), settings.seed)?;
     println!(
         "replaying {} generated arrivals ({} problems, {} clients, {} worker(s))...",
@@ -493,6 +557,7 @@ fn run_traffic(
 /// tunes). Without a pool the budget runs on a dedicated shadow engine.
 /// The printed stats include the per-worker pool, fused-round and
 /// background counters.
+#[allow(clippy::too_many_arguments)]
 fn run_trace_served(
     settings: &RunSettings,
     kind: EngineKind,
@@ -500,12 +565,22 @@ fn run_trace_served(
     workers: usize,
     max_batch: Option<usize>,
     explore_budget: Option<f64>,
+    hub: Option<HubOptions>,
+    prewarm: bool,
     state_file: Option<&str>,
 ) -> Result<()> {
     let trace = parse_trace(spec)?;
     let state_path = state_file.map(std::path::PathBuf::from);
-    let coordinator =
-        spawn_coordinator(settings, kind, workers, max_batch, explore_budget, state_path.clone())?;
+    let coordinator = spawn_coordinator(
+        settings,
+        kind,
+        workers,
+        max_batch,
+        explore_budget,
+        hub,
+        prewarm,
+        state_path.clone(),
+    )?;
     let h = coordinator.handle();
     let manifest = load_manifest(kind, settings)?;
     println!(
@@ -536,25 +611,70 @@ fn run_trace_served(
     Ok(())
 }
 
-/// `jitune hub serve --socket <p>` / `jitune hub dump --socket <p>`:
-/// run the fleet's tuned-state broker, or print its current map.
+/// Broker address for client-side subcommands: `--hub <addr>`
+/// (`unix:<path>` | `tcp:host:port` | bare path) or the original
+/// `--socket <path>`.
+fn hub_flag_addr(parsed: &cli::Parsed) -> Result<HubAddr> {
+    if let Some(spec) = parsed.get("hub") {
+        return HubAddr::parse(spec);
+    }
+    match parsed.get("socket") {
+        Some(path) => Ok(HubAddr::Unix(std::path::PathBuf::from(path))),
+        None => Err(Error::Config("need --hub <addr> (or --socket <path>)".into())),
+    }
+}
+
+/// `jitune hub serve --socket <p> [--listen host:port] [--persist <d>]`
+/// / `jitune hub dump --hub <addr>`: run the fleet's tuned-state broker
+/// (durable when `--persist` names a directory), or print its map.
 fn hub_cmd(parsed: &cli::Parsed) -> Result<()> {
-    let socket = |parsed: &cli::Parsed| {
-        parsed
-            .get("socket")
-            .map(std::path::PathBuf::from)
-            .ok_or_else(|| Error::Config("hub requires --socket <path>".into()))
-    };
     match parsed.positionals.first().map(String::as_str) {
         Some("serve") => {
-            let path = socket(parsed)?;
-            let server = HubServer::bind(&path)?;
-            println!("hub: listening on {}", path.display());
+            let persist = match parsed.get("persist") {
+                None => None,
+                Some(dir) => {
+                    let mut p = PersistOptions::at(dir);
+                    match parsed.i64_or("compact-every", p.compact_every as i64)? {
+                        n if n >= 0 => p.compact_every = n as u64,
+                        bad => {
+                            return Err(Error::Config(format!(
+                                "--compact-every `{bad}` must be >= 0"
+                            )))
+                        }
+                    }
+                    Some(p)
+                }
+            };
+            let opts = BrokerOptions {
+                socket: parsed.get("socket").map(std::path::PathBuf::from),
+                tcp: parsed.get("listen").map(str::to_string),
+                persist,
+            };
+            if opts.socket.is_none() && opts.tcp.is_none() {
+                return Err(Error::Config(
+                    "hub serve requires --socket <path> and/or --listen <host:port>".into(),
+                ));
+            }
+            let server = HubServer::bind_with(opts)?;
+            if let Some(path) = server.socket_path() {
+                println!("hub: listening on unix:{}", path.display());
+            }
+            if let Some(addr) = server.tcp_addr() {
+                println!("hub: listening on tcp:{addr}");
+            }
+            let replay = server.replay_report();
+            if replay.snapshot_entries + replay.log_records > 0 || replay.truncated_bytes > 0 {
+                println!(
+                    "hub: restored {} snapshot entr(ies) + {} log record(s) \
+                     ({} torn byte(s) discarded)",
+                    replay.snapshot_entries, replay.log_records, replay.truncated_bytes
+                );
+            }
             server.serve_forever()
         }
         Some("dump") => {
-            let path = socket(parsed)?;
-            let mut client = HubClient::connect(HubOptions::at(&path))?;
+            let addr = hub_flag_addr(parsed)?;
+            let mut client = HubClient::connect(HubOptions::for_addr(addr))?;
             let entries = client.pull_all()?;
             let arr = Value::Arr(entries.iter().map(HubEntry::to_json).collect());
             println!("{}", arr.to_json_pretty());
@@ -567,8 +687,10 @@ fn hub_cmd(parsed: &cli::Parsed) -> Result<()> {
     }
 }
 
-/// `jitune state show <file>` / `jitune state merge <out> <in>...`:
-/// operator tooling for persisted tuning-state files — no hub needed.
+/// `jitune state show <file>` / `jitune state merge <out> <in>...` /
+/// `jitune state export <out> --hub <addr>` / `jitune state import
+/// <file> --hub <addr>`: operator tooling for tuning-state files and
+/// shipping the tuned cache between brokers.
 fn state_cmd(parsed: &cli::Parsed) -> Result<()> {
     match parsed.positionals.split_first() {
         Some((sub, rest)) if sub == "show" => match rest {
@@ -581,22 +703,75 @@ fn state_cmd(parsed: &cli::Parsed) -> Result<()> {
             }
             _ => Err(Error::Config("state merge requires <out> and at least one <in>".into())),
         },
+        Some((sub, rest)) if sub == "export" => match rest {
+            [out] => state_export(std::path::Path::new(out), parsed),
+            _ => Err(Error::Config(
+                "state export requires exactly one <out> (plus --hub <addr>)".into(),
+            )),
+        },
+        Some((sub, rest)) if sub == "import" => match rest {
+            [file] => state_import(std::path::Path::new(file), parsed),
+            _ => Err(Error::Config(
+                "state import requires exactly one <file> (plus --hub <addr>)".into(),
+            )),
+        },
         _ => Err(Error::Config(
-            "state requires a subcommand: `show <file>` or `merge <out> <in>...`".into(),
+            "state requires a subcommand: `show <file>`, `merge <out> <in>...`, \
+             `export <out> --hub <addr>` or `import <file> --hub <addr>`"
+                .into(),
         )),
     }
 }
 
-/// Parse a tuning-state file (an array of tuned entries; `version` is
-/// optional, as written by `save_state`).
+/// Parse a tuning-state document: a bare array of tuned entries
+/// (`save_state` output; `version` optional) or a `state export` cache
+/// artifact.
 fn load_state_entries(path: &std::path::Path) -> Result<Vec<HubEntry>> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| Error::io(path.display().to_string(), e))?;
     let parsed = jitune::util::json::parse(&text)?;
-    let arr = parsed.as_arr().ok_or_else(|| {
-        Error::Autotune(format!("{}: expected a JSON array of tuned entries", path.display()))
-    })?;
+    let arr = state_entry_values(&parsed)
+        .map_err(|e| Error::Autotune(format!("{}: {e}", path.display())))?;
     arr.iter().map(HubEntry::from_json).collect()
+}
+
+/// `jitune state export <out> --hub <addr>`: capture the broker's full
+/// tuned map as one deployable cache artifact.
+fn state_export(out: &std::path::Path, parsed: &cli::Parsed) -> Result<()> {
+    let addr = hub_flag_addr(parsed)?;
+    let mut client = HubClient::connect(HubOptions::for_addr(addr.clone()))?;
+    let entries = client.pull_all()?;
+    jitune::util::atomic_write(out, &artifact_json(&entries).to_json_pretty())?;
+    println!(
+        "state: exported {} tuned problem(s) from {addr} -> {}",
+        entries.len(),
+        out.display()
+    );
+    Ok(())
+}
+
+/// `jitune state import <file> --hub <addr>`: publish a cache artifact
+/// (or plain state file) into a broker — every entry LWW-merges, so the
+/// import is safe against a broker that already holds newer winners.
+fn state_import(file: &std::path::Path, parsed: &cli::Parsed) -> Result<()> {
+    let addr = hub_flag_addr(parsed)?;
+    let entries = load_state_entries(file)?;
+    let mut client = HubClient::connect(HubOptions::for_addr(addr.clone()))?;
+    let (mut merged, mut conflicts) = (0usize, 0usize);
+    for entry in &entries {
+        if client.publish(entry)?.conflict {
+            conflicts += 1;
+        } else {
+            merged += 1;
+        }
+    }
+    println!(
+        "state: imported {} entr(ies) from {} into {addr} \
+         ({merged} merged, {conflicts} version conflict(s) broker-resolved)",
+        entries.len(),
+        file.display()
+    );
+    Ok(())
 }
 
 fn state_show(path: &std::path::Path) -> Result<()> {

@@ -1,0 +1,349 @@
+//! Durable, replicated hub integration: broker restarts, TCP fleets,
+//! push-notify propagation, spawn-time prewarm, and shipping the tuned
+//! cache as a deployable artifact.
+//!
+//! Brokers run in-process (bound with [`HubServer::bind_with`], stopped
+//! via [`HubStopHandle`]) so a "restart" is a real stop → rebind over
+//! the same persist directory; the export/import cookbook runs the
+//! actual `jitune` binary.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{CallRoute, Coordinator, Dispatcher, KernelRegistry, ServerOptions};
+use jitune::hub::{
+    BrokerOptions, HubClient, HubEntry, HubOptions, HubServer, HubStopHandle, PersistOptions,
+};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::{synthetic_manifest, temp_path};
+
+/// An in-process broker serving on a background thread; joined on
+/// shutdown so listeners and the socket file are fully released before
+/// a rebind.
+struct Broker {
+    stop: HubStopHandle,
+    join: Option<std::thread::JoinHandle<()>>,
+    tcp: Option<std::net::SocketAddr>,
+}
+
+impl Broker {
+    /// Bind (retrying briefly — a just-stopped predecessor may still be
+    /// releasing the port) and serve on a background thread.
+    fn start(opts: BrokerOptions) -> Broker {
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let server = loop {
+            match HubServer::bind_with(opts.clone()) {
+                Ok(s) => break s,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "bind broker: {e}");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        let stop = server.stop_handle();
+        let tcp = server.tcp_addr();
+        Broker { stop, join: Some(server.spawn()), tcp }
+    }
+
+    fn shutdown(mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            j.join().expect("join broker thread");
+        }
+    }
+}
+
+impl Drop for Broker {
+    fn drop(&mut self) {
+        self.stop.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// An entry matching the synthetic manifest (`kern`, param `p`,
+/// 8×8 inputs, candidate values [0, 1]) so dispatchers can adopt it.
+fn entry(kernel: &str, winner: i64, version: u64) -> HubEntry {
+    HubEntry {
+        kernel: kernel.into(),
+        param: "p".into(),
+        signature: "f32[8,8]".into(),
+        values: vec![0, 1],
+        winner_value: winner,
+        version,
+    }
+}
+
+/// v1 wins tuning (60us vs 600us).
+fn base_spec() -> MockSpec {
+    MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(600))
+        .with_cost("kern.v1.n8", Duration::from_micros(60))
+}
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+/// One "serving process": a dispatcher over the shared synthetic
+/// manifest layout, hub-attached with the given client options.
+fn member(opts: HubOptions) -> Dispatcher {
+    let manifest = synthetic_manifest("kern", 2, &[8]).expect("manifest");
+    let mut d =
+        Dispatcher::new(KernelRegistry::new(manifest), Box::new(MockEngine::new(base_spec())));
+    d.attach_hub(HubClient::connect(opts).expect("connect hub"));
+    d
+}
+
+fn sorted(mut entries: Vec<HubEntry>) -> Vec<HubEntry> {
+    entries.sort_by(|a, b| a.kernel.cmp(&b.kernel));
+    entries
+}
+
+#[test]
+fn broker_restart_loses_zero_published_entries_over_unix() {
+    let dir = temp_path("persist-unix", "d");
+    let sock = temp_path("persist-unix", "sock");
+    let opts = BrokerOptions::unix(&sock).with_persist(PersistOptions::at(&dir));
+
+    let broker = Broker::start(opts.clone());
+    {
+        let mut c = HubClient::connect(HubOptions::at(&sock)).expect("connect");
+        c.publish(&entry("kern", 1, 1)).expect("publish");
+        c.publish(&entry("other", 0, 3)).expect("publish");
+        // a newer version replacing an older one must survive as the
+        // *newer* one
+        c.publish(&entry("kern", 0, 2)).expect("publish");
+    }
+    broker.shutdown();
+
+    let restarted = Broker::start(opts);
+    let mut c = HubClient::connect(HubOptions::at(&sock)).expect("reconnect");
+    let got = sorted(c.pull_all().expect("pull"));
+    assert_eq!(
+        got,
+        vec![entry("kern", 0, 2), entry("other", 0, 3)],
+        "every acked publish must come back, at its exact version"
+    );
+    drop(c);
+    restarted.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn broker_restart_loses_zero_published_entries_over_tcp() {
+    let dir = temp_path("persist-tcp", "d");
+    let opts = BrokerOptions::default()
+        .with_tcp("127.0.0.1:0")
+        .with_persist(PersistOptions::at(&dir));
+
+    let broker = Broker::start(opts.clone());
+    let addr = broker.tcp.expect("tcp addr").to_string();
+    {
+        let mut c = HubClient::connect(HubOptions::tcp(&addr)).expect("connect tcp");
+        c.publish(&entry("kern", 1, 1)).expect("publish");
+        c.publish(&entry("kern", 0, 2)).expect("publish");
+    } // client closes first: the restarted listener can rebind the port
+    broker.shutdown();
+
+    // restart on the *same* port so clients redial transparently
+    let restarted = Broker::start(
+        BrokerOptions::default().with_tcp(addr.clone()).with_persist(PersistOptions::at(&dir)),
+    );
+    let mut c = HubClient::connect(HubOptions::tcp(&addr)).expect("reconnect tcp");
+    assert_eq!(c.pull_all().expect("pull"), vec![entry("kern", 0, 2)]);
+    drop(c);
+    restarted.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fleet_reconverges_through_a_restarted_broker() {
+    let dir = temp_path("reconverge", "d");
+    let sock = temp_path("reconverge", "sock");
+    let opts = BrokerOptions::unix(&sock).with_persist(PersistOptions::at(&dir));
+
+    // A tunes from scratch; finalization publishes the winner (v1)
+    let broker = Broker::start(opts.clone());
+    let mut a = member(HubOptions::at(&sock));
+    for _ in 0..3 {
+        a.call("kern", &inputs()).expect("tune");
+    }
+    assert_eq!(a.tuned_value("kern", 8), Some(1));
+    assert_eq!(a.stats().hub().pushes, 1);
+    broker.shutdown();
+
+    // the broker restarts from its log; a cold process B warm-starts
+    // off it with zero explore iterations
+    let restarted = Broker::start(opts);
+    let mut b = member(HubOptions::at(&sock));
+    assert_eq!(b.hub_pull().expect("pull"), (1, 0));
+    let first = b.call("kern", &inputs()).expect("warm call");
+    assert_eq!(first.route, CallRoute::Finalized, "only the final compile remains");
+    assert_eq!(first.value, 1);
+    assert_eq!(b.stats().kernel("kern").unwrap().explored, 0, "zero explores after restart");
+
+    // A's live client redials transparently: the connection generation
+    // bumps, hub_resync drops stale per-entry knowledge, and the pull
+    // reconverges on broker truth without re-tuning
+    assert_eq!(a.hub_pull().expect("resync pull"), (0, 0), "same winner: nothing to adopt");
+    assert_eq!(a.tuned_value("kern", 8), Some(1));
+    restarted.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn push_notify_propagates_between_coordinators_without_pulls() {
+    let sock = temp_path("push", "sock");
+    let _broker = Broker::start(BrokerOptions::unix(&sock));
+    let spawn = |sock: PathBuf| {
+        Coordinator::spawn_with_options(
+            move || {
+                let manifest = synthetic_manifest("kern", 2, &[8])?;
+                Ok(Dispatcher::new(
+                    KernelRegistry::new(manifest),
+                    Box::new(MockEngine::new(base_spec())),
+                ))
+            },
+            ServerOptions {
+                // push channel only: no pull_interval — propagation must
+                // come from the broker's notify, not polling
+                hub: Some(HubOptions { subscribe: true, ..HubOptions::at(&sock) }),
+                ..ServerOptions::default()
+            },
+        )
+        .expect("spawn coordinator")
+    };
+
+    let b = spawn(sock.clone());
+    let hb = b.handle();
+    let a = spawn(sock.clone());
+    let ha = a.handle();
+    for _ in 0..3 {
+        ha.call("kern", inputs()).expect("tune");
+    }
+    assert_eq!(ha.tuned_value("kern", 8).expect("tuned_value"), Some(1));
+
+    // B adopts A's winner with no caller traffic and no periodic pull:
+    // the broker pushed the publish, B's notifier triggered the pull
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let json = hb.stats_json().expect("stats_json");
+        let adopted = json
+            .get("hub")
+            .and_then(|h| h.get("adopted"))
+            .and_then(jitune::util::json::Value::as_i64)
+            .unwrap_or(0);
+        if adopted >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "push-notified adoption never happened");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let first = hb.call("kern", inputs()).expect("adopted call");
+    assert_eq!(first.value, 1, "B serves A's winner without ever exploring");
+    assert_eq!(
+        hb.stats_json()
+            .expect("stats_json")
+            .get("kernels")
+            .and_then(|k| k.get("kern"))
+            .and_then(|k| k.get("explored"))
+            .and_then(jitune::util::json::Value::as_i64),
+        Some(0)
+    );
+}
+
+#[test]
+fn prewarm_serves_the_first_call_from_the_cache() {
+    let sock = temp_path("prewarm", "sock");
+    let _broker = Broker::start(BrokerOptions::unix(&sock));
+    {
+        let mut c = HubClient::connect(HubOptions::at(&sock)).expect("connect");
+        c.publish(&entry("kern", 1, 1)).expect("seed winner");
+    }
+
+    let coord = Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 2, &[8])?;
+            Ok(Dispatcher::new(
+                KernelRegistry::new(manifest),
+                Box::new(MockEngine::new(base_spec())),
+            ))
+        },
+        ServerOptions {
+            hub: Some(HubOptions::at(&sock)),
+            prewarm: true,
+            ..ServerOptions::default()
+        },
+    )
+    .expect("spawn coordinator");
+    let h = coord.handle();
+
+    // without prewarm the first warm-started call is CallRoute::Finalized
+    // (it pays the winner's compile); with prewarm the compile happened
+    // at spawn, so the very first call is already steady-state
+    let first = h.call("kern", inputs()).expect("first call");
+    assert_eq!(first.route, CallRoute::Tuned, "prewarm already paid the winner's compile");
+    assert_eq!(first.value, 1);
+    let json = h.stats_json().expect("stats_json");
+    assert_eq!(
+        json.get("kernels")
+            .and_then(|k| k.get("kern"))
+            .and_then(|k| k.get("explored"))
+            .and_then(jitune::util::json::Value::as_i64),
+        Some(0),
+        "prewarmed process never explored"
+    );
+}
+
+#[test]
+fn exported_cache_artifact_ships_between_brokers_and_cold_boots() {
+    let sock_a = temp_path("ship-a", "sock");
+    let sock_b = temp_path("ship-b", "sock");
+    let _a = Broker::start(BrokerOptions::unix(&sock_a));
+    let _b = Broker::start(BrokerOptions::unix(&sock_b));
+    {
+        let mut c = HubClient::connect(HubOptions::at(&sock_a)).expect("connect");
+        c.publish(&entry("kern", 1, 2)).expect("publish");
+    }
+
+    // export broker A's map as one deployable artifact
+    let artifact = temp_path("ship", "json");
+    let out = Command::new(env!("CARGO_BIN_EXE_jitune"))
+        .args(["state", "export"])
+        .arg(&artifact)
+        .arg("--hub")
+        .arg(format!("unix:{}", sock_a.display()))
+        .output()
+        .expect("run `jitune state export`");
+    assert!(out.status.success(), "export failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&artifact).expect("artifact written");
+    assert!(text.contains("jitune-tuned-cache"), "artifact is typed: {text}");
+
+    // import it into broker B (a different fleet)
+    let out = Command::new(env!("CARGO_BIN_EXE_jitune"))
+        .args(["state", "import"])
+        .arg(&artifact)
+        .arg("--hub")
+        .arg(format!("unix:{}", sock_b.display()))
+        .output()
+        .expect("run `jitune state import`");
+    assert!(out.status.success(), "import failed: {}", String::from_utf8_lossy(&out.stderr));
+    let mut cb = HubClient::connect(HubOptions::at(&sock_b)).expect("connect B");
+    assert_eq!(cb.pull_all().expect("pull"), vec![entry("kern", 1, 2)]);
+    drop(cb);
+
+    // and a hub-less process cold-boots straight off the artifact file
+    let manifest = synthetic_manifest("kern", 2, &[8]).expect("manifest");
+    let mut d =
+        Dispatcher::new(KernelRegistry::new(manifest), Box::new(MockEngine::new(base_spec())));
+    assert_eq!(d.load_state(&artifact).expect("load artifact"), (1, 0));
+    let first = d.call("kern", &inputs()).expect("cold boot");
+    assert_eq!(first.route, CallRoute::Finalized);
+    assert_eq!(first.value, 1);
+    assert_eq!(d.stats().kernel("kern").unwrap().explored, 0, "zero explores off the artifact");
+    let _ = std::fs::remove_file(&artifact);
+}
