@@ -1,0 +1,509 @@
+//! **Chaos replay** — production-shaped traffic with faults injected
+//! mid-run, gated on the serving path's resilience contract.
+//!
+//! Every scenario replays a seeded trace against a live coordinator
+//! while a [`FaultPlan`]-scheduled injection breaks something under it:
+//!
+//! | scenario       | injection                               | must hold |
+//! |----------------|-----------------------------------------|-----------|
+//! | `wedge`        | winner slows 250x (stuck accelerator)   | callers bounded by the deadline, no other errors |
+//! | `error`        | winner's executions start failing       | breaker demotes to the fallback; bounded error burst |
+//! | `worker_death` | a pool worker panics mid-job            | respawn absorbs it; no hung callers |
+//! | `broker_down`  | the tuned-state hub broker goes away    | serving continues error-free |
+//! | `overload`     | capacity crunch under a tight gate      | calls shed fast instead of queueing unboundedly |
+//!
+//! Cross-cutting gates: no scenario may hang (each replay must finish
+//! within a generous wall-clock bound — a single stuck caller blows it),
+//! error classes other than the injected one stay at zero, and where the
+//! fault clears, post-clear p99 must recover to the healthy band.
+//!
+//! The mock engine drives every scenario: chaos needs *controllable*
+//! faults (`LatencyFault::fail_execute` / `panic_once` / `set_scale`),
+//! which real kernels cannot provide deterministically. Results land in
+//! `BENCH_CHAOS.json` at the repository root — full runs only, after
+//! every figure validated as a real measurement; `--smoke` runs the
+//! same scenarios smaller, keeps the structural gates (no hangs, error
+//! classes) and skips the timing gates plus the JSON write.
+//!
+//! Env knob: `JITUNE_BENCH_CHAOS_CALLS` (trace length per scenario).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    Coordinator, Dispatcher, KernelRegistry, PoolOptions, QuarantinePolicy, ServerOptions,
+    ShedPolicy,
+};
+use jitune::hub::{HubAddr, HubOptions, HubServer};
+use jitune::runtime::mock::{MockEngineFactory, MockSpec};
+use jitune::runtime::EngineFactory;
+use jitune::testutil::{synthetic_manifest, temp_path};
+use jitune::traffic::{
+    FaultInjection, FaultPlan, ReplayOptions, TrafficHarness, TrafficReport, TrafficSpec,
+};
+use jitune::util::json::{n, s, Value};
+
+const KERNEL: &str = "kern";
+const SIZE: i64 = 8;
+const VARIANTS: usize = 3;
+const RPS: f64 = 400.0;
+const INPUT_SEED: u64 = 0xC0C0;
+/// Post-clear p99 must come back under this (full mode): healthy calls
+/// are sub-2ms sleeps, so 25ms covers queueing noise with a wide margin
+/// while still catching a path that never recovered.
+const RECOVERY_BOUND_US: f64 = 25_000.0;
+
+/// Mock costs make variant 1 the clear winner (400us) with variant 2
+/// the next-best fallback (1ms) — quarantine demotion is observable
+/// from `tuned_value` alone. Sleep-modelled execution frees host CPUs,
+/// so wedged calls park threads instead of burning cores.
+fn chaos_spec() -> MockSpec {
+    MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(2000))
+        .with_cost("kern.v1.n8", Duration::from_micros(400))
+        .with_cost("kern.v2.n8", Duration::from_micros(1000))
+        .with_sleep_exec()
+}
+
+/// The tuner's healthy pick and the fault target in every scenario.
+const WINNER: &str = "kern.v1.n8";
+/// Tuning value of the next-best variant (the expected fallback).
+const FALLBACK_VALUE: i64 = 2;
+
+/// Single-problem trace: no churn, steady arrivals unless a scenario
+/// asks for bursts.
+fn traffic(calls: usize, clients: usize) -> TrafficSpec {
+    TrafficSpec {
+        calls,
+        rps: RPS,
+        zipf_s: 0.0,
+        initial: 1,
+        churn_every: 0,
+        burst: 1.0,
+        burst_len: 50,
+        drift_at: 0.0,
+        seed: 42,
+        clients,
+    }
+}
+
+/// Coordinator over mock engines. `workers > 0` attaches a pool of
+/// pinned engines (kernels refuse `shared()`, so tuned calls take the
+/// pool path); `workers == 0` with a plain factory serves tuned calls
+/// on the caller-thread fast lane.
+fn coordinator(spec: MockSpec, pinned: bool, workers: usize, mut opts: ServerOptions) -> Coordinator {
+    let factory: Arc<dyn EngineFactory> = if pinned {
+        Arc::new(MockEngineFactory::pinned(spec))
+    } else {
+        Arc::new(MockEngineFactory::new(spec))
+    };
+    if workers > 0 {
+        opts.pool = Some(PoolOptions::new(factory.clone()).with_workers(workers));
+    }
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest(KERNEL, VARIANTS, &[SIZE])?;
+            Ok(Dispatcher::new(KernelRegistry::new(manifest), factory.create()?))
+        },
+        opts,
+    )
+    .expect("coordinator")
+}
+
+/// Wire a [`FaultPlan`]'s schedule to concrete injection closures.
+fn injection(
+    plan: &FaultPlan,
+    calls: usize,
+    fire: Arc<dyn Fn() + Send + Sync>,
+    clear: Option<Arc<dyn Fn() + Send + Sync>>,
+) -> FaultInjection {
+    plan.validate().expect("fault plan");
+    FaultInjection {
+        label: plan.label(),
+        at: plan.fire_index(calls),
+        clear_at: plan.clear_index(calls),
+        fire,
+        clear,
+    }
+}
+
+/// Replay with the no-hang gate: a single stuck caller keeps the
+/// harness from joining its client and blows the wall-clock bound.
+fn replay(
+    name: &str,
+    coord: &Coordinator,
+    spec: &TrafficSpec,
+    faults: Vec<FaultInjection>,
+) -> TrafficReport {
+    let manifest = synthetic_manifest(KERNEL, VARIANTS, &[SIZE]).expect("manifest");
+    let harness = TrafficHarness::new(&manifest, spec.clone(), INPUT_SEED).expect("harness");
+    let opts = ReplayOptions { faults, ..ReplayOptions::default() };
+    let trace_secs = spec.calls as f64 / spec.rps;
+    let bound = Duration::from_secs_f64(trace_secs * 6.0 + 20.0);
+    let t0 = Instant::now();
+    let report = harness.run(coord, &opts).expect("replay");
+    let took = t0.elapsed();
+    assert!(
+        took < bound,
+        "{name}: replay took {took:?} (bound {bound:?}) — a caller hung"
+    );
+    report
+}
+
+/// Poll `tuned_value` until the leader reports `want` (demotion and
+/// fallback finalization run on leader ticks, not caller threads).
+fn wait_tuned_value(name: &str, coord: &Coordinator, want: i64) {
+    let h = coord.handle();
+    let t0 = Instant::now();
+    loop {
+        if h.tuned_value(KERNEL, SIZE).expect("tuned_value") == Some(want) {
+            return;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "{name}: tuned value never reached {want} (got {:?})",
+            h.tuned_value(KERNEL, SIZE)
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+/// Errors that are neither sheds nor deadline misses — the classes a
+/// scenario did *not* inject must stay at zero (or tightly bounded).
+fn other_errors(r: &TrafficReport) -> usize {
+    r.errors - r.shed - r.deadline_exceeded
+}
+
+/// One scenario's JSON row.
+fn scenario_json(name: &str, plan: &FaultPlan, r: &TrafficReport) -> Value {
+    let fault = r.faults.first();
+    Value::Obj(vec![
+        ("name".into(), s(name)),
+        ("plan".into(), s(plan.label())),
+        ("at".into(), n(plan.at)),
+        ("clear".into(), n(plan.clear)),
+        ("calls".into(), n(r.calls as f64)),
+        ("errors".into(), n(r.errors as f64)),
+        ("shed".into(), n(r.shed as f64)),
+        ("deadline_exceeded".into(), n(r.deadline_exceeded as f64)),
+        ("p50_us".into(), n(r.p50_us)),
+        ("p99_us".into(), n(r.p99_us)),
+        (
+            "recovery_p99_us".into(),
+            r.recovery_p99_us.map(n).unwrap_or(Value::Null),
+        ),
+        ("wall_ms".into(), n(r.wall_ms)),
+        (
+            "fired_ms".into(),
+            fault.and_then(|f| f.fired_ms).map(n).unwrap_or(Value::Null),
+        ),
+        (
+            "cleared_ms".into(),
+            fault.and_then(|f| f.cleared_ms).map(n).unwrap_or(Value::Null),
+        ),
+    ])
+}
+
+/// Abort instead of emitting a figure that is not a real measurement.
+fn require_real(figures: &[(String, f64)]) {
+    for (label, v) in figures {
+        assert!(
+            v.is_finite() && *v > 0.0,
+            "refusing to emit placeholder output: {label} = {v} is not a real measurement"
+        );
+    }
+}
+
+fn main() {
+    jitune::util::logging::init();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let calls: usize = std::env::var("JITUNE_BENCH_CHAOS_CALLS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 240 } else { 1200 });
+    println!(
+        "== chaos replay on the mock engine ({calls} calls/scenario{}) ==\n",
+        if smoke { ", smoke" } else { "" }
+    );
+    let mut rows = Vec::new();
+    let mut figures = Vec::new();
+
+    // -- wedge: the winner slows 250x mid-run; the per-call deadline
+    // must bound every caller while the wedge holds, and nothing else
+    // may error.
+    {
+        let plan = FaultPlan::parse("kind=wedge, at=0.3, clear=0.6, target=kern.v1.n8, factor=250")
+            .expect("wedge plan");
+        let spec = chaos_spec();
+        let fault = spec.latency_fault.clone();
+        let coord = coordinator(
+            spec,
+            true,
+            2,
+            ServerOptions { call_deadline: Some(Duration::from_millis(25)), ..Default::default() },
+        );
+        let fire = fault.clone();
+        let factor = plan.factor;
+        let clear = fault.clone();
+        let report = replay(
+            "wedge",
+            &coord,
+            &traffic(calls, 4),
+            vec![injection(
+                &plan,
+                calls,
+                Arc::new(move || fire.set_scale(WINNER, factor)),
+                Some(Arc::new(move || clear.clear())),
+            )],
+        );
+        print!("{}", report.render());
+        assert!(
+            report.deadline_exceeded > 0,
+            "wedge: the deadline must trip while the winner is wedged"
+        );
+        assert_eq!(
+            other_errors(&report),
+            0,
+            "wedge: only deadline misses may surface"
+        );
+        let recovery = report.recovery_p99_us.expect("wedge: clear scheduled, recovery reported");
+        if !smoke {
+            assert!(
+                recovery < RECOVERY_BOUND_US,
+                "wedge: post-clear p99 {recovery:.0}us must recover under {RECOVERY_BOUND_US}us"
+            );
+            figures.push(("wedge recovery p99".to_string(), recovery));
+        }
+        figures.push(("wedge p50".to_string(), report.p50_us));
+        figures.push(("wedge wall ms".to_string(), report.wall_ms));
+        rows.push(scenario_json("wedge", &plan, &report));
+        println!();
+    }
+
+    // -- error: the winner's executions start failing; the quarantine
+    // breaker must demote it and serve the next-best variant, keeping
+    // the error burst to the breaker window.
+    {
+        let plan = FaultPlan::parse("kind=error, at=0.25, clear=0.65, target=kern.v1.n8")
+            .expect("error plan");
+        let spec = chaos_spec();
+        let fault = spec.latency_fault.clone();
+        let coord = coordinator(
+            spec,
+            false,
+            0,
+            ServerOptions {
+                quarantine: Some(QuarantinePolicy {
+                    window: Duration::from_millis(40),
+                    min_samples: 4,
+                    error_threshold: 0.4,
+                    consecutive_windows: 1,
+                    cooldown: Duration::ZERO,
+                    quarantine_for: Duration::from_secs(60),
+                }),
+                ..Default::default()
+            },
+        );
+        let fire = fault.clone();
+        let clear = fault.clone();
+        let report = replay(
+            "error",
+            &coord,
+            &traffic(calls, 4),
+            vec![injection(
+                &plan,
+                calls,
+                Arc::new(move || fire.fail_execute(WINNER)),
+                Some(Arc::new(move || clear.clear_error(WINNER))),
+            )],
+        );
+        print!("{}", report.render());
+        assert!(report.errors > 0, "error: the injected failures must surface at least once");
+        assert!(
+            report.errors <= calls / 4,
+            "error: breaker must bound the burst, got {}/{} errors",
+            report.errors,
+            report.calls
+        );
+        assert_eq!(report.shed + report.deadline_exceeded, 0, "error: no shed/deadline classes");
+        wait_tuned_value("error", &coord, FALLBACK_VALUE);
+        let recovery = report.recovery_p99_us.expect("error: clear scheduled, recovery reported");
+        if !smoke {
+            assert!(
+                recovery < RECOVERY_BOUND_US,
+                "error: post-clear p99 {recovery:.0}us must recover under {RECOVERY_BOUND_US}us"
+            );
+            figures.push(("error recovery p99".to_string(), recovery));
+        }
+        figures.push(("error p50".to_string(), report.p50_us));
+        figures.push(("error wall ms".to_string(), report.wall_ms));
+        rows.push(scenario_json("error", &plan, &report));
+        println!();
+    }
+
+    // -- worker_death: one pool worker panics mid-job (one-shot); the
+    // pool must respawn it and the lost job's caller must be released
+    // by the deadline instead of hanging on a dropped reply.
+    {
+        let plan = FaultPlan::parse("kind=worker_death, at=0.5, target=kern.v1.n8")
+            .expect("worker_death plan");
+        let spec = chaos_spec();
+        let fault = spec.latency_fault.clone();
+        let coord = coordinator(
+            spec,
+            true,
+            2,
+            ServerOptions { call_deadline: Some(Duration::from_millis(100)), ..Default::default() },
+        );
+        let fire = fault.clone();
+        let report = replay(
+            "worker_death",
+            &coord,
+            &traffic(calls, 4),
+            vec![injection(
+                &plan,
+                calls,
+                Arc::new(move || fire.panic_once(WINNER)),
+                None,
+            )],
+        );
+        print!("{}", report.render());
+        assert!(
+            report.errors <= 10,
+            "worker_death: one dead worker may cost a handful of calls, got {}",
+            report.errors
+        );
+        figures.push(("worker_death p50".to_string(), report.p50_us));
+        figures.push(("worker_death wall ms".to_string(), report.wall_ms));
+        rows.push(scenario_json("worker_death", &plan, &report));
+        println!();
+    }
+
+    // -- broker_down: the tuned-state hub vanishes mid-run; serving
+    // never depends on broker liveness, so callers must see nothing.
+    {
+        let plan = FaultPlan::parse("kind=broker_down, at=0.4").expect("broker_down plan");
+        let socket = temp_path("chaos-hub", "sock");
+        let server = HubServer::bind(&socket).expect("hub bind");
+        let stop = server.stop_handle();
+        let hub_join = server.spawn();
+        let mut hub_opts = HubOptions::for_addr(HubAddr::Unix(socket.clone()));
+        hub_opts.subscribe = true;
+        let coord = coordinator(
+            chaos_spec(),
+            false,
+            0,
+            ServerOptions { hub: Some(hub_opts), ..Default::default() },
+        );
+        let report = replay(
+            "broker_down",
+            &coord,
+            &traffic(calls, 4),
+            vec![injection(&plan, calls, Arc::new(move || stop.stop()), None)],
+        );
+        print!("{}", report.render());
+        assert_eq!(
+            report.errors, 0,
+            "broker_down: a dead broker must never surface to callers"
+        );
+        figures.push(("broker_down p50".to_string(), report.p50_us));
+        figures.push(("broker_down wall ms".to_string(), report.wall_ms));
+        rows.push(scenario_json("broker_down", &plan, &report));
+        drop(coord);
+        let _ = hub_join.join();
+        let _ = std::fs::remove_file(&socket);
+        println!();
+    }
+
+    // -- overload: every variant slows 25x under a tight admission gate
+    // and six open-loop clients; excess calls must shed fast with
+    // `Overloaded` instead of queueing unboundedly, and nothing else
+    // may error.
+    {
+        let plan = FaultPlan::parse("kind=overload, at=0.35, clear=0.65, factor=25")
+            .expect("overload plan");
+        let spec = chaos_spec();
+        let fault = spec.latency_fault.clone();
+        let coord = coordinator(
+            spec,
+            true,
+            1,
+            ServerOptions {
+                shed: Some(ShedPolicy {
+                    max_inflight: 3,
+                    max_queue_wait: Duration::from_millis(250),
+                }),
+                ..Default::default()
+            },
+        );
+        let fire = fault.clone();
+        let factor = plan.factor;
+        let clear = fault.clone();
+        let ids: Vec<String> = (0..VARIANTS).map(|i| format!("{KERNEL}.v{i}.n{SIZE}")).collect();
+        let report = replay(
+            "overload",
+            &coord,
+            &traffic(calls, 6),
+            vec![injection(
+                &plan,
+                calls,
+                Arc::new(move || {
+                    for id in &ids {
+                        fire.set_scale(id, factor);
+                    }
+                }),
+                Some(Arc::new(move || clear.clear())),
+            )],
+        );
+        print!("{}", report.render());
+        assert!(report.shed > 0, "overload: the admission gate must shed under the crunch");
+        assert_eq!(
+            other_errors(&report) + report.deadline_exceeded,
+            0,
+            "overload: only sheds may surface"
+        );
+        let recovery =
+            report.recovery_p99_us.expect("overload: clear scheduled, recovery reported");
+        if !smoke {
+            assert!(
+                recovery < RECOVERY_BOUND_US,
+                "overload: post-clear p99 {recovery:.0}us must recover under {RECOVERY_BOUND_US}us"
+            );
+            figures.push(("overload recovery p99".to_string(), recovery));
+        }
+        figures.push(("overload p50".to_string(), report.p50_us));
+        figures.push(("overload wall ms".to_string(), report.wall_ms));
+        rows.push(scenario_json("overload", &plan, &report));
+        println!();
+    }
+
+    if smoke {
+        println!("smoke mode: structural gates passed; skipping timing gates and BENCH_CHAOS.json.");
+        println!("chaos_replay done.");
+        return;
+    }
+
+    require_real(&figures);
+    let json = Value::Obj(vec![
+        ("bench".into(), s("chaos_replay")),
+        ("smoke".into(), Value::Bool(false)),
+        (
+            "config".into(),
+            Value::Obj(vec![
+                ("engine".into(), s("mock")),
+                ("calls_per_scenario".into(), n(calls as f64)),
+                ("rps".into(), n(RPS)),
+                ("variants".into(), n(VARIANTS as f64)),
+                ("recovery_bound_us".into(), n(RECOVERY_BOUND_US)),
+            ]),
+        ),
+        ("scenarios".into(), Value::Arr(rows)),
+    ]);
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("repo root")
+        .join("BENCH_CHAOS.json");
+    jitune::util::atomic_write(&out, &json.to_json_pretty()).expect("write bench json");
+    println!("wrote {}", out.display());
+    println!("chaos_replay done.");
+}

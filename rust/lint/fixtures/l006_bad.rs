@@ -1,0 +1,7 @@
+fn waits_forever(rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    rx.recv().unwrap_or(0)
+}
+
+fn joins_forever(handle: std::thread::JoinHandle<u32>) -> u32 {
+    handle.join().unwrap_or(0)
+}

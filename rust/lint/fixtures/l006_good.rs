@@ -1,0 +1,29 @@
+use std::time::Duration;
+
+fn bounded(rx: &std::sync::mpsc::Receiver<u32>) -> Option<u32> {
+    rx.recv_timeout(Duration::from_millis(50)).ok()
+}
+
+fn justified(rx: &std::sync::mpsc::Receiver<u32>) -> Option<u32> {
+    // jitune-lint: allow(L006): sender drops at shutdown, recv disconnects
+    rx.recv().ok()
+}
+
+fn justified_inline(handle: std::thread::JoinHandle<u32>) -> u32 {
+    handle.join().unwrap_or(0) // jitune-lint: allow(L006): worker loop exits on stop flag
+}
+
+fn arg_joins_never_match(parts: &[String], dir: &std::path::Path) -> std::path::PathBuf {
+    let _ = parts.join(", ");
+    dir.join("sub")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_block() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        tx.send(1u32).unwrap();
+        assert_eq!(rx.recv().unwrap(), 1);
+    }
+}

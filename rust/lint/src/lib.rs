@@ -1,7 +1,7 @@
 //! jitune-lint — project-specific concurrency lints for the jitune tree.
 //!
 //! A deliberately small, std-only pass: a line lexer (tracking block
-//! comments, string/raw-string/char literals across lines) feeds five
+//! comments, string/raw-string/char literals across lines) feeds six
 //! substring-level rules. This is not a parser — the rules are written
 //! so that lexical matching is sufficient, and every rule has an inline
 //! escape hatch that forces the author to write down *why*.
@@ -26,6 +26,11 @@
 //! - **L005** — `.unwrap()` / `.expect(` on non-test `coordinator/` and
 //!   `hub/` paths. Serving-path invariants are either handled or
 //!   justified in place.
+//! - **L006** — unbounded `.recv()` / `.join()` on non-test
+//!   `coordinator/` and `hub/` paths. A serving-path wait with no bound
+//!   is a hang waiting for its trigger: use `recv_timeout` (or another
+//!   bounded wait), or justify in place why the wait provably
+//!   terminates (e.g. the sender's drop disconnects it).
 //!
 //! Suppression: `// jitune-lint: allow(LXXX): <reason>` on the offending
 //! line, or alone on the line directly above it. The reason is
@@ -326,6 +331,11 @@ const L002_PATTERNS: &[&str] = &[
     ".write().expect(",
 ];
 
+/// Unbounded blocking waits banned on serving paths (L006). Exact
+/// zero-argument spellings: `.recv_timeout(`, `.join(", ")` and
+/// `path.join(x)` carry arguments and never match.
+const L006_PATTERNS: &[&str] = &[".recv()", ".join()"];
+
 fn in_dir(path: &str, dir: &str) -> bool {
     path.contains(&format!("/{dir}/")) || path.starts_with(&format!("{dir}/"))
 }
@@ -482,6 +492,21 @@ pub fn scan_file(path: &str, text: &str) -> Vec<Finding> {
             });
         }
 
+        if coord_or_hub && !in_test && !allowed("L006") {
+            if let Some(p) = L006_PATTERNS.iter().find(|p| code.contains(*p)) {
+                findings.push(Finding {
+                    file: norm.clone(),
+                    line: lineno,
+                    rule: "L006",
+                    message: format!(
+                        "unbounded `{p}` on a serving path — a wait with no bound is a hang \
+                         waiting for its trigger; use `recv_timeout`/a bounded wait, or justify \
+                         with `// jitune-lint: allow(L006): <reason>`"
+                    ),
+                });
+            }
+        }
+
         // Region bookkeeping runs *after* the rules so the attribute line
         // itself is judged as non-test (it carries no code anyway).
         if code.contains("#[cfg(test)]") {
@@ -616,6 +641,20 @@ mod tests {
     #[test]
     fn l005_respects_allows_and_test_modules() {
         let r = rules("coordinator/l005_good.rs", include_str!("../fixtures/l005_good.rs"));
+        assert!(r.is_empty(), "{r:?}");
+    }
+
+    #[test]
+    fn l006_fires_on_unbounded_serving_waits_only() {
+        let src = include_str!("../fixtures/l006_bad.rs");
+        assert_eq!(rules("coordinator/l006_bad.rs", src), vec!["L006", "L006"]);
+        assert_eq!(rules("hub/l006_bad.rs", src), vec!["L006", "L006"]);
+        assert!(rules("runtime/l006_bad.rs", src).is_empty(), "only coordinator/ and hub/");
+    }
+
+    #[test]
+    fn l006_accepts_bounded_waits_allows_and_arg_joins() {
+        let r = rules("coordinator/l006_good.rs", include_str!("../fixtures/l006_good.rs"));
         assert!(r.is_empty(), "{r:?}");
     }
 

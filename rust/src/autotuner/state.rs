@@ -301,6 +301,51 @@ impl TuningState {
         }
     }
 
+    /// Release an outstanding candidate without judging it — the
+    /// *transient*-failure face of [`TuningState::report_failure`].
+    ///
+    /// A hedged background measurement that timed out tells us nothing
+    /// about the candidate itself (the worker may have been wedged by a
+    /// co-tenant, the queue may have backed up): the candidate's history
+    /// is left untouched so the strategy can re-propose it later, and
+    /// only its in-flight reservation is dropped. Repeated timeouts are
+    /// escalated to [`report_failure`](TuningState::report_failure) by
+    /// the dispatcher so a genuinely wedged variant cannot retry forever.
+    pub fn release_outstanding(&mut self, idx: usize) {
+        self.outstanding.retain(|&i| i != idx);
+    }
+
+    /// Demote a *tuned* winner whose runtime error rate tripped the
+    /// quarantine breaker: mark it failed and fall back to the next-best
+    /// measured candidate from the tuning history.
+    ///
+    /// `report_failure` deliberately leaves `Tuned` states alone (a
+    /// single failed call must not unseat a winner); this is the
+    /// breaker-driven path that *does*. Returns the fallback candidate
+    /// now `Finalizing` (its compilation flows through the normal
+    /// finalize path, so fast-lane publication and hub propagation of
+    /// the demotion come for free), or `None` when no measured candidate
+    /// survives and the problem moves to `Failed`.
+    pub fn demote_winner(&mut self, idx: usize) -> Option<usize> {
+        if self.phase != Phase::Tuned || self.winner != Some(idx) {
+            // Already demoted/retuned concurrently — nothing to do.
+            return self.pending_winner();
+        }
+        self.history.mark_failed(idx);
+        self.winner = None;
+        match self.history.best_index() {
+            Some(next) => {
+                self.phase = Phase::Finalizing;
+                self.winner = Some(next);
+                Some(next)
+            }
+            None => {
+                self.phase = Phase::Failed;
+                None
+            }
+        }
+    }
+
     /// Acknowledge that the winner's final compilation happened.
     pub fn confirm_finalized(&mut self, idx: usize) {
         debug_assert_eq!(self.winner, Some(idx));
@@ -626,6 +671,68 @@ mod tests {
         }
         assert_eq!(dead.decide_background(4), BatchDecision::Failed);
         assert_eq!(dead.phase(), Phase::Failed);
+    }
+
+    #[test]
+    fn demote_winner_falls_back_to_next_best() {
+        let mut st = sweep_state(&[2, 4, 8]);
+        drive(&mut st, &[3.0, 1.0, 2.0], 4); // tuned on candidate 1
+        assert_eq!(st.phase(), Phase::Tuned);
+        // breaker trips on the winner: next-best (candidate 2, cost 2.0)
+        // becomes the Finalizing fallback
+        assert_eq!(st.demote_winner(1), Some(2));
+        assert_eq!(st.phase(), Phase::Finalizing);
+        assert_eq!(st.pending_winner(), Some(2));
+        match st.decide() {
+            Decision::Finalize(i) => {
+                assert_eq!(i, 2);
+                st.confirm_finalized(i);
+            }
+            d => panic!("{d:?}"),
+        }
+        assert_eq!(st.tuned_value(), Some(8), "demoted winner cannot be re-picked");
+    }
+
+    #[test]
+    fn demote_winner_with_no_survivors_fails_the_problem() {
+        let mut st = sweep_state(&[2, 4]);
+        match st.decide() {
+            Decision::Explore(0) => st.report_failure(0),
+            d => panic!("{d:?}"),
+        }
+        drive(&mut st, &[9.0, 1.0], 3); // only candidate 1 survives, tuned
+        assert_eq!(st.phase(), Phase::Tuned);
+        assert_eq!(st.demote_winner(1), None);
+        assert_eq!(st.phase(), Phase::Failed);
+    }
+
+    #[test]
+    fn demote_winner_ignores_stale_index() {
+        let mut st = sweep_state(&[2, 4, 8]);
+        drive(&mut st, &[3.0, 1.0, 2.0], 4);
+        // a stale demotion for a non-winner leaves the state untouched
+        assert_eq!(st.demote_winner(0), None);
+        assert_eq!(st.phase(), Phase::Tuned);
+        assert_eq!(st.winner(), Some(1));
+    }
+
+    #[test]
+    fn release_outstanding_keeps_candidate_proposable() {
+        let mut st = sweep_state(&[1, 2, 3]);
+        match st.decide_background(1) {
+            BatchDecision::Explore(batch) => assert_eq!(batch, vec![0]),
+            d => panic!("{d:?}"),
+        }
+        // transient timeout: release without judging
+        st.release_outstanding(0);
+        // the sweep strategy proposes unmeasured candidates — 0 is still
+        // unmeasured and un-failed, so it reappears
+        match st.decide_background(3) {
+            BatchDecision::Explore(batch) => {
+                assert!(batch.contains(&0), "released candidate is re-proposable: {batch:?}");
+            }
+            d => panic!("{d:?}"),
+        }
     }
 
     #[test]

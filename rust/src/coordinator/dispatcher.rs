@@ -14,6 +14,7 @@ use crate::runtime::{CacheStats, CompileCache, Engine, SharedKernel};
 use crate::tensor::HostTensor;
 
 use super::background::{BackgroundScheduler, ExploreResult};
+use super::drift::QuarantinePolicy;
 use super::fastlane::{self, FastLane};
 use super::pool::WorkerPool;
 use super::registry::KernelRegistry;
@@ -119,6 +120,16 @@ pub struct Dispatcher {
     /// periodic pulls in a heterogeneous fleet warn once per version
     /// instead of forever.
     hub_skipped: HashMap<ProblemKey, u64>,
+    /// Variants demoted by the failure breaker, with their quarantine
+    /// expiry: a retune that fires inside the window re-applies the
+    /// marks, so the rematch cannot immediately re-pick a winner that
+    /// just erred its way off the lane.
+    quarantined: HashMap<ProblemKey, Vec<(usize, Instant)>>,
+    /// Transient-timeout strikes per candidate: a first hedge releases
+    /// the candidate back to the strategy (a once-wedged compile may
+    /// succeed on retry), a second escalates to the permanent
+    /// [`Dispatcher::candidate_failed`] path.
+    timeout_strikes: HashMap<(ProblemKey, usize), u32>,
 }
 
 /// What this process last knew the hub to hold for one problem.
@@ -161,6 +172,8 @@ impl Dispatcher {
             hub_known: HashMap::new(),
             hub_generation: 0,
             hub_skipped: HashMap::new(),
+            quarantined: HashMap::new(),
+            timeout_strikes: HashMap::new(),
         }
     }
 
@@ -907,6 +920,33 @@ impl Dispatcher {
         }
     }
 
+    /// The *transient*-failure sibling of [`Dispatcher::candidate_failed`]:
+    /// a candidate that timed out (a hedged background measurement, a
+    /// wedged worker) rather than erroring. A timeout says nothing about
+    /// the candidate itself — the worker may have been descheduled, the
+    /// queue backed up — so the first strike only releases the candidate
+    /// back to the strategy (its history stays untouched and it remains
+    /// proposable). A second strike for the same candidate escalates to
+    /// the permanent failure path: twice-wedged is evidence.
+    pub(crate) fn candidate_timed_out(&mut self, hash: u64, slot: usize, idx: usize) {
+        let (key, values) = {
+            let plan = &self.plans[&hash][slot];
+            (plan.key.clone(), plan.values.clone())
+        };
+        let strikes = self.timeout_strikes.entry((key.clone(), idx)).or_insert(0);
+        *strikes += 1;
+        if *strikes >= 2 {
+            self.timeout_strikes.remove(&(key, idx));
+            self.candidate_failed(hash, slot, idx);
+            return;
+        }
+        log::info!("{key}: candidate {idx} timed out once; released for retry");
+        if let Some(bg) = self.background.as_mut() {
+            bg.forget_candidate(&key, idx);
+        }
+        self.tuner.state(&key, &values).release_outstanding(idx);
+    }
+
     /// Attach a background explore scheduler, switching the dispatcher
     /// into serve/explore split mode (see [`super::background`]).
     pub(crate) fn set_background(&mut self, scheduler: BackgroundScheduler) {
@@ -1009,7 +1049,10 @@ impl Dispatcher {
             self.stats.background_hedge();
             let kernel = self.plans[&hash][slot].kernel.clone();
             self.stats.failure(&kernel);
-            self.candidate_failed(hash, slot, candidate);
+            // A hedge expiry is a *timeout*, not a candidate error: the
+            // first strike releases the candidate for a retry, only a
+            // repeat offender is failed permanently.
+            self.candidate_timed_out(hash, slot, candidate);
         }
         // jitune-lint: allow(L005): guarded by the `?` early return above
         if let Some(pct) = self.background.as_mut().expect("checked above").roll_window(now) {
@@ -1410,6 +1453,97 @@ impl Dispatcher {
         retuned
     }
 
+    /// One failure-breaker evaluation pass: drain every monitored
+    /// fast-lane entry's ok/error window and *demote* the winners whose
+    /// breaker tripped — the erroring variant is quarantined (marked
+    /// failed and barred from re-selection for
+    /// [`QuarantinePolicy::quarantine_for`]) and the next-best variant
+    /// from tuning history is finalized and published as the fallback,
+    /// immediately, without waiting for a caller. The leader loop calls
+    /// this every `QuarantinePolicy::window`; tests may drive it
+    /// directly. Returns the number of winners demoted.
+    pub fn quarantine_tick(&mut self, now: Instant) -> usize {
+        self.expire_quarantines(now);
+        let Some(lane) = self.fast_lane.clone() else { return 0 };
+        let hits = lane.quarantine_scan();
+        if hits.is_empty() {
+            return 0;
+        }
+        let quarantine_for = lane
+            .quarantine_policy()
+            .map(|p| p.quarantine_for)
+            .unwrap_or_else(|| QuarantinePolicy::default().quarantine_for);
+        let mut demoted = 0;
+        for hit in hits {
+            log::warn!(
+                "quarantine: {}/n{} winner {} error rate {:.0}% over {} calls; demoting",
+                hit.kernel,
+                hit.size,
+                hit.variant_id,
+                hit.window.error_rate * 100.0,
+                hit.window.samples,
+            );
+            // Resolve the problem's call plan from the entry's published
+            // shapes (the plan exists — publication happens through it —
+            // but synthesizing inputs keeps this pass self-sufficient).
+            let inputs: Vec<HostTensor> =
+                hit.input_shapes.iter().map(|s| HostTensor::zeros(s)).collect();
+            let (hash, slot) = match self.plan_slot(&hit.kernel, &inputs) {
+                Ok(id) => id,
+                Err(e) => {
+                    log::warn!("quarantine: cannot plan {}/n{}: {e}", hit.kernel, hit.size);
+                    continue;
+                }
+            };
+            let (key, values, idx) = {
+                let plan = &self.plans[&hash][slot];
+                let problem = &self.registry.manifest().problems[plan.problem_idx];
+                let idx = problem.variants.iter().position(|v| v.id == hit.variant_id);
+                (plan.key.clone(), plan.values.clone(), idx)
+            };
+            let Some(idx) = idx else {
+                log::warn!("quarantine: {} is not a variant of {key}", hit.variant_id);
+                continue;
+            };
+            // Evict the broken variant everywhere it might still serve:
+            // fast lane entry, leader cache, pool replicas.
+            lane.invalidate(&hit.kernel, &hit.input_shapes);
+            self.cache.evict(&hit.variant_id);
+            if let Some(pool) = &self.pool {
+                pool.evict(std::slice::from_ref(&hit.variant_id));
+            }
+            if let Some(bg) = self.background.as_mut() {
+                bg.forget_candidate(&key, idx);
+            }
+            self.quarantined.entry(key.clone()).or_default().push((idx, now + quarantine_for));
+            self.stats.quarantine(&hit.kernel, &hit.variant_id, hit.window.error_rate);
+            demoted += 1;
+            match self.tuner.state(&key, &values).demote_winner(idx) {
+                Some(fallback) => {
+                    // Finalize the fallback right now so callers return
+                    // to the fast lane (and the fleet hears about the
+                    // demotion) without waiting for the next request.
+                    self.finalize_pending(hash, slot, fallback, "after quarantine");
+                }
+                None => {
+                    log::warn!(
+                        "quarantine: {key} has no surviving variant; problem marked failed"
+                    );
+                }
+            }
+        }
+        demoted
+    }
+
+    /// Drop expired quarantine marks so a later retune may try the
+    /// variant again (the fault may have been environmental).
+    fn expire_quarantines(&mut self, now: Instant) {
+        self.quarantined.retain(|_, marks| {
+            marks.retain(|&(_, until)| until > now);
+            !marks.is_empty()
+        });
+    }
+
     /// Restart tuning for a problem: tuner state is reset to exploring,
     /// resident executables are evicted (every candidate pays its compile
     /// again — only HLO text persists, as in the paper), and the
@@ -1426,9 +1560,22 @@ impl Dispatcher {
         let existed = self.tuner.retune(&key);
         // In-flight background results were measured against the old
         // state: drop their bookkeeping so they cannot report into the
-        // fresh one.
+        // fresh one. Timeout strikes belong to the old state too.
         if let Some(bg) = self.background.as_mut() {
             bg.forget_key(&key);
+        }
+        self.timeout_strikes.retain(|(k, _), _| k != &key);
+        // Re-apply unexpired quarantine marks: the rematch must not
+        // immediately re-pick a variant the failure breaker just demoted.
+        if existed {
+            if let Some(marks) = self.quarantined.get(&key) {
+                let now = Instant::now();
+                for &(idx, until) in marks {
+                    if until > now {
+                        self.tuner.state(&key, &[]).report_failure(idx);
+                    }
+                }
+            }
         }
         for id in &variant_ids {
             self.cache.evict(id);
@@ -1901,6 +2048,123 @@ mod tests {
         assert_eq!(d.stats().kernel("k").unwrap().drift_retunes, 1);
         assert_eq!(d.stats().drift_events().len(), 1);
         assert!(d.stats().drift_events()[0].ratio > 2.0);
+    }
+
+    #[test]
+    fn quarantine_tick_demotes_erroring_winner_to_fallback() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(500))
+            .with_cost("k.b.n8", Duration::from_micros(300));
+        let fault = spec.latency_fault.clone();
+        let mut d = dispatcher(spec);
+        let policy = QuarantinePolicy {
+            min_samples: 4,
+            error_threshold: 0.5,
+            consecutive_windows: 1,
+            cooldown: Duration::ZERO,
+            ..QuarantinePolicy::default()
+        };
+        let lane = Arc::new(FastLane::with_policies(None, Some(policy)));
+        d.set_fast_lane(lane.clone());
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(2));
+        let entry = lane.lookup("k", &inputs8()).unwrap();
+        for _ in 0..6 {
+            entry.call(&inputs8(), Instant::now()).unwrap();
+        }
+        assert_eq!(d.quarantine_tick(Instant::now()), 0, "healthy winner never demotes");
+
+        // the published winner starts erroring at execution
+        fault.fail_execute("k.b.n8");
+        let entry = lane.lookup("k", &inputs8()).unwrap();
+        for _ in 0..6 {
+            entry.call(&inputs8(), Instant::now()).expect_err("injected exec error");
+        }
+        assert_eq!(d.quarantine_tick(Instant::now()), 1, "breaker demotes the winner");
+        // the fallback (next-best from tuning history) finalized and
+        // republished immediately — no caller had to pay the rematch
+        assert_eq!(d.tuned_value("k", 8), Some(1), "next-best variant serves");
+        let fallback = lane.lookup("k", &inputs8()).expect("fallback published");
+        assert_eq!(fallback.value(), 1);
+        let out = fallback.call(&inputs8(), Instant::now()).unwrap();
+        assert!(out.output.data().iter().all(|&x| x == 1.0));
+        assert_eq!(d.stats().quarantine_events().len(), 1);
+        assert_eq!(d.stats().quarantine_events()[0].variant_id, "k.b.n8");
+
+        // a retune inside the quarantine window re-applies the mark: the
+        // rematch cannot re-pick the variant that just erred off the lane
+        d.retune("k", 8).unwrap();
+        for _ in 0..3 {
+            let _ = d.call("k", &inputs8());
+        }
+        assert_eq!(d.tuned_value("k", 8), Some(1), "quarantined variant not re-picked");
+    }
+
+    #[test]
+    fn quarantine_with_no_survivors_fails_the_problem() {
+        let spec = MockSpec::default().with_cost("k.b.n8", Duration::from_micros(100));
+        let fault = spec.latency_fault.clone();
+        let mut d = dispatcher(spec);
+        let policy = QuarantinePolicy {
+            min_samples: 4,
+            consecutive_windows: 1,
+            cooldown: Duration::ZERO,
+            ..QuarantinePolicy::default()
+        };
+        let lane = Arc::new(FastLane::with_policies(None, Some(policy)));
+        d.set_fast_lane(lane.clone());
+        for _ in 0..3 {
+            d.call("k", &inputs8()).unwrap();
+        }
+        // kill the loser first so no fallback survives, then the winner
+        let winner = d.tuned_value("k", 8).unwrap();
+        let loser_idx = if winner == 2 { 0 } else { 1 };
+        {
+            let (hash, slot) = d.plan_slot("k", &inputs8()).unwrap();
+            d.candidate_failed(hash, slot, loser_idx);
+        }
+        // candidate_failed invalidated the lane entry; the next tuned
+        // leader call self-heals (republishes), then errors accumulate
+        d.call("k", &inputs8()).unwrap();
+        let entry = lane.lookup("k", &inputs8()).expect("republished");
+        fault.fail_execute(if winner == 2 { "k.b.n8" } else { "k.a.n8" });
+        for _ in 0..6 {
+            entry.call(&inputs8(), Instant::now()).expect_err("injected exec error");
+        }
+        assert_eq!(d.quarantine_tick(Instant::now()), 1);
+        assert_eq!(d.tuned_value("k", 8), None);
+        assert!(lane.lookup("k", &inputs8()).is_none(), "nothing left to publish");
+        let err = d.call("k", &inputs8()).expect_err("every variant dead");
+        assert!(err.to_string().contains("failed"), "{err}");
+    }
+
+    #[test]
+    fn candidate_timeout_first_strike_releases_then_escalates() {
+        let mut d = dispatcher(MockSpec::default());
+        let (hash, slot) = d.plan_slot("k", &inputs8()).unwrap();
+        let (key, values) = {
+            let plan = &d.plans[&hash][slot];
+            (plan.key.clone(), plan.values.clone())
+        };
+        let Decision::Explore(idx) = d.tuner.state(&key, &values).decide() else {
+            panic!("fresh problem explores");
+        };
+        // first timeout: transient — the candidate stays proposable
+        d.candidate_timed_out(hash, slot, idx);
+        let again = d.tuner.state(&key, &values).decide();
+        assert!(
+            matches!(again, Decision::Explore(i) if i == idx),
+            "released candidate re-proposed: {again:?}"
+        );
+        // second timeout for the same candidate: permanent failure
+        d.candidate_timed_out(hash, slot, idx);
+        let next = d.tuner.state(&key, &values).decide();
+        assert!(
+            !matches!(next, Decision::Explore(i) if i == idx),
+            "twice-wedged candidate excluded: {next:?}"
+        );
     }
 
     #[test]

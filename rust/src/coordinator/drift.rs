@@ -340,6 +340,212 @@ impl DriftMonitor {
     }
 }
 
+/// When to declare a published winner *broken* (erroring at run time)
+/// and quarantine it.
+///
+/// The failure-rate sibling of [`DriftPolicy`]: drift demotes winners
+/// that got slow, quarantine demotes winners that started *erroring* —
+/// a driver regression, a device fault, an input class the variant
+/// cannot handle. Enabled via `ServerOptions { quarantine: Some(policy),
+/// .. }`; `None` keeps the evict-on-first-error behaviour bit-for-bit.
+#[derive(Debug, Clone, Copy)]
+pub struct QuarantinePolicy {
+    /// Evaluation cadence: how often the leader drains each entry's
+    /// ok/error window counters.
+    pub window: Duration,
+    /// Minimum calls (successes + errors) before a window is judged;
+    /// sparser scans carry their samples forward.
+    pub min_samples: u64,
+    /// A window is *bad* when `errors / samples` reaches this fraction.
+    pub error_threshold: f64,
+    /// Consecutive bad windows required to trip the breaker.
+    pub consecutive_windows: u32,
+    /// Grace period after publication during which the breaker never
+    /// trips (a winner warming up may hit transient errors).
+    pub cooldown: Duration,
+    /// How long a demoted variant stays off-limits: a retune fired
+    /// within this span cannot re-pick the quarantined variant.
+    pub quarantine_for: Duration,
+}
+
+impl Default for QuarantinePolicy {
+    fn default() -> Self {
+        QuarantinePolicy {
+            window: Duration::from_millis(250),
+            min_samples: 16,
+            error_threshold: 0.5,
+            consecutive_windows: 1,
+            cooldown: Duration::from_millis(500),
+            quarantine_for: Duration::from_secs(60),
+        }
+    }
+}
+
+/// One evaluated ok/error window for a published entry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureWindow {
+    /// Calls observed in the window (successes + errors).
+    pub samples: u64,
+    /// Errors among them.
+    pub errors: u64,
+    /// `errors / samples` — the signal the policy thresholds.
+    pub error_rate: f64,
+}
+
+/// A breaker decision to quarantine one published entry, as returned by
+/// [`super::FastLane::quarantine_scan`] and consumed by
+/// [`super::Dispatcher::quarantine_tick`].
+#[derive(Debug, Clone)]
+pub struct QuarantineHit {
+    /// Kernel family of the broken entry.
+    pub kernel: String,
+    /// Problem size (the registry's key).
+    pub size: i64,
+    /// Input shapes the entry was published for.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Variant that was serving when the breaker tripped.
+    pub variant_id: String,
+    /// The triggering window.
+    pub window: FailureWindow,
+}
+
+/// One ok/error counter shard, aligned like [`DriftShard`] so concurrent
+/// recorders do not false-share.
+#[repr(align(64))]
+struct FailShard {
+    ok: AtomicU64,  // relaxed-counter: window success tally, drained by the leader's scan
+    err: AtomicU64, // relaxed-counter: window error tally
+}
+
+/// Leader-side breaker state; only the leader's periodic scan touches it.
+struct FailEval {
+    streak: u32,
+    last: Option<FailureWindow>,
+    tripped: u64,
+    pending_ok: u64,
+    pending_err: u64,
+}
+
+/// Windowed failure-rate breaker for one published fast-lane entry —
+/// the [`DriftMonitor`] shape applied to errors instead of latency.
+///
+/// Caller threads feed [`record_ok`](FailureMonitor::record_ok) /
+/// [`record_err`](FailureMonitor::record_err) (lock-free sharded
+/// atomics); the leader drains the window with
+/// [`scan`](FailureMonitor::scan), which applies the
+/// [`QuarantinePolicy`] and reports whether the breaker tripped.
+pub struct FailureMonitor {
+    shards: [FailShard; DRIFT_SHARDS],
+    created: Instant,
+    eval: TrackedMutex<FailEval>,
+}
+
+impl Default for FailureMonitor {
+    fn default() -> Self {
+        FailureMonitor::new()
+    }
+}
+
+impl FailureMonitor {
+    /// A fresh breaker (armed from publication time; the policy cooldown
+    /// is anchored here).
+    pub fn new() -> FailureMonitor {
+        FailureMonitor {
+            shards: std::array::from_fn(|_| FailShard {
+                ok: AtomicU64::new(0),
+                err: AtomicU64::new(0),
+            }),
+            created: Instant::now(),
+            eval: TrackedMutex::new("coordinator.drift.fail_eval", FailEval {
+                streak: 0,
+                last: None,
+                tripped: 0,
+                pending_ok: 0,
+                pending_err: 0,
+            }),
+        }
+    }
+
+    /// Record one successful call. Hot path: one relaxed `fetch_add` on
+    /// a thread-private shard.
+    pub fn record_ok(&self) {
+        self.shards[DRIFT_SHARD_INDEX.with(|i| *i)].ok.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one failed call.
+    pub fn record_err(&self) {
+        self.shards[DRIFT_SHARD_INDEX.with(|i| *i)].err.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drain the current window and evaluate `policy`. Leader-only.
+    /// Returns the triggering window when the breaker trips, `None`
+    /// otherwise. Sparse windows carry forward like
+    /// [`DriftMonitor::scan`].
+    pub fn scan(&self, policy: &QuarantinePolicy, now: Instant) -> Option<FailureWindow> {
+        let mut ok = 0u64;
+        let mut err = 0u64;
+        for shard in &self.shards {
+            ok += shard.ok.swap(0, Ordering::Relaxed);
+            err += shard.err.swap(0, Ordering::Relaxed);
+        }
+        let mut eval = self.eval.lock();
+        eval.pending_ok += ok;
+        eval.pending_err += err;
+        let samples = eval.pending_ok + eval.pending_err;
+        if samples < policy.min_samples.max(1) {
+            return None;
+        }
+        let errors = eval.pending_err;
+        eval.pending_ok = 0;
+        eval.pending_err = 0;
+        let error_rate = errors as f64 / samples as f64;
+        let window = FailureWindow { samples, errors, error_rate };
+        eval.last = Some(window);
+        if error_rate >= policy.error_threshold {
+            eval.streak += 1;
+        } else {
+            eval.streak = 0;
+        }
+        let warm = now.saturating_duration_since(self.created) >= policy.cooldown;
+        if warm && eval.streak >= policy.consecutive_windows.max(1) {
+            eval.streak = 0;
+            eval.tripped += 1;
+            return Some(window);
+        }
+        None
+    }
+
+    /// Consecutive bad windows so far.
+    pub fn streak(&self) -> u32 {
+        self.eval.lock().streak
+    }
+
+    /// Times this breaker has tripped.
+    pub fn trips(&self) -> u64 {
+        self.eval.lock().tripped
+    }
+
+    /// Most recently judged window.
+    pub fn last_window(&self) -> Option<FailureWindow> {
+        self.eval.lock().last
+    }
+
+    /// Machine-readable breaker state for `stats_json()`.
+    pub fn status_json(&self) -> Value {
+        let eval = self.eval.lock();
+        let mut obj = vec![
+            ("streak".to_string(), n(eval.streak as f64)),
+            ("trips".to_string(), n(eval.tripped as f64)),
+        ];
+        if let Some(w) = eval.last {
+            obj.push(("window_samples".to_string(), n(w.samples as f64)));
+            obj.push(("window_errors".to_string(), n(w.errors as f64)));
+            obj.push(("window_error_rate".to_string(), n(w.error_rate)));
+        }
+        Value::Obj(obj)
+    }
+}
+
 /// Upper bound (seconds) of the bucket holding the p95 observation.
 fn p95_from(buckets: &[u64; BUCKETS], total: u64) -> f64 {
     if total == 0 {
@@ -512,6 +718,94 @@ mod tests {
             m.scan(&p, Instant::now()).is_some(),
             "drift detected against the self-calibrated baseline"
         );
+    }
+
+    fn q_policy() -> QuarantinePolicy {
+        QuarantinePolicy {
+            window: Duration::from_millis(10),
+            min_samples: 4,
+            error_threshold: 0.5,
+            consecutive_windows: 1,
+            cooldown: Duration::ZERO,
+            quarantine_for: Duration::from_secs(60),
+        }
+    }
+
+    fn feed(m: &FailureMonitor, ok: usize, err: usize) {
+        for _ in 0..ok {
+            m.record_ok();
+        }
+        for _ in 0..err {
+            m.record_err();
+        }
+    }
+
+    #[test]
+    fn healthy_entry_never_trips_the_breaker() {
+        let m = FailureMonitor::new();
+        let p = q_policy();
+        for _ in 0..10 {
+            feed(&m, 8, 1); // 11% errors, under the 50% threshold
+            assert!(m.scan(&p, Instant::now()).is_none());
+        }
+        assert_eq!(m.trips(), 0);
+    }
+
+    #[test]
+    fn erroring_entry_trips_with_rate_and_counts() {
+        let m = FailureMonitor::new();
+        let p = q_policy();
+        feed(&m, 2, 6);
+        let w = m.scan(&p, Instant::now()).expect("75% errors trips a 50% breaker");
+        assert_eq!(w.samples, 8);
+        assert_eq!(w.errors, 6);
+        assert!((w.error_rate - 0.75).abs() < 1e-9);
+        assert_eq!(m.trips(), 1);
+        assert_eq!(m.streak(), 0, "streak resets after a trip");
+    }
+
+    #[test]
+    fn breaker_hysteresis_requires_consecutive_windows() {
+        let m = FailureMonitor::new();
+        let mut p = q_policy();
+        p.consecutive_windows = 2;
+        feed(&m, 0, 8);
+        assert!(m.scan(&p, Instant::now()).is_none(), "one bad window is not enough");
+        assert_eq!(m.streak(), 1);
+        feed(&m, 8, 0); // healthy window clears the streak
+        assert!(m.scan(&p, Instant::now()).is_none());
+        assert_eq!(m.streak(), 0);
+        feed(&m, 0, 8);
+        assert!(m.scan(&p, Instant::now()).is_none());
+        feed(&m, 0, 8);
+        assert!(m.scan(&p, Instant::now()).is_some(), "two consecutive bad windows trip");
+    }
+
+    #[test]
+    fn sparse_failure_windows_accumulate() {
+        let m = FailureMonitor::new();
+        let p = q_policy(); // min_samples 4
+        feed(&m, 0, 2);
+        assert!(m.scan(&p, Instant::now()).is_none(), "below min_samples: carried forward");
+        feed(&m, 0, 2);
+        assert!(
+            m.scan(&p, Instant::now()).is_some(),
+            "accumulated sparse evidence is judged"
+        );
+    }
+
+    #[test]
+    fn breaker_cooldown_gives_fresh_winners_grace() {
+        let m = FailureMonitor::new();
+        let mut p = q_policy();
+        p.cooldown = Duration::from_secs(3600);
+        for _ in 0..3 {
+            feed(&m, 0, 8);
+            assert!(m.scan(&p, Instant::now()).is_none(), "cooldown suppresses trips");
+        }
+        assert_eq!(m.trips(), 0);
+        let json = m.status_json();
+        assert!(json.get("window_error_rate").is_some());
     }
 
     #[test]

@@ -32,8 +32,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::dispatcher::{CallOutcome, CallRoute};
-use crate::coordinator::drift::{DriftHit, DriftMonitor, DriftPolicy};
-use crate::error::Result;
+use crate::coordinator::drift::{
+    DriftHit, DriftMonitor, DriftPolicy, FailureMonitor, QuarantineHit, QuarantinePolicy,
+};
+use crate::error::{Error, Result};
 use crate::runtime::SharedKernel;
 use crate::sync::{TrackedMutex, TrackedRwLock};
 use crate::tensor::HostTensor;
@@ -167,6 +169,10 @@ pub struct TunedEntry {
     /// Windowed drift monitor; present only when the lane was built with
     /// a [`DriftPolicy`], so `drift: None` keeps the hit path unchanged.
     monitor: Option<DriftMonitor>,
+    /// Windowed failure-rate breaker; present only when the lane was
+    /// built with a [`QuarantinePolicy`]. Without one, a failing entry is
+    /// invalidated on first error by its caller (the original behaviour).
+    breaker: Option<FailureMonitor>,
 }
 
 impl TunedEntry {
@@ -195,6 +201,14 @@ impl TunedEntry {
         self.monitor.as_ref()
     }
 
+    /// The entry's failure breaker, when the lane has a quarantine
+    /// policy. Callers that observe the entry erroring use its presence
+    /// to decide between recording the error (breaker demotes on rate)
+    /// and invalidating on the spot (no policy).
+    pub fn failure_breaker(&self) -> Option<&FailureMonitor> {
+        self.breaker.as_ref()
+    }
+
     fn matches(&self, kernel: &str, inputs: &[HostTensor]) -> bool {
         shapes_match(&self.kernel, &self.input_shapes, kernel, inputs)
     }
@@ -204,7 +218,49 @@ impl TunedEntry {
     /// with the leader lane's. Stats are recorded only on success — a
     /// failing call falls back to the leader and is counted there.
     pub fn call(&self, inputs: &[HostTensor], t0: Instant) -> Result<CallOutcome> {
-        let (output, exec) = self.exe.execute_measured(inputs)?;
+        self.call_deadline(inputs, t0, None)
+    }
+
+    /// [`call`](TunedEntry::call) with an optional absolute deadline.
+    ///
+    /// The budget is checked *before* executing (an in-place kernel
+    /// cannot be interrupted mid-run, so a call whose budget is already
+    /// gone fails fast instead of starting doomed work) and passed down
+    /// to [`SharedKernel::execute_measured_deadline`] so pool-routed
+    /// entries bound their cross-thread wait too. A deadline error is
+    /// not an entry failure: it says nothing about the variant's health,
+    /// so the breaker only counts genuine execution errors.
+    pub fn call_deadline(
+        &self,
+        inputs: &[HostTensor],
+        t0: Instant,
+        deadline: Option<Instant>,
+    ) -> Result<CallOutcome> {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err(Error::DeadlineExceeded {
+                    kernel: self.kernel.clone(),
+                    deadline: d.saturating_duration_since(t0),
+                });
+            }
+        }
+        let (output, exec) = match self.exe.execute_measured_deadline(inputs, deadline) {
+            Ok(r) => r,
+            Err(e) => {
+                if let Some(breaker) = &self.breaker {
+                    // Only genuine execution errors count toward
+                    // quarantine — a deadline/overload says nothing
+                    // about the variant itself.
+                    if !matches!(e, Error::DeadlineExceeded { .. } | Error::Overloaded(_)) {
+                        breaker.record_err();
+                    }
+                }
+                return Err(e);
+            }
+        };
+        if let Some(breaker) = &self.breaker {
+            breaker.record_ok();
+        }
         let total = t0.elapsed();
         self.counters.record(total);
         if let Some(monitor) = &self.monitor {
@@ -242,31 +298,46 @@ pub struct FastLane {
     /// Drift-retune policy; `None` disables monitoring entirely (no
     /// window counters are even allocated on publish).
     drift: Option<DriftPolicy>,
+    /// Failure-rate quarantine policy; `None` keeps the original
+    /// invalidate-on-first-error behaviour (no breakers allocated).
+    quarantine: Option<QuarantinePolicy>,
 }
 
 impl FastLane {
     /// An empty lane without drift monitoring.
     pub fn new() -> FastLane {
-        FastLane {
-            entries: TrackedRwLock::new("coordinator.fastlane.entries", HashMap::new()),
-            counters: TrackedMutex::new("coordinator.fastlane.counters", BTreeMap::new()),
-            drift: None,
-        }
+        FastLane::with_policies(None, None)
     }
 
     /// An empty lane whose published entries carry drift monitors
     /// evaluated against `policy`.
     pub fn with_drift(policy: DriftPolicy) -> FastLane {
+        FastLane::with_policies(Some(policy), None)
+    }
+
+    /// An empty lane with any combination of drift and quarantine
+    /// policies; published entries only carry the monitors their
+    /// policies demand.
+    pub fn with_policies(
+        drift: Option<DriftPolicy>,
+        quarantine: Option<QuarantinePolicy>,
+    ) -> FastLane {
         FastLane {
             entries: TrackedRwLock::new("coordinator.fastlane.entries", HashMap::new()),
             counters: TrackedMutex::new("coordinator.fastlane.counters", BTreeMap::new()),
-            drift: Some(policy),
+            drift,
+            quarantine,
         }
     }
 
     /// The lane's drift policy, if monitoring is enabled.
     pub fn drift_policy(&self) -> Option<&DriftPolicy> {
         self.drift.as_ref()
+    }
+
+    /// The lane's quarantine policy, if the failure breaker is enabled.
+    pub fn quarantine_policy(&self) -> Option<&QuarantinePolicy> {
+        self.quarantine.as_ref()
     }
 
     /// Look up the published entry serving `kernel` called with `inputs`.
@@ -298,6 +369,7 @@ impl FastLane {
             .clone();
         let hash = shape_hash(&kernel, &input_shapes);
         let monitor = self.drift.map(|_| DriftMonitor::new(baseline_s));
+        let breaker = self.quarantine.map(|_| FailureMonitor::new());
         let entry = Arc::new(TunedEntry {
             kernel,
             input_shapes,
@@ -307,6 +379,7 @@ impl FastLane {
             exe,
             counters,
             monitor,
+            breaker,
         });
         let mut map = self.entries.write();
         let bucket = map.entry(hash).or_default();
@@ -378,6 +451,31 @@ impl FastLane {
                     size: entry.size,
                     variant_id: entry.variant_id.clone(),
                     baseline_s: monitor.baseline_s(),
+                    window,
+                });
+            }
+        }
+        hits
+    }
+
+    /// Drain every published entry's ok/error window and evaluate the
+    /// quarantine policy. Leader-only (the scan consumes the window
+    /// counters). Returns the entries whose error rate tripped the
+    /// breaker; empty when the lane has no quarantine policy.
+    pub fn quarantine_scan(&self) -> Vec<QuarantineHit> {
+        let Some(policy) = self.quarantine else { return Vec::new() };
+        let entries: Vec<Arc<TunedEntry>> =
+            self.entries.read().values().flat_map(|b| b.iter().cloned()).collect();
+        let now = Instant::now();
+        let mut hits = Vec::new();
+        for entry in entries {
+            let Some(breaker) = &entry.breaker else { continue };
+            if let Some(window) = breaker.scan(&policy, now) {
+                hits.push(QuarantineHit {
+                    kernel: entry.kernel.clone(),
+                    size: entry.size,
+                    input_shapes: entry.input_shapes.clone(),
+                    variant_id: entry.variant_id.clone(),
                     window,
                 });
             }
@@ -468,6 +566,21 @@ impl FastLane {
                 .collect();
             monitors.sort_by(|a, b| a.0.cmp(&b.0));
             obj.push(("drift".into(), Value::Obj(monitors)));
+        }
+        if self.quarantine.is_some() {
+            let mut breakers: Vec<(String, Value)> = self
+                .entries
+                .read()
+                .values()
+                .flatten()
+                .filter_map(|e| {
+                    e.breaker
+                        .as_ref()
+                        .map(|b| (format!("{}/n{}", e.kernel, e.size), b.status_json()))
+                })
+                .collect();
+            breakers.sort_by(|a, b| a.0.cmp(&b.0));
+            obj.push(("quarantine".into(), Value::Obj(breakers)));
         }
         Value::Obj(obj)
     }
@@ -681,5 +794,89 @@ mod tests {
         let entry = lane.lookup("k", &inputs).unwrap();
         assert!(entry.call(&inputs, Instant::now()).is_err());
         assert_eq!(lane.snapshot()[0].1, 0);
+    }
+
+    #[test]
+    fn expired_deadline_fails_fast_without_executing() {
+        let lane = FastLane::new();
+        publish_fixed(&lane, "k", 2, 5.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).unwrap();
+        let t0 = Instant::now() - Duration::from_millis(10);
+        let gone = Some(Instant::now() - Duration::from_millis(1));
+        match entry.call_deadline(&inputs, t0, gone) {
+            Err(Error::DeadlineExceeded { kernel, .. }) => assert_eq!(kernel, "k"),
+            Err(e) => panic!("expected DeadlineExceeded, got {e}"),
+            Ok(_) => panic!("expected DeadlineExceeded, got a result"),
+        }
+        assert_eq!(lane.snapshot()[0].1, 0, "doomed call never executed");
+        // a generous deadline serves normally
+        let ok = entry
+            .call_deadline(&inputs, Instant::now(), Some(Instant::now() + Duration::from_secs(5)))
+            .unwrap();
+        assert_eq!(ok.route, CallRoute::Tuned);
+    }
+
+    #[test]
+    fn quarantine_breaker_only_exists_with_policy() {
+        use crate::coordinator::drift::QuarantinePolicy;
+        let plain = FastLane::new();
+        publish_fixed(&plain, "k", 2, 1.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        assert!(plain.lookup("k", &inputs).unwrap().failure_breaker().is_none());
+        assert!(plain.quarantine_scan().is_empty());
+        assert!(plain.to_json().get("quarantine").is_none());
+
+        let lane = FastLane::with_policies(None, Some(QuarantinePolicy::default()));
+        publish_fixed(&lane, "k", 2, 1.0, false);
+        let entry = lane.lookup("k", &inputs).unwrap();
+        assert!(entry.failure_breaker().is_some(), "policy arms a breaker");
+        assert!(entry.drift_monitor().is_none(), "no drift policy, no monitor");
+        assert!(lane.to_json().get("quarantine").is_some());
+    }
+
+    #[test]
+    fn quarantine_scan_flags_erroring_entry() {
+        use crate::coordinator::drift::QuarantinePolicy;
+        let policy = QuarantinePolicy {
+            min_samples: 4,
+            error_threshold: 0.5,
+            consecutive_windows: 1,
+            cooldown: Duration::ZERO,
+            ..QuarantinePolicy::default()
+        };
+        let lane = FastLane::with_policies(None, Some(policy));
+        publish_fixed(&lane, "k", 2, 9.0, true);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).unwrap();
+        for _ in 0..8 {
+            assert!(entry.call(&inputs, Instant::now()).is_err());
+        }
+        let hits = lane.quarantine_scan();
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].kernel, "k");
+        assert_eq!(hits[0].size, 2);
+        assert_eq!(hits[0].input_shapes, vec![vec![2, 2]]);
+        assert!((hits[0].window.error_rate - 1.0).abs() < 1e-9);
+        // window was drained: an immediate rescan is quiet
+        assert!(lane.quarantine_scan().is_empty());
+    }
+
+    #[test]
+    fn healthy_entry_with_breaker_never_trips() {
+        use crate::coordinator::drift::QuarantinePolicy;
+        let policy = QuarantinePolicy {
+            min_samples: 4,
+            cooldown: Duration::ZERO,
+            ..QuarantinePolicy::default()
+        };
+        let lane = FastLane::with_policies(None, Some(policy));
+        publish_fixed(&lane, "k", 2, 5.0, false);
+        let inputs = [HostTensor::zeros(&[2, 2])];
+        let entry = lane.lookup("k", &inputs).unwrap();
+        for _ in 0..16 {
+            entry.call(&inputs, Instant::now()).unwrap();
+        }
+        assert!(lane.quarantine_scan().is_empty(), "all-ok windows never trip");
     }
 }

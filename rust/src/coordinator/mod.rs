@@ -242,6 +242,63 @@
 //! (refreshed by CI on pushes to main; see the README for how to read
 //! it).
 //!
+//! # Failure model (serving-path resilience)
+//!
+//! Tuning picks winners from *measurements*; production then feeds those
+//! winners inputs, co-tenants and hardware the measurements never saw. A
+//! winner can start erroring (a variant miscompiled for a rare shape), a
+//! worker can wedge mid-call, and a burst can outrun the leader. Each
+//! failure has a bounded, explicit answer — opt-in via
+//! [`ServerOptions`], all off by default:
+//!
+//! * **Call deadlines** (`call_deadline: Some(d)`): every
+//!   [`server::CoordinatorHandle::call`] is bounded end to end.
+//!   Fast-lane execution is budget-checked before it starts; pool
+//!   round-trips bound backpressure, queue wait *and* the reply wait
+//!   ([`pool::WorkerPool::submit_deadline`]); leader-lane calls are shed
+//!   unexecuted if they dequeue past their deadline, and the caller's
+//!   reply wait itself times out. The caller gets
+//!   [`crate::error::Error::DeadlineExceeded`] no later than the budget
+//!   (plus scheduling slack) — never a hang. A straggling execution's
+//!   result lands in a dropped reply channel and is discarded on
+//!   arrival; the worker that produced it is *not* killed.
+//! * **Winner quarantine + fallback** (`quarantine: Some(policy)`):
+//!   every published entry carries a [`drift::FailureMonitor`] — the
+//!   failure-rate sibling of the drift monitor's latency windows
+//!   (sharded atomic ok/err counters, leader-only scan, streak + cooldown
+//!   hysteresis). When a winner's windowed runtime error rate trips
+//!   [`drift::QuarantinePolicy`], the leader demotes it everywhere (lane
+//!   entry, instantiation cache, pool replicas, background candidacy),
+//!   marks the variant failed in tuning history, republishes the
+//!   *next-best measured variant* as fallback — callers degrade to the
+//!   runner-up instead of erroring — and quarantines the variant so an
+//!   immediate retune cannot re-pick it until `quarantine_for` passes.
+//!   Deadline/overload errors never count toward the breaker: they say
+//!   nothing about the variant. Demotions emit [`QuarantineEvent`]s
+//!   (`"quarantine_events"` in `stats_json()`) and hub-publish so the
+//!   fleet learns the fallback too.
+//! * **Load shedding** (`shed: Some(policy)`): a bounded admission gate
+//!   ahead of the leader queue. Beyond [`ShedPolicy::max_inflight`]
+//!   concurrent leader-lane calls the handle fails fast with
+//!   [`crate::error::Error::Overloaded`]; calls that sat queued longer
+//!   than `max_queue_wait` are shed at dequeue instead of executing
+//!   late. Fast-lane hits never queue, so they bypass the gate. Shed and
+//!   deadline counts are kept lock-free ([`ResilienceStats`],
+//!   `"resilience"` in `stats_json()`).
+//! * **Transient vs permanent candidate failures**: an exploration
+//!   candidate that *times out* (hedge expiry) is released for one retry
+//!   before being marked failed — a compile or execution *error* stays
+//!   immediately permanent — so one slow measurement does not
+//!   permanently exclude a potentially-best variant.
+//!
+//! The chaos-replay harness (`benches/chaos_replay.rs`, gated in CI)
+//! injects exactly these faults — wedged variants, erroring winners,
+//! worker death, broker outage, overload bursts — mid-replay via
+//! [`crate::traffic::FaultPlan`] and asserts the contract: callers never
+//! hang, error rates stay bounded, and p99 recovers once the fault
+//! clears. `rust/tests/chaos_resilience.rs` pins the per-mechanism
+//! behaviour deterministically.
+//!
 //! # Correctness tooling
 //!
 //! Three lanes, a worker pool, background exploration and a drift
@@ -283,9 +340,15 @@ mod stats;
 
 pub use background::ExploreOptions;
 pub use dispatcher::{CallOutcome, CallRoute, Dispatcher};
-pub use drift::{DriftHit, DriftMonitor, DriftPolicy, WindowSummary};
+pub use drift::{
+    DriftHit, DriftMonitor, DriftPolicy, FailureMonitor, FailureWindow, QuarantineHit,
+    QuarantinePolicy, WindowSummary,
+};
 pub use fastlane::{FastLane, Publication};
 pub use pool::{PoolOptions, PoolSnapshot, WorkerPool, WorkerSnapshot};
 pub use registry::KernelRegistry;
-pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions};
-pub use stats::{BackgroundStats, CoordStats, DriftEvent, FusedStats, HubStats, KernelStats};
+pub use server::{BatchOptions, Coordinator, CoordinatorHandle, ServerOptions, ShedPolicy};
+pub use stats::{
+    BackgroundStats, CoordStats, DriftEvent, FusedStats, HubStats, KernelStats, QuarantineEvent,
+    ResilienceStats,
+};

@@ -41,6 +41,11 @@
 //!   worker whose engine cannot even be re-created marks itself dead and
 //!   drains its shard with errors — pushes re-check liveness under the
 //!   shard lock, so callers are never left hanging.
+//! * **Deadlines.** [`WorkerPool::submit_deadline`] bounds the whole
+//!   round trip — backpressure wait, queue wait, and execution — and
+//!   returns [`Error::DeadlineExceeded`] when the budget elapses. The
+//!   caller drops its reply receiver; the worker's eventual send fails
+//!   harmlessly (result discarded on arrival) and the worker lives on.
 //!
 //! The pool publishes into the existing [`super::FastLane`] through
 //! [`WorkerPool::handle_for`] — a `SharedKernel` whose `execute` submits
@@ -318,6 +323,8 @@ impl WorkerPool {
             inits.push(init_rx);
         }
         for (idx, rx) in inits.into_iter().enumerate() {
+            // jitune-lint: allow(L006): init handshake — the worker sends exactly
+            // once and its thread death drops the sender, disconnecting this recv
             match rx.recv() {
                 Ok(Ok(())) => {}
                 Ok(Err(e)) => {
@@ -384,6 +391,8 @@ impl WorkerPool {
         }
         let mut ready = Vec::new();
         for (idx, rx) in pending {
+            // jitune-lint: allow(L006): install ack — the worker replies to every
+            // Install job and a worker death drops the sender, disconnecting this
             match rx.recv() {
                 Ok(Ok(())) => ready.push(idx),
                 Ok(Err(e)) => log::warn!("pool worker {idx}: compile of {id} failed: {e}"),
@@ -469,6 +478,22 @@ impl WorkerPool {
     /// died mid-call) surface to the caller, whose fast-lane fallback
     /// retries through the leader — a call can fail over, never hang.
     pub fn submit(&self, variant_id: &str, inputs: &[HostTensor]) -> Result<(HostTensor, Duration)> {
+        self.submit_deadline(variant_id, inputs, None)
+    }
+
+    /// [`submit`](WorkerPool::submit) with an optional absolute deadline
+    /// covering the *whole* pool round trip — backpressure wait, queue
+    /// wait, and execution. A call that cannot finish in budget returns
+    /// [`Error::DeadlineExceeded`] and drops its reply receiver; the
+    /// worker's eventual `reply.send` fails harmlessly, so the
+    /// worker-side result is discarded on arrival and the worker itself
+    /// is never killed.
+    pub fn submit_deadline(
+        &self,
+        variant_id: &str,
+        inputs: &[HostTensor],
+        deadline: Option<Instant>,
+    ) -> Result<(HostTensor, Duration)> {
         if self.shutdown.load(Ordering::SeqCst) {
             return Err(Error::Coordinator("worker pool stopped".into()));
         }
@@ -491,13 +516,39 @@ impl WorkerPool {
                 "pool: no live worker holds {variant_id}"
             )));
         }
+        let t0 = Instant::now();
         let (reply, rx) = mpsc::sync_channel::<Result<(HostTensor, Duration)>>(1);
         self.push_exec(
             Job::Exec { variant_id: variant_id.to_string(), inputs: inputs.to_vec(), reply },
             &ready,
-        )?;
-        rx.recv()
-            .map_err(|_| Error::Coordinator("pool worker died mid-call".into()))?
+            deadline,
+        )
+        .map_err(|e| match (e, deadline) {
+            // push_exec can't see the call's start, so it reports a zero
+            // budget; rewrite it to the real one.
+            (Error::DeadlineExceeded { kernel, .. }, Some(d)) => {
+                Error::DeadlineExceeded { kernel, deadline: d.saturating_duration_since(t0) }
+            }
+            (other, _) => other,
+        })?;
+        match deadline {
+            Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                Ok(result) => result,
+                Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::DeadlineExceeded {
+                    kernel: variant_id.to_string(),
+                    deadline: d.saturating_duration_since(t0),
+                }),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Err(Error::Coordinator("pool worker died mid-call".into()))
+                }
+            },
+            None => {
+                // jitune-lint: allow(L006): a worker death or shard drain drops the
+                // reply sender, so this recv disconnects instead of hanging
+                rx.recv()
+                    .map_err(|_| Error::Coordinator("pool worker died mid-call".into()))?
+            }
+        }
     }
 
     /// Per-worker counter snapshot plus pool-level gauges.
@@ -596,6 +647,8 @@ impl WorkerPool {
         }
         let joins: Vec<JoinHandle<()>> = self.joins.lock().drain(..).collect();
         for join in joins {
+            // jitune-lint: allow(L006): shutdown join — the stored shutdown flag
+            // plus the wake-up broadcast above guarantee every worker loop exits
             let _ = join.join();
         }
     }
@@ -631,7 +684,11 @@ impl WorkerPool {
     /// skips — a job can never be parked on a shard nobody will pop.
     /// (A push that lands just *before* the drain is cleared by it, and
     /// the dropped reply unblocks the caller into the leader fallback.)
-    fn push_exec(&self, job: Job, ready: &[usize]) -> Result<()> {
+    /// With a `deadline`, the backpressure block is bounded: queue wait
+    /// counts against the call's budget, and a budget that dies waiting
+    /// for queue space returns [`Error::DeadlineExceeded`] instead of
+    /// parking the caller on a wedged shard.
+    fn push_exec(&self, job: Job, ready: &[usize], deadline: Option<Instant>) -> Result<()> {
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % ready.len();
         let mut job = Some(job);
         for k in 0..ready.len() {
@@ -675,7 +732,27 @@ impl WorkerPool {
                 shard.not_empty.notify_one();
                 return Ok(());
             }
-            q = shard.not_full.wait(q);
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        let kernel = match job.as_ref() {
+                            Some(Job::Exec { variant_id, .. }) => variant_id.clone(),
+                            _ => String::new(),
+                        };
+                        return Err(Error::DeadlineExceeded {
+                            kernel,
+                            deadline: Duration::ZERO,
+                        });
+                    }
+                    let (guard, _) =
+                        shard.not_full.wait_timeout(q, d.saturating_duration_since(now));
+                    q = guard;
+                }
+                // jitune-lint: allow(L006): only reached when no deadline is set; a
+                // dying worker's drain notifies not_full and the loop re-checks liveness
+                None => q = shard.not_full.wait(q),
+            }
         }
     }
 
@@ -859,6 +936,14 @@ impl SharedKernel for PoolKernel {
         // The worker times the execution itself: queue wait and
         // cross-thread dispatch never reach the drift monitor.
         self.pool.submit(&self.variant_id, inputs)
+    }
+
+    fn execute_measured_deadline(
+        &self,
+        inputs: &[HostTensor],
+        deadline: Option<Instant>,
+    ) -> Result<(HostTensor, Duration)> {
+        self.pool.submit_deadline(&self.variant_id, inputs, deadline)
     }
 
     fn variant_id(&self) -> &str {
@@ -1289,6 +1374,70 @@ mod tests {
         let snap = pool.snapshot();
         assert!(snap.workers[0].alive);
         assert!(snap.workers[0].compiles >= 2, "install + lazy recompile: {snap:?}");
+        pool.stop();
+    }
+
+    #[test]
+    fn deadline_exceeded_releases_caller_and_keeps_worker_alive() {
+        let spec = MockSpec {
+            default_exec_cost: Duration::from_millis(60),
+            exec_sleep: true,
+            ..MockSpec::default()
+        };
+        let pool = spawn_mock_pool(spec, 1);
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 1);
+        let t0 = Instant::now();
+        let err = pool
+            .submit_deadline(&v.id, &inputs8(), Some(t0 + Duration::from_millis(10)))
+            .expect_err("wedged variant cannot meet a 10ms budget");
+        assert!(matches!(err, Error::DeadlineExceeded { .. }), "wrong error: {err}");
+        assert!(
+            t0.elapsed() < Duration::from_millis(55),
+            "caller released before the 60ms execution finished"
+        );
+        // The discarded result does not kill the worker: it serves the
+        // next (undeadlined) call normally.
+        let (out, _) = pool.submit(&v.id, &inputs8()).unwrap();
+        assert!(out.data().iter().all(|&x| x == 2.0));
+        assert!(pool.snapshot().workers[0].alive);
+        pool.stop();
+    }
+
+    #[test]
+    fn deadline_bounds_backpressure_wait_for_queue_space() {
+        let spec = MockSpec {
+            default_exec_cost: Duration::from_millis(50),
+            exec_sleep: true,
+            ..MockSpec::default()
+        };
+        let pool = WorkerPool::spawn(
+            PoolOptions::new(Arc::new(MockEngineFactory::new(spec)))
+                .with_workers(1)
+                .with_queue_depth(1),
+        )
+        .unwrap();
+        let v = sample_variant("k.b.n8");
+        assert_eq!(pool.install(v.clone(), "hlo".into()), 1);
+        let mut joins = Vec::new();
+        for _ in 0..2 {
+            let pool = pool.clone();
+            let id = v.id.clone();
+            joins.push(std::thread::spawn(move || {
+                pool.submit(&id, &inputs8()).unwrap();
+            }));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        // One job executing, one queued: the shard is full, so this call
+        // dies waiting for queue space — the wait counts against the
+        // budget instead of parking the caller behind the wedge.
+        let err = pool
+            .submit_deadline(&v.id, &inputs8(), Some(Instant::now() + Duration::from_millis(5)))
+            .expect_err("no queue space inside the budget");
+        assert!(matches!(err, Error::DeadlineExceeded { .. }), "wrong error: {err}");
+        for j in joins {
+            j.join().unwrap();
+        }
         pool.stop();
     }
 }

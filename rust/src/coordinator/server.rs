@@ -13,7 +13,7 @@
 //! "compilation is protected by a mutex" guarantee and keeps the tuner
 //! observing executions under real cross-request contention.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::background::{BackgroundScheduler, ExploreOptions, ExploreResult};
 use crate::coordinator::dispatcher::{CallOutcome, Dispatcher};
-use crate::coordinator::drift::DriftPolicy;
+use crate::coordinator::drift::{DriftPolicy, QuarantinePolicy};
 use crate::coordinator::fastlane::FastLane;
 use crate::coordinator::pool::{PoolOptions, PoolSnapshot, WorkerPool};
 use crate::error::{Error, Result};
@@ -33,6 +33,13 @@ enum Request {
     Call {
         kernel: String,
         inputs: Vec<HostTensor>,
+        /// Absolute call deadline (`ServerOptions::call_deadline` applied
+        /// at call entry); the leader sheds the call unexecuted when it
+        /// dequeues after this instant.
+        deadline: Option<Instant>,
+        /// When the handle enqueued the call — queue wait is measured
+        /// against [`ShedPolicy::max_queue_wait`] at dequeue.
+        enqueued: Instant,
         reply: mpsc::SyncSender<Result<CallOutcome>>,
     },
     TunedValue {
@@ -113,6 +120,32 @@ fn flush_call_run(dispatcher: &mut Dispatcher, depth: usize, run: &mut Vec<CallI
     }
 }
 
+/// Lock-free resilience counters shared by every handle and the leader:
+/// the admission gate's in-flight count plus shed / deadline-exceeded
+/// totals. Handles record here without any leader round-trip; the
+/// leader syncs the totals into [`super::stats::CoordStats`] before
+/// answering a stats request.
+#[derive(Debug, Default)]
+struct ResilienceGauge {
+    /// Leader-lane calls admitted but not yet answered.
+    inflight: AtomicUsize,
+    /// Calls refused by the admission gate or shed by the leader for
+    /// exceeding [`ShedPolicy::max_queue_wait`].
+    shed: AtomicU64,
+    /// Calls that returned [`Error::DeadlineExceeded`] on any lane.
+    deadline_exceeded: AtomicU64,
+}
+
+/// RAII in-flight slot: decrements the gauge however the call exits
+/// (reply, deadline timeout, panic unwind).
+struct InflightPermit<'a>(&'a ResilienceGauge);
+
+impl Drop for InflightPermit<'_> {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// Cloneable, `Send` handle for submitting kernel calls to the leader —
 /// or executing them directly when the tuned fast lane has a published
 /// winner for the problem.
@@ -121,6 +154,9 @@ pub struct CoordinatorHandle {
     tx: mpsc::Sender<Request>,
     fast_lane: Option<Arc<FastLane>>,
     pool: Option<Arc<WorkerPool>>,
+    gauge: Arc<ResilienceGauge>,
+    call_deadline: Option<Duration>,
+    shed: Option<ShedPolicy>,
 }
 
 impl CoordinatorHandle {
@@ -131,13 +167,39 @@ impl CoordinatorHandle {
     /// other callers. Misses (still tuning, retuned, thread-pinned
     /// engine) fall back to the leader exactly as before. A published
     /// winner that fails at execution is unpublished and the call retries
-    /// through the leader, so callers never observe a lost call.
+    /// through the leader, so callers never observe a lost call — unless
+    /// a quarantine policy armed a failure breaker on the entry, in which
+    /// case the error returns to the caller and the *breaker* owns
+    /// demotion (sliding-window rate, next-best fallback) instead of one
+    /// error evicting a healthy winner.
+    ///
+    /// With [`ServerOptions::call_deadline`] the whole call is bounded:
+    /// fast-lane execution is budget-checked, the leader sheds the call
+    /// if it dequeues past the deadline, and the reply wait itself times
+    /// out — a wedged winner costs the caller the deadline, never a hang.
+    /// The straggler's eventual reply lands in a dropped channel and is
+    /// discarded. With [`ServerOptions::shed`] admission is bounded too:
+    /// beyond `max_inflight` concurrent leader-lane calls the handle
+    /// fails fast with [`Error::Overloaded`] instead of queueing.
     pub fn call(&self, kernel: &str, inputs: Vec<HostTensor>) -> Result<CallOutcome> {
         let t0 = Instant::now();
+        let deadline = self.call_deadline.map(|d| t0 + d);
         if let Some(lane) = &self.fast_lane {
             if let Some(entry) = lane.lookup(kernel, &inputs) {
-                match entry.call(&inputs, t0) {
+                match entry.call_deadline(&inputs, t0, deadline) {
                     Ok(outcome) => return Ok(outcome),
+                    Err(e @ Error::DeadlineExceeded { .. }) => {
+                        // Not a winner failure and not retryable — the
+                        // budget is gone either way.
+                        self.gauge.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                    Err(e) if entry.failure_breaker().is_some() => {
+                        // The breaker recorded the error; the leader's
+                        // quarantine scan demotes once the windowed rate
+                        // trips. One error must not evict the entry.
+                        return Err(e);
+                    }
                     Err(e) => {
                         log::warn!(
                             "fast lane: {} failed ({e}); demoting to leader lane",
@@ -150,11 +212,63 @@ impl CoordinatorHandle {
                 }
             }
         }
+        let _permit = if let Some(shed) = &self.shed {
+            let admitted = self.gauge.inflight.fetch_add(1, Ordering::Relaxed);
+            let permit = InflightPermit(&self.gauge);
+            if admitted >= shed.max_inflight {
+                // permit drops here, releasing the slot we just took
+                self.gauge.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Error::Overloaded(format!(
+                    "{kernel}: {admitted} leader-lane calls in flight (max {})",
+                    shed.max_inflight
+                )));
+            }
+            Some(permit)
+        } else {
+            None
+        };
         let (reply, rx) = mpsc::sync_channel(1);
         self.tx
-            .send(Request::Call { kernel: kernel.to_string(), inputs, reply })
+            .send(Request::Call {
+                kernel: kernel.to_string(),
+                inputs,
+                deadline,
+                enqueued: Instant::now(),
+                reply,
+            })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
-        rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
+        let result = match deadline {
+            Some(d) => match rx.recv_timeout(d.saturating_duration_since(Instant::now())) {
+                Ok(result) => result,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    // Dropping `rx` makes the leader's eventual reply a
+                    // failed send — the result is discarded on arrival,
+                    // nothing blocks on us.
+                    Err(Error::DeadlineExceeded {
+                        kernel: kernel.to_string(),
+                        deadline: d.saturating_duration_since(t0),
+                    })
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(Error::Coordinator("coordinator dropped reply".into()))
+                }
+            },
+            // jitune-lint: allow(L006): no deadline configured; leader
+            // shutdown drops the reply sender, so this recv disconnects
+            // instead of hanging
+            None => rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?,
+        };
+        match &result {
+            Err(Error::DeadlineExceeded { .. }) => {
+                self.gauge.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(Error::Overloaded(_)) => {
+                // leader-side shed (queue wait exceeded the policy)
+                self.gauge.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+        result
     }
 
     /// Tuned parameter value for a problem, if tuning completed.
@@ -163,6 +277,8 @@ impl CoordinatorHandle {
         self.tx
             .send(Request::TunedValue { kernel: kernel.to_string(), size, reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        // jitune-lint: allow(L006): control-plane query — leader shutdown drops
+        // the reply sender, so this recv disconnects instead of hanging
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
     }
 
@@ -175,6 +291,8 @@ impl CoordinatorHandle {
         self.tx
             .send(Request::Retune { kernel: kernel.to_string(), size, reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        // jitune-lint: allow(L006): control-plane query — leader shutdown drops
+        // the reply sender, so this recv disconnects instead of hanging
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
     }
 
@@ -184,6 +302,8 @@ impl CoordinatorHandle {
         self.tx
             .send(Request::Stats { reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        // jitune-lint: allow(L006): control-plane query — leader shutdown drops
+        // the reply sender, so this recv disconnects instead of hanging
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
     }
 
@@ -195,6 +315,8 @@ impl CoordinatorHandle {
         self.tx
             .send(Request::StatsJson { reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        // jitune-lint: allow(L006): control-plane query — leader shutdown drops
+        // the reply sender, so this recv disconnects instead of hanging
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))
     }
 
@@ -208,6 +330,8 @@ impl CoordinatorHandle {
         self.tx
             .send(Request::HubPull { reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        // jitune-lint: allow(L006): control-plane query — leader shutdown drops
+        // the reply sender, so this recv disconnects instead of hanging
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
     }
 
@@ -219,6 +343,8 @@ impl CoordinatorHandle {
         self.tx
             .send(Request::SaveState { path: path.to_path_buf(), reply })
             .map_err(|_| Error::Coordinator("coordinator stopped".into()))?;
+        // jitune-lint: allow(L006): control-plane query — leader shutdown drops
+        // the reply sender, so this recv disconnects instead of hanging
         rx.recv().map_err(|_| Error::Coordinator("coordinator dropped reply".into()))?
     }
 
@@ -258,6 +384,30 @@ pub struct BatchOptions {
 impl Default for BatchOptions {
     fn default() -> Self {
         BatchOptions { max_batch: 16 }
+    }
+}
+
+/// Bounded admission ahead of the leader queue: when the server is
+/// saturated, fail fast with [`Error::Overloaded`] instead of letting
+/// the queue (and every caller's latency) grow without bound.
+///
+/// Two independent bounds: `max_inflight` refuses work at the door,
+/// `max_queue_wait` sheds work that got in but sat queued so long that
+/// executing it late helps nobody. Fast-lane hits bypass both — they
+/// never queue.
+#[derive(Debug, Clone, Copy)]
+pub struct ShedPolicy {
+    /// Maximum leader-lane calls in flight (admitted, not yet answered)
+    /// across all handles. The next admission fails fast.
+    pub max_inflight: usize,
+    /// Maximum time a call may sit on the leader queue; the leader sheds
+    /// staler calls unexecuted at dequeue.
+    pub max_queue_wait: Duration,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> Self {
+        ShedPolicy { max_inflight: 1024, max_queue_wait: Duration::from_secs(1) }
     }
 }
 
@@ -321,6 +471,27 @@ pub struct ServerOptions {
     /// (documented escape hatch: `jitune run --explore-budget 0`).
     /// `None` keeps inline exploration exactly as before.
     pub explore_budget: Option<ExploreOptions>,
+    /// Per-call deadline. `Some(d)` bounds every [`CoordinatorHandle::
+    /// call`] end to end — fast-lane execution, leader queue wait, and
+    /// the reply wait itself — returning [`Error::DeadlineExceeded`]
+    /// when the budget elapses. A straggling execution's result is
+    /// discarded on arrival; the worker that produced it lives on.
+    /// `None` (the default) keeps calls unbounded exactly as before.
+    pub call_deadline: Option<Duration>,
+    /// Load shedding. `Some(policy)` arms a bounded admission gate ahead
+    /// of the leader queue (see [`ShedPolicy`]); shed calls fail fast
+    /// with [`Error::Overloaded`] and are counted in stats. `None` (the
+    /// default) admits everything exactly as before.
+    pub shed: Option<ShedPolicy>,
+    /// Winner quarantine. `Some(policy)` arms a per-entry failure-rate
+    /// breaker on every published fast-lane winner: when a winner's
+    /// windowed runtime error rate trips the policy, the leader demotes
+    /// it everywhere (lane, cache, pool), quarantines the variant so an
+    /// immediate retune cannot re-pick it, and serves the next-best
+    /// variant from tuning history as fallback (requires `fast_lane`;
+    /// ignored with a warning otherwise). `None` (the default) keeps the
+    /// invalidate-on-first-error behaviour exactly.
+    pub quarantine: Option<QuarantinePolicy>,
 }
 
 impl Default for ServerOptions {
@@ -333,6 +504,9 @@ impl Default for ServerOptions {
             hub: None,
             prewarm: false,
             explore_budget: None,
+            call_deadline: None,
+            shed: None,
+            quarantine: None,
         }
     }
 }
@@ -354,6 +528,12 @@ pub struct Coordinator {
     /// stopped via `notifier_stop` and joined at shutdown.
     notifier: Option<JoinHandle<()>>,
     notifier_stop: Arc<AtomicBool>,
+    /// Shared resilience counters; every handle gets a clone.
+    gauge: Arc<ResilienceGauge>,
+    /// Per-call deadline handed to every handle.
+    call_deadline: Option<Duration>,
+    /// Admission-gate policy handed to every handle.
+    shed: Option<ShedPolicy>,
 }
 
 impl Coordinator {
@@ -388,15 +568,18 @@ impl Coordinator {
     {
         let max_batch = opts.batch.max_batch.max(1);
         let lane = if opts.fast_lane {
-            Some(Arc::new(match opts.drift {
-                Some(policy) => FastLane::with_drift(policy),
-                None => FastLane::new(),
-            }))
+            Some(Arc::new(FastLane::with_policies(opts.drift, opts.quarantine)))
         } else {
             if opts.drift.is_some() {
                 log::warn!(
                     "drift policy ignored: the fast lane is disabled, so there \
                      are no lane latency windows to monitor"
+                );
+            }
+            if opts.quarantine.is_some() {
+                log::warn!(
+                    "quarantine policy ignored: the fast lane is disabled, so \
+                     there are no published winners to arm breakers on"
                 );
             }
             None
@@ -413,13 +596,22 @@ impl Coordinator {
             }
             None => None,
         };
-        // Leader wake-up cadences; None for both keeps the plain
-        // blocking recv loop (no behaviour change without drift/hub).
+        // Leader wake-up cadences; None for all keeps the plain
+        // blocking recv loop (no behaviour change without
+        // drift/hub/quarantine).
         let drift_every = if opts.fast_lane {
             opts.drift.map(|p| p.window.max(Duration::from_millis(1)))
         } else {
             None
         };
+        let quarantine_every = if opts.fast_lane {
+            opts.quarantine.map(|p| p.window.max(Duration::from_millis(1)))
+        } else {
+            None
+        };
+        let shed_policy = opts.shed;
+        let gauge = Arc::new(ResilienceGauge::default());
+        let leader_gauge = Arc::clone(&gauge);
         let hub_opts = opts.hub.clone();
         let notify_opts = opts.hub.clone().filter(|h| h.subscribe);
         let prewarm = opts.prewarm;
@@ -571,6 +763,8 @@ impl Coordinator {
                 };
                 let mut next_drift = drift_every.map(|every| Instant::now() + every);
                 let mut next_pull = pull_every.map(|every| Instant::now() + every);
+                let mut next_quarantine =
+                    quarantine_every.map(|every| Instant::now() + every);
                 'serve: loop {
                     // Advance the background explore scheduler first:
                     // expire hedges, roll the duty-cycle window, issue
@@ -585,7 +779,7 @@ impl Coordinator {
                     // earliest-next-event `recv_timeout` deadline, so a
                     // saturated round queue cannot starve drift ticks and
                     // explore wakes never busy-spin the leader.
-                    let next_tick = [next_drift, next_pull, next_bg]
+                    let next_tick = [next_drift, next_pull, next_quarantine, next_bg]
                         .into_iter()
                         .flatten()
                         .min();
@@ -598,6 +792,8 @@ impl Coordinator {
                                 Err(mpsc::RecvTimeoutError::Disconnected) => break 'serve,
                             }
                         }
+                        // jitune-lint: allow(L006): idle leader wait — every handle holds a
+                        // sender clone, so this recv disconnects when the last handle drops
                         None => match rx.recv() {
                             Ok(req) => Some(req),
                             Err(_) => break 'serve,
@@ -608,6 +804,13 @@ impl Coordinator {
                         if now >= deadline {
                             dispatcher.drift_tick();
                             next_drift = Some(now + every);
+                        }
+                    }
+                    if let (Some(deadline), Some(every)) = (next_quarantine, quarantine_every)
+                    {
+                        if now >= deadline {
+                            dispatcher.quarantine_tick(now);
+                            next_quarantine = Some(now + every);
                         }
                     }
                     if let (Some(deadline), Some(every)) = (next_pull, pull_every) {
@@ -657,9 +860,36 @@ impl Coordinator {
                     let mut calls: Vec<Deferred> = Vec::new();
                     let mut shutdown = false;
                     let mut hub_notified = false;
+                    let dequeued = Instant::now();
                     for req in round {
                         match req {
-                            Request::Call { kernel, inputs, reply } => {
+                            Request::Call { kernel, inputs, deadline, enqueued, reply } => {
+                                // Shed before execute: a call whose
+                                // budget died in the queue (or that
+                                // outsat the shed policy's queue-wait
+                                // bound) must not burn leader time — the
+                                // caller has given up (or will, the
+                                // instant this reply lands).
+                                if let Some(d) = deadline {
+                                    if dequeued >= d {
+                                        let _ = reply.send(Err(Error::DeadlineExceeded {
+                                            kernel,
+                                            deadline: d.saturating_duration_since(enqueued),
+                                        }));
+                                        continue;
+                                    }
+                                }
+                                if let Some(shed) = shed_policy {
+                                    let waited = dequeued.saturating_duration_since(enqueued);
+                                    if waited > shed.max_queue_wait {
+                                        let _ = reply.send(Err(Error::Overloaded(format!(
+                                            "{kernel}: queued {}ms (max {}ms)",
+                                            waited.as_millis(),
+                                            shed.max_queue_wait.as_millis()
+                                        ))));
+                                        continue;
+                                    }
+                                }
                                 calls.push(Deferred::Call(kernel, inputs, reply));
                             }
                             Request::TunedValue { kernel, size, reply } => {
@@ -669,6 +899,10 @@ impl Coordinator {
                                 calls.push(Deferred::Retune { kernel, size, reply });
                             }
                             Request::Stats { reply } => {
+                                dispatcher.stats_mut().set_resilience(
+                                    leader_gauge.shed.load(Ordering::Relaxed),
+                                    leader_gauge.deadline_exceeded.load(Ordering::Relaxed),
+                                );
                                 let lane_render =
                                     dispatcher.fast_lane().map(|l| l.render()).unwrap_or_default();
                                 let pool_render =
@@ -683,6 +917,10 @@ impl Coordinator {
                                 let _ = reply.send((rendered, dispatcher.tuning_report()));
                             }
                             Request::StatsJson { reply } => {
+                                dispatcher.stats_mut().set_resilience(
+                                    leader_gauge.shed.load(Ordering::Relaxed),
+                                    leader_gauge.deadline_exceeded.load(Ordering::Relaxed),
+                                );
                                 let mut obj =
                                     vec![("kernels".to_string(), dispatcher.stats().to_json())];
                                 if let Some(lane) = dispatcher.fast_lane() {
@@ -695,6 +933,19 @@ impl Coordinator {
                                     obj.push((
                                         "drift_events".to_string(),
                                         dispatcher.stats().drift_events_json(),
+                                    ));
+                                }
+                                if !dispatcher.stats().quarantine_events().is_empty() {
+                                    obj.push((
+                                        "quarantine_events".to_string(),
+                                        dispatcher.stats().quarantine_events_json(),
+                                    ));
+                                }
+                                let res = dispatcher.stats().resilience();
+                                if res.shed + res.deadline_exceeded > 0 {
+                                    obj.push((
+                                        "resilience".to_string(),
+                                        dispatcher.stats().resilience_json(),
                                     ));
                                 }
                                 if dispatcher.hub_active() {
@@ -774,11 +1025,15 @@ impl Coordinator {
                 Error::Coordinator(format!("spawn: {e}"))
             })?;
         let ready = ready_rx
+            // jitune-lint: allow(L006): init handshake — the leader sends exactly once
+            // before its loop and its thread death drops the sender, disconnecting this
             .recv()
             .map_err(|_| Error::Coordinator("leader died during init".into()))
             .and_then(|r| r);
         if let Err(e) = ready {
             // the leader is exiting (or gone); reap it and the workers
+            // jitune-lint: allow(L006): init-failure reap — the leader already reported
+            // its error over the ready channel, so its loop has exited and the join returns
             let _ = join.join();
             if let Some(pool) = &pool {
                 pool.stop();
@@ -787,6 +1042,8 @@ impl Coordinator {
                 sp.stop();
             }
             if let Some(fwd) = forwarder.take() {
+                // jitune-lint: allow(L006): init-failure reap — the dead leader and
+                // stopped pools dropped the forwarder's senders, so its loop has exited
                 let _ = fwd.join();
             }
             return Err(e);
@@ -868,6 +1125,9 @@ impl Coordinator {
             forwarder,
             notifier,
             notifier_stop,
+            gauge,
+            call_deadline: opts.call_deadline,
+            shed: opts.shed,
         })
     }
 
@@ -877,6 +1137,9 @@ impl Coordinator {
             tx: self.tx.clone(),
             fast_lane: self.fast_lane.clone(),
             pool: self.pool.clone(),
+            gauge: Arc::clone(&self.gauge),
+            call_deadline: self.call_deadline,
+            shed: self.shed,
         }
     }
 
@@ -891,9 +1154,13 @@ impl Coordinator {
         self.notifier_stop.store(true, Ordering::Release);
         let _ = self.tx.send(Request::Shutdown);
         if let Some(join) = self.join.take() {
+            // jitune-lint: allow(L006): shutdown join — Request::Shutdown (or the
+            // disconnect when this last handle drops) makes the leader loop exit
             let _ = join.join();
         }
         if let Some(notifier) = self.notifier.take() {
+            // jitune-lint: allow(L006): shutdown join — the stop flag stored above is
+            // checked between the notifier's bounded waits, so its loop exits promptly
             let _ = notifier.join();
         }
         if let Some(pool) = &self.pool {
@@ -903,6 +1170,8 @@ impl Coordinator {
             pool.stop();
         }
         if let Some(fwd) = self.forwarder.take() {
+            // jitune-lint: allow(L006): shutdown join — the joined leader and stopped
+            // pools dropped the forwarder's senders, so its channel disconnected
             let _ = fwd.join();
         }
     }
@@ -1223,5 +1492,120 @@ mod tests {
         }
         assert_eq!(h.fast_lane_published(), 1);
         assert_eq!(h.tuned_value("k", 8).unwrap(), Some(2));
+    }
+
+    #[test]
+    fn call_deadline_bounds_wedged_calls() {
+        // every execution sleeps 50ms; a 10ms deadline must release the
+        // caller early with DeadlineExceeded instead of making it wait
+        let spec = MockSpec {
+            default_exec_cost: Duration::from_millis(50),
+            ..MockSpec::default()
+        }
+        .with_sleep_exec();
+        let opts = ServerOptions {
+            call_deadline: Some(Duration::from_millis(10)),
+            ..ServerOptions::default()
+        };
+        let coord = spawn_mock_with(spec, opts);
+        let h = coord.handle();
+        let t0 = Instant::now();
+        let err = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap_err();
+        assert!(
+            matches!(err, Error::DeadlineExceeded { .. }),
+            "expected deadline error, got: {err}"
+        );
+        assert!(
+            t0.elapsed() < Duration::from_millis(45),
+            "caller released well before the 50ms execution finished"
+        );
+        // the straggler's reply lands in a dropped channel; the leader
+        // stays healthy and the miss is counted
+        let json = h.stats_json().unwrap();
+        let res = json.get("resilience").expect("resilience counters exported");
+        assert_eq!(res.get("deadline_exceeded").unwrap().as_i64(), Some(1));
+        assert_eq!(res.get("shed").unwrap().as_i64(), Some(0));
+    }
+
+    #[test]
+    fn overload_burst_sheds_instead_of_queueing() {
+        let spec = MockSpec {
+            default_exec_cost: Duration::from_millis(60),
+            ..MockSpec::default()
+        }
+        .with_sleep_exec();
+        let opts = ServerOptions {
+            shed: Some(ShedPolicy {
+                max_inflight: 1,
+                max_queue_wait: Duration::from_secs(5),
+            }),
+            ..ServerOptions::default()
+        };
+        let coord = spawn_mock_with(spec, opts);
+        let h = coord.handle();
+        let wedger = coord.handle();
+        let t = std::thread::spawn(move || {
+            // occupies the single in-flight slot for ~60ms
+            let _ = wedger.call("k", vec![HostTensor::zeros(&[8, 8])]);
+        });
+        std::thread::sleep(Duration::from_millis(20)); // wedger admitted
+        let err = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap_err();
+        assert!(matches!(err, Error::Overloaded(_)), "expected shed, got: {err}");
+        t.join().unwrap();
+        // the slot freed once the wedger finished: calls admit again
+        h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        let json = h.stats_json().unwrap();
+        let res = json.get("resilience").expect("resilience counters exported");
+        assert_eq!(res.get("shed").unwrap().as_i64(), Some(1));
+    }
+
+    #[test]
+    fn quarantine_demotes_erroring_winner_and_serves_fallback() {
+        let spec = MockSpec::default()
+            .with_cost("k.a.n8", Duration::from_micros(400))
+            .with_cost("k.b.n8", Duration::from_micros(40));
+        let fault = spec.latency_fault.clone();
+        let opts = ServerOptions {
+            quarantine: Some(QuarantinePolicy {
+                window: Duration::from_millis(20),
+                min_samples: 4,
+                error_threshold: 0.5,
+                consecutive_windows: 1,
+                cooldown: Duration::ZERO,
+                ..QuarantinePolicy::default()
+            }),
+            ..ServerOptions::default()
+        };
+        let coord = spawn_mock_with(spec, opts);
+        let h = coord.handle();
+        for _ in 0..3 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        }
+        assert_eq!(h.tuned_value("k", 8).unwrap(), Some(2), "fast variant wins");
+        // the published winner starts erroring at runtime; with a breaker
+        // armed the errors return to callers (no one-strike eviction)
+        // while the sliding window accumulates
+        fault.fail_execute("k.b.n8");
+        for _ in 0..6 {
+            h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap_err();
+        }
+        // within a couple of breaker windows the leader's scan trips,
+        // demotes the winner and republishes the next-best variant
+        let mut demoted = false;
+        for _ in 0..50 {
+            std::thread::sleep(Duration::from_millis(10));
+            if h.tuned_value("k", 8).unwrap() == Some(1) {
+                demoted = true;
+                break;
+            }
+        }
+        assert!(demoted, "winner demoted to fallback within the breaker window");
+        let out = h.call("k", vec![HostTensor::zeros(&[8, 8])]).unwrap();
+        assert_eq!(out.value, 1, "fallback variant serves");
+        let json = h.stats_json().unwrap();
+        let events = json.get("quarantine_events").expect("quarantine event exported");
+        let list = events.as_arr().unwrap();
+        assert_eq!(list.len(), 1);
+        assert_eq!(list[0].get("variant_id").unwrap().as_str(), Some("k.b.n8"));
     }
 }

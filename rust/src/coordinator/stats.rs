@@ -19,6 +19,8 @@ pub struct KernelStats {
     pub failures: u64,
     /// Retunes triggered automatically by the drift policy.
     pub drift_retunes: u64,
+    /// Winners demoted by the failure-rate breaker.
+    pub quarantines: u64,
     /// End-to-end latency of every call.
     pub latency: Histogram,
     /// Latency of steady-state calls only (the post-tuning service level).
@@ -33,6 +35,7 @@ impl KernelStats {
             tuned: 0,
             failures: 0,
             drift_retunes: 0,
+            quarantines: 0,
             latency: Histogram::latency(),
             tuned_latency: Histogram::latency(),
         }
@@ -56,6 +59,32 @@ pub struct DriftEvent {
 
 /// Cap on the retained drift-event log (oldest evicted first).
 const MAX_DRIFT_EVENTS: usize = 64;
+
+/// One failure-breaker demotion, for the event log exposed in
+/// `stats_json()`.
+#[derive(Debug, Clone)]
+pub struct QuarantineEvent {
+    /// Kernel whose published winner was demoted.
+    pub kernel: String,
+    /// The variant that erred its way off the lane.
+    pub variant_id: String,
+    /// Windowed error rate that tripped the breaker.
+    pub error_rate: f64,
+}
+
+/// Cap on the retained quarantine-event log (oldest evicted first).
+const MAX_QUARANTINE_EVENTS: usize = 64;
+
+/// Serving-path resilience counters (process-wide): calls the admission
+/// gate or deadline enforcement turned away instead of queueing without
+/// bound. Synced by the leader from the server's shared gauge.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResilienceStats {
+    /// Calls shed by the admission gate (`Error::Overloaded`).
+    pub shed: u64,
+    /// Calls released by an expired budget (`Error::DeadlineExceeded`).
+    pub deadline_exceeded: u64,
+}
 
 /// Fused-exploration-round counters (process-wide): how much tuning-time
 /// work the leader's round batching absorbed.
@@ -136,6 +165,10 @@ pub struct CoordStats {
     rounds: BTreeMap<usize, u64>,
     /// Most recent drift-triggered retunes, newest last.
     drift_events: Vec<DriftEvent>,
+    /// Most recent failure-breaker demotions, newest last.
+    quarantine_events: Vec<QuarantineEvent>,
+    /// Shed / deadline-exceeded call counts.
+    resilience: ResilienceStats,
     /// Hub traffic, when a hub is attached.
     hub: HubStats,
     /// Fused exploration rounds, when co-scheduled calls got batched.
@@ -151,6 +184,8 @@ impl CoordStats {
             kernels: BTreeMap::new(),
             rounds: BTreeMap::new(),
             drift_events: Vec::new(),
+            quarantine_events: Vec::new(),
+            resilience: ResilienceStats::default(),
             hub: HubStats::default(),
             fused: FusedStats::default(),
             background: BackgroundStats::default(),
@@ -236,6 +271,67 @@ impl CoordStats {
                 })
                 .collect(),
         )
+    }
+
+    /// Record one failure-breaker demotion.
+    pub fn quarantine(&mut self, kernel: &str, variant_id: &str, error_rate: f64) {
+        self.entry(kernel).quarantines += 1;
+        if self.quarantine_events.len() == MAX_QUARANTINE_EVENTS {
+            self.quarantine_events.remove(0);
+        }
+        self.quarantine_events.push(QuarantineEvent {
+            kernel: kernel.to_string(),
+            variant_id: variant_id.to_string(),
+            error_rate,
+        });
+    }
+
+    /// Retained quarantine events, oldest first.
+    pub fn quarantine_events(&self) -> &[QuarantineEvent] {
+        &self.quarantine_events
+    }
+
+    /// Total breaker demotions across kernels.
+    pub fn total_quarantines(&self) -> u64 {
+        self.kernels.values().map(|k| k.quarantines).sum()
+    }
+
+    /// Quarantine-event log as JSON (the `quarantine_events` array in
+    /// `stats_json()`).
+    pub fn quarantine_events_json(&self) -> Value {
+        Value::Arr(
+            self.quarantine_events
+                .iter()
+                .map(|e| {
+                    Value::Obj(vec![
+                        ("kernel".into(), s(e.kernel.clone())),
+                        ("variant_id".into(), s(e.variant_id.clone())),
+                        ("error_rate".into(), n(e.error_rate)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Overwrite the shed / deadline-exceeded counts from the server's
+    /// shared gauge (handles record there lock-free; the leader syncs
+    /// before answering a stats request).
+    pub fn set_resilience(&mut self, shed: u64, deadline_exceeded: u64) {
+        self.resilience = ResilienceStats { shed, deadline_exceeded };
+    }
+
+    /// Shed / deadline-exceeded call counts.
+    pub fn resilience(&self) -> ResilienceStats {
+        self.resilience
+    }
+
+    /// Resilience counters as JSON (the `resilience` object in
+    /// `stats_json()`).
+    pub fn resilience_json(&self) -> Value {
+        Value::Obj(vec![
+            ("shed".into(), n(self.resilience.shed as f64)),
+            ("deadline_exceeded".into(), n(self.resilience.deadline_exceeded as f64)),
+        ])
     }
 
     /// Record one fused exploration round: `calls` co-scheduled calls
@@ -378,6 +474,7 @@ impl CoordStats {
                             ("tuned".into(), n(s.tuned as f64)),
                             ("failures".into(), n(s.failures as f64)),
                             ("drift_retunes".into(), n(s.drift_retunes as f64)),
+                            ("quarantines".into(), n(s.quarantines as f64)),
                             ("mean_latency_s".into(), n(s.latency.mean())),
                             ("p95_latency_s".into(), n(s.latency.percentile(95.0))),
                             ("tuned_mean_latency_s".into(), n(s.tuned_latency.mean())),
@@ -407,6 +504,22 @@ impl CoordStats {
                 self.total_drift_retunes(),
                 last.kernel,
                 last.ratio
+            ));
+        }
+        if !self.quarantine_events.is_empty() {
+            let last = &self.quarantine_events[self.quarantine_events.len() - 1];
+            out.push_str(&format!(
+                "quarantines: {} (last: {} demoted {} at {:.0}% errors)\n",
+                self.total_quarantines(),
+                last.kernel,
+                last.variant_id,
+                last.error_rate * 100.0
+            ));
+        }
+        if self.resilience.shed + self.resilience.deadline_exceeded > 0 {
+            out.push_str(&format!(
+                "resilience: shed={} deadline_exceeded={}\n",
+                self.resilience.shed, self.resilience.deadline_exceeded
             ));
         }
         if self.hub.pushes + self.hub.pulls > 0 {
@@ -517,6 +630,39 @@ mod tests {
             per_kernel.get("k").unwrap().get("drift_retunes").unwrap().as_i64(),
             Some(70)
         );
+    }
+
+    #[test]
+    fn quarantine_events_capped_and_exported() {
+        let mut s = CoordStats::new();
+        for i in 0..70 {
+            s.quarantine("k", &format!("k.v{i}"), 0.5 + (i as f64) * 0.001);
+        }
+        assert_eq!(s.total_quarantines(), 70);
+        assert_eq!(s.quarantine_events().len(), 64, "event log is capped");
+        assert_eq!(s.quarantine_events()[0].variant_id, "k.v6", "oldest evicted");
+        let json = s.quarantine_events_json();
+        assert_eq!(json.as_arr().unwrap().len(), 64);
+        assert_eq!(s.kernel("k").unwrap().quarantines, 70);
+        assert!(s.render().contains("quarantines: 70"), "{}", s.render());
+        let per_kernel = s.to_json();
+        assert_eq!(
+            per_kernel.get("k").unwrap().get("quarantines").unwrap().as_i64(),
+            Some(70)
+        );
+    }
+
+    #[test]
+    fn resilience_counters_synced_and_rendered() {
+        let mut s = CoordStats::new();
+        assert!(!s.render().contains("resilience:"), "no line before any shed");
+        s.set_resilience(3, 5);
+        let r = s.resilience();
+        assert_eq!((r.shed, r.deadline_exceeded), (3, 5));
+        let json = s.resilience_json();
+        assert_eq!(json.get("shed").unwrap().as_i64(), Some(3));
+        assert_eq!(json.get("deadline_exceeded").unwrap().as_i64(), Some(5));
+        assert!(s.render().contains("resilience: shed=3 deadline_exceeded=5"));
     }
 
     #[test]

@@ -74,6 +74,20 @@ pub enum Error {
 
     /// Coordinator lifecycle error (server already stopped, queue closed...).
     Coordinator(String),
+
+    /// The call's deadline elapsed before a result was produced. The work
+    /// may still complete on a worker — its result is discarded on
+    /// arrival — but the caller has already been released.
+    DeadlineExceeded {
+        /// Kernel being invoked.
+        kernel: String,
+        /// The budget that was exceeded.
+        deadline: std::time::Duration,
+    },
+
+    /// The admission gate shed this call instead of queueing it without
+    /// bound ([`ShedPolicy`](crate::coordinator::ShedPolicy)).
+    Overloaded(String),
 }
 
 impl fmt::Display for Error {
@@ -95,6 +109,10 @@ impl fmt::Display for Error {
             }
             Error::Autotune(msg) => write!(f, "autotuner: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator: {msg}"),
+            Error::DeadlineExceeded { kernel, deadline } => {
+                write!(f, "deadline exceeded for {kernel}: budget {deadline:?} elapsed")
+            }
+            Error::Overloaded(msg) => write!(f, "overloaded: {msg}"),
         }
     }
 }
@@ -135,6 +153,13 @@ mod tests {
             got: "f32[4,4]".into(),
         };
         assert!(e.to_string().contains("expected f32[8,8]"));
+        let e = Error::DeadlineExceeded {
+            kernel: "matmul".into(),
+            deadline: std::time::Duration::from_millis(50),
+        };
+        assert!(e.to_string().contains("deadline exceeded for matmul"));
+        let e = Error::Overloaded("1024 calls in flight".into());
+        assert!(e.to_string().contains("overloaded"));
     }
 
     #[test]

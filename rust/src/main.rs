@@ -115,6 +115,13 @@ fn flag_specs() -> Vec<FlagSpec> {
                    empty string for defaults",
         },
         FlagSpec {
+            name: "deadline",
+            takes_value: true,
+            help: "run: per-call deadline in milliseconds — calls that exceed it \
+                   (queue wait included) return `deadline exceeded` instead of \
+                   hanging; stragglers are discarded on arrival, not killed",
+        },
+        FlagSpec {
             name: "explore-budget",
             takes_value: true,
             help: "run: background shadow exploration — callers always execute the \
@@ -195,6 +202,13 @@ fn run(args: &[String]) -> Result<()> {
                 n if n >= 0 => n as usize,
                 bad => return Err(Error::Config(format!("--pool `{bad}` must be positive"))),
             };
+            let deadline = match parsed.i64_or("deadline", 0)? {
+                0 => None,
+                ms if ms > 0 => Some(std::time::Duration::from_millis(ms as u64)),
+                bad => {
+                    return Err(Error::Config(format!("--deadline `{bad}` must be positive")))
+                }
+            };
             // --hub attaches the fleet's tuned-state broker: warm-start
             // at spawn, publish every finalization, and subscribe the
             // push channel so retunes elsewhere propagate immediately.
@@ -215,6 +229,7 @@ fn run(args: &[String]) -> Result<()> {
                     pool,
                     max_batch,
                     explore_budget,
+                    deadline,
                     hub,
                     prewarm,
                     parsed.has("json"),
@@ -229,6 +244,7 @@ fn run(args: &[String]) -> Result<()> {
                 // single-lane replay without a coordinator
                 0 if max_batch.is_none()
                     && explore_budget.is_none()
+                    && deadline.is_none()
                     && hub.is_none()
                     && !prewarm =>
                 {
@@ -241,6 +257,7 @@ fn run(args: &[String]) -> Result<()> {
                     workers,
                     max_batch,
                     explore_budget,
+                    deadline,
                     hub,
                     prewarm,
                     parsed.get("state-file"),
@@ -466,6 +483,7 @@ fn spawn_coordinator(
     workers: usize,
     max_batch: Option<usize>,
     explore_budget: Option<f64>,
+    deadline: Option<std::time::Duration>,
     hub: Option<HubOptions>,
     prewarm: bool,
     warm_start: Option<std::path::PathBuf>,
@@ -475,6 +493,7 @@ fn spawn_coordinator(
         pool: (workers > 0).then(|| PoolOptions::new(engine_factory(kind)).with_workers(workers)),
         hub,
         prewarm,
+        call_deadline: deadline,
         ..ServerOptions::default()
     };
     if let Some(max_batch) = max_batch {
@@ -518,6 +537,7 @@ fn run_traffic(
     pool: usize,
     max_batch: Option<usize>,
     explore_budget: Option<f64>,
+    deadline: Option<std::time::Duration>,
     hub: Option<HubOptions>,
     prewarm: bool,
     json: bool,
@@ -525,8 +545,17 @@ fn run_traffic(
     let spec = TrafficSpec::parse(traffic)?;
     let manifest = load_manifest(kind, settings)?;
     let workers = if pool == 0 { 2 } else { pool };
-    let coordinator =
-        spawn_coordinator(settings, kind, workers, max_batch, explore_budget, hub, prewarm, None)?;
+    let coordinator = spawn_coordinator(
+        settings,
+        kind,
+        workers,
+        max_batch,
+        explore_budget,
+        deadline,
+        hub,
+        prewarm,
+        None,
+    )?;
     let harness = TrafficHarness::new(&manifest, spec.clone(), settings.seed)?;
     println!(
         "replaying {} generated arrivals ({} problems, {} clients, {} worker(s))...",
@@ -565,6 +594,7 @@ fn run_trace_served(
     workers: usize,
     max_batch: Option<usize>,
     explore_budget: Option<f64>,
+    deadline: Option<std::time::Duration>,
     hub: Option<HubOptions>,
     prewarm: bool,
     state_file: Option<&str>,
@@ -577,6 +607,7 @@ fn run_trace_served(
         workers,
         max_batch,
         explore_budget,
+        deadline,
         hub,
         prewarm,
         state_path.clone(),

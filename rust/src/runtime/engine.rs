@@ -34,6 +34,22 @@ pub trait SharedKernel: Send + Sync {
         Ok((output, t0.elapsed()))
     }
 
+    /// [`execute_measured`](SharedKernel::execute_measured) with an
+    /// optional absolute deadline. The default ignores the deadline —
+    /// kernels that run in-place on the calling thread cannot be
+    /// interrupted mid-execution, so only the pre-call budget check in the
+    /// fast lane applies. Handles that dispatch elsewhere (the worker
+    /// pool) override this to bound the cross-thread wait and return
+    /// [`Error::DeadlineExceeded`](crate::error::Error::DeadlineExceeded),
+    /// leaving the worker-side result to be discarded on arrival.
+    fn execute_measured_deadline(
+        &self,
+        inputs: &[HostTensor],
+        _deadline: Option<Instant>,
+    ) -> Result<(HostTensor, Duration)> {
+        self.execute_measured(inputs)
+    }
+
     /// Variant id this executable was compiled from.
     fn variant_id(&self) -> &str;
 }

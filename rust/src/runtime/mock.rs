@@ -47,6 +47,11 @@ struct FaultInner {
     /// Variant ids whose *next* execution panics (one-shot: consumed by
     /// the execution that fires it).
     panics: TrackedMutex<HashSet<String>>,
+    /// Variant ids whose every execution errors until cleared — unlike
+    /// [`MockSpec::fail_execute`] (baked at compile time) this reaches
+    /// kernels that are *already compiled and published*, which is what
+    /// the erroring-winner chaos scenario needs.
+    errors: TrackedMutex<HashSet<String>>,
 }
 
 impl Default for FaultInner {
@@ -55,6 +60,7 @@ impl Default for FaultInner {
             armed: AtomicBool::new(false),
             scales: TrackedMutex::new("runtime.mock.fault.scales", HashMap::new()),
             panics: TrackedMutex::new("runtime.mock.fault.panics", HashSet::new()),
+            errors: TrackedMutex::new("runtime.mock.fault.errors", HashSet::new()),
         }
     }
 }
@@ -81,11 +87,26 @@ impl LatencyFault {
         self.inner.armed.store(true, Ordering::Release);
     }
 
-    /// Remove every injected shift and pending panic.
+    /// From now on, every execution of `variant_id` returns an error
+    /// (until [`clear_error`](LatencyFault::clear_error) or
+    /// [`clear`](LatencyFault::clear)). Reaches kernels that are already
+    /// compiled and published — the erroring-winner chaos injection.
+    pub fn fail_execute(&self, variant_id: &str) {
+        self.inner.errors.lock().insert(variant_id.to_string());
+        self.inner.armed.store(true, Ordering::Release);
+    }
+
+    /// Stop injecting execution errors for `variant_id`.
+    pub fn clear_error(&self, variant_id: &str) {
+        self.inner.errors.lock().remove(variant_id);
+    }
+
+    /// Remove every injected shift, pending panic and execution error.
     pub fn clear(&self) {
         let mut scales = self.inner.scales.lock();
         scales.clear();
         self.inner.panics.lock().clear();
+        self.inner.errors.lock().clear();
         self.inner.armed.store(false, Ordering::Release);
     }
 
@@ -102,6 +123,13 @@ impl LatencyFault {
             return false;
         }
         self.inner.panics.lock().remove(variant_id)
+    }
+
+    fn should_error(&self, variant_id: &str) -> bool {
+        if !self.inner.armed.load(Ordering::Acquire) {
+            return false;
+        }
+        self.inner.errors.lock().contains(variant_id)
     }
 }
 
@@ -329,7 +357,7 @@ impl SharedKernel for MockKernelState {
         if self.fault.take_panic(&self.variant_id) {
             panic!("injected panic for {}", self.variant_id);
         }
-        if self.fail {
+        if self.fail || self.fault.should_error(&self.variant_id) {
             return Err(Error::Xla(format!("injected execute failure for {}", self.variant_id)));
         }
         let mut cost = self.base.as_secs_f64() * self.fault.scale_for(&self.variant_id);
@@ -606,6 +634,23 @@ mod tests {
         }));
         assert!(caught.is_err(), "injected panic fires");
         // one-shot: the next execution is healthy again
+        kernel.execute(&[]).unwrap();
+    }
+
+    #[test]
+    fn fail_execute_reaches_published_kernels_and_clears() {
+        let m = manifest();
+        let spec = MockSpec::default();
+        let fault = spec.latency_fault.clone();
+        let engine = MockEngine::new(spec);
+        // compiled *before* the injection — the run-time toggle must
+        // still reach it, unlike MockSpec::fail_execute
+        let kernel = engine.compile(m.variant("k.a.n8").unwrap(), "").unwrap();
+        kernel.execute(&[]).unwrap();
+        fault.fail_execute("k.a.n8");
+        assert!(kernel.execute(&[]).is_err(), "injected error fires");
+        assert!(kernel.execute(&[]).is_err(), "and keeps firing until cleared");
+        fault.clear_error("k.a.n8");
         kernel.execute(&[]).unwrap();
     }
 

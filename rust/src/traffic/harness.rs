@@ -45,6 +45,10 @@ pub struct ReplayOptions {
     /// to a [`NativeFault`](crate::runtime::native::NativeFault) or
     /// [`LatencyFault`](crate::runtime::mock::LatencyFault) handle.
     pub drift_inject: Option<Arc<dyn Fn() + Send + Sync>>,
+    /// Chaos injections fired mid-replay (see [`FaultInjection`]); the
+    /// schedule typically comes from a
+    /// [`FaultPlan`](super::FaultPlan).
+    pub faults: Vec<FaultInjection>,
 }
 
 impl Default for ReplayOptions {
@@ -53,6 +57,7 @@ impl Default for ReplayOptions {
             time_scale: 1.0,
             sample_every: Duration::from_millis(25),
             drift_inject: None,
+            faults: Vec::new(),
         }
     }
 }
@@ -63,8 +68,54 @@ impl std::fmt::Debug for ReplayOptions {
             .field("time_scale", &self.time_scale)
             .field("sample_every", &self.sample_every)
             .field("drift_inject", &self.drift_inject.is_some())
+            .field("faults", &self.faults.iter().map(|f| f.label.clone()).collect::<Vec<_>>())
             .finish()
     }
+}
+
+/// One scheduled chaos injection: `fire` runs on the client that claims
+/// call index `at` (before that call issues); `clear`, when set, runs at
+/// `clear_at`. The timing typically comes from a
+/// [`FaultPlan`](super::FaultPlan)'s `fire_index`/`clear_index`; the
+/// closures bind it to a concrete handle — a
+/// [`LatencyFault`](crate::runtime::mock::LatencyFault) or
+/// [`NativeFault`](crate::runtime::native::NativeFault), a pool-worker
+/// panic, a broker shutdown, an overload burst.
+#[derive(Clone)]
+pub struct FaultInjection {
+    /// Report label, e.g. `error:k.b.n8` (see `FaultPlan::label`).
+    pub label: String,
+    /// Call index at which `fire` runs.
+    pub at: usize,
+    /// Call index at which `clear` runs; `None` = the fault persists.
+    pub clear_at: Option<usize>,
+    /// Injects the fault.
+    pub fire: Arc<dyn Fn() + Send + Sync>,
+    /// Removes the fault.
+    pub clear: Option<Arc<dyn Fn() + Send + Sync>>,
+}
+
+impl std::fmt::Debug for FaultInjection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultInjection")
+            .field("label", &self.label)
+            .field("at", &self.at)
+            .field("clear_at", &self.clear_at)
+            .finish()
+    }
+}
+
+/// How a failed call failed — the resilience mechanisms answer
+/// differently and the report counts them apart.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ErrorClass {
+    /// [`Error::Overloaded`]: shed by the admission gate or queue-wait
+    /// bound.
+    Shed,
+    /// [`Error::DeadlineExceeded`]: the call's budget elapsed.
+    Deadline,
+    /// A genuine execution/compile error.
+    Other,
 }
 
 /// What one replayed call observed.
@@ -79,6 +130,8 @@ struct CallRecord {
     latency: Duration,
     /// `None` when the call errored.
     route: Option<CallRoute>,
+    /// `Some` exactly when `route` is `None`.
+    error: Option<ErrorClass>,
 }
 
 /// A generated trace plus pre-built inputs, ready to replay any number
@@ -132,6 +185,13 @@ impl TrafficHarness {
         let drift_fired: Arc<TrackedMutex<Option<Duration>>> =
             Arc::new(TrackedMutex::new("traffic.harness.drift_fired", None));
         let drift_call = self.spec.drift_call();
+        // Per-fault (fired, cleared) offsets, filled by whichever client
+        // claims the fault's call index.
+        let fault_times: Arc<TrackedMutex<Vec<(Option<Duration>, Option<Duration>)>>> =
+            Arc::new(TrackedMutex::new(
+                "traffic.harness.fault_times",
+                vec![(None, None); opts.faults.len()],
+            ));
         let t0 = Instant::now();
 
         // Tuned-state sampler: published fast-lane entries over time
@@ -165,6 +225,8 @@ impl TrafficHarness {
             let records = records.clone();
             let drift_fired = drift_fired.clone();
             let drift_inject = opts.drift_inject.clone();
+            let faults = opts.faults.clone();
+            let fault_times = fault_times.clone();
             let time_scale = opts.time_scale;
             let join = std::thread::Builder::new()
                 .name(format!("jitune-traffic-{c}"))
@@ -182,6 +244,18 @@ impl TrafficHarness {
                                 *drift_fired.lock() = Some(t0.elapsed());
                             }
                         }
+                        for (fi, fault) in faults.iter().enumerate() {
+                            if fault.at == idx {
+                                (fault.fire)();
+                                fault_times.lock()[fi].0 = Some(t0.elapsed());
+                            }
+                            if fault.clear_at == Some(idx) {
+                                if let Some(clear) = &fault.clear {
+                                    clear();
+                                }
+                                fault_times.lock()[fi].1 = Some(t0.elapsed());
+                            }
+                        }
                         let sched = call.at.mul_f64(time_scale);
                         let now = t0.elapsed();
                         if sched > now {
@@ -190,11 +264,29 @@ impl TrafficHarness {
                         let args = inputs[&problem_key(&call.spec)].clone();
                         let start = t0.elapsed();
                         let issued = Instant::now();
-                        let route = match h.call(&call.spec.kernel, args) {
-                            Ok(outcome) => Some(outcome.route),
+                        let (route, error) = match h.call(&call.spec.kernel, args) {
+                            Ok(outcome) => (Some(outcome.route), None),
                             Err(e) => {
-                                log::warn!("traffic call {idx} ({}) failed: {e}", call.spec.kernel);
-                                None
+                                let class = match &e {
+                                    Error::Overloaded(_) => ErrorClass::Shed,
+                                    Error::DeadlineExceeded { .. } => ErrorClass::Deadline,
+                                    _ => ErrorClass::Other,
+                                };
+                                // sheds and deadline misses are the
+                                // resilience layer working as designed
+                                // under chaos — only genuine errors warn
+                                if class == ErrorClass::Other {
+                                    log::warn!(
+                                        "traffic call {idx} ({}) failed: {e}",
+                                        call.spec.kernel
+                                    );
+                                } else {
+                                    log::debug!(
+                                        "traffic call {idx} ({}): {e}",
+                                        call.spec.kernel
+                                    );
+                                }
+                                (None, Some(class))
                             }
                         };
                         local.push(CallRecord {
@@ -204,6 +296,7 @@ impl TrafficHarness {
                             start,
                             latency: issued.elapsed(),
                             route,
+                            error,
                         });
                     }
                     records.lock().append(&mut local);
@@ -224,9 +317,22 @@ impl TrafficHarness {
         let mut records = std::mem::take(&mut *records.lock());
         records.sort_by_key(|r| r.idx);
         let drift_fired_ms = drift_fired.lock().map(|d| d.as_secs_f64() * 1e3);
-        self.assemble(coord, records, tuned_series, wall, drift_fired_ms)
+        let fault_events: Vec<FaultEvent> = opts
+            .faults
+            .iter()
+            .zip(fault_times.lock().iter())
+            .map(|(fault, &(fired, cleared))| FaultEvent {
+                label: fault.label.clone(),
+                fired_ms: fired.map(|d| d.as_secs_f64() * 1e3),
+                cleared_ms: cleared.map(|d| d.as_secs_f64() * 1e3),
+            })
+            .collect();
+        // Recovery window: everything after the *last* fault clears.
+        let last_clear = opts.faults.iter().filter_map(|f| f.clear_at).max();
+        self.assemble(coord, records, tuned_series, wall, drift_fired_ms, fault_events, last_clear)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn assemble(
         &self,
         coord: &Coordinator,
@@ -234,6 +340,8 @@ impl TrafficHarness {
         tuned_series: Vec<(f64, usize)>,
         wall: Duration,
         drift_fired_ms: Option<f64>,
+        faults: Vec<FaultEvent>,
+        last_fault_clear: Option<usize>,
     ) -> Result<TrafficReport> {
         let h = coord.handle();
         let lat_us: Vec<f64> =
@@ -241,6 +349,19 @@ impl TrafficHarness {
         let cold_end = records.len() / 5;
         let steady_start = records.len() / 2;
         let errors = records.iter().filter(|r| r.route.is_none()).count();
+        let shed = records.iter().filter(|r| r.error == Some(ErrorClass::Shed)).count();
+        let deadline_exceeded =
+            records.iter().filter(|r| r.error == Some(ErrorClass::Deadline)).count();
+        // Post-recovery tail: successful calls after the last fault
+        // cleared (the chaos gate: p99 must come back down).
+        let recovery_p99_us = last_fault_clear.map(|clear| {
+            let post: Vec<f64> = records
+                .iter()
+                .filter(|r| r.idx > clear && r.route.is_some())
+                .map(|r| r.latency.as_secs_f64() * 1e6)
+                .collect();
+            pct(&post, 99.0)
+        });
 
         // Per-problem stats, in first-arrival order.
         let mut order: Vec<String> = Vec::new();
@@ -269,6 +390,11 @@ impl TrafficHarness {
                 size: rs[0].spec.size,
                 calls: rs.len(),
                 errors: rs.iter().filter(|r| r.route.is_none()).count(),
+                shed: rs.iter().filter(|r| r.error == Some(ErrorClass::Shed)).count(),
+                deadline_exceeded: rs
+                    .iter()
+                    .filter(|r| r.error == Some(ErrorClass::Deadline))
+                    .count(),
                 first_arrival_ms: first_arrival.as_secs_f64() * 1e3,
                 time_to_good_ms,
                 p50_us: pct(&us, 50.0),
@@ -305,6 +431,10 @@ impl TrafficHarness {
             spec: self.spec.clone(),
             calls: records.len(),
             errors,
+            shed,
+            deadline_exceeded,
+            recovery_p99_us,
+            faults,
             wall_ms: wall.as_secs_f64() * 1e3,
             p50_us: pct(&lat_us, 50.0),
             p99_us: pct(&lat_us, 99.0),
@@ -336,6 +466,18 @@ fn pct(samples: &[f64], p: f64) -> f64 {
     }
 }
 
+/// One chaos injection as it actually landed during replay.
+#[derive(Debug, Clone)]
+pub struct FaultEvent {
+    /// The injection's label (see `FaultPlan::label`).
+    pub label: String,
+    /// When the fault fired, ms from replay start (`None`: its call
+    /// index was never reached).
+    pub fired_ms: Option<f64>,
+    /// When it cleared (`None`: persisted to end of trace).
+    pub cleared_ms: Option<f64>,
+}
+
 /// Per-problem slice of a [`TrafficReport`].
 #[derive(Debug, Clone)]
 pub struct ProblemStats {
@@ -345,8 +487,12 @@ pub struct ProblemStats {
     pub size: i64,
     /// Calls replayed for this problem.
     pub calls: usize,
-    /// Calls that errored.
+    /// Calls that errored (any class, including shed/deadline).
     pub errors: usize,
+    /// Calls shed with [`Error::Overloaded`].
+    pub shed: usize,
+    /// Calls that exceeded their deadline.
+    pub deadline_exceeded: usize,
     /// Scheduled offset of the problem's first arrival.
     pub first_arrival_ms: f64,
     /// First tuned-winner serve relative to first arrival (`None`: the
@@ -366,8 +512,18 @@ pub struct TrafficReport {
     pub spec: TrafficSpec,
     /// Calls replayed.
     pub calls: usize,
-    /// Calls that errored.
+    /// Calls that errored (any class, including shed/deadline).
     pub errors: usize,
+    /// Calls shed with [`Error::Overloaded`] (admission gate or
+    /// queue-wait bound).
+    pub shed: usize,
+    /// Calls that returned [`Error::DeadlineExceeded`].
+    pub deadline_exceeded: usize,
+    /// p99 over successful calls issued after the last fault cleared
+    /// (`None` when no fault was scheduled to clear).
+    pub recovery_p99_us: Option<f64>,
+    /// Chaos injections as they actually landed.
+    pub faults: Vec<FaultEvent>,
     /// Wall time of the replay.
     pub wall_ms: f64,
     /// Overall median serve latency (µs).
@@ -426,6 +582,8 @@ impl TrafficReport {
             ),
             ("calls", n(self.calls as f64)),
             ("errors", n(self.errors as f64)),
+            ("shed", n(self.shed as f64)),
+            ("deadline_exceeded", n(self.deadline_exceeded as f64)),
             ("wall_ms", n(self.wall_ms)),
             (
                 "latency_us",
@@ -436,7 +594,23 @@ impl TrafficReport {
                     ("cold_p99", n(self.cold_p99_us)),
                     ("steady_p50", n(self.steady_p50_us)),
                     ("steady_p99", n(self.steady_p99_us)),
+                    ("recovery_p99", self.recovery_p99_us.map(n).unwrap_or(Value::Null)),
                 ]),
+            ),
+            (
+                "faults",
+                Value::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            obj(vec![
+                                ("label", s(f.label.clone())),
+                                ("fired_ms", f.fired_ms.map(n).unwrap_or(Value::Null)),
+                                ("cleared_ms", f.cleared_ms.map(n).unwrap_or(Value::Null)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
             (
                 "time_to_good_ms",
@@ -457,6 +631,8 @@ impl TrafficReport {
                                 ("size", n(p.size as f64)),
                                 ("calls", n(p.calls as f64)),
                                 ("errors", n(p.errors as f64)),
+                                ("shed", n(p.shed as f64)),
+                                ("deadline_exceeded", n(p.deadline_exceeded as f64)),
                                 ("first_arrival_ms", n(p.first_arrival_ms)),
                                 (
                                     "time_to_good_ms",
@@ -515,6 +691,22 @@ impl TrafficReport {
             "latency: p50 {:.0}us p99 {:.0}us (cold p99 {:.0}us -> steady p99 {:.0}us)\n",
             self.p50_us, self.p99_us, self.cold_p99_us, self.steady_p99_us
         ));
+        if self.shed + self.deadline_exceeded > 0 {
+            out.push_str(&format!(
+                "resilience: {} shed, {} deadline-exceeded\n",
+                self.shed, self.deadline_exceeded
+            ));
+        }
+        for f in &self.faults {
+            let fired = f.fired_ms.map(|ms| format!("{ms:.0}ms")).unwrap_or_else(|| "-".into());
+            let cleared =
+                f.cleared_ms.map(|ms| format!("{ms:.0}ms")).unwrap_or_else(|| "never".into());
+            out.push_str(&format!("fault {}: fired {fired}, cleared {cleared}", f.label));
+            if let Some(p99) = self.recovery_p99_us {
+                out.push_str(&format!(" (post-clear p99 {p99:.0}us)"));
+            }
+            out.push('\n');
+        }
         match self.ttg_median_ms {
             Some(median) => out.push_str(&format!(
                 "time-to-good: median {median:.0}ms max {:.0}ms ({} problem(s) untuned)\n",
@@ -619,5 +811,54 @@ mod tests {
         let a = TrafficHarness::new(&manifest, quick_spec(), 7).unwrap();
         let b = TrafficHarness::new(&manifest, quick_spec(), 7).unwrap();
         assert_eq!(a.trace(), b.trace());
+    }
+
+    #[test]
+    fn fault_injections_fire_and_clear_on_schedule() {
+        use super::super::FaultPlan;
+        let coord = mock_coord();
+        let manifest = crate::testutil::synthetic_manifest("kern", 2, &[8, 16]).unwrap();
+        let harness = TrafficHarness::new(&manifest, quick_spec(), 7).unwrap();
+        let plan = FaultPlan::parse("kind=error, at=0.25, clear=0.75, target=x").unwrap();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let cleared = Arc::new(AtomicUsize::new(0));
+        let (f, c) = (fired.clone(), cleared.clone());
+        let opts = ReplayOptions {
+            faults: vec![FaultInjection {
+                label: plan.label(),
+                at: plan.fire_index(120),
+                clear_at: plan.clear_index(120),
+                fire: Arc::new(move || {
+                    f.fetch_add(1, Ordering::AcqRel);
+                }),
+                clear: Some(Arc::new(move || {
+                    c.fetch_add(1, Ordering::AcqRel);
+                })),
+            }],
+            ..ReplayOptions::default()
+        };
+        let report = harness.run(&coord, &opts).unwrap();
+        assert_eq!(fired.load(Ordering::Acquire), 1, "fault fired exactly once");
+        assert_eq!(cleared.load(Ordering::Acquire), 1, "fault cleared exactly once");
+        assert_eq!(report.faults.len(), 1);
+        assert_eq!(report.faults[0].label, "error:x");
+        let (fired_ms, cleared_ms) =
+            (report.faults[0].fired_ms.unwrap(), report.faults[0].cleared_ms.unwrap());
+        assert!(fired_ms <= cleared_ms, "fired before cleared");
+        assert!(report.recovery_p99_us.is_some(), "post-clear tail reported");
+        // a benign injection breaks nothing
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.deadline_exceeded, 0);
+        // the new counters survive the JSON round trip
+        let parsed = crate::util::json::parse(&report.to_json().to_json_pretty()).unwrap();
+        assert_eq!(parsed.get("shed").unwrap().as_i64(), Some(0));
+        assert_eq!(
+            parsed.get("faults").unwrap().as_arr().unwrap()[0]
+                .get("label")
+                .unwrap()
+                .as_str(),
+            Some("error:x")
+        );
     }
 }

@@ -17,13 +17,23 @@
 //! - [`TrafficHarness`](harness::TrafficHarness) — open-loop replay of
 //!   a trace against a live coordinator from N client threads,
 //!   producing a [`TrafficReport`](harness::TrafficReport): p50/p99
-//!   serve latency (overall, cold, steady), per-problem time-to-good,
-//!   explore duty cycle, and a tuned-state-size time series.
+//!   serve latency (overall, cold, steady), per-problem time-to-good
+//!   and error/shed/deadline counts, explore duty cycle, and a
+//!   tuned-state-size time series.
+//! - [`FaultPlan`] — a chaos schedule (`kind=error,at=0.3,clear=0.6,
+//!   target=...`), parseable like a [`TrafficSpec`], that the replay
+//!   fires mid-run: wedged variants, erroring winners, worker death,
+//!   broker outage, overload bursts. The plan owns *when*; the caller
+//!   wires *how* (a [`LatencyFault`](crate::runtime::mock::LatencyFault)
+//!   or [`NativeFault`](crate::runtime::native::NativeFault) handle, a
+//!   worker kill, a broker stop) into a
+//!   [`FaultInjection`](harness::FaultInjection).
 //!
 //! `benches/traffic_replay.rs` runs the harness over the native engine
 //! ([`crate::runtime::native`]) and writes `BENCH_TRAFFIC.json` at the
 //! repo root, extending the visible perf trajectory on every push to
-//! main.
+//! main; `benches/chaos_replay.rs` replays under [`FaultPlan`]s and
+//! gates the resilience contract into `BENCH_CHAOS.json`.
 
 pub mod generate;
 pub mod harness;
@@ -31,7 +41,7 @@ pub mod harness;
 use crate::error::{Error, Result};
 
 pub use generate::generate;
-pub use harness::{ReplayOptions, TrafficHarness, TrafficReport};
+pub use harness::{FaultEvent, FaultInjection, ReplayOptions, TrafficHarness, TrafficReport};
 
 /// Knobs of a synthetic traffic trace. All fields have serving-shaped
 /// defaults; construct with `TrafficSpec::default()` and override, or
@@ -150,6 +160,146 @@ impl TrafficSpec {
     }
 }
 
+/// What a [`FaultPlan`] breaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A variant's execution slows by `factor` (wedged winner / stuck
+    /// accelerator): deadlines must bound callers, drift may retune.
+    Wedge,
+    /// A variant's execution starts erroring (miscompiled winner): the
+    /// quarantine breaker must demote it to the fallback.
+    Error,
+    /// A pool worker dies mid-run: respawn must absorb it, in-flight
+    /// callers must not hang.
+    WorkerDeath,
+    /// The hub broker goes away: serving must continue unaffected.
+    BrokerDown,
+    /// An arrival burst beyond capacity: the admission gate must shed
+    /// instead of queueing unboundedly.
+    Overload,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultKind::Wedge => "wedge",
+            FaultKind::Error => "error",
+            FaultKind::WorkerDeath => "worker_death",
+            FaultKind::BrokerDown => "broker_down",
+            FaultKind::Overload => "overload",
+        })
+    }
+}
+
+/// A chaos schedule: *which* fault, *when* it fires as a fraction of the
+/// trace, and *when* it clears. Parsed from a compact `k=v,k=v` string
+/// exactly like [`TrafficSpec`]. The plan is engine-agnostic — it only
+/// owns timing and targeting; the chaos harness binds each kind to the
+/// concrete injection handle and hands the pair to the replay as a
+/// [`FaultInjection`](harness::FaultInjection).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// What breaks.
+    pub kind: FaultKind,
+    /// Fraction of the trace (0..1) at which the fault fires.
+    pub at: f64,
+    /// Fraction of the trace at which it clears; 0 means it never does.
+    pub clear: f64,
+    /// Target id — a variant for wedge/error, free-form otherwise.
+    pub target: String,
+    /// Wedge slowdown multiplier (ignored by the other kinds).
+    pub factor: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            kind: FaultKind::Error,
+            at: 0.4,
+            clear: 0.0,
+            target: String::new(),
+            factor: 20.0,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a compact plan: comma-separated `key=value` over `kind`
+    /// (`wedge` | `error` | `worker_death` | `broker_down` |
+    /// `overload`), `at`, `clear`, `target`, `factor`. Omitted keys keep
+    /// their defaults.
+    pub fn parse(text: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for pair in text.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = pair
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("fault plan: `{pair}` is not key=value")))?;
+            let bad = |what: &str| {
+                Error::Config(format!("fault plan: `{value}` is not a valid {what} for {key}"))
+            };
+            match key.trim() {
+                "kind" => {
+                    plan.kind = match value.trim() {
+                        "wedge" => FaultKind::Wedge,
+                        "error" => FaultKind::Error,
+                        "worker_death" => FaultKind::WorkerDeath,
+                        "broker_down" => FaultKind::BrokerDown,
+                        "overload" => FaultKind::Overload,
+                        _ => return Err(bad("fault kind")),
+                    }
+                }
+                "at" => plan.at = value.parse().map_err(|_| bad("fraction"))?,
+                "clear" => plan.clear = value.parse().map_err(|_| bad("fraction"))?,
+                "target" => plan.target = value.trim().to_string(),
+                "factor" => plan.factor = value.parse().map_err(|_| bad("factor"))?,
+                other => return Err(Error::Config(format!("fault plan: unknown key `{other}`"))),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Reject degenerate schedules early.
+    pub fn validate(&self) -> Result<()> {
+        if !self.at.is_finite() || !(0.0..1.0).contains(&self.at) {
+            return Err(Error::Config("fault plan: at must be in [0, 1)".into()));
+        }
+        if !self.clear.is_finite() || !(0.0..=1.0).contains(&self.clear) {
+            return Err(Error::Config("fault plan: clear must be in [0, 1]".into()));
+        }
+        if self.clear > 0.0 && self.clear <= self.at {
+            return Err(Error::Config("fault plan: clear must be after at".into()));
+        }
+        if !self.factor.is_finite() || self.factor < 1.0 {
+            return Err(Error::Config("fault plan: factor must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Call index at which the fault fires for a trace of `calls`.
+    pub fn fire_index(&self, calls: usize) -> usize {
+        ((calls as f64 * self.at) as usize).min(calls.saturating_sub(1))
+    }
+
+    /// Call index at which the fault clears (`None`: never clears).
+    pub fn clear_index(&self, calls: usize) -> Option<usize> {
+        if self.clear > 0.0 {
+            Some(((calls as f64 * self.clear) as usize).min(calls.saturating_sub(1)))
+        } else {
+            None
+        }
+    }
+
+    /// Report label, e.g. `error:k.b.n8`.
+    pub fn label(&self) -> String {
+        if self.target.is_empty() {
+            self.kind.to_string()
+        } else {
+            format!("{}:{}", self.kind, self.target)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -177,5 +327,30 @@ mod tests {
         assert!(TrafficSpec::parse("calls=0").is_err());
         assert!(TrafficSpec::parse("burst=0.5").is_err());
         assert!(TrafficSpec::parse("drift=1.5").is_err());
+    }
+
+    #[test]
+    fn fault_plan_parses_and_schedules() {
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::default());
+        let p = FaultPlan::parse("kind=wedge, at=0.25, clear=0.75, target=k.b.n8, factor=50")
+            .unwrap();
+        assert_eq!(p.kind, FaultKind::Wedge);
+        assert_eq!(p.target, "k.b.n8");
+        assert_eq!(p.factor, 50.0);
+        assert_eq!(p.fire_index(200), 50);
+        assert_eq!(p.clear_index(200), Some(150));
+        assert_eq!(p.label(), "wedge:k.b.n8");
+        let never = FaultPlan::parse("kind=broker_down, at=0.5").unwrap();
+        assert_eq!(never.clear_index(200), None);
+        assert_eq!(never.label(), "broker_down");
+    }
+
+    #[test]
+    fn fault_plan_rejects_bad_schedules() {
+        assert!(FaultPlan::parse("kind=meteor").is_err());
+        assert!(FaultPlan::parse("at=1.5").is_err());
+        assert!(FaultPlan::parse("at=0.6, clear=0.4").is_err());
+        assert!(FaultPlan::parse("factor=0.5").is_err());
+        assert!(FaultPlan::parse("when=now").is_err());
     }
 }

@@ -1,0 +1,267 @@
+//! Serving-path resilience, end to end: an erroring winner is
+//! quarantined and demoted to the fallback with zero hung callers,
+//! wedged calls return within deadline + slack, and an overload burst
+//! sheds fast instead of queueing unboundedly.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use jitune::coordinator::{
+    CallRoute, Coordinator, Dispatcher, KernelRegistry, QuarantinePolicy, ServerOptions, ShedPolicy,
+};
+use jitune::runtime::mock::{MockEngine, MockSpec};
+use jitune::tensor::HostTensor;
+use jitune::testutil::{spawn_pooled_mock, synthetic_manifest};
+use jitune::Error;
+
+/// v0 slowest, v1 the clear winner, v2 the next-best fallback — so a
+/// quarantine demotion is observable from tuned values alone.
+fn resilience_spec() -> MockSpec {
+    MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_micros(1500))
+        .with_cost("kern.v1.n8", Duration::from_micros(200))
+        .with_cost("kern.v2.n8", Duration::from_micros(600))
+        .with_sleep_exec()
+}
+
+/// A breaker that trips on one bad window: tests run in milliseconds,
+/// not the production defaults.
+fn fast_breaker() -> QuarantinePolicy {
+    QuarantinePolicy {
+        window: Duration::from_millis(30),
+        min_samples: 4,
+        error_threshold: 0.4,
+        consecutive_windows: 1,
+        cooldown: Duration::ZERO,
+        quarantine_for: Duration::from_secs(60),
+    }
+}
+
+/// Shared-fast-lane coordinator (no pool): tuned calls execute on the
+/// caller thread, where the failure breaker records outcomes.
+fn spawn_lane(spec: MockSpec, opts: ServerOptions) -> Coordinator {
+    Coordinator::spawn_with_options(
+        move || {
+            let manifest = synthetic_manifest("kern", 3, &[8])?;
+            Ok(Dispatcher::new(KernelRegistry::new(manifest), Box::new(MockEngine::new(spec))))
+        },
+        opts,
+    )
+    .expect("spawn coordinator")
+}
+
+fn inputs() -> Vec<HostTensor> {
+    vec![HostTensor::zeros(&[8, 8])]
+}
+
+/// Drive calls until tuning finalizes on v1.
+fn tune(coord: &Coordinator) {
+    let h = coord.handle();
+    loop {
+        if h.call("kern", inputs()).unwrap().route == CallRoute::Finalized {
+            break;
+        }
+    }
+    assert_eq!(h.tuned_value("kern", 8).unwrap(), Some(1));
+}
+
+/// Erroring winner: once the published winner starts failing, the
+/// breaker must demote it and serve the fallback — and every caller
+/// thread that rode through the fault must return (no hangs).
+#[test]
+fn erroring_winner_demotes_to_fallback_without_hanging_callers() {
+    let spec = resilience_spec();
+    let fault = spec.latency_fault.clone();
+    let coord = spawn_lane(spec, ServerOptions { quarantine: Some(fast_breaker()), ..Default::default() });
+    tune(&coord);
+
+    fault.fail_execute("kern.v1.n8");
+
+    // four caller threads hammer through the fault window; each call
+    // either succeeds (fallback) or errors (breaker still sampling) —
+    // none may hang.
+    let t0 = Instant::now();
+    let errors = Arc::new(AtomicUsize::new(0));
+    let fallbacks = Arc::new(AtomicUsize::new(0));
+    let joins: Vec<_> = (0..4)
+        .map(|_| {
+            let h = coord.handle();
+            let errors = Arc::clone(&errors);
+            let fallbacks = Arc::clone(&fallbacks);
+            std::thread::spawn(move || {
+                for _ in 0..120 {
+                    match h.call("kern", inputs()) {
+                        Ok(out) => {
+                            if out.value == 2 {
+                                fallbacks.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        Err(_) => {
+                            errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("caller thread must return");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "callers took {:?} — something hung",
+        t0.elapsed()
+    );
+
+    // the breaker window bounds the error burst: 4 threads for ~1s at
+    // one bad window (~30ms) cannot approach the total call count
+    let errs = errors.load(Ordering::Relaxed);
+    assert!(errs < 240, "breaker must bound the burst, got {errs}/480 errors");
+    assert!(
+        fallbacks.load(Ordering::Relaxed) > 0,
+        "fallback variant must have served during the fault"
+    );
+
+    // demotion settles on the next-best variant and is reported
+    let h = coord.handle();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while h.tuned_value("kern", 8).unwrap() != Some(2) {
+        assert!(Instant::now() < deadline, "winner never demoted to the fallback");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(h.call("kern", inputs()).unwrap().value, 2);
+    let json = h.stats_json().unwrap();
+    let events = json.get("quarantine_events").expect("quarantine_events exported");
+    assert!(!events.as_arr().unwrap().is_empty());
+}
+
+/// Wedged winner: every call must come back within deadline + slack,
+/// as `DeadlineExceeded` — the caller is released while the straggler
+/// finishes (and is discarded) behind the scenes.
+#[test]
+fn wedged_winner_calls_return_within_deadline_plus_slack() {
+    let spec = resilience_spec();
+    let fault = spec.latency_fault.clone();
+    let coord = spawn_pooled_mock(
+        "kern",
+        3,
+        &[8],
+        spec,
+        1,
+        ServerOptions { call_deadline: Some(Duration::from_millis(20)), ..Default::default() },
+    )
+    .expect("spawn coordinator");
+    tune(&coord);
+
+    // wedge the winner: 200us -> 40ms, well past the 20ms deadline
+    fault.set_scale("kern.v1.n8", 200.0);
+
+    let joins: Vec<_> = (0..4)
+        .map(|_| {
+            let h = coord.handle();
+            std::thread::spawn(move || {
+                for _ in 0..5 {
+                    let t0 = Instant::now();
+                    let err = h.call("kern", inputs()).unwrap_err();
+                    let took = t0.elapsed();
+                    assert!(
+                        matches!(err, Error::DeadlineExceeded { .. }),
+                        "wedged call must miss its deadline, got {err}"
+                    );
+                    // slack covers pool queueing behind earlier wedged
+                    // jobs plus scheduler jitter
+                    assert!(
+                        took < Duration::from_millis(20) + Duration::from_millis(500),
+                        "call took {took:?}, deadline is 20ms"
+                    );
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("caller thread must return");
+    }
+
+    // clearing the wedge restores tuned serving — retry while the
+    // worker drains discarded stragglers left over from the wedge
+    fault.clear();
+    let h = coord.handle();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let out = loop {
+        match h.call("kern", inputs()) {
+            Ok(out) => break out,
+            Err(_) => {
+                assert!(Instant::now() < deadline, "serving never recovered after the wedge");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    };
+    assert_eq!(out.value, 1);
+    let json = h.stats_json().unwrap();
+    let res = json.get("resilience").expect("resilience counters exported");
+    assert!(res.get("deadline_exceeded").unwrap().as_i64().unwrap() >= 20);
+}
+
+/// Overload burst: with the admission gate at 2 in-flight calls, a
+/// burst of 8 concurrent callers must shed the excess fast with
+/// `Overloaded` — and the gate must reopen once the burst drains.
+#[test]
+fn overload_burst_sheds_instead_of_queueing_unboundedly() {
+    let spec = MockSpec::default()
+        .with_cost("kern.v0.n8", Duration::from_millis(25))
+        .with_cost("kern.v1.n8", Duration::from_millis(20))
+        .with_cost("kern.v2.n8", Duration::from_millis(22))
+        .with_sleep_exec();
+    let coord = spawn_pooled_mock(
+        "kern",
+        3,
+        &[8],
+        spec,
+        1,
+        ServerOptions {
+            shed: Some(ShedPolicy { max_inflight: 2, max_queue_wait: Duration::from_secs(5) }),
+            ..Default::default()
+        },
+    )
+    .expect("spawn coordinator");
+    tune(&coord);
+
+    let shed = Arc::new(AtomicUsize::new(0));
+    let served = Arc::new(AtomicUsize::new(0));
+    let t0 = Instant::now();
+    let joins: Vec<_> = (0..8)
+        .map(|_| {
+            let h = coord.handle();
+            let shed = Arc::clone(&shed);
+            let served = Arc::clone(&served);
+            std::thread::spawn(move || match h.call("kern", inputs()) {
+                Ok(_) => {
+                    served.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(Error::Overloaded(_)) => {
+                    // shed calls fail fast, not after queueing
+                    shed.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(other) => panic!("unexpected error class under overload: {other}"),
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().expect("caller thread must return");
+    }
+    // 8 calls at 20ms each through one worker would serialize to 160ms+
+    // without the gate; shedding keeps the burst well under that
+    assert!(t0.elapsed() < Duration::from_secs(5), "burst took {:?}", t0.elapsed());
+    assert!(shed.load(Ordering::Relaxed) > 0, "the gate must shed part of the burst");
+    assert!(served.load(Ordering::Relaxed) > 0, "admitted calls must still serve");
+
+    // the gate reopens once in-flight calls drain
+    let h = coord.handle();
+    let out = h.call("kern", inputs()).expect("recovery call after the burst");
+    assert_eq!(out.value, 1);
+    let json = h.stats_json().unwrap();
+    let res = json.get("resilience").expect("resilience counters exported");
+    assert!(res.get("shed").unwrap().as_i64().unwrap() >= 1);
+}
